@@ -1,0 +1,62 @@
+//! Latency/throughput crossover (the paper's Fig 4 workload, interactive
+//! version): sweep the number of test rows and time the CPU baseline vs
+//! the batched XLA engine, printing the crossover point where batching
+//! wins.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example crossover
+//! ```
+
+use anyhow::Result;
+use gputreeshap::bench::fmt_secs;
+use gputreeshap::data::SynthSpec;
+use gputreeshap::gbdt::{train, TrainParams};
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{pack_model, treeshap, Packing};
+
+fn main() -> Result<()> {
+    // cal_housing-med-like model (the paper's Fig 4 subject)
+    let data = SynthSpec::cal_housing(0.05).generate();
+    let model = train(
+        &data,
+        &TrainParams { rounds: 50, max_depth: 8, ..Default::default() },
+    );
+    println!("model: {}", model.summary());
+    let m = model.num_features;
+    let threads = gputreeshap::parallel::default_threads();
+
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let mut engine = ShapEngine::new(&default_artifacts_dir())?;
+    let prep = engine.prepare(&pm, ArtifactKind::Shap, usize::MAX)?;
+
+    println!("\n{:<8} {:>12} {:>12}   winner", "rows", "cpu", "xla");
+    let mut crossover: Option<usize> = None;
+    for &rows in &[1usize, 4, 16, 64, 128, 256, 512, 1024] {
+        let rows = rows.min(data.rows);
+        let x = &data.features[..rows * m];
+        // median of 3
+        let mut cpu_times = Vec::new();
+        let mut xla_times = Vec::new();
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(treeshap::shap_values(&model, x, rows, threads));
+            cpu_times.push(t.elapsed().as_secs_f64());
+            let t = std::time::Instant::now();
+            std::hint::black_box(engine.shap_values(&pm, &prep, x, rows)?);
+            xla_times.push(t.elapsed().as_secs_f64());
+        }
+        cpu_times.sort_by(|a, b| a.total_cmp(b));
+        xla_times.sort_by(|a, b| a.total_cmp(b));
+        let (cpu, xla) = (cpu_times[1], xla_times[1]);
+        let winner = if xla < cpu { "xla" } else { "cpu" };
+        if xla < cpu && crossover.is_none() {
+            crossover = Some(rows);
+        }
+        println!("{rows:<8} {:>12} {:>12}   {winner}", fmt_secs(cpu), fmt_secs(xla));
+    }
+    match crossover {
+        Some(r) => println!("\ncrossover: batched engine wins from ~{r} rows (paper: ~200 rows on V100 vs 40 cores)"),
+        None => println!("\nno crossover observed on this testbed within the sweep"),
+    }
+    Ok(())
+}

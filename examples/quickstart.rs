@@ -1,0 +1,69 @@
+//! Quickstart: train a model, explain predictions through all three
+//! layers (rust coordinator → AOT HLO → Pallas-derived kernel), verify
+//! the SHAP additivity property, and print an attribution report.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use gputreeshap::data::SynthSpec;
+use gputreeshap::gbdt::{train, TrainParams};
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{pack_model, Packing};
+
+fn main() -> Result<()> {
+    // 1. train a GBDT on a cal_housing-shaped regression dataset
+    let data = SynthSpec::cal_housing(0.05).generate();
+    let params = TrainParams { rounds: 40, max_depth: 6, learning_rate: 0.05, ..Default::default() };
+    let model = train(&data, &params);
+    println!("model: {}", model.summary());
+
+    // 2. preprocess: extract paths, merge duplicates, bin-pack (BFD)
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let bins: usize = pm.groups.iter().map(|g| g.num_bins).sum();
+    println!(
+        "packed {} paths into {} bins (utilisation {:.3})",
+        model.total_leaves(),
+        bins,
+        pm.groups[0].utilisation
+    );
+
+    // 3. run the AOT kernel through the PJRT runtime
+    let rows = 256.min(data.rows);
+    let m = data.cols;
+    let x = &data.features[..rows * m];
+    let mut engine = ShapEngine::new(&default_artifacts_dir())?;
+    let prep = engine.prepare(&pm, ArtifactKind::Shap, rows)?;
+    println!("artifact: {}", prep.artifact);
+    let t = std::time::Instant::now();
+    let phis = engine.shap_values(&pm, &prep, x, rows)?;
+    println!("explained {rows} rows in {:.3}s", t.elapsed().as_secs_f64());
+
+    // 4. verify local accuracy: Σφ == f(x)
+    let mut worst: f64 = 0.0;
+    for r in 0..rows {
+        let pred = model.predict_row_raw(data.row(r))[0] as f64;
+        let total: f64 = phis[r * (m + 1)..(r + 1) * (m + 1)].iter().map(|&v| v as f64).sum();
+        worst = worst.max((total - pred).abs());
+    }
+    println!("max |Σφ − f(x)| over {rows} rows = {worst:.2e}");
+    assert!(worst < 5e-3, "additivity violated");
+
+    // 5. per-row attribution report for the first rows
+    println!("\nrow  prediction   top attributions");
+    for r in 0..5 {
+        let row_phis = &phis[r * (m + 1)..(r + 1) * (m + 1)];
+        let pred = model.predict_row_raw(data.row(r))[0];
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| row_phis[b].abs().total_cmp(&row_phis[a].abs()));
+        let attr: Vec<String> = order
+            .iter()
+            .take(3)
+            .map(|&f| format!("f{}:{:+.4}", f, row_phis[f]))
+            .collect();
+        println!("{r:<4} {pred:<+11.4}  {}", attr.join("  "));
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

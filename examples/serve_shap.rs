@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the repo's E2E validation): load a real
+//! trained model, run the SHAP service with dynamic batching over N
+//! simulated devices, drive it with concurrent clients, and report
+//! latency percentiles + throughput. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_shap [-- --devices 2 --clients 8]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use gputreeshap::cli::Args;
+use gputreeshap::coordinator::{ServiceConfig, ShapService};
+use gputreeshap::data::SynthSpec;
+use gputreeshap::gbdt::{train, TrainParams};
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, Manifest};
+use gputreeshap::shap::{pack_model, pad_model, treeshap, Packing};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let devices = args.get_usize("devices", 2)?;
+    let clients = args.get_usize("clients", 8)?;
+    let requests = args.get_usize("requests", 25)?;
+    let req_rows = args.get_usize("req-rows", 16)?;
+
+    // a real model: adult-shaped binary classifier, medium zoo size
+    let data = SynthSpec::adult(0.02).generate();
+    let model = train(
+        &data,
+        &TrainParams { rounds: 50, max_depth: 8, learning_rate: 0.05, ..Default::default() },
+    );
+    println!("model: {}", model.summary());
+    let m = model.num_features;
+    // padded-path layout: the optimized engine (EXPERIMENTS.md §Perf)
+    let depth_needed = pack_model(&model, Packing::BestFitDecreasing).max_depth.max(1);
+    let width = Manifest::load(&default_artifacts_dir())?
+        .select(ArtifactKind::ShapPadded, m, depth_needed, 256)?
+        .depth
+        + 1;
+    let pm = Arc::new(pad_model(&model, width));
+
+    let svc = ShapService::start_padded(
+        pm,
+        ServiceConfig {
+            devices,
+            max_batch_rows: 256,
+            max_wait: Duration::from_millis(4),
+            ..Default::default()
+        },
+    )?;
+    println!("service: {devices} devices (padded engine), dynamic batching ≤256 rows / 4ms");
+
+    // drive with concurrent clients; spot-check correctness on the fly
+    let svc = Arc::new(svc);
+    let data = Arc::new(data);
+    let model = Arc::new(model);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            let data = data.clone();
+            let model = model.clone();
+            scope.spawn(move || {
+                for q in 0..requests {
+                    let start =
+                        (c * 131 + q * 17) % (data.rows.saturating_sub(req_rows).max(1));
+                    let x = data.features[start * m..(start + req_rows) * m].to_vec();
+                    let phis = svc.explain(x.clone(), req_rows).expect("explain");
+                    if q == 0 {
+                        // verify against the CPU baseline once per client
+                        let want = treeshap::shap_values(&model, &x, req_rows, 1);
+                        for (a, b) in phis.iter().zip(&want) {
+                            assert!((a - b).abs() < 2e-3, "served {a} vs baseline {b}");
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total_rows = clients * requests * req_rows;
+
+    let svc = Arc::try_unwrap(svc).ok().expect("clients joined");
+    let lat = svc.metrics.latency_stats();
+    let bat = svc.metrics.batch_stats();
+    println!("\n=== serving report ===");
+    println!("wall time        {wall:.2}s");
+    println!("throughput       {:.0} rows/s  ({:.1} req/s)", total_rows as f64 / wall,
+             (clients * requests) as f64 / wall);
+    println!("latency p50      {:.1} ms", lat.p50 * 1e3);
+    println!("latency p95      {:.1} ms", lat.p95 * 1e3);
+    println!("latency mean     {:.1} ms", lat.mean * 1e3);
+    println!("mean batch size  {:.1} rows", bat.mean);
+    println!("metrics json     {}", svc.metrics.snapshot().to_string_pretty().replace('\n', " "));
+    svc.shutdown();
+    println!("serve_shap OK (correctness spot-checks passed)");
+    Ok(())
+}

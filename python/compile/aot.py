@@ -1,0 +1,159 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape buckets. Compiled HLO is static-shaped, so the rust
+runtime tiles a workload over fixed (rows R × bins B) executions,
+accumulating φ across bin chunks; M (feature columns, padded) and D (DP
+trip-count bound ≥ deepest merged path) select the bucket. The manifest
+lists every artifact with its bucket so the runtime can choose the
+cheapest compatible one.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+LANES = 32
+
+# (name, kind, rows, bins, features, depth, row_block, bin_block)
+# Buckets sized for the scaled model zoo (DESIGN.md §5): small/latency,
+# medium batch, wide-feature (fashion_mnist-like, M=800 ≥ 784), and deep.
+CONFIGS = [
+    ("shap_r64_b64_m16_d4", "shap", 64, 64, 16, 4, 64, 64),
+    ("shap_r256_b256_m16_d8", "shap", 256, 256, 16, 8, 64, 64),
+    ("shap_r256_b256_m64_d8", "shap", 256, 256, 64, 8, 64, 64),
+    ("shap_r256_b256_m128_d16", "shap", 256, 256, 128, 16, 64, 64),
+    ("shap_r64_b256_m800_d8", "shap", 64, 256, 800, 8, 64, 64),
+    ("shap_r64_b256_m800_d16", "shap", 64, 256, 800, 16, 64, 64),
+    # padded-path perf variant: "bins" counts paths, lane width = depth+1
+    ("shappad_r64_p512_m16_d4", "shap_padded", 64, 512, 16, 4, 64, 256),
+    ("shappad_r256_p2048_m16_d8", "shap_padded", 256, 2048, 16, 8, 64, 256),
+    ("shappad_r256_p2048_m64_d8", "shap_padded", 256, 2048, 64, 8, 64, 256),
+    ("shappad_r256_p1024_m128_d16", "shap_padded", 256, 1024, 128, 16, 64, 256),
+    ("shappad_r64_p1024_m800_d8", "shap_padded", 64, 1024, 800, 8, 64, 256),
+    ("shappad_r64_p1024_m800_d16", "shap_padded", 64, 1024, 800, 16, 64, 256),
+    ("shappad_r64_p256_m800_d8", "shap_padded", 64, 256, 800, 8, 64, 256),
+    ("shappad_r256_p256_m64_d8", "shap_padded", 256, 256, 64, 8, 64, 256),
+    # padded-path interactions (optimized; "bins" counts paths)
+    ("intpad_r16_p128_m16_d4", "interactions_padded", 16, 128, 16, 4, 16, 128),
+    ("intpad_r16_p128_m16_d8", "interactions_padded", 16, 128, 16, 8, 16, 128),
+    ("intpad_r16_p128_m64_d8", "interactions_padded", 16, 128, 64, 8, 16, 128),
+    ("intpad_r16_p128_m128_d8", "interactions_padded", 16, 128, 128, 8, 16, 128),
+    ("int_r16_b32_m16_d4", "interactions", 16, 32, 16, 4, 16, 32),
+    ("int_r16_b32_m16_d8", "interactions", 16, 32, 16, 8, 16, 32),
+    ("int_r16_b32_m64_d8", "interactions", 16, 32, 64, 8, 16, 32),
+    ("int_r16_b32_m128_d8", "interactions", 16, 32, 128, 8, 16, 32),
+    ("pred_r256_b256_m16", "predict", 256, 256, 16, 0, 0, 0),
+    ("pred_r256_b256_m64", "predict", 256, 256, 64, 0, 0, 0),
+    ("pred_r256_b256_m128", "predict", 256, 256, 128, 0, 0, 0),
+    ("pred_r64_b256_m800", "predict", 64, 256, 800, 0, 0, 0),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def padded_arg_specs(rows, paths, features, depth):
+    w = depth + 1
+    return (
+        jax.ShapeDtypeStruct((rows, features), F32),  # x
+        jax.ShapeDtypeStruct((paths, w), I32),  # fidx
+        jax.ShapeDtypeStruct((paths, w), F32),  # lower
+        jax.ShapeDtypeStruct((paths, w), F32),  # upper
+        jax.ShapeDtypeStruct((paths, w), F32),  # zfrac
+        jax.ShapeDtypeStruct((paths,), F32),  # v
+        jax.ShapeDtypeStruct((paths,), I32),  # plen
+    )
+
+
+def arg_specs(rows, bins, features):
+    return (
+        jax.ShapeDtypeStruct((rows, features), F32),  # x
+        jax.ShapeDtypeStruct((bins, LANES), I32),  # fidx
+        jax.ShapeDtypeStruct((bins, LANES), F32),  # lower
+        jax.ShapeDtypeStruct((bins, LANES), F32),  # upper
+        jax.ShapeDtypeStruct((bins, LANES), F32),  # zfrac
+        jax.ShapeDtypeStruct((bins, LANES), F32),  # v
+        jax.ShapeDtypeStruct((bins, LANES), I32),  # pos
+        jax.ShapeDtypeStruct((bins, LANES), I32),  # plen
+    )
+
+
+def lower_config(name, kind, rows, bins, features, depth, rb, bb):
+    if kind == "shap":
+        fn = model.jit_shap(depth, row_block=rb, bin_block=bb)
+    elif kind == "interactions":
+        fn = model.jit_interactions(depth, row_block=rb, bin_block=bb)
+    elif kind == "predict":
+        fn = model.jit_predict()
+    elif kind == "shap_padded":
+        fn = model.jit_shap_padded(depth, row_block=rb, path_block=bb)
+        lowered = fn.lower(*padded_arg_specs(rows, bins, features, depth))
+        return to_hlo_text(lowered)
+    elif kind == "interactions_padded":
+        fn = model.jit_interactions_padded(depth, row_block=rb, path_block=bb)
+        lowered = fn.lower(*padded_arg_specs(rows, bins, features, depth))
+        return to_hlo_text(lowered)
+    else:
+        raise ValueError(kind)
+    lowered = fn.lower(*arg_specs(rows, bins, features))
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for name, kind, rows, bins, features, depth, rb, bb in CONFIGS:
+        if only is not None and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        text = lower_config(name, kind, rows, bins, features, depth, rb, bb)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "kind": kind,
+                "rows": rows,
+                "bins": bins,
+                "features": features,
+                "depth": depth,
+                "lanes": LANES,
+                "file": fname,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=2)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

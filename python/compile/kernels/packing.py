@@ -1,0 +1,205 @@
+"""Bin packing of path sub-problems and packed device-tensor layout.
+
+Python mirror of ``rust/src/shap/{binpack,packed}.rs`` so the L1 kernel is
+testable standalone. Bin capacity is the SIMT lane width (32): every path
+occupies contiguous lanes of exactly one bin (§3.3 of the paper — groups
+never straddle a warp).
+
+Packed tensors (all ``[num_bins, LANES]``):
+
+- ``fidx``  int32 — feature of the element, −1 for root/padding
+- ``lower``/``upper`` float32 — feature interval for one_fraction
+- ``zfrac`` float32 — zero_fraction (cover ratio when feature missing)
+- ``v``     float32 — leaf value of the owning path
+- ``pos``   int32 — element position within its path (0 = root)
+- ``plen``  int32 — owning path length in elements; 0 marks padding lanes
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from .trees import Path
+
+LANES = 32
+F32_MAX = np.float32(3.4028235e38)  # stand-in for ±inf (HLO-friendly)
+
+
+def bin_pack_none(sizes: List[int], capacity: int = LANES) -> List[List[int]]:
+    """Baseline: every item in its own bin."""
+    return [[i] for i in range(len(sizes))]
+
+
+def bin_pack_next_fit(sizes: List[int], capacity: int = LANES) -> List[List[int]]:
+    bins: List[List[int]] = []
+    cur: List[int] = []
+    used = 0
+    for i, s in enumerate(sizes):
+        if used + s > capacity:
+            bins.append(cur)
+            cur, used = [], 0
+        cur.append(i)
+        used += s
+    if cur:
+        bins.append(cur)
+    return bins
+
+
+def bin_pack_ffd(sizes: List[int], capacity: int = LANES) -> List[List[int]]:
+    order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+    bins: List[List[int]] = []
+    residual: List[int] = []
+    for i in order:
+        s = sizes[i]
+        placed = False
+        for b in range(len(bins)):
+            if residual[b] >= s:
+                bins[b].append(i)
+                residual[b] -= s
+                placed = True
+                break
+        if not placed:
+            bins.append([i])
+            residual.append(capacity - s)
+    return bins
+
+
+def bin_pack_bfd(sizes: List[int], capacity: int = LANES) -> List[List[int]]:
+    order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+    bins: List[List[int]] = []
+    residual: List[int] = []
+    for i in order:
+        s = sizes[i]
+        best, best_res = -1, capacity + 1
+        for b in range(len(bins)):
+            if s <= residual[b] < best_res:
+                best, best_res = b, residual[b]
+        if best < 0:
+            bins.append([i])
+            residual.append(capacity - s)
+        else:
+            bins[best].append(i)
+            residual[best] -= s
+    return bins
+
+
+PACKERS = {
+    "none": bin_pack_none,
+    "nf": bin_pack_next_fit,
+    "ffd": bin_pack_ffd,
+    "bfd": bin_pack_bfd,
+}
+
+
+@dataclass
+class PackedPaths:
+    """Device-layout path tensors plus bookkeeping."""
+
+    fidx: np.ndarray
+    lower: np.ndarray
+    upper: np.ndarray
+    zfrac: np.ndarray
+    v: np.ndarray
+    pos: np.ndarray
+    plen: np.ndarray
+    num_bins: int
+    max_depth: int  # longest path length − 1 (== DP trip count bound)
+    utilisation: float
+
+    def padded_to(self, num_bins: int) -> "PackedPaths":
+        """Pad the bin axis with empty bins (plen = 0 masks them out)."""
+        assert num_bins >= self.num_bins
+        extra = num_bins - self.num_bins
+
+        def pad(a, fill):
+            return np.concatenate(
+                [a, np.full((extra, LANES), fill, dtype=a.dtype)], axis=0
+            )
+
+        return PackedPaths(
+            fidx=pad(self.fidx, -1),
+            lower=pad(self.lower, -F32_MAX),
+            upper=pad(self.upper, F32_MAX),
+            zfrac=pad(self.zfrac, 1.0),
+            v=pad(self.v, 0.0),
+            pos=pad(self.pos, 0),
+            plen=pad(self.plen, 0),
+            num_bins=num_bins,
+            max_depth=self.max_depth,
+            utilisation=self.utilisation,
+        )
+
+
+@dataclass
+class PaddedPaths:
+    """Padded-path layout (perf variant): [paths, width] element tensors,
+    [paths] leaf values / lengths. Mirror of rust `PaddedGroup`."""
+
+    fidx: np.ndarray
+    lower: np.ndarray
+    upper: np.ndarray
+    zfrac: np.ndarray
+    v: np.ndarray
+    plen: np.ndarray
+    num_paths: int
+    width: int
+
+
+def pad_paths(paths: List[Path], width: int, pad_to: int = 0) -> PaddedPaths:
+    """Lay paths out one-per-row with the element axis padded to width."""
+    assert all(len(p) <= width for p in paths)
+    n = max(len(paths), pad_to)
+    fidx = np.full((n, width), -1, np.int32)
+    lower = np.full((n, width), -F32_MAX, np.float32)
+    upper = np.full((n, width), F32_MAX, np.float32)
+    zfrac = np.ones((n, width), np.float32)
+    v = np.zeros(n, np.float32)
+    plen = np.zeros(n, np.int32)
+    for i, p in enumerate(paths):
+        for k, e in enumerate(p.elements):
+            fidx[i, k] = e.feature
+            lower[i, k] = max(e.lower, -F32_MAX)
+            upper[i, k] = min(e.upper, F32_MAX)
+            zfrac[i, k] = e.zero_fraction
+        v[i] = p.elements[-1].v
+        plen[i] = len(p)
+    return PaddedPaths(fidx, lower, upper, zfrac, v, plen, n, width)
+
+
+def pack_paths(paths: List[Path], algorithm: str = "bfd") -> PackedPaths:
+    """Bin-pack paths into LANES-wide bins and emit the packed tensors."""
+    sizes = [len(p) for p in paths]
+    assert all(1 <= s <= LANES for s in sizes), "path length must fit a bin"
+    bins = PACKERS[algorithm](sizes)
+    B = len(bins)
+    fidx = np.full((B, LANES), -1, np.int32)
+    lower = np.full((B, LANES), -F32_MAX, np.float32)
+    upper = np.full((B, LANES), F32_MAX, np.float32)
+    zfrac = np.ones((B, LANES), np.float32)
+    v = np.zeros((B, LANES), np.float32)
+    pos = np.zeros((B, LANES), np.int32)
+    plen = np.zeros((B, LANES), np.int32)
+    max_depth = 0
+    for b, items in enumerate(bins):
+        lane = 0
+        for pi in items:
+            p = paths[pi]
+            E = len(p)
+            max_depth = max(max_depth, E - 1)
+            for k, e in enumerate(p.elements):
+                fidx[b, lane] = e.feature
+                lower[b, lane] = max(e.lower, -F32_MAX)
+                upper[b, lane] = min(e.upper, F32_MAX)
+                zfrac[b, lane] = e.zero_fraction
+                v[b, lane] = e.v
+                pos[b, lane] = k
+                plen[b, lane] = E
+                lane += 1
+        assert lane <= LANES
+    total = sum(sizes)
+    return PackedPaths(
+        fidx, lower, upper, zfrac, v, pos, plen,
+        num_bins=B, max_depth=max_depth,
+        utilisation=total / (LANES * B) if B else 1.0,
+    )

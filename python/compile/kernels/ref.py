@@ -1,0 +1,345 @@
+"""Correctness oracles for the GPUTreeShap kernels.
+
+Three independent references, from slowest/most-trustworthy up:
+
+1. ``brute_force_shap`` / ``brute_force_interactions`` — direct evaluation
+   of the Shapley definitions (Eq. 2 / Eq. 3 of the paper) by subset
+   enumeration over the features present in the tree. Exponential; only
+   usable for trees touching ≤ ~12 features, but it validates *everything*
+   including cover weighting.
+2. ``treeshap`` — faithful port of the recursive polynomial-time
+   Algorithm 1 (Lundberg et al. 2020), including duplicate-feature
+   UNWIND handling.
+3. ``path_shap`` — per-path dynamic program over the extracted,
+   duplicate-merged path representation: the exact math the L1 Pallas
+   kernel vectorizes, in plain numpy.
+"""
+
+from math import comb
+from typing import List
+
+import numpy as np
+
+from .trees import Path, Tree
+
+
+# ---------------------------------------------------------------------------
+# 1. Brute force (ground truth)
+# ---------------------------------------------------------------------------
+
+def _cond_expectation(tree: Tree, x: np.ndarray, present: frozenset, node: int = 0) -> float:
+    """E[f(x) | x_S]: follow x for present features, cover-weight otherwise."""
+    if tree.is_leaf(node):
+        return float(tree.value[node])
+    f = int(tree.feature[node])
+    l, r = int(tree.left[node]), int(tree.right[node])
+    if f in present:
+        nxt = l if x[f] < tree.threshold[node] else r
+        return _cond_expectation(tree, x, present, nxt)
+    cov = float(tree.cover[node])
+    wl = float(tree.cover[l]) / cov
+    wr = float(tree.cover[r]) / cov
+    return wl * _cond_expectation(tree, x, present, l) + wr * _cond_expectation(
+        tree, x, present, r
+    )
+
+
+def _tree_features(tree: Tree) -> List[int]:
+    return sorted(set(int(f) for f in tree.feature[tree.left >= 0]))
+
+
+def _subsets(items: List[int]):
+    n = len(items)
+    for mask in range(1 << n):
+        yield frozenset(items[i] for i in range(n) if mask >> i & 1)
+
+
+def brute_force_shap(tree: Tree, x: np.ndarray, num_features: int) -> np.ndarray:
+    """Exact Eq. 2 by enumeration. Returns φ of length num_features + 1,
+    with the base value E[f] in the last slot. Null features get φ=0
+    (Shapley values are invariant to adding null players)."""
+    feats = _tree_features(tree)
+    m = len(feats)
+    phis = np.zeros(num_features + 1, dtype=np.float64)
+    phis[num_features] = _cond_expectation(tree, x, frozenset())
+    if m == 0:
+        return phis
+    assert m <= 14, "brute force limited to small trees"
+    for i in feats:
+        others = [f for f in feats if f != i]
+        for s in _subsets(others):
+            w = 1.0 / (comb(m - 1, len(s)) * m)
+            gain = _cond_expectation(tree, x, s | {i}) - _cond_expectation(tree, x, s)
+            phis[i] += w * gain
+    return phis
+
+
+def brute_force_interactions(tree: Tree, x: np.ndarray, num_features: int) -> np.ndarray:
+    """Exact Eq. 3 (off-diagonals) + Eq. 6 (diagonal) by enumeration.
+    Returns (num_features+1)² matrix; [M, M] holds E[f]."""
+    feats = _tree_features(tree)
+    m = len(feats)
+    M = num_features
+    out = np.zeros((M + 1, M + 1), dtype=np.float64)
+    out[M, M] = _cond_expectation(tree, x, frozenset())
+    phis = brute_force_shap(tree, x, num_features)
+    if m < 2:
+        for i in feats:
+            out[i, i] = phis[i]
+        return out
+    for i in feats:
+        for j in feats:
+            if i == j:
+                continue
+            others = [f for f in feats if f not in (i, j)]
+            for s in _subsets(others):
+                # |S|!(m−|S|−2)!/(2(m−1)!)
+                w = 1.0 / (comb(m - 2, len(s)) * (m - 1) * 2)
+                d = (
+                    _cond_expectation(tree, x, s | {i, j})
+                    - _cond_expectation(tree, x, s | {i})
+                    - _cond_expectation(tree, x, s | {j})
+                    + _cond_expectation(tree, x, s)
+                )
+                out[i, j] += w * d
+    for i in feats:
+        out[i, i] = phis[i] - (out[i, :M].sum() - out[i, i])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2. Recursive Algorithm 1 (TreeShap)
+# ---------------------------------------------------------------------------
+
+class _PathState:
+    """The m list of Algorithm 1: parallel arrays of (d, z, o, w)."""
+
+    __slots__ = ("d", "z", "o", "w")
+
+    def __init__(self):
+        self.d: List[int] = []
+        self.z: List[float] = []
+        self.o: List[float] = []
+        self.w: List[float] = []
+
+    def copy(self) -> "_PathState":
+        c = _PathState()
+        c.d = self.d[:]
+        c.z = self.z[:]
+        c.o = self.o[:]
+        c.w = self.w[:]
+        return c
+
+    def __len__(self):
+        return len(self.d)
+
+
+def _extend(m: _PathState, pz: float, po: float, pi: int) -> _PathState:
+    m = m.copy()
+    l = len(m)
+    m.d.append(pi)
+    m.z.append(pz)
+    m.o.append(po)
+    m.w.append(1.0 if l == 0 else 0.0)
+    for i in range(l - 1, -1, -1):  # 0-indexed positions l-1 .. 0
+        m.w[i + 1] += po * m.w[i] * (i + 1) / (l + 1)
+        m.w[i] = pz * m.w[i] * (l - i) / (l + 1)
+    return m
+
+
+def _unwind(m: _PathState, i: int) -> _PathState:
+    m = m.copy()
+    l = len(m) - 1  # unique_depth
+    n = m.w[l]
+    o_i, z_i = m.o[i], m.z[i]
+    for j in range(l - 1, -1, -1):
+        if o_i != 0.0:
+            t = m.w[j]
+            m.w[j] = n * (l + 1) / ((j + 1) * o_i)
+            n = t - m.w[j] * z_i * (l - j) / (l + 1)
+        else:
+            m.w[j] = m.w[j] * (l + 1) / (z_i * (l - j))
+    for j in range(i, l):
+        m.d[j], m.z[j], m.o[j] = m.d[j + 1], m.z[j + 1], m.o[j + 1]
+    m.d.pop(), m.z.pop(), m.o.pop(), m.w.pop()
+    return m
+
+
+def _unwound_sum(m: _PathState, i: int) -> float:
+    l = len(m) - 1
+    o_i, z_i = m.o[i], m.z[i]
+    nxt = m.w[l]
+    total = 0.0
+    if o_i != 0.0:
+        for j in range(l - 1, -1, -1):
+            tmp = nxt / ((j + 1) * o_i)
+            total += tmp
+            nxt = m.w[j] - tmp * z_i * (l - j)
+    else:
+        for j in range(l - 1, -1, -1):
+            total += m.w[j] / (z_i * (l - j))
+    return total * (l + 1)
+
+
+def treeshap(
+    tree: Tree,
+    x: np.ndarray,
+    num_features: int,
+    condition: int = 0,
+    condition_feature: int = -1,
+) -> np.ndarray:
+    """Recursive Algorithm 1. condition ∈ {0, 1, -1}: no conditioning /
+    feature fixed present / fixed absent (used for interaction values).
+    Returns φ of length num_features + 1 (base value last; zero when
+    conditioning, matching the shap package convention)."""
+    phis = np.zeros(num_features + 1, dtype=np.float64)
+    if condition == 0:
+        phis[num_features] = _cond_expectation(tree, x, frozenset())
+
+    def recurse(j: int, m: _PathState, pz: float, po: float, pi: int, cond_frac: float):
+        if cond_frac == 0.0:
+            return
+        if condition == 0 or pi != condition_feature:
+            m = _extend(m, pz, po, pi)
+        else:
+            # Conditioned feature is never added to the path; its one/zero
+            # fraction multiplies everything at and below this branch.
+            cond_frac *= po if condition == 1 else pz
+        if tree.is_leaf(j):
+            for i in range(1, len(m)):
+                w = _unwound_sum(m, i)
+                phis[m.d[i]] += (
+                    w * (m.o[i] - m.z[i]) * float(tree.value[j]) * cond_frac
+                )
+            return
+        f = int(tree.feature[j])
+        l, r = int(tree.left[j]), int(tree.right[j])
+        h, c = (l, r) if x[f] < tree.threshold[j] else (r, l)
+        cov = float(tree.cover[j])
+        iz = io = 1.0
+        k = next((idx for idx in range(1, len(m)) if m.d[idx] == f), None)
+        if k is not None:
+            iz, io = m.z[k], m.o[k]
+            m = _unwind(m, k)
+        recurse(h, m, iz * float(tree.cover[h]) / cov, io, f, cond_frac)
+        recurse(c, m, iz * float(tree.cover[c]) / cov, 0.0, f, cond_frac)
+
+    recurse(0, _PathState(), 1.0, 1.0, -1, 1.0)
+    return phis
+
+
+def treeshap_ensemble(trees: List[Tree], x: np.ndarray, num_features: int) -> np.ndarray:
+    phis = np.zeros(num_features + 1, dtype=np.float64)
+    for t in trees:
+        phis += treeshap(t, x, num_features)
+    return phis
+
+
+def treeshap_interactions(trees: List[Tree], x: np.ndarray, num_features: int) -> np.ndarray:
+    """Interaction matrix via conditioning (Eq. 5), the CPU O(TLD²M) way:
+    φ_ij = (φ_i | j present − φ_i | j absent) / 2 for i ≠ j, diagonal by
+    Eq. 6, base value at [M, M]."""
+    M = num_features
+    out = np.zeros((M + 1, M + 1), dtype=np.float64)
+    phis = np.zeros(M + 1, dtype=np.float64)
+    for t in trees:
+        phis += treeshap(t, x, M)
+        for j in _tree_features(t):
+            on = treeshap(t, x, M, condition=1, condition_feature=j)
+            off = treeshap(t, x, M, condition=-1, condition_feature=j)
+            out[:M, j] += (on[:M] - off[:M]) / 2.0
+    out[M, M] = phis[M]
+    for i in range(M):
+        out[i, i] = phis[i] - (out[i, :M].sum() - out[i, i])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 3. Per-path DP over the merged path representation (what L1 vectorizes)
+# ---------------------------------------------------------------------------
+
+def _one_fraction(e, x) -> float:
+    if e.feature < 0:
+        return 0.0
+    return 1.0 if e.lower <= x[e.feature] < e.upper else 0.0
+
+
+def _path_weights(path: Path, x: np.ndarray, skip: int = -1):
+    """EXTEND over a merged path (optionally skipping position ``skip``),
+    returning the permutation-weight vector w over remaining elements."""
+    elems = [e for i, e in enumerate(path.elements) if i != skip]
+    E = len(elems)
+    w = np.zeros(E, dtype=np.float64)
+    w[0] = 1.0
+    for d in range(1, E):
+        z_d = elems[d].zero_fraction
+        o_d = _one_fraction(elems[d], x)
+        neww = np.zeros_like(w)
+        for p in range(E):
+            lw = w[p - 1] if p >= 1 else 0.0
+            neww[p] = z_d * w[p] * (d - p) / (d + 1) + o_d * lw * p / (d + 1)
+        w = neww
+    return elems, w
+
+
+def _elems_unwound_sum(elems, x, w, i) -> float:
+    l = len(elems) - 1
+    e = elems[i]
+    o, z = _one_fraction(e, x), e.zero_fraction
+    nxt = w[l]
+    total = 0.0
+    if o != 0.0:
+        for j in range(l - 1, -1, -1):
+            tmp = nxt / ((j + 1) * o)
+            total += tmp
+            nxt = w[j] - tmp * z * (l - j)
+    else:
+        for j in range(l - 1, -1, -1):
+            total += w[j] / (z * (l - j))
+    return total * (l + 1)
+
+
+def path_shap(paths: List[Path], x: np.ndarray, num_features: int) -> np.ndarray:
+    """SHAP values from the path representation: Σ over paths of the
+    per-element DP contributions. Base value in slot M."""
+    phis = np.zeros(num_features + 1, dtype=np.float64)
+    for path in paths:
+        v = path.elements[-1].v
+        elems, w = _path_weights(path, x)
+        for i in range(1, len(elems)):
+            e = elems[i]
+            s = _elems_unwound_sum(elems, x, w, i)
+            phis[e.feature] += s * (_one_fraction(e, x) - e.zero_fraction) * v
+        prob = 1.0
+        for e in path.elements:
+            prob *= e.zero_fraction
+        phis[num_features] += prob * v
+    return phis
+
+
+def path_interactions(paths: List[Path], x: np.ndarray, num_features: int) -> np.ndarray:
+    """Interaction matrix from the path representation (the O(TLD³)
+    formulation of §3.5): condition only on features present on the path;
+    one DP per conditioned position serves both present and absent cases,
+    since conditioning only scales the result by o_k vs z_k."""
+    M = num_features
+    out = np.zeros((M + 1, M + 1), dtype=np.float64)
+    phis = path_shap(paths, x, M)
+    for path in paths:
+        v = path.elements[-1].v
+        E = len(path.elements)
+        if E < 2:
+            continue
+        for k in range(1, E):
+            ek = path.elements[k]
+            ok, zk = _one_fraction(ek, x), ek.zero_fraction
+            elems, w = _path_weights(path, x, skip=k)
+            for i in range(1, len(elems)):
+                e = elems[i]
+                s = _elems_unwound_sum(elems, x, w, i)
+                contrib = s * (_one_fraction(e, x) - e.zero_fraction) * v
+                out[e.feature, ek.feature] += contrib * (ok - zk) / 2.0
+    out[M, M] = phis[M]
+    for i in range(M):
+        out[i, i] = phis[i] - (out[i, :M].sum() - out[i, i])
+    return out

@@ -1,0 +1,299 @@
+"""L1 Pallas kernels: the GPUTreeShap dynamic program, vectorized.
+
+CUDA→TPU adaptation (DESIGN.md §2): the paper assigns one warp lane per
+path element and communicates with register shuffles. Here a "warp" is the
+trailing lane axis of ``[bins, 32]`` packed tensors; shuffles become
+masked gathers/shifts along that axis, executed on the VPU over a
+``[row_block, bin_block, 32]`` tile resident in VMEM. The Pallas grid is
+(row blocks × bin blocks); φ blocks are revisited across the bin-block
+axis and accumulated in place (the classic reduction-grid pattern), which
+replaces the paper's global atomicAdd.
+
+Kernels are lowered with ``interpret=True``: CPU PJRT cannot execute
+Mosaic custom calls, so the interpreted ops lower to plain HLO. The
+structure (BlockSpecs, trip counts, VMEM working set) is the TPU design;
+numerics are validated on CPU against ``ref.py``.
+
+EXTEND recurrence (0-indexed position p, step d adds the element at
+position d of the path; w is the permutation-weight vector):
+
+    w(p) ← z_d·w(p)·(d−p)/(d+1) + o_d·w(p−1)·p/(d+1)
+
+UNWOUNDSUM per lane (own fractions o, z; l = path length − 1):
+
+    next ← w(l); total ← 0
+    for j = l−1 .. 0:
+        o ≠ 0:  tmp = next/((j+1)·o); total += tmp; next = w(j) − tmp·z·(l−j)
+        o = 0:  total += w(j)/(z·(l−j))
+    unwound = total·(l+1)
+
+φ contribution of a lane = unwound·(o − z)·v, scatter-added by feature.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 32
+_F32 = jnp.float32
+
+
+def _gather_lane(arr, idx):
+    """Gather along the trailing lane axis with per-lane indices.
+
+    arr: [..., B, L]; idx: [B, L] int32 (clipped to lane range). The warp
+    "shuffle": every lane reads another lane of its own bin.
+    """
+    idx = jnp.clip(idx, 0, LANES - 1)
+    if arr.ndim == 3:
+        idx = jnp.broadcast_to(idx[None], arr.shape)
+    return jnp.take_along_axis(arr, idx, axis=arr.ndim - 1)
+
+
+def _one_fractions(x, fidx, lower, upper):
+    """o(row, bin, lane) = does x stay on the element's branch when the
+    feature is present? Root/padding lanes (fidx < 0) get 0."""
+    rb = x.shape[0]
+    bb, L = fidx.shape
+    m = x.shape[1]
+    safe = jnp.clip(fidx, 0, m - 1).reshape(-1)
+    xg = jnp.take(x, safe, axis=1).reshape(rb, bb, L)
+    ok = (xg >= lower[None]) & (xg < upper[None]) & (fidx >= 0)[None]
+    return ok.astype(_F32)
+
+
+def _extend_all(one, zfrac, pos, plen, start, max_depth, skip=None):
+    """Run the EXTEND recurrence to completion for every lane group.
+
+    With ``skip`` (a traced scalar k ≥ 1), the element at position k of
+    each path is excluded — the paper's swap-to-end conditioning trick,
+    realised as an index remap: remapped position p' = p − (p > k), and
+    step d reads the element at original position d + (d ≥ k).
+    Returns w [rows, bins, LANES] and the remapped positions/lengths.
+    """
+    posf = pos.astype(_F32)
+    if skip is None:
+        posp = pos
+        plenp = plen
+    else:
+        posp = pos - (pos > skip).astype(jnp.int32)
+        plenp = plen - 1
+    pospf = posp.astype(_F32)
+
+    rb = one.shape[0]
+    w0 = jnp.where((posp == 0) & (plen > 0), 1.0, 0.0).astype(_F32)
+    w0 = jnp.broadcast_to(w0[None], (rb,) + w0.shape)
+
+    def body(d, w):
+        if skip is None:
+            orig = start + d
+        else:
+            orig = start + d + (d >= skip).astype(jnp.int32)
+        zd = _gather_lane(zfrac, orig)  # [B, L]
+        od = _gather_lane(one, orig)  # [R, B, L]
+        if skip is None:
+            left = jnp.concatenate(
+                [jnp.zeros_like(w[..., :1]), w[..., :-1]], axis=-1
+            )
+            left = jnp.where((posp > 0)[None], left, 0.0)
+        else:
+            lq = posp - 1
+            lorig = start + lq + (lq >= skip).astype(jnp.int32)
+            left = jnp.where((posp > 0)[None], _gather_lane(w, lorig), 0.0)
+        df = d.astype(_F32)
+        wn = zd[None] * w * (df - pospf[None]) / (df + 1.0) + od * left * (
+            pospf[None] / (df + 1.0)
+        )
+        active = (d < plenp)[None]
+        return jnp.where(active, wn, w)
+
+    w = jax.lax.fori_loop(1, max_depth + 1, body, w0)
+    return w, posp, plenp, pospf
+
+
+def _unwound_sum(w, one, zfrac, posp, plenp, start, max_depth, skip=None):
+    """Every lane unwinds its own element and sums the resulting weights."""
+    lpath = plenp - 1  # unique_depth per lane
+
+    def last_orig(q):
+        if skip is None:
+            return start + q
+        return start + q + (q >= skip).astype(jnp.int32)
+
+    nxt0 = _gather_lane(w, last_orig(jnp.maximum(lpath, 0)))
+    total0 = jnp.zeros_like(nxt0)
+    o = one  # [R, B, L] own one_fraction
+    z = zfrac[None]  # [1, B, L]
+    o_pos = o > 0.0
+    o_safe = jnp.where(o_pos, o, 1.0)
+
+    def body(jj, carry):
+        total, nxt = carry
+        j = lpath - jj  # [B, L] target position
+        active = ((j >= 0) & (plenp > 0))[None]
+        wj = _gather_lane(w, last_orig(jnp.maximum(j, 0)))
+        jf1 = jnp.maximum(j, 0).astype(_F32) + 1.0
+        jjf = jj.astype(_F32)
+        tmp = nxt / (jf1[None] * o_safe)
+        total_one = total + tmp
+        nxt_one = wj - tmp * z * jjf  # (l − j) == jj
+        total_zero = total + wj / (z * jjf)
+        total = jnp.where(
+            active, jnp.where(o_pos, total_one, total_zero), total
+        )
+        nxt = jnp.where(active & o_pos, nxt_one, nxt)
+        return total, nxt
+
+    total, _ = jax.lax.fori_loop(1, max_depth + 1, body, (total0, nxt0))
+    return total * plenp.astype(_F32)[None]  # ×(l+1)
+
+
+def _shap_kernel(
+    x_ref, fidx_ref, lower_ref, upper_ref, zfrac_ref, v_ref, pos_ref,
+    plen_ref, o_ref, *, max_depth, num_features,
+):
+    """One grid step: φ contributions of a bin block for a row block."""
+    x = x_ref[...]
+    fidx = fidx_ref[...]
+    zfrac = zfrac_ref[...]
+    pos = pos_ref[...]
+    plen = plen_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, fidx.shape, 1)
+    start = lane - pos
+
+    one = _one_fractions(x, fidx, lower_ref[...], upper_ref[...])
+    w, posp, plenp, _ = _extend_all(one, zfrac, pos, plen, start, max_depth)
+    unwound = _unwound_sum(w, one, zfrac, posp, plenp, start, max_depth)
+
+    phi = unwound * (one - zfrac[None]) * v_ref[...][None]
+    phi = jnp.where(((pos > 0) & (plen > 0))[None], phi, 0.0)
+
+    m = num_features
+    target = jnp.where(fidx >= 0, fidx, m).reshape(-1)
+    rb = x.shape[0]
+    acc = jnp.zeros((rb, m + 1), _F32).at[:, target].add(
+        phi.reshape(rb, -1)
+    )
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+def _interactions_kernel(
+    x_ref, fidx_ref, lower_ref, upper_ref, zfrac_ref, v_ref, pos_ref,
+    plen_ref, o_ref, *, max_depth, num_features,
+):
+    """Off-diagonal SHAP interaction contributions for a bin block.
+
+    Loops over conditioned positions k = 1..D; one DP per k serves both
+    the present and absent cases (conditioning only scales the unwound
+    sum by o_k vs z_k):  φ_[fi, fk] += ½·unwound·(o_i−z_i)·v·(o_k−z_k).
+    Only on-path features are conditioned on — the O(TLD³) trick of §3.5.
+    """
+    x = x_ref[...]
+    fidx = fidx_ref[...]
+    zfrac = zfrac_ref[...]
+    v = v_ref[...]
+    pos = pos_ref[...]
+    plen = plen_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, fidx.shape, 1)
+    start = lane - pos
+    one = _one_fractions(x, fidx, lower_ref[...], upper_ref[...])
+
+    m = num_features
+    rb = x.shape[0]
+
+    def cond_body(k, acc):
+        zk = _gather_lane(zfrac, start + k)  # [B, L]
+        ok = _gather_lane(one, start + k)  # [R, B, L]
+        fk = _gather_lane(fidx, start + k)  # [B, L]
+        w, posp, plenp, _ = _extend_all(
+            one, zfrac, pos, plen, start, max_depth - 1, skip=k
+        )
+        unwound = _unwound_sum(
+            w, one, zfrac, posp, plenp, start, max_depth - 1, skip=k
+        )
+        contrib = 0.5 * unwound * (one - zfrac[None]) * v[None] * (
+            ok - zk[None]
+        )
+        mask = ((pos > 0) & (pos != k) & (k < plen))[None]
+        contrib = jnp.where(mask, contrib, 0.0)
+        valid = (fidx >= 0) & (fk >= 0) & (pos != k) & (k < plen)
+        pair = jnp.where(
+            valid, jnp.clip(fidx, 0, m) * (m + 1) + jnp.clip(fk, 0, m), 0
+        ).reshape(-1)
+        return acc.at[:, pair].add(contrib.reshape(rb, -1))
+
+    acc0 = jnp.zeros((rb, (m + 1) * (m + 1)), _F32)
+    acc = jax.lax.fori_loop(1, max_depth + 1, cond_body, acc0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+def _common_specs(row_block, bin_block, num_features):
+    x_spec = pl.BlockSpec((row_block, num_features), lambda r, b: (r, 0))
+    path_spec = pl.BlockSpec((bin_block, LANES), lambda r, b: (b, 0))
+    return [x_spec] + [path_spec] * 7
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "row_block", "bin_block"),
+)
+def shap_values(
+    x, fidx, lower, upper, zfrac, v, pos, plen,
+    *, max_depth, row_block=64, bin_block=64,
+):
+    """φ [rows, M+1] from packed paths. Slot M collects root/padding lanes
+    (always zero); the base value E[f] is added by the coordinator."""
+    rows, m = x.shape
+    bins = fidx.shape[0]
+    assert rows % row_block == 0 and bins % bin_block == 0
+    kernel = functools.partial(
+        _shap_kernel, max_depth=max_depth, num_features=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block, bins // bin_block),
+        in_specs=_common_specs(row_block, bin_block, m),
+        out_specs=pl.BlockSpec((row_block, m + 1), lambda r, b: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, m + 1), _F32),
+        interpret=True,
+    )(x, fidx, lower, upper, zfrac, v, pos, plen)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "row_block", "bin_block"),
+)
+def shap_interactions_offdiag(
+    x, fidx, lower, upper, zfrac, v, pos, plen,
+    *, max_depth, row_block=16, bin_block=32,
+):
+    """Off-diagonal interaction matrix, flattened: [rows, (M+1)²].
+    Diagonal (Eq. 6) and base value are filled in at L2."""
+    rows, m = x.shape
+    bins = fidx.shape[0]
+    assert rows % row_block == 0 and bins % bin_block == 0
+    kernel = functools.partial(
+        _interactions_kernel, max_depth=max_depth, num_features=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block, bins // bin_block),
+        in_specs=_common_specs(row_block, bin_block, m),
+        out_specs=pl.BlockSpec(
+            (row_block, (m + 1) * (m + 1)), lambda r, b: (r, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, (m + 1) * (m + 1)), _F32),
+        interpret=True,
+    )(x, fidx, lower, upper, zfrac, v, pos, plen)

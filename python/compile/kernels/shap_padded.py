@@ -1,0 +1,309 @@
+"""Optimized L1 kernel: padded-path layout (perf-pass variant).
+
+The warp-packed kernel (`shap_dp.py`) is the faithful CUDA→TPU
+adaptation: paths packed into 32-wide lane groups, shuffles as masked
+gathers. Gathers are its cost center (profiled in EXPERIMENTS.md §Perf).
+
+This variant transposes the problem to the layout a TPU actually likes:
+**one path per lane, elements along a short padded axis** of width
+D+1 (the depth bucket). Consequences:
+
+- z_d / o_d for EXTEND step d are plain slices `[:, d]` — no gather;
+- the left-neighbour term is a uniform shift along the element axis;
+- UNWOUNDSUM's per-position reads become one-hot contractions over a
+  ≤17-wide axis (elementwise multiply + reduce — VPU-friendly);
+- bin packing degenerates to padding: utilisation = mean_len/(D+1),
+  traded against gather-free inner loops (ablated in `bench
+  ablation_layout`).
+
+Same recurrences as shap_dp.py; outputs must agree to float tolerance
+(asserted in python tests and the rust parity suite).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_F32 = jnp.float32
+
+
+def _shap_padded_kernel(
+    x_ref, fidx_ref, lower_ref, upper_ref, zfrac_ref, v_ref, plen_ref,
+    o_ref, *, max_depth, num_features,
+):
+    """One grid step: [rb rows × pb paths], element axis width W=D+1."""
+    x = x_ref[...]  # [rb, M]
+    fidx = fidx_ref[...]  # [pb, W]
+    zfrac = zfrac_ref[...]  # [pb, W]
+    v = v_ref[...]  # [pb]
+    plen = plen_ref[...]  # [pb]
+    rb, m = x.shape
+    pb, w_axis = fidx.shape
+
+    # one_fraction [rb, pb, W] — single gather per block (row-major x)
+    safe = jnp.clip(fidx, 0, m - 1).reshape(-1)
+    xg = jnp.take(x, safe, axis=1).reshape(rb, pb, w_axis)
+    one = (
+        (xg >= lower_ref[...][None])
+        & (xg < upper_ref[...][None])
+        & (fidx >= 0)[None]
+    ).astype(_F32)
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (pb, w_axis), 1)
+    posf = pos.astype(_F32)
+    valid_path = plen > 0  # [pb]
+
+    w0 = jnp.where((pos == 0) & valid_path[:, None], 1.0, 0.0).astype(_F32)
+    w0 = jnp.broadcast_to(w0[None], (rb, pb, w_axis))
+
+    def extend(d, w):
+        zd = jax.lax.dynamic_slice_in_dim(zfrac, d, 1, axis=1)  # [pb,1]
+        od = jax.lax.dynamic_slice_in_dim(one, d, 1, axis=2)  # [rb,pb,1]
+        df = d.astype(_F32)
+        left = jnp.concatenate(
+            [jnp.zeros_like(w[..., :1]), w[..., :-1]], axis=-1
+        )
+        rec = 1.0 / (df + 1.0)
+        # z_d and the step masking are row-independent: fold them into the
+        # [pb, W] factor so the [rb, pb, W] update is 4 ops (§Perf iter 4)
+        active = (d < plen)[:, None]
+        fa = jnp.where(active, zd * (df - posf) * rec, 1.0)[None]
+        fb = jnp.where(active, posf * rec, 0.0)[None]
+        return w * fa + od * left * fb
+
+    w = jax.lax.fori_loop(1, max_depth + 1, extend, w0)
+
+    # UNWOUNDSUM, all elements of all paths at once
+    lpath = plen - 1  # [pb]
+    elem = pos  # alias: element index along last axis
+    o_pos = one > 0.0
+    # reciprocals hoisted out of the unwind loop: one big division each
+    # instead of one per iteration (EXPERIMENTS.md §Perf iteration 3)
+    o_inv = 1.0 / jnp.where(o_pos, one, 1.0)
+    z = zfrac[None]  # [1,pb,W]
+    z_inv = 1.0 / z
+
+    def onehot_pick(arr, idx):
+        """arr [rb,pb,W] picked at per-path position idx [pb] → [rb,pb]."""
+        sel = (elem == idx[:, None]).astype(_F32)  # [pb,W]
+        return (arr * sel[None]).sum(axis=-1)
+
+    nxt0 = onehot_pick(w, jnp.maximum(lpath, 0))[..., None]
+    nxt0 = jnp.broadcast_to(nxt0, w.shape)
+    total0 = jnp.zeros_like(w)
+
+    def unwind(jj, carry):
+        total, nxt = carry
+        j = lpath - jj  # [pb]
+        active = (j >= 0)[None, :, None]
+        wj = onehot_pick(w, jnp.maximum(j, 0))[..., None]  # [rb,pb,1]
+        jf1_inv = (1.0 / (jnp.maximum(j, 0).astype(_F32) + 1.0))[None, :, None]
+        jjf = jj.astype(_F32)
+        jjf_inv = 1.0 / jjf
+        tmp = nxt * jf1_inv * o_inv
+        total_one = total + tmp
+        nxt_one = wj - tmp * z * jjf
+        total_zero = total + wj * z_inv * jjf_inv
+        total = jnp.where(active, jnp.where(o_pos, total_one, total_zero), total)
+        nxt = jnp.where(active & o_pos, nxt_one, nxt)
+        return total, nxt
+
+    total, _ = jax.lax.fori_loop(1, max_depth + 1, unwind, (total0, nxt0))
+    unwound = total * plen.astype(_F32)[None, :, None]
+
+    phi = unwound * (one - z) * v[None, :, None]
+    phi = jnp.where(((pos > 0) & (pos < plen[:, None]))[None], phi, 0.0)
+
+    target = jnp.where(fidx >= 0, fidx, m).reshape(-1)
+    acc = jnp.zeros((rb, m + 1), _F32).at[:, target].add(phi.reshape(rb, -1))
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+def _interactions_padded_kernel(
+    x_ref, fidx_ref, lower_ref, upper_ref, zfrac_ref, v_ref, plen_ref,
+    o_ref, *, max_depth, num_features,
+):
+    """Off-diagonal interaction contributions, padded layout.
+
+    Conditioning on position k excludes column k from the DP. In this
+    layout the remap is clean: keep the DP state in *remapped* coordinate
+    space (contiguous 0..plen−2), and only the element lookups index the
+    original axis at `q + (q ≥ k)` — a cheap ≤17-wide gather per k,
+    shared by every path (k is a scalar loop variable). One DP per k
+    serves present and absent: contribution scales by (o_k − z_k).
+    """
+    x = x_ref[...]
+    fidx = fidx_ref[...]  # [pb, W]
+    zfrac = zfrac_ref[...]
+    v = v_ref[...]
+    plen = plen_ref[...]
+    rb, m = x.shape
+    pb, w_axis = fidx.shape
+
+    safe = jnp.clip(fidx, 0, m - 1).reshape(-1)
+    xg = jnp.take(x, safe, axis=1).reshape(rb, pb, w_axis)
+    one = (
+        (xg >= lower_ref[...][None])
+        & (xg < upper_ref[...][None])
+        & (fidx >= 0)[None]
+    ).astype(_F32)
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (pb, w_axis), 1)
+    posf = pos.astype(_F32)
+    iota_w = jnp.arange(w_axis, dtype=jnp.int32)
+
+    def cond_body(k, acc):
+        # conditioned element (original column k) — plain slices
+        zk = jax.lax.dynamic_slice_in_dim(zfrac, k, 1, axis=1)  # [pb,1]
+        ok = jax.lax.dynamic_slice_in_dim(one, k, 1, axis=2)  # [rb,pb,1]
+        fk = jax.lax.dynamic_slice_in_dim(fidx, k, 1, axis=1)  # [pb,1]
+
+        # compacted views: remapped position q ↔ original q + (q ≥ k)
+        remap = jnp.clip(iota_w + (iota_w >= k).astype(jnp.int32), 0, w_axis - 1)
+        fidx_c = jnp.take(fidx, remap, axis=1)
+        zfrac_c = jnp.take(zfrac, remap, axis=1)
+        one_c = jnp.take(one, remap, axis=2)
+        plen_c = plen - 1  # remapped path length
+
+        valid_path = (plen_c > 0) & (k < plen)
+        w0 = jnp.where((pos == 0) & valid_path[:, None], 1.0, 0.0).astype(_F32)
+        w0 = jnp.broadcast_to(w0[None], (rb, pb, w_axis))
+
+        def extend(d, w):
+            zd = jax.lax.dynamic_slice_in_dim(zfrac_c, d, 1, axis=1)
+            od = jax.lax.dynamic_slice_in_dim(one_c, d, 1, axis=2)
+            df = d.astype(_F32)
+            left = jnp.concatenate(
+                [jnp.zeros_like(w[..., :1]), w[..., :-1]], axis=-1
+            )
+            rec = 1.0 / (df + 1.0)
+            active = (d < plen_c)[:, None]
+            fa = jnp.where(active, zd * (df - posf) * rec, 1.0)[None]
+            fb = jnp.where(active, posf * rec, 0.0)[None]
+            return w * fa + od * left * fb
+
+        w = jax.lax.fori_loop(1, max_depth, extend, w0)
+
+        lpath = plen_c - 1
+        o_pos = one_c > 0.0
+        o_inv = 1.0 / jnp.where(o_pos, one_c, 1.0)
+        z = zfrac_c[None]
+        z_inv = 1.0 / z
+
+        def onehot_pick(arr, idx):
+            sel = (pos == idx[:, None]).astype(_F32)
+            return (arr * sel[None]).sum(axis=-1)
+
+        nxt0 = onehot_pick(w, jnp.maximum(lpath, 0))[..., None]
+        nxt0 = jnp.broadcast_to(nxt0, w.shape)
+        total0 = jnp.zeros_like(w)
+
+        def unwind(jj, carry):
+            total, nxt = carry
+            j = lpath - jj
+            active = (j >= 0)[None, :, None]
+            wj = onehot_pick(w, jnp.maximum(j, 0))[..., None]
+            jf1_inv = (1.0 / (jnp.maximum(j, 0).astype(_F32) + 1.0))[None, :, None]
+            jjf = jj.astype(_F32)
+            tmp = nxt * jf1_inv * o_inv
+            total_one = total + tmp
+            nxt_one = wj - tmp * z * jjf
+            total_zero = total + wj * z_inv * (1.0 / jjf)
+            total = jnp.where(
+                active, jnp.where(o_pos, total_one, total_zero), total
+            )
+            nxt = jnp.where(active & o_pos, nxt_one, nxt)
+            return total, nxt
+
+        total, _ = jax.lax.fori_loop(1, max_depth, unwind, (total0, nxt0))
+        unwound = total * plen_c.astype(_F32)[None, :, None]
+
+        contrib = 0.5 * unwound * (one_c - z) * v[None, :, None] * (ok - zk[None])
+        mask = ((pos > 0) & (pos < plen_c[:, None]) & valid_path[:, None])[None]
+        contrib = jnp.where(mask, contrib, 0.0)
+
+        valid_pair = (fidx_c >= 0) & (fk >= 0)
+        pair = jnp.where(
+            valid_pair,
+            jnp.clip(fidx_c, 0, m) * (m + 1) + jnp.clip(fk, 0, m),
+            0,
+        ).reshape(-1)
+        return acc.at[:, pair].add(contrib.reshape(rb, -1))
+
+    acc0 = jnp.zeros((rb, (m + 1) * (m + 1)), _F32)
+    acc = jax.lax.fori_loop(1, max_depth + 1, cond_body, acc0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "row_block", "path_block"),
+)
+def shap_interactions_padded_offdiag(
+    x, fidx, lower, upper, zfrac, v, plen,
+    *, max_depth, row_block=16, path_block=128,
+):
+    """Off-diagonal interactions [rows, (M+1)²] from padded-path tensors."""
+    rows, m = x.shape
+    paths, w_axis = fidx.shape
+    assert w_axis == max_depth + 1
+    assert rows % row_block == 0 and paths % path_block == 0
+    kernel = functools.partial(
+        _interactions_padded_kernel, max_depth=max_depth, num_features=m
+    )
+    x_spec = pl.BlockSpec((row_block, m), lambda r, p: (r, 0))
+    elem_spec = pl.BlockSpec((path_block, w_axis), lambda r, p: (p, 0))
+    path_spec = pl.BlockSpec((path_block,), lambda r, p: (p,))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block, paths // path_block),
+        in_specs=[x_spec, elem_spec, elem_spec, elem_spec, elem_spec,
+                  path_spec, path_spec],
+        out_specs=pl.BlockSpec(
+            (row_block, (m + 1) * (m + 1)), lambda r, p: (r, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, (m + 1) * (m + 1)), _F32),
+        interpret=True,
+    )(x, fidx, lower, upper, zfrac, v, plen)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "row_block", "path_block"),
+)
+def shap_values_padded(
+    x, fidx, lower, upper, zfrac, v, plen,
+    *, max_depth, row_block=64, path_block=256,
+):
+    """φ [rows, M+1] from padded-path tensors [paths, max_depth+1]."""
+    rows, m = x.shape
+    paths, w_axis = fidx.shape
+    assert w_axis == max_depth + 1
+    assert rows % row_block == 0 and paths % path_block == 0
+    kernel = functools.partial(
+        _shap_padded_kernel, max_depth=max_depth, num_features=m
+    )
+    x_spec = pl.BlockSpec((row_block, m), lambda r, p: (r, 0))
+    elem_spec = pl.BlockSpec((path_block, w_axis), lambda r, p: (p, 0))
+    path_spec = pl.BlockSpec((path_block,), lambda r, p: (p,))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block, paths // path_block),
+        in_specs=[x_spec, elem_spec, elem_spec, elem_spec, elem_spec,
+                  path_spec, path_spec],
+        out_specs=pl.BlockSpec((row_block, m + 1), lambda r, p: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, m + 1), _F32),
+        interpret=True,
+    )(x, fidx, lower, upper, zfrac, v, plen)

@@ -1,0 +1,201 @@
+"""Decision-tree structures used by the compile-path tests.
+
+These mirror the rust `gbdt::Tree` layout (array-of-nodes, XGBoost style):
+node i is a leaf iff ``left[i] < 0``; interior nodes carry a feature index,
+a ``x < threshold`` split, and ``cover`` (sum of training hessians routed
+through the node) used for the Bernoulli "missing feature" weighting.
+
+Also provides synthetic random-tree generation and the path-extraction +
+duplicate-merge preprocessing of GPUTreeShap §3.1–3.2, in pure python, so
+the L1 kernel can be tested without the rust coordinator.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+NEG_INF = float("-inf")
+POS_INF = float("inf")
+
+
+@dataclass
+class Tree:
+    """Array-of-nodes binary decision tree with cover statistics."""
+
+    left: np.ndarray  # int32, -1 for leaf
+    right: np.ndarray  # int32
+    feature: np.ndarray  # int32
+    threshold: np.ndarray  # float32, split is x[f] < t
+    value: np.ndarray  # float32, leaf value (undefined for interior)
+    cover: np.ndarray  # float32, training weight through node
+
+    def is_leaf(self, i: int) -> bool:
+        return self.left[i] < 0
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.left)
+
+    def num_leaves(self) -> int:
+        return int(np.sum(self.left < 0))
+
+    def max_depth(self) -> int:
+        def rec(i, d):
+            if self.is_leaf(i):
+                return d
+            return max(rec(self.left[i], d + 1), rec(self.right[i], d + 1))
+
+        return rec(0, 0)
+
+    def predict_row(self, x: np.ndarray) -> float:
+        i = 0
+        while not self.is_leaf(i):
+            i = self.left[i] if x[self.feature[i]] < self.threshold[i] else self.right[i]
+        return float(self.value[i])
+
+
+@dataclass
+class PathElement:
+    """One merged feature occurrence on a root→leaf path (Listing 1)."""
+
+    feature: int  # -1 for the root/bias element
+    lower: float  # feature interval [lower, upper) to stay on this path
+    upper: float
+    zero_fraction: float  # P(stay on path | feature missing), cover ratio
+    v: float  # leaf value of the path (same for every element)
+
+
+@dataclass
+class Path:
+    elements: List[PathElement] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.elements)
+
+
+def random_tree(
+    rng: np.random.Generator,
+    num_features: int,
+    max_depth: int,
+    duplicate_prob: float = 0.3,
+    leaf_prob: float = 0.2,
+) -> Tree:
+    """Grow a random tree with realistic cover statistics.
+
+    ``duplicate_prob`` controls how often a feature already used on the
+    current branch is split on again — exercising the duplicate-merge
+    preprocessing, which is a core correctness hazard.
+    """
+    left, right, feature, threshold, value, cover = [], [], [], [], [], []
+
+    def add_node() -> int:
+        left.append(-1)
+        right.append(-1)
+        feature.append(-1)
+        threshold.append(0.0)
+        value.append(0.0)
+        cover.append(0.0)
+        return len(left) - 1
+
+    def grow(depth: int, cov: float, used: List[int]) -> int:
+        i = add_node()
+        cover[i] = cov
+        if depth >= max_depth or (depth > 0 and rng.random() < leaf_prob) or cov < 2.0:
+            value[i] = float(rng.normal())
+            return i
+        if used and rng.random() < duplicate_prob:
+            f = int(rng.choice(used))
+        else:
+            f = int(rng.integers(0, num_features))
+        feature[i] = f
+        threshold[i] = float(rng.normal())
+        frac = float(rng.uniform(0.15, 0.85))
+        l = grow(depth + 1, cov * frac, used + [f])
+        r = grow(depth + 1, cov * (1.0 - frac), used + [f])
+        left[i], right[i] = l, r
+        return i
+
+    grow(0, float(rng.uniform(50, 1000)), [])
+    return Tree(
+        left=np.asarray(left, np.int32),
+        right=np.asarray(right, np.int32),
+        feature=np.asarray(feature, np.int32),
+        threshold=np.asarray(threshold, np.float32),
+        value=np.asarray(value, np.float32),
+        cover=np.asarray(cover, np.float32),
+    )
+
+
+def extract_paths(tree: Tree) -> List[Path]:
+    """GPUTreeShap §3.1: decompose a tree into unique root→leaf paths.
+
+    Every path starts with the root/bias element (feature −1, z = 1).
+    Feature intervals encode "x stays on this branch when present".
+    """
+    out: List[Path] = []
+
+    def rec(i: int, elems: List[PathElement]):
+        if tree.is_leaf(i):
+            v = float(tree.value[i])
+            path = Path([PathElement(e.feature, e.lower, e.upper, e.zero_fraction, v) for e in elems])
+            out.append(path)
+            return
+        f = int(tree.feature[i])
+        t = float(tree.threshold[i])
+        cov = float(tree.cover[i])
+        l, r = int(tree.left[i]), int(tree.right[i])
+        zl = float(tree.cover[l]) / cov
+        zr = float(tree.cover[r]) / cov
+        rec(l, elems + [PathElement(f, NEG_INF, t, zl, 0.0)])
+        rec(r, elems + [PathElement(f, t, POS_INF, zr, 0.0)])
+
+    rec(0, [PathElement(-1, NEG_INF, POS_INF, 1.0, 0.0)])
+    return out
+
+
+def merge_duplicates(path: Path) -> Path:
+    """GPUTreeShap §3.2: merge repeated features by interval intersection.
+
+    A root→leaf path is a hyperrectangle; multiple splits on one feature
+    intersect to a single [lower, upper) range, and their zero_fractions
+    multiply (probability of following every one of the merged branches
+    when the feature is missing). Elements are sorted by feature index —
+    EXTEND/UNWIND are commutative so order is irrelevant to SHAP values.
+    """
+    root = path.elements[0]
+    assert root.feature == -1
+    by_feature = {}
+    order = []
+    for e in path.elements[1:]:
+        if e.feature in by_feature:
+            m = by_feature[e.feature]
+            m.lower = max(m.lower, e.lower)
+            m.upper = min(m.upper, e.upper)
+            m.zero_fraction *= e.zero_fraction
+        else:
+            m = PathElement(e.feature, e.lower, e.upper, e.zero_fraction, e.v)
+            by_feature[e.feature] = m
+            order.append(e.feature)
+    merged = [by_feature[f] for f in sorted(order)]
+    return Path([root] + merged)
+
+
+def ensemble_paths(trees: List[Tree]) -> List[Path]:
+    """All unique paths of an ensemble, duplicates merged."""
+    paths: List[Path] = []
+    for t in trees:
+        paths.extend(merge_duplicates(p) for p in extract_paths(t))
+    return paths
+
+
+def expected_value(trees: List[Tree]) -> float:
+    """E[f] under cover weighting = Σ_paths v·Πz (the φ₀ base value)."""
+    total = 0.0
+    for t in trees:
+        for p in extract_paths(t):
+            prob = 1.0
+            for e in p.elements:
+                prob *= e.zero_fraction
+            total += prob * p.elements[-1].v
+    return total

@@ -1,0 +1,152 @@
+"""L2: the JAX compute graphs that are AOT-lowered to HLO artifacts.
+
+Three entry points, all pure functions of (X, packed-path tensors):
+
+- ``shap_values``        → φ  [rows, M+1]
+- ``shap_interactions``  → φᵢⱼ [rows, (M+1)²] (diagonal via Eq. 6 fused in)
+- ``predict``            → f(x) [rows] (path-hyperrectangle membership)
+
+Each calls the L1 Pallas kernels from ``kernels.shap_dp`` so that kernel
+and surrounding graph lower into a single HLO module; the rust runtime
+(`rust/src/runtime/`) executes these with no python on the request path.
+The base value E[f] = Σ_paths v·Πz is a per-model constant added by the
+coordinator — slot M of φ arrives as zero by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import shap_dp, shap_padded
+
+PACKED_ARGS = ("fidx", "lower", "upper", "zfrac", "v", "pos", "plen")
+
+
+def shap_values_padded(x, fidx, lower, upper, zfrac, v, plen,
+                       *, max_depth, row_block=64, path_block=256):
+    """φ via the gather-free padded-path kernel (perf variant; see
+    kernels/shap_padded.py). Same output contract as shap_values."""
+    phis = shap_padded.shap_values_padded(
+        x, fidx, lower, upper, zfrac, v, plen,
+        max_depth=max_depth, row_block=row_block, path_block=path_block,
+    )
+    return (phis,)
+
+
+def shap_values(x, fidx, lower, upper, zfrac, v, pos, plen,
+                *, max_depth, row_block=64, bin_block=64):
+    """φ [rows, M+1]; slot M (bias) is zero, coordinator adds E[f]."""
+    phis = shap_dp.shap_values(
+        x, fidx, lower, upper, zfrac, v, pos, plen,
+        max_depth=max_depth, row_block=row_block, bin_block=bin_block,
+    )
+    return (phis,)
+
+
+def shap_interactions(x, fidx, lower, upper, zfrac, v, pos, plen,
+                      *, max_depth, row_block=16, bin_block=32):
+    """Interaction matrix [rows, (M+1)²], Eq. 6 diagonal fused.
+
+    Runs both kernels: φ for the diagonal identity, off-diagonals from the
+    conditioning kernel. [M, M] stays zero (base value added upstream).
+    """
+    rows, m = x.shape
+    off = shap_dp.shap_interactions_offdiag(
+        x, fidx, lower, upper, zfrac, v, pos, plen,
+        max_depth=max_depth, row_block=row_block, bin_block=bin_block,
+    )
+    phis = shap_dp.shap_values(
+        x, fidx, lower, upper, zfrac, v, pos, plen,
+        max_depth=max_depth, row_block=row_block, bin_block=bin_block,
+    )
+    mat = off.reshape(rows, m + 1, m + 1)
+    rowsum = mat.sum(axis=2)  # diagonal is zero in `off`
+    diag = phis - rowsum  # Eq. 6: φ_ii = φ_i − Σ_{j≠i} φ_ij
+    diag = diag.at[:, m].set(0.0)  # bias slot handled by coordinator
+    mat = mat + jnp.eye(m + 1, dtype=mat.dtype)[None] * diag[:, :, None]
+    return (mat.reshape(rows, (m + 1) * (m + 1)),)
+
+
+def predict(x, fidx, lower, upper, zfrac, v, pos, plen):
+    """Ensemble prediction from the path representation.
+
+    A row reaches a leaf iff it satisfies every element interval on the
+    path (the path is a hyperrectangle): f(x) = Σ_paths v·Π one. Computed
+    with a cumulative-failure-count trick over the packed lane layout:
+    a path contributes iff the lane-cumsum of failures across its
+    contiguous lanes is zero, evaluated at its final (leaf) lane.
+    """
+    rows, m = x.shape
+    safe = jnp.clip(fidx, 0, m - 1).reshape(-1)
+    bb, lanes = fidx.shape
+    xg = jnp.take(x, safe, axis=1).reshape(rows, bb, lanes)
+    ok = (xg >= lower[None]) & (xg < upper[None])
+    fails = ((~ok) & ((pos > 0) & (plen > 0))[None]).astype(jnp.int32)
+    cs = jnp.cumsum(fails, axis=2)  # inclusive cumsum along lanes
+    lane = jax.lax.broadcasted_iota(jnp.int32, fidx.shape, 1)
+    start = lane - pos
+    # failures within own path, evaluated at the leaf lane (pos==plen−1)
+    prev_idx = jnp.clip(start - 1, 0, lanes - 1)
+    prev = jnp.take_along_axis(
+        cs, jnp.broadcast_to(prev_idx[None], cs.shape), axis=2
+    )
+    prev = jnp.where((start > 0)[None], prev, 0)
+    in_path_fails = cs - prev
+    is_leaf_lane = (pos == plen - 1) & (plen > 0)
+    contrib = jnp.where(
+        is_leaf_lane[None] & (in_path_fails == 0), v[None], 0.0
+    )
+    return (contrib.sum(axis=(1, 2)),)
+
+
+def jit_shap(max_depth, row_block=64, bin_block=64):
+    return jax.jit(functools.partial(
+        shap_values, max_depth=max_depth,
+        row_block=row_block, bin_block=bin_block,
+    ), keep_unused=True)
+
+
+def jit_interactions(max_depth, row_block=16, bin_block=32):
+    return jax.jit(functools.partial(
+        shap_interactions, max_depth=max_depth,
+        row_block=row_block, bin_block=bin_block,
+    ), keep_unused=True)
+
+
+def jit_predict():
+    return jax.jit(predict, keep_unused=True)
+
+
+def jit_shap_padded(max_depth, row_block=64, path_block=256):
+    return jax.jit(functools.partial(
+        shap_values_padded, max_depth=max_depth,
+        row_block=row_block, path_block=path_block,
+    ), keep_unused=True)
+
+
+def shap_interactions_padded(x, fidx, lower, upper, zfrac, v, plen,
+                             *, max_depth, row_block=16, path_block=128):
+    """Interactions [rows, (M+1)²] via the padded-path kernels, Eq. 6
+    diagonal fused (same contract as shap_interactions)."""
+    rows, m = x.shape
+    off = shap_padded.shap_interactions_padded_offdiag(
+        x, fidx, lower, upper, zfrac, v, plen,
+        max_depth=max_depth, row_block=row_block, path_block=path_block,
+    )
+    phis = shap_padded.shap_values_padded(
+        x, fidx, lower, upper, zfrac, v, plen,
+        max_depth=max_depth, row_block=row_block, path_block=path_block,
+    )
+    mat = off.reshape(rows, m + 1, m + 1)
+    rowsum = mat.sum(axis=2)
+    diag = (phis - rowsum).at[:, m].set(0.0)
+    mat = mat + jnp.eye(m + 1, dtype=mat.dtype)[None] * diag[:, :, None]
+    return (mat.reshape(rows, (m + 1) * (m + 1)),)
+
+
+def jit_interactions_padded(max_depth, row_block=16, path_block=128):
+    return jax.jit(functools.partial(
+        shap_interactions_padded, max_depth=max_depth,
+        row_block=row_block, path_block=path_block,
+    ), keep_unused=True)

@@ -1,0 +1,30 @@
+import os
+import sys
+
+# Allow `pytest tests/` from the python/ directory (and repo root).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+from compile.kernels import packing as P
+from compile.kernels import trees as T
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_forest(rng, num_trees, num_features, max_depth, duplicate_prob=0.35):
+    return [
+        T.random_tree(rng, num_features, max_depth, duplicate_prob)
+        for _ in range(num_trees)
+    ]
+
+
+def packed_for_kernel(forest, algorithm="bfd", bin_block=8):
+    paths = T.ensemble_paths(forest)
+    packed = P.pack_paths(paths, algorithm)
+    bins = ((packed.num_bins + bin_block - 1) // bin_block) * bin_block
+    return packed.padded_to(max(bins, bin_block))

@@ -1,0 +1,74 @@
+"""Hypothesis property sweeps over tree shapes, depths, feature counts.
+
+These complement the fixed-seed tests by searching the input space for
+shapes that break the kernel: degenerate trees, extreme covers, deep
+duplicate chains, single-path bins, and float32 edge values.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import packing as P
+from compile.kernels import ref as R
+from compile.kernels import shap_dp as K
+from compile.kernels import trees as T
+
+
+@st.composite
+def forest_and_x(draw, max_features=8, max_trees=4, max_depth=6):
+    seed = draw(st.integers(0, 2**31 - 1))
+    m = draw(st.integers(1, max_features))
+    n_trees = draw(st.integers(1, max_trees))
+    depth = draw(st.integers(1, max_depth))
+    dup = draw(st.floats(0.0, 0.9))
+    rng = np.random.default_rng(seed)
+    forest = [T.random_tree(rng, m, depth, dup) for _ in range(n_trees)]
+    x = rng.normal(size=m).astype(np.float32) * draw(
+        st.sampled_from([0.1, 1.0, 10.0])
+    )
+    return forest, x, m
+
+
+@settings(max_examples=25, deadline=None)
+@given(forest_and_x())
+def test_kernel_matches_recursive_everywhere(case):
+    forest, x, m = case
+    paths = T.ensemble_paths(forest)
+    packed = P.pack_paths(paths, "bfd")
+    bb = 8
+    packed = packed.padded_to(((packed.num_bins + bb - 1) // bb) * bb)
+    X = np.tile(x, (8, 1))
+    phis = np.asarray(
+        K.shap_values(
+            X, packed.fidx, packed.lower, packed.upper, packed.zfrac,
+            packed.v, packed.pos, packed.plen,
+            max_depth=max(packed.max_depth, 1), row_block=8, bin_block=bb,
+        )
+    )
+    ref = R.treeshap_ensemble(forest, x, m)
+    got = phis[0].astype(np.float64)
+    got[m] += T.expected_value(forest)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(got, ref, atol=5e-4 * scale, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 32), min_size=1, max_size=300),
+       st.sampled_from(["none", "nf", "ffd", "bfd"]))
+def test_packing_invariants(sizes, alg):
+    bins = P.PACKERS[alg](sizes)
+    seen = sorted(i for b in bins for i in b)
+    assert seen == list(range(len(sizes)))
+    for b in bins:
+        assert sum(sizes[i] for i in b) <= P.LANES
+
+
+@settings(max_examples=15, deadline=None)
+@given(forest_and_x(max_features=5, max_trees=2, max_depth=4))
+def test_path_dp_additivity(case):
+    """Local accuracy holds for arbitrary random forests."""
+    forest, x, m = case
+    paths = T.ensemble_paths(forest)
+    phis = R.path_shap(paths, x, m)
+    pred = sum(t.predict_row(x) for t in forest)
+    assert abs(phis.sum() - pred) < 1e-8

@@ -1,0 +1,155 @@
+"""L1 Pallas kernel vs the oracles — the core correctness signal."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import packing as P
+from compile.kernels import ref as R
+from compile.kernels import shap_dp as K
+from compile.kernels import trees as T
+
+from .conftest import make_forest, packed_for_kernel
+
+
+def run_kernel(forest, X, rb=8, bb=8, alg="bfd"):
+    packed = packed_for_kernel(forest, alg, bin_block=bb)
+    rows = X.shape[0]
+    assert rows % rb == 0
+    phis = K.shap_values(
+        X, packed.fidx, packed.lower, packed.upper, packed.zfrac,
+        packed.v, packed.pos, packed.plen,
+        max_depth=max(packed.max_depth, 1), row_block=rb, bin_block=bb,
+    )
+    return np.asarray(phis), packed
+
+
+def run_interactions(forest, X, rb=4, bb=8):
+    packed = packed_for_kernel(forest, "bfd", bin_block=bb)
+    D = max(packed.max_depth, 2)
+    off = K.shap_interactions_offdiag(
+        X, packed.fidx, packed.lower, packed.upper, packed.zfrac,
+        packed.v, packed.pos, packed.plen,
+        max_depth=D, row_block=rb, bin_block=bb,
+    )
+    M = X.shape[1]
+    return np.asarray(off).reshape(X.shape[0], M + 1, M + 1), packed
+
+
+@pytest.mark.parametrize("seed,depth", [(0, 2), (1, 4), (2, 6), (3, 8)])
+def test_kernel_matches_treeshap(seed, depth):
+    rng = np.random.default_rng(seed)
+    M = 7
+    forest = make_forest(rng, 5, M, depth)
+    X = rng.normal(size=(16, M)).astype(np.float32)
+    phis, _ = run_kernel(forest, X)
+    for r in range(X.shape[0]):
+        ref = R.treeshap_ensemble(forest, X[r], M)
+        got = phis[r].astype(np.float64)
+        got[M] += T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("alg", ["none", "nf", "ffd", "bfd"])
+def test_kernel_invariant_to_packing(alg):
+    """SHAP values must not depend on the bin-packing heuristic."""
+    rng = np.random.default_rng(7)
+    M = 6
+    forest = make_forest(rng, 4, M, 5)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    phis, _ = run_kernel(forest, X, alg=alg)
+    base, _ = run_kernel(forest, X, alg="bfd")
+    np.testing.assert_allclose(phis, base, atol=1e-4)
+
+
+def test_kernel_additivity():
+    """Σφ + E[f] == prediction, row-wise across a batch."""
+    rng = np.random.default_rng(11)
+    M = 8
+    forest = make_forest(rng, 6, M, 6)
+    X = rng.normal(size=(32, M)).astype(np.float32)
+    phis, _ = run_kernel(forest, X)
+    ev = T.expected_value(forest)
+    for r in range(X.shape[0]):
+        pred = sum(t.predict_row(X[r]) for t in forest)
+        assert abs(phis[r].sum() + ev - pred) < 2e-3
+
+
+def test_kernel_deep_paths():
+    """Depth-15 trees stress the DP trip counts near the 32-lane limit."""
+    rng = np.random.default_rng(13)
+    M = 20
+    forest = make_forest(rng, 2, M, 15, duplicate_prob=0.1)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    phis, packed = run_kernel(forest, X)
+    assert packed.max_depth <= 31
+    for r in range(4):
+        ref = R.treeshap_ensemble(forest, X[r], M)
+        got = phis[r].astype(np.float64)
+        got[M] += T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=5e-4, rtol=5e-3)
+
+
+def test_kernel_heavy_duplicates():
+    """Paths where one feature is split on many times must merge cleanly."""
+    rng = np.random.default_rng(17)
+    M = 3
+    forest = make_forest(rng, 3, M, 8, duplicate_prob=0.9)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    phis, _ = run_kernel(forest, X)
+    for r in range(8):
+        ref = R.treeshap_ensemble(forest, X[r], M)
+        got = phis[r].astype(np.float64)
+        got[M] += T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=2e-4, rtol=1e-3)
+
+
+def test_kernel_single_stump():
+    """Single-leaf trees produce zero φ (base handled upstream)."""
+    tree = T.Tree(
+        left=np.array([-1], np.int32),
+        right=np.array([-1], np.int32),
+        feature=np.array([-1], np.int32),
+        threshold=np.zeros(1, np.float32),
+        value=np.array([3.0], np.float32),
+        cover=np.array([5.0], np.float32),
+    )
+    X = np.zeros((8, 4), np.float32)
+    phis, _ = run_kernel([tree], X)
+    np.testing.assert_allclose(phis, 0.0, atol=1e-7)
+
+
+def test_interactions_kernel_matches_oracle():
+    rng = np.random.default_rng(23)
+    M = 5
+    forest = make_forest(rng, 4, M, 4)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    off, packed = run_interactions(forest, X)
+    phis, _ = run_kernel(forest, X)
+    for r in range(X.shape[0]):
+        ref = R.treeshap_interactions(forest, X[r], M)
+        got = off[r].astype(np.float64)
+        for i in range(M):
+            got[i, i] = phis[r, i] - (got[i, :M].sum() - got[i, i])
+        got[M, M] = T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=5e-4, rtol=5e-3)
+
+
+def test_interactions_offdiag_antisymmetric_consistency():
+    """Off-diagonal part must be symmetric (φ_ij == φ_ji)."""
+    rng = np.random.default_rng(29)
+    M = 6
+    forest = make_forest(rng, 3, M, 5)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    off, _ = run_interactions(forest, X)
+    np.testing.assert_allclose(off, np.transpose(off, (0, 2, 1)), atol=1e-4)
+
+
+def test_kernel_row_block_invariance():
+    """Grid decomposition must not change results."""
+    rng = np.random.default_rng(31)
+    M = 5
+    forest = make_forest(rng, 3, M, 4)
+    X = rng.normal(size=(16, M)).astype(np.float32)
+    a, _ = run_kernel(forest, X, rb=16, bb=8)
+    b, _ = run_kernel(forest, X, rb=4, bb=16)
+    np.testing.assert_allclose(a, b, atol=1e-5)

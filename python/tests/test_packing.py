@@ -1,0 +1,100 @@
+"""Bin-packing heuristics: correctness invariants + approximation ordering."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import packing as P
+from compile.kernels import trees as T
+
+from .conftest import make_forest
+
+
+def _sizes(rng, n):
+    return [int(s) for s in rng.integers(1, P.LANES + 1, size=n)]
+
+
+@pytest.mark.parametrize("alg", ["none", "nf", "ffd", "bfd"])
+def test_packing_partitions_items(alg, rng):
+    sizes = _sizes(rng, 200)
+    bins = P.PACKERS[alg](sizes)
+    seen = sorted(i for b in bins for i in b)
+    assert seen == list(range(len(sizes)))  # disjoint and complete
+
+
+@pytest.mark.parametrize("alg", ["none", "nf", "ffd", "bfd"])
+def test_packing_respects_capacity(alg, rng):
+    sizes = _sizes(rng, 300)
+    for b in P.PACKERS[alg](sizes):
+        assert sum(sizes[i] for i in b) <= P.LANES
+
+
+def test_ffd_bfd_beat_nf_beats_none(rng):
+    """The paper's Table 5 ordering: FFD/BFD ≤ NF ≤ none in bin count."""
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        sizes = [int(s) for s in r.integers(2, 20, size=500)]
+        n_none = len(P.bin_pack_none(sizes))
+        n_nf = len(P.bin_pack_next_fit(sizes))
+        n_ffd = len(P.bin_pack_ffd(sizes))
+        n_bfd = len(P.bin_pack_bfd(sizes))
+        assert n_ffd <= n_nf <= n_none
+        assert n_bfd <= n_nf
+
+
+def test_nf_within_2x_of_lower_bound(rng):
+    """Next-Fit approximation ratio ≤ 2 (Table 1)."""
+    sizes = _sizes(rng, 400)
+    lower = -(-sum(sizes) // P.LANES)  # ceil(total/capacity)
+    assert len(P.bin_pack_next_fit(sizes)) <= 2 * lower
+
+
+def test_ffd_bfd_near_optimal(rng):
+    """FFD/BFD ratio ≤ 1.222·OPT + 1 (Table 1, asymptotic bound)."""
+    sizes = _sizes(rng, 400)
+    lower = -(-sum(sizes) // P.LANES)
+    assert len(P.bin_pack_ffd(sizes)) <= 1.222 * lower + 1
+    assert len(P.bin_pack_bfd(sizes)) <= 1.222 * lower + 1
+
+
+def test_pack_paths_layout(rng):
+    """Packed tensors: contiguous lanes per path, pos/plen consistent."""
+    forest = make_forest(rng, 4, 6, 5)
+    paths = T.ensemble_paths(forest)
+    packed = P.pack_paths(paths, "bfd")
+    for b in range(packed.num_bins):
+        lane = 0
+        while lane < P.LANES and packed.plen[b, lane] > 0:
+            E = int(packed.plen[b, lane])
+            assert packed.pos[b, lane] == 0
+            assert packed.fidx[b, lane] == -1  # every path starts at root
+            for k in range(E):
+                assert packed.plen[b, lane + k] == E
+                assert packed.pos[b, lane + k] == k
+            lane += E
+        # everything after is padding
+        assert np.all(packed.plen[b, lane:] == 0)
+
+
+def test_pack_paths_utilisation_formula(rng):
+    forest = make_forest(rng, 3, 5, 4)
+    paths = T.ensemble_paths(forest)
+    packed = P.pack_paths(paths, "nf")
+    total = sum(len(p) for p in paths)
+    assert packed.utilisation == pytest.approx(total / (P.LANES * packed.num_bins))
+
+
+def test_padded_to_adds_empty_bins(rng):
+    forest = make_forest(rng, 2, 5, 3)
+    packed = P.pack_paths(T.ensemble_paths(forest), "bfd")
+    bigger = packed.padded_to(packed.num_bins + 7)
+    assert bigger.num_bins == packed.num_bins + 7
+    assert np.all(bigger.plen[packed.num_bins:] == 0)
+    np.testing.assert_array_equal(bigger.fidx[: packed.num_bins], packed.fidx)
+
+
+def test_bfd_uses_best_fit():
+    """Contrived case distinguishing BFD placement from FFD ordering."""
+    sizes = [20, 18, 12, 10]
+    bfd = P.bin_pack_bfd(sizes, capacity=32)
+    # BFD: 20 -> bin0; 18 -> bin1; 12 -> bin0 (residual 12 beats 14); 10 -> bin1
+    assert sorted(map(sorted, bfd)) == [[0, 2], [1, 3]]

@@ -1,0 +1,107 @@
+"""Padded-path kernel (perf variant) vs oracles + warp-layout kernel."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import packing as P
+from compile.kernels import ref as R
+from compile.kernels import shap_dp, shap_padded
+from compile.kernels import trees as T
+
+from .conftest import make_forest, packed_for_kernel
+
+
+def run_padded(forest, X, rb=8, pb=8, depth=None):
+    paths = T.ensemble_paths(forest)
+    D = depth or max(max(len(p) - 1 for p in paths), 1)
+    n = len(paths)
+    pad_to = ((n + pb - 1) // pb) * pb
+    padded = P.pad_paths(paths, D + 1, pad_to)
+    phis = shap_padded.shap_values_padded(
+        X, padded.fidx, padded.lower, padded.upper, padded.zfrac,
+        padded.v, padded.plen,
+        max_depth=D, row_block=rb, path_block=pb,
+    )
+    return np.asarray(phis)
+
+
+@pytest.mark.parametrize("seed,depth", [(0, 3), (1, 5), (2, 8)])
+def test_padded_matches_recursive(seed, depth):
+    rng = np.random.default_rng(seed)
+    M = 7
+    forest = make_forest(rng, 4, M, depth)
+    X = rng.normal(size=(16, M)).astype(np.float32)
+    phis = run_padded(forest, X)
+    for r in range(X.shape[0]):
+        ref = R.treeshap_ensemble(forest, X[r], M)
+        got = phis[r].astype(np.float64)
+        got[M] += T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=2e-4, rtol=1e-3)
+
+
+def test_padded_matches_warp_layout():
+    """The two layouts are different schedules of the same math."""
+    rng = np.random.default_rng(5)
+    M = 6
+    forest = make_forest(rng, 5, M, 5)
+    X = rng.normal(size=(16, M)).astype(np.float32)
+    a = run_padded(forest, X)
+    packed = packed_for_kernel(forest, "bfd", bin_block=8)
+    b = np.asarray(shap_dp.shap_values(
+        X, packed.fidx, packed.lower, packed.upper, packed.zfrac,
+        packed.v, packed.pos, packed.plen,
+        max_depth=max(packed.max_depth, 1), row_block=8, bin_block=8,
+    ))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_padded_wider_bucket_than_needed():
+    """Artifact depth bucket > model depth must not change results."""
+    rng = np.random.default_rng(9)
+    M = 5
+    forest = make_forest(rng, 3, M, 3)
+    X = rng.normal(size=(8, M)).astype(np.float32)
+    a = run_padded(forest, X)  # exact width
+    b = run_padded(forest, X, depth=8)  # padded width
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_padded_interactions_match_oracle():
+    rng = np.random.default_rng(21)
+    M = 5
+    forest = make_forest(rng, 4, M, 4)
+    paths = T.ensemble_paths(forest)
+    D = max(max(len(p) - 1 for p in paths), 2)
+    pb = 8
+    padded = P.pad_paths(paths, D + 1, ((len(paths) + pb - 1) // pb) * pb)
+    rows = 8
+    X = rng.normal(size=(rows, M)).astype(np.float32)
+    off = np.asarray(shap_padded.shap_interactions_padded_offdiag(
+        X, padded.fidx, padded.lower, padded.upper, padded.zfrac,
+        padded.v, padded.plen, max_depth=D, row_block=4, path_block=pb,
+    )).reshape(rows, M + 1, M + 1)
+    phis = run_padded(forest, X, rb=4, pb=pb)
+    for r in range(rows):
+        ref = R.treeshap_interactions(forest, X[r], M)
+        got = off[r].astype(np.float64)
+        for i in range(M):
+            got[i, i] = phis[r, i] - (got[i, :M].sum() - got[i, i])
+        got[M, M] = T.expected_value(forest)
+        np.testing.assert_allclose(got, ref, atol=5e-4, rtol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.floats(0.0, 0.9))
+def test_padded_hypothesis_sweep(seed, depth, dup):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 8))
+    forest = [T.random_tree(rng, m, depth, dup) for _ in range(3)]
+    x = rng.normal(size=m).astype(np.float32)
+    X = np.tile(x, (8, 1))
+    phis = run_padded(forest, X)
+    ref = R.treeshap_ensemble(forest, x, m)
+    got = phis[0].astype(np.float64)
+    got[m] += T.expected_value(forest)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(got, ref, atol=5e-4 * scale, rtol=2e-3)

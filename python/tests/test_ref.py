@@ -1,0 +1,118 @@
+"""Cross-validation of the three oracles in ref.py against each other.
+
+brute_force_* is the ground truth (direct Shapley definition); treeshap is
+Algorithm 1; path_shap / path_interactions are the merged-path DP that L1
+vectorizes. All must agree to float64 precision.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref as R
+from compile.kernels import trees as T
+
+from .conftest import make_forest
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_treeshap_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(2, 6))
+    tree = T.random_tree(rng, M, max_depth=int(rng.integers(1, 5)), duplicate_prob=0.4)
+    x = rng.normal(size=M).astype(np.float32)
+    bf = R.brute_force_shap(tree, x, M)
+    ts = R.treeshap(tree, x, M)
+    np.testing.assert_allclose(ts, bf, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_path_shap_matches_brute_force(seed):
+    rng = np.random.default_rng(100 + seed)
+    M = int(rng.integers(2, 6))
+    tree = T.random_tree(rng, M, max_depth=int(rng.integers(1, 5)), duplicate_prob=0.5)
+    x = rng.normal(size=M).astype(np.float32)
+    paths = [T.merge_duplicates(p) for p in T.extract_paths(tree)]
+    bf = R.brute_force_shap(tree, x, M)
+    ps = R.path_shap(paths, x, M)
+    np.testing.assert_allclose(ps, bf, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_interactions_match_brute_force(seed):
+    rng = np.random.default_rng(200 + seed)
+    M = int(rng.integers(2, 5))
+    tree = T.random_tree(rng, M, max_depth=3, duplicate_prob=0.4)
+    x = rng.normal(size=M).astype(np.float32)
+    bfi = R.brute_force_interactions(tree, x, M)
+    tsi = R.treeshap_interactions([tree], x, M)
+    paths = [T.merge_duplicates(p) for p in T.extract_paths(tree)]
+    pin = R.path_interactions(paths, x, M)
+    np.testing.assert_allclose(tsi, bfi, atol=1e-12)
+    np.testing.assert_allclose(pin, bfi, atol=1e-12)
+
+
+def test_local_accuracy_ensemble(rng):
+    """Σφ + base == f(x) — SHAP's defining property."""
+    M = 7
+    forest = make_forest(rng, 6, M, 5)
+    for _ in range(10):
+        x = rng.normal(size=M).astype(np.float32)
+        phis = R.treeshap_ensemble(forest, x, M)
+        pred = sum(t.predict_row(x) for t in forest)
+        assert abs(phis.sum() - pred) < 1e-8
+
+
+def test_interaction_rows_sum_to_phi(rng):
+    """Σ_j φ_ij == φ_i (with Eq. 6 diagonal) per feature."""
+    M = 5
+    forest = make_forest(rng, 3, M, 4)
+    x = rng.normal(size=M).astype(np.float32)
+    phis = R.treeshap_ensemble(forest, x, M)
+    inter = R.treeshap_interactions(forest, x, M)
+    np.testing.assert_allclose(inter[:M, :M].sum(axis=1), phis[:M], atol=1e-10)
+
+
+def test_interaction_matrix_symmetric(rng):
+    M = 5
+    forest = make_forest(rng, 3, M, 4)
+    x = rng.normal(size=M).astype(np.float32)
+    inter = R.treeshap_interactions(forest, x, M)
+    np.testing.assert_allclose(inter, inter.T, atol=1e-10)
+
+
+def test_single_leaf_tree():
+    """A stump with no splits: all φ = 0, base = leaf value."""
+    tree = T.Tree(
+        left=np.array([-1], np.int32),
+        right=np.array([-1], np.int32),
+        feature=np.array([-1], np.int32),
+        threshold=np.zeros(1, np.float32),
+        value=np.array([2.5], np.float32),
+        cover=np.array([10.0], np.float32),
+    )
+    x = np.zeros(3, np.float32)
+    phis = R.treeshap(tree, x, 3)
+    np.testing.assert_allclose(phis, [0, 0, 0, 2.5])
+
+
+def test_duplicate_merge_preserves_shap(rng):
+    """Merging repeated features on a path must not change SHAP values."""
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        M = 4
+        tree = T.random_tree(r, M, max_depth=6, duplicate_prob=0.8)
+        x = r.normal(size=M).astype(np.float32)
+        raw = T.extract_paths(tree)
+        merged = [T.merge_duplicates(p) for p in raw]
+        ts = R.treeshap(tree, x, M)
+        ps = R.path_shap(merged, x, M)
+        np.testing.assert_allclose(ps, ts, atol=1e-10)
+
+
+def test_expected_value_matches_cond_expectation(rng):
+    M = 5
+    forest = make_forest(rng, 4, M, 4)
+    ev = T.expected_value(forest)
+    x = np.zeros(M, np.float32)
+    ref = sum(R._cond_expectation(t, x, frozenset()) for t in forest)
+    assert abs(ev - ref) < 1e-8

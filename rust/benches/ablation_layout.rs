@@ -1,0 +1,95 @@
+//! Ablation (DESIGN.md §Perf): warp-packed layout (faithful CUDA
+//! adaptation, gathers for lane shuffles) vs padded-path layout
+//! (gather-free slices/shifts, element axis padded to the depth bucket).
+//!
+//! Measures both engines on the model zoo's medium models plus a
+//! large, and verifies identical φ. The padded layout trades lane
+//! utilisation (Σlen/(P·(D+1)) vs BFD's ~0.95) for the removal of every
+//! gather in the DP inner loop — the right trade on both this CPU
+//! testbed and a real TPU VPU.
+
+use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{pack_model, pad_model, Packing};
+use gputreeshap::util::Json;
+
+const ROWS: usize = 256;
+const ITERS: usize = 3;
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
+fn main() {
+    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
+    let mut table = Table::new(&[
+        "model", "warp util", "pad util", "warp(s)", "padded(s)", "speedup",
+    ]);
+    for entry in zoo::zoo_entries() {
+        if entry.size == ZooSize::Small {
+            continue; // launch-overhead dominated either way
+        }
+        let (model, data) = zoo::build(&entry);
+        let m = model.num_features;
+        let rows = ROWS.min(data.rows);
+        let x = &data.features[..rows * m];
+
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        // pick the padded width from the artifact the manifest will choose
+        let spec_depth = engine
+            .manifest
+            .select(ArtifactKind::ShapPadded, m, pm.max_depth.max(1), rows)
+            .expect("padded bucket")
+            .depth;
+        let pad = pad_model(&model, spec_depth + 1);
+
+        let prep_w = engine.prepare(&pm, ArtifactKind::Shap, rows).expect("warp prep");
+        let prep_p = engine.prepare_padded(&pad, rows).expect("padded prep");
+
+        let mut warp_t = Vec::new();
+        let mut pad_t = Vec::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..ITERS {
+            let t = std::time::Instant::now();
+            a = engine.shap_values(&pm, &prep_w, x, rows).expect("warp");
+            warp_t.push(t.elapsed().as_secs_f64());
+            let t = std::time::Instant::now();
+            b = engine.shap_values_padded(&pad, &prep_p, x, rows).expect("padded");
+            pad_t.push(t.elapsed().as_secs_f64());
+        }
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (p - q).abs() < 5e-2 + 5e-3 * p.abs(),
+                "{}: layout mismatch idx {i}: {p} vs {q}",
+                entry.name
+            );
+        }
+        let wu = pm.groups.iter().map(|g| g.utilisation).fold(f64::MAX, f64::min);
+        let pu = pad.groups.iter().map(|g| g.utilisation).fold(f64::MAX, f64::min);
+        let (wt, pt) = (median(warp_t), median(pad_t));
+        table.row(vec![
+            entry.name.clone(),
+            format!("{wu:.3}"),
+            format!("{pu:.3}"),
+            fmt_secs(wt),
+            fmt_secs(pt),
+            format!("{:.2}x", wt / pt),
+        ]);
+        dump_record(
+            "ablation_layout",
+            vec![
+                ("model", Json::from(entry.name.as_str())),
+                ("warp_s", Json::from(wt)),
+                ("padded_s", Json::from(pt)),
+                ("speedup", Json::from(wt / pt)),
+                ("warp_util", Json::from(wu)),
+                ("padded_util", Json::from(pu)),
+            ],
+        );
+    }
+    table.print();
+    println!("\n(padded layout is the §Perf outcome; warp layout is the faithful CUDA mapping)");
+}

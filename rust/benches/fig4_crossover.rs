@@ -1,0 +1,76 @@
+//! Fig 4 reproduction: time-to-explain vs number of test rows for the
+//! cal_housing-med model, CPU baseline vs the batched engine, locating
+//! the crossover where batch amortisation beats per-row recursion.
+//!
+//! Paper: V100 beats 40 cores from ~200 rows. Here the "device" is the
+//! CPU PJRT backend on the same single core as the baseline, so the
+//! crossover may not occur; the bench records the two latency curves
+//! and the per-row marginal costs either way, which is the figure's
+//! actual content (fixed overhead vs slope).
+
+use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::parallel::default_threads;
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{pack_model, treeshap, Packing};
+use gputreeshap::util::Json;
+
+fn median3(mut f: impl FnMut() -> f64) -> f64 {
+    let mut v = [f(), f(), f()];
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[1]
+}
+
+fn main() {
+    let threads = default_threads();
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Medium)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    println!("fig4: {} ({}), {} thread(s)\n", entry.name, model.summary(), threads);
+    let m = model.num_features;
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
+    let prep = engine.prepare(&pm, ArtifactKind::Shap, usize::MAX).expect("prepare");
+
+    let mut table = Table::new(&["rows", "cpu", "xla", "cpu rows/s", "xla rows/s"]);
+    let mut crossover = None;
+    for &rows in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let rows = rows.min(data.rows);
+        let x = &data.features[..rows * m];
+        let cpu = median3(|| {
+            let t = std::time::Instant::now();
+            std::hint::black_box(treeshap::shap_values(&model, x, rows, threads));
+            t.elapsed().as_secs_f64()
+        });
+        let xla = median3(|| {
+            let t = std::time::Instant::now();
+            std::hint::black_box(engine.shap_values(&pm, &prep, x, rows).unwrap());
+            t.elapsed().as_secs_f64()
+        });
+        if xla < cpu && crossover.is_none() {
+            crossover = Some(rows);
+        }
+        table.row(vec![
+            rows.to_string(),
+            fmt_secs(cpu),
+            fmt_secs(xla),
+            format!("{:.0}", rows as f64 / cpu),
+            format!("{:.0}", rows as f64 / xla),
+        ]);
+        dump_record(
+            "fig4",
+            vec![
+                ("rows", Json::from(rows)),
+                ("cpu_s", Json::from(cpu)),
+                ("xla_s", Json::from(xla)),
+            ],
+        );
+    }
+    table.print();
+    match crossover {
+        Some(r) => println!("\ncrossover at ~{r} rows (paper: ~200 rows, V100 vs 40 cores)"),
+        None => println!("\nno crossover on this 1-core testbed (see EXPERIMENTS.md)"),
+    }
+}

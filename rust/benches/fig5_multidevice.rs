@@ -1,0 +1,69 @@
+//! Fig 5 reproduction: throughput scaling across simulated devices
+//! (paper: 1–8 V100s reach 1.2 M rows/s on cal_housing-med).
+//!
+//! Each "device" is an independent PJRT CPU client on its own thread
+//! with its own compiled executables and device-resident model — the
+//! same topology as the paper's multi-GPU run. On this 1-core testbed
+//! the devices time-share the core, so the curve is flat; the bench
+//! still verifies the sharding produces identical results and records
+//! rows/s per device count.
+
+use gputreeshap::bench::{dump_record, zoo, Table};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::runtime::default_artifacts_dir;
+use gputreeshap::runtime::pool::shap_values_multi;
+use gputreeshap::shap::{pack_model, Packing};
+use gputreeshap::util::Json;
+
+const ROWS: usize = 512; // paper: 1M — scaled (DESIGN.md §5)
+
+fn main() {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Medium)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    println!("fig5: {} — {} rows\n", entry.name, ROWS);
+    let m = model.num_features;
+    let rows = ROWS.min(data.rows);
+    let x = &data.features[..rows * m];
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let dir = default_artifacts_dir();
+
+    let mut table = Table::new(&["devices", "time(s)", "rows/s", "scaling"]);
+    let mut base = None;
+    let mut reference: Option<Vec<f32>> = None;
+    for devices in [1usize, 2, 4] {
+        let t = std::time::Instant::now();
+        let out = shap_values_multi(&pm, x, rows, devices, &dir).expect("pool");
+        let dt = t.elapsed().as_secs_f64();
+        if let Some(r) = &reference {
+            for (a, b) in r.iter().zip(&out) {
+                assert!((a - b).abs() < 1e-5, "sharded result differs");
+            }
+        } else {
+            reference = Some(out);
+        }
+        let rps = rows as f64 / dt;
+        let scaling = base.map_or(1.0, |b: f64| rps / b);
+        if base.is_none() {
+            base = Some(rps);
+        }
+        table.row(vec![
+            devices.to_string(),
+            format!("{dt:.2}"),
+            format!("{rps:.0}"),
+            format!("{scaling:.2}x"),
+        ]);
+        dump_record(
+            "fig5",
+            vec![
+                ("devices", Json::from(devices)),
+                ("time_s", Json::from(dt)),
+                ("rows_per_s", Json::from(rps)),
+            ],
+        );
+    }
+    table.print();
+    println!("\n(paper: near-linear to 8 GPUs; flat here = 1 physical core, see EXPERIMENTS.md)");
+}

@@ -1,0 +1,68 @@
+//! Fig 6 reproduction: CPU TreeShap throughput vs thread count
+//! (paper: linear to 40 cores, ~7000 rows/s on cal_housing-med).
+//!
+//! The thread-pool fans rows out exactly as the paper's OpenMP
+//! parallel-for does; with one physical core the measured curve is flat
+//! and the bench records it (the paper's dip-at-40-cores OS-contention
+//! caveat becomes "everything contends" here).
+
+use gputreeshap::bench::{dump_record, zoo, Table};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::shap::treeshap;
+use gputreeshap::util::Json;
+
+const ROWS: usize = 512; // paper: 1M rows — scaled (DESIGN.md §5)
+
+fn main() {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Medium)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    println!("fig6: {} — {} rows\n", entry.name, ROWS);
+    let m = model.num_features;
+    let rows = ROWS.min(data.rows);
+    let x = &data.features[..rows * m];
+
+    let mut table = Table::new(&["threads", "time(s)", "rows/s", "scaling"]);
+    let mut base = None;
+    let mut reference: Option<Vec<f32>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        // median of 3
+        let mut times = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            out = treeshap::shap_values(&model, x, rows, threads);
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.total_cmp(b));
+        if let Some(r) = &reference {
+            assert_eq!(r, &out, "thread count changed results");
+        } else {
+            reference = Some(out);
+        }
+        let dt = times[1];
+        let rps = rows as f64 / dt;
+        let scaling = base.map_or(1.0, |b: f64| rps / b);
+        if base.is_none() {
+            base = Some(rps);
+        }
+        table.row(vec![
+            threads.to_string(),
+            format!("{dt:.3}"),
+            format!("{rps:.0}"),
+            format!("{scaling:.2}x"),
+        ]);
+        dump_record(
+            "fig6",
+            vec![
+                ("threads", Json::from(threads)),
+                ("time_s", Json::from(dt)),
+                ("rows_per_s", Json::from(rps)),
+            ],
+        );
+    }
+    table.print();
+    println!("\n(paper: linear to 40 cores; flat here = 1 physical core, see EXPERIMENTS.md)");
+}

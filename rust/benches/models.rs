@@ -1,0 +1,30 @@
+//! Table 3 reproduction: the model-zoo summary (trees / leaves /
+//! max_depth per dataset × size), bench-scaled.
+
+use gputreeshap::bench::{dump_record, zoo, Table};
+use gputreeshap::util::Json;
+
+fn main() {
+    let mut table = Table::new(&["model", "trees", "leaves", "max_depth"]);
+    for entry in zoo::zoo_entries() {
+        let (model, _) = zoo::build(&entry);
+        table.row(vec![
+            entry.name.clone(),
+            model.trees.len().to_string(),
+            model.total_leaves().to_string(),
+            model.max_depth().to_string(),
+        ]);
+        dump_record(
+            "table3",
+            vec![
+                ("model", Json::from(entry.name.as_str())),
+                ("trees", Json::from(model.trees.len())),
+                ("leaves", Json::from(model.total_leaves())),
+                ("max_depth", Json::from(model.max_depth())),
+            ],
+        );
+        // paper invariants: depth grows small→large; ≤ warp size after merge
+        assert!(model.max_depth() <= 16);
+    }
+    table.print();
+}

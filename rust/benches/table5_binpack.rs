@@ -1,0 +1,61 @@
+//! Table 5 reproduction: bin-packing time, utilisation, and bin count
+//! for NONE / NF / FFD / BFD across the 12-model zoo.
+//!
+//! Paper claims to verify: utilisation(none) ≪ utilisation(nf) ≤
+//! utilisation(ffd) == utilisation(bfd); NF is fastest of the real
+//! heuristics; utilisation(none) worsens with shallower trees.
+
+use gputreeshap::bench::{dump_record, zoo, Table};
+use gputreeshap::shap::binpack::{pack, Packing, LANES};
+use gputreeshap::shap::model_paths;
+use gputreeshap::util::{time_it, Json};
+
+fn main() {
+    let mut table = Table::new(&["model", "alg", "time(s)", "utilisation", "bins"]);
+    let mut ordering_violations = 0;
+    for entry in zoo::zoo_entries() {
+        let (model, _) = zoo::build(&entry);
+        let sizes: Vec<usize> = model_paths(&model).iter().map(|(_, p)| p.len()).collect();
+        let mut utils = std::collections::HashMap::new();
+        for alg in Packing::ALL {
+            // median of 3 timing runs (packing is deterministic)
+            let mut times = Vec::new();
+            let mut result = None;
+            for _ in 0..3 {
+                let (r, dt) = time_it(|| pack(&sizes, alg, LANES));
+                times.push(dt);
+                result = Some(r);
+            }
+            times.sort_by(|a, b| a.total_cmp(b));
+            let r = result.unwrap();
+            utils.insert(alg.name(), r.utilisation);
+            table.row(vec![
+                entry.name.clone(),
+                alg.name().to_uppercase(),
+                format!("{:.4}", times[1]),
+                format!("{:.6}", r.utilisation),
+                r.bins.len().to_string(),
+            ]);
+            dump_record(
+                "table5",
+                vec![
+                    ("model", Json::from(entry.name.as_str())),
+                    ("alg", Json::from(alg.name())),
+                    ("time_s", Json::from(times[1])),
+                    ("utilisation", Json::from(r.utilisation)),
+                    ("bins", Json::from(r.bins.len())),
+                ],
+            );
+        }
+        // the paper's qualitative ordering
+        let (n, nf, ffd, bfd) =
+            (utils["none"], utils["nf"], utils["ffd"], utils["bfd"]);
+        if !(n <= nf + 1e-9 && nf <= ffd + 1e-9 && (ffd - bfd).abs() < 1e-9) {
+            ordering_violations += 1;
+            eprintln!("ordering violation on {}: none={n} nf={nf} ffd={ffd} bfd={bfd}", entry.name);
+        }
+    }
+    table.print();
+    println!("\nutilisation ordering (none ≤ nf ≤ ffd == bfd): {} violations", ordering_violations);
+    assert_eq!(ordering_violations, 0);
+}

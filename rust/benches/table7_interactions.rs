@@ -1,0 +1,131 @@
+//! Table 7 reproduction: SHAP *interaction* values — the paper's
+//! headline algorithmic win. Three engines:
+//!
+//! - `cpu`:  the O(T·L·D²·M) baseline (conditioning on every feature in
+//!           the tree, Algorithm 1 twice per feature) — what XGBoost does
+//! - `host`: the paper's O(T·L·D³) reformulation (condition only on
+//!           on-path features), rust-native
+//! - `xla`:  the same reformulation through the AOT Pallas kernel
+//!
+//! On this 1-core testbed, the *algorithmic* gap (M/D ratio) is the
+//! reproducible signal: covtype (M=54, D≤8) and fashion_mnist96 (M=96)
+//! must show host ≫ cpu, while cal_housing (M=8 ≈ D) shows little —
+//! exactly the pattern of the paper's Table 7 (340× on fashion_mnist vs
+//! 11× on cal_housing).
+
+use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::parallel::default_threads;
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{host_kernel, interactions, pack_model, pad_model, Packing};
+use gputreeshap::util::Json;
+
+const ROWS: usize = 8; // paper: 200 — scaled (DESIGN.md §5)
+
+fn main() {
+    let threads = default_threads();
+    println!("table7: {ROWS} test rows, {threads} cpu thread(s)\n");
+    let mut table = Table::new(&[
+        "model", "M", "D", "cpu(s)", "host(s)", "xla(s)", "xla-pad(s)", "host/cpu", "pad/cpu",
+    ]);
+    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
+
+    // interaction zoo: covtype / cal_housing / adult (small+med) and the
+    // reduced-feature fashion variant (M=96; XLA buckets cap at M=128)
+    let mut entries: Vec<(String, gputreeshap::gbdt::Model, gputreeshap::data::Dataset)> =
+        Vec::new();
+    for entry in zoo::zoo_entries() {
+        if entry.spec.name == "fashion_mnist" || entry.size == ZooSize::Large {
+            continue;
+        }
+        let (model, data) = zoo::build(&entry);
+        entries.push((entry.name.clone(), model, data));
+    }
+    for size in [ZooSize::Small, ZooSize::Medium] {
+        let (rounds, depth) = size.rounds_depth();
+        let spec = zoo::fashion96(0.005);
+        let (model, data) =
+            zoo::build_custom(&format!("fashion_mnist96-{}", size.name()), &spec, rounds, depth);
+        entries.push((format!("fashion_mnist96-{}", size.name()), model, data));
+    }
+
+    for (name, model, data) in entries {
+        let m = model.num_features;
+        let rows = ROWS.min(data.rows);
+        let x = &data.features[..rows * m];
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+
+        let t = std::time::Instant::now();
+        let a = interactions::interaction_values(&model, x, rows, threads);
+        let cpu = t.elapsed().as_secs_f64();
+
+        let t = std::time::Instant::now();
+        let b = host_kernel::interaction_values(&pm, x, rows, threads);
+        let host = t.elapsed().as_secs_f64();
+
+        let prep = engine.prepare(&pm, ArtifactKind::Interactions, rows).expect("prepare");
+        let t = std::time::Instant::now();
+        let c = engine.interactions(&pm, &prep, x, rows).expect("xla");
+        let xla = t.elapsed().as_secs_f64();
+
+        let width = engine
+            .manifest
+            .select(ArtifactKind::InteractionsPadded, m, pm.max_depth.max(2), rows)
+            .expect("padded int bucket")
+            .depth
+            + 1;
+        let pad = pad_model(&model, width);
+        let pad_prep = engine
+            .prepare_padded_kind(&pad, ArtifactKind::InteractionsPadded, rows)
+            .expect("padded int prepare");
+        let t = std::time::Instant::now();
+        let cp = engine.interactions_padded(&pad, &pad_prep, x, rows).expect("padded");
+        let pad_t = t.elapsed().as_secs_f64();
+
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert!((p - q).abs() < 5e-3, "{name}: host mismatch idx {i}: {p} vs {q}");
+        }
+        for (i, (p, q)) in a.iter().zip(&c).enumerate() {
+            assert!(
+                (p - q).abs() < 5e-2 + 5e-3 * p.abs(),
+                "{name}: xla mismatch idx {i}: {p} vs {q}"
+            );
+        }
+        for (i, (p, q)) in a.iter().zip(&cp).enumerate() {
+            assert!(
+                (p - q).abs() < 5e-2 + 5e-3 * p.abs(),
+                "{name}: padded mismatch idx {i}: {p} vs {q}"
+            );
+        }
+
+        table.row(vec![
+            name.clone(),
+            m.to_string(),
+            pm.max_depth.to_string(),
+            fmt_secs(cpu),
+            fmt_secs(host),
+            fmt_secs(xla),
+            fmt_secs(pad_t),
+            format!("{:.2}x", cpu / host),
+            format!("{:.2}x", cpu / pad_t),
+        ]);
+        dump_record(
+            "table7",
+            vec![
+                ("model", Json::from(name.as_str())),
+                ("features", Json::from(m)),
+                ("depth", Json::from(pm.max_depth)),
+                ("cpu_s", Json::from(cpu)),
+                ("host_s", Json::from(host)),
+                ("xla_s", Json::from(xla)),
+                ("xla_padded_s", Json::from(pad_t)),
+                ("speedup_host_over_cpu", Json::from(cpu / host)),
+                ("speedup_xla_over_cpu", Json::from(cpu / xla)),
+                ("speedup_padded_over_cpu", Json::from(cpu / pad_t)),
+            ],
+        );
+    }
+    table.print();
+    println!("\nexpected pattern (paper Table 7): speedups grow with M/D —");
+    println!("fashion_mnist96 & covtype ≫ adult > cal_housing");
+}

@@ -1,0 +1,114 @@
+//! Benchmark harness substrate (no `criterion` offline): warmup + timed
+//! iterations with summary stats, aligned table printing matching the
+//! paper's table layouts, and JSON dumps for EXPERIMENTS.md.
+
+pub mod zoo;
+
+use crate::util::{Json, Stats};
+
+/// Run `f` `warmup` times untimed, then `iters` times timed.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Fixed-width table printer (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Append one benchmark record to `bench_results.jsonl` (cwd).
+pub fn dump_record(bench_name: &str, fields: Vec<(&str, Json)>) {
+    let mut all = vec![("bench", Json::from(bench_name))];
+    all.extend(fields);
+    let rec = Json::obj(all);
+    let mut line = String::new();
+    line.push_str(&rec.to_string_pretty().replace('\n', " "));
+    line.push('\n');
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results.jsonl")
+    {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Format seconds with sensible precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_stats() {
+        let s = bench(1, 5, || 2 + 2);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["model", "time"]);
+        t.row(vec!["covtype-small".into(), "0.1s".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(1e-5).ends_with("us"));
+        assert!(fmt_secs(0.01).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

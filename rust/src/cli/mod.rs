@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Syntax: `command [subcommand] [--key value | --key=value | --flag] [positional…]`
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        // NB: a bare `--name` followed by a non-flag token is parsed as
+        // `name=token` (no schema to disambiguate); boolean flags go
+        // last or use `--name=value`.
+        let a = parse("train ds1 --rounds 20 --depth=8 --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 20);
+        assert_eq!(a.get_usize("depth", 0).unwrap(), 8);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["train", "ds1"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+        assert_eq!(a.get_or("alg", "bfd"), "bfd");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --quiet");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get("quiet"), None);
+    }
+}

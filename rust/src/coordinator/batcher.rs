@@ -1,0 +1,123 @@
+//! Dynamic batching policy: coalesce queued explain requests into device
+//! batches that fill the artifact's row bucket (throughput) without
+//! letting small requests wait longer than `max_wait` (latency) — the
+//! trade-off Fig 4 of the paper quantifies.
+
+use std::time::{Duration, Instant};
+
+/// A request's rows as admitted to the batcher.
+#[derive(Debug)]
+pub struct PendingRequest<T> {
+    pub rows: usize,
+    pub payload: T,
+    pub arrived: Instant,
+}
+
+/// Accumulates requests; `take_batch` drains a prefix obeying the policy.
+pub struct Batcher<T> {
+    queue: std::collections::VecDeque<PendingRequest<T>>,
+    pub max_batch_rows: usize,
+    pub max_wait: Duration,
+    queued_rows: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch_rows: usize, max_wait: Duration) -> Self {
+        Batcher {
+            queue: Default::default(),
+            max_batch_rows,
+            max_wait,
+            queued_rows: 0,
+        }
+    }
+
+    pub fn push(&mut self, rows: usize, payload: T) {
+        self.queued_rows += rows;
+        self.queue.push_back(PendingRequest { rows, payload, arrived: Instant::now() });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn queued_rows(&self) -> usize {
+        self.queued_rows
+    }
+
+    /// Should we flush now? Either the bucket is full or the oldest
+    /// request has waited long enough.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queued_rows >= self.max_batch_rows
+            || now.duration_since(self.queue[0].arrived) >= self.max_wait
+    }
+
+    /// Drain requests up to `max_batch_rows` (always at least one).
+    pub fn take_batch(&mut self) -> Vec<PendingRequest<T>> {
+        let mut out = Vec::new();
+        let mut rows = 0;
+        while let Some(front) = self.queue.front() {
+            if !out.is_empty() && rows + front.rows > self.max_batch_rows {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            rows += req.rows;
+            self.queued_rows -= req.rows;
+            out.push(req);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b: Batcher<u32> = Batcher::new(100, Duration::from_secs(10));
+        b.push(60, 1);
+        assert!(!b.ready(Instant::now()));
+        b.push(50, 2);
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        // second request would exceed the bucket -> batch is just the first
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rows, 60);
+        assert_eq!(b.queued_rows(), 50);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b: Batcher<u32> = Batcher::new(1000, Duration::from_millis(1));
+        b.push(3, 1);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch().len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oversized_request_still_dispatches() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_secs(1));
+        b.push(25, 1);
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rows, 25);
+    }
+
+    #[test]
+    fn batches_coalesce_small_requests() {
+        let mut b: Batcher<u32> = Batcher::new(100, Duration::from_secs(1));
+        for i in 0..10 {
+            b.push(10, i);
+        }
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 10);
+        assert!(b.is_empty());
+        assert_eq!(b.queued_rows(), 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Serving metrics: counters + latency histogram, lock-light.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::{Json, Stats};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    pub batches: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, rows: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(rows as f64);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies.lock().unwrap().push(d.as_secs_f64());
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn latency_stats(&self) -> Stats {
+        Stats::from_samples(&self.latencies.lock().unwrap())
+    }
+
+    pub fn batch_stats(&self) -> Stats {
+        Stats::from_samples(&self.batch_sizes.lock().unwrap())
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lat = self.latency_stats();
+        let bat = self.batch_stats();
+        Json::obj(vec![
+            ("requests", Json::from(self.requests.load(Ordering::Relaxed) as usize)),
+            ("rows", Json::from(self.rows.load(Ordering::Relaxed) as usize)),
+            ("batches", Json::from(self.batches.load(Ordering::Relaxed) as usize)),
+            ("rejected", Json::from(self.rejected.load(Ordering::Relaxed) as usize)),
+            ("errors", Json::from(self.errors.load(Ordering::Relaxed) as usize)),
+            ("latency_p50_s", Json::from(lat.p50)),
+            ("latency_p95_s", Json::from(lat.p95)),
+            ("latency_mean_s", Json::from(lat.mean)),
+            ("mean_batch_rows", Json::from(bat.mean)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(10);
+        m.record_request(5);
+        m.record_batch(15);
+        m.record_latency(Duration::from_millis(10));
+        m.record_latency(Duration::from_millis(30));
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(snap.get("rows").unwrap().as_usize().unwrap(), 15);
+        let p50 = snap.get("latency_p50_s").unwrap().as_f64().unwrap();
+        assert!(p50 >= 0.01 && p50 <= 0.03);
+    }
+}

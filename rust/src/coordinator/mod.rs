@@ -1,0 +1,11 @@
+//! L3 serving coordinator: dynamic batching, device workers,
+//! backpressure, metrics — SHAP explanations as a service with python
+//! nowhere on the request path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::Batcher;
+pub use metrics::Metrics;
+pub use service::{ModelRep, ServiceConfig, ShapService};

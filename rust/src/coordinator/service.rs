@@ -1,0 +1,312 @@
+//! The serving coordinator: SHAP-as-a-service over the XLA runtime.
+//!
+//! Topology (vLLM-router-like, scaled to this problem):
+//!
+//! ```text
+//!   clients --submit()--> bounded ingress --batcher thread--+
+//!                                                           v
+//!                                             job queue (batches)
+//!                                                           v
+//!                      worker threads (one engine+device each) --responses-->
+//! ```
+//!
+//! Backpressure: the ingress channel is bounded; `submit` fails fast when
+//! the queue is full (callers see `Rejected`). The batcher coalesces
+//! requests up to the artifact row bucket or `max_wait`, whichever first.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::engine::ShapEngine;
+use crate::runtime::manifest::ArtifactKind;
+use crate::shap::packed::{PackedModel, PaddedModel};
+
+/// Which device layout the workers execute (DESIGN.md §Perf: padded is
+/// the optimized default; warp is the faithful CUDA adaptation).
+pub enum ModelRep {
+    Warp(Arc<PackedModel>),
+    Padded(Arc<PaddedModel>),
+}
+
+impl ModelRep {
+    fn num_features(&self) -> usize {
+        match self {
+            ModelRep::Warp(m) => m.num_features,
+            ModelRep::Padded(m) => m.num_features,
+        }
+    }
+    fn num_groups(&self) -> usize {
+        match self {
+            ModelRep::Warp(m) => m.num_groups,
+            ModelRep::Padded(m) => m.num_groups,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub devices: usize,
+    pub artifacts_dir: std::path::PathBuf,
+    /// flush threshold (defaults to the artifact row bucket)
+    pub max_batch_rows: usize,
+    pub max_wait: Duration,
+    /// ingress queue capacity (requests) — the backpressure bound
+    pub queue_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            devices: 1,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            max_batch_rows: 256,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// One explain request: feature rows in, φ rows out.
+struct Request {
+    x: Vec<f32>,
+    rows: usize,
+    resp: Sender<Result<Vec<f32>>>,
+    submitted: Instant,
+}
+
+struct Batch {
+    requests: Vec<Request>,
+    rows: usize,
+}
+
+enum Ingress {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to a running SHAP service.
+pub struct ShapService {
+    ingress: SyncSender<Ingress>,
+    batcher_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+enum WorkerEngine {
+    Warp(crate::runtime::engine::Prepared),
+    Padded(crate::runtime::engine::PreparedPadded),
+}
+
+impl ShapService {
+    /// Start the service with the warp-packed layout.
+    pub fn start(pm: Arc<PackedModel>, cfg: ServiceConfig) -> Result<ShapService> {
+        Self::start_rep(Arc::new(ModelRep::Warp(pm)), cfg)
+    }
+
+    /// Start the service with the padded-path layout (optimized default).
+    pub fn start_padded(pm: Arc<PaddedModel>, cfg: ServiceConfig) -> Result<ShapService> {
+        Self::start_rep(Arc::new(ModelRep::Padded(pm)), cfg)
+    }
+
+    /// Start the service for one device-layout model representation.
+    pub fn start_rep(pm: Arc<ModelRep>, cfg: ServiceConfig) -> Result<ShapService> {
+        let metrics = Arc::new(Metrics::new());
+        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
+        let (job_tx, job_rx) = sync_channel::<Batch>(cfg.devices * 2);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        // worker threads: one engine (device + compiled artifacts) each
+        let mut worker_handles = Vec::new();
+        let ready = Arc::new(std::sync::Barrier::new(cfg.devices + 1));
+        let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        for _ in 0..cfg.devices {
+            let pm = pm.clone();
+            let dir = cfg.artifacts_dir.clone();
+            let job_rx = job_rx.clone();
+            let metrics = metrics.clone();
+            let ready = ready.clone();
+            let init_err = init_err.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                let built = (|| -> Result<_> {
+                    let mut engine = ShapEngine::new(&dir)?;
+                    let prep = match pm.as_ref() {
+                        ModelRep::Warp(m) => WorkerEngine::Warp(
+                            engine.prepare(m, ArtifactKind::Shap, usize::MAX)?,
+                        ),
+                        ModelRep::Padded(m) => {
+                            WorkerEngine::Padded(engine.prepare_padded(m, usize::MAX)?)
+                        }
+                    };
+                    Ok((engine, prep))
+                })();
+                let (engine, prep) = match built {
+                    Ok(v) => {
+                        ready.wait();
+                        v
+                    }
+                    Err(e) => {
+                        *init_err.lock().unwrap() = Some(format!("{e:#}"));
+                        ready.wait();
+                        return;
+                    }
+                };
+                loop {
+                    let batch = {
+                        let guard = job_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { return };
+                    process_batch(&engine, &prep, &pm, batch, &metrics);
+                }
+            }));
+        }
+        ready.wait();
+        if let Some(e) = init_err.lock().unwrap().take() {
+            drop(job_tx);
+            drop(ingress_tx);
+            for h in worker_handles {
+                let _ = h.join();
+            }
+            return Err(anyhow!("worker init failed: {e}"));
+        }
+
+        // batcher thread
+        let batcher_metrics = metrics.clone();
+        let max_wait = cfg.max_wait;
+        let max_rows = cfg.max_batch_rows;
+        let batcher_handle = std::thread::spawn(move || {
+            run_batcher(ingress_rx, job_tx, max_rows, max_wait, batcher_metrics);
+        });
+
+        Ok(ShapService {
+            ingress: ingress_tx,
+            batcher_handle: Some(batcher_handle),
+            worker_handles,
+            metrics,
+        })
+    }
+
+    /// Submit rows for explanation; returns the response channel.
+    /// Fails fast with `Rejected` when the ingress queue is full.
+    pub fn submit(&self, x: Vec<f32>, rows: usize) -> Result<Receiver<Result<Vec<f32>>>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.metrics.record_request(rows);
+        let req = Request { x, rows, resp: tx, submitted: Instant::now() };
+        match self.ingress.try_send(Ingress::Req(req)) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(anyhow!("rejected: ingress queue full (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("service stopped")),
+        }
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn explain(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        self.submit(x, rows)?
+            .recv()
+            .map_err(|_| anyhow!("service dropped response"))?
+    }
+
+    /// Graceful shutdown: drain queues, join threads.
+    pub fn shutdown(mut self) {
+        let _ = self.ingress.send(Ingress::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_batcher(
+    ingress: Receiver<Ingress>,
+    job_tx: SyncSender<Batch>,
+    max_rows: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher: Batcher<Request> = Batcher::new(max_rows, max_wait);
+    loop {
+        let timeout = if batcher.is_empty() { Duration::from_millis(50) } else { max_wait };
+        match ingress.recv_timeout(timeout) {
+            Ok(Ingress::Req(req)) => {
+                let rows = req.rows;
+                batcher.push(rows, req);
+            }
+            Ok(Ingress::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        while batcher.ready(Instant::now()) {
+            dispatch(&mut batcher, &job_tx, &metrics);
+        }
+    }
+    // drain on shutdown
+    while !batcher.is_empty() {
+        dispatch(&mut batcher, &job_tx, &metrics);
+    }
+}
+
+fn dispatch(batcher: &mut Batcher<Request>, job_tx: &SyncSender<Batch>, metrics: &Metrics) {
+    let pending = batcher.take_batch();
+    if pending.is_empty() {
+        return;
+    }
+    let rows: usize = pending.iter().map(|p| p.rows).sum();
+    metrics.record_batch(rows);
+    let batch = Batch { requests: pending.into_iter().map(|p| p.payload).collect(), rows };
+    // blocking send: workers apply backpressure to the batcher
+    let _ = job_tx.send(batch);
+}
+
+fn process_batch(
+    engine: &ShapEngine,
+    prep: &WorkerEngine,
+    pm: &ModelRep,
+    batch: Batch,
+    metrics: &Metrics,
+) {
+    let m = pm.num_features();
+    // concatenate request rows into one device batch
+    let mut x = Vec::with_capacity(batch.rows * m);
+    for r in &batch.requests {
+        x.extend_from_slice(&r.x);
+    }
+    let result = match (pm, prep) {
+        (ModelRep::Warp(pm), WorkerEngine::Warp(prep)) => {
+            engine.shap_values(pm, prep, &x, batch.rows)
+        }
+        (ModelRep::Padded(pm), WorkerEngine::Padded(prep)) => {
+            engine.shap_values_padded(pm, prep, &x, batch.rows)
+        }
+        _ => unreachable!("layout mismatch"),
+    };
+    match result {
+        Ok(all) => {
+            let stride = pm.num_groups() * (m + 1);
+            let mut offset = 0;
+            for req in batch.requests {
+                let vals = all[offset * stride..(offset + req.rows) * stride].to_vec();
+                offset += req.rows;
+                metrics.record_latency(req.submitted.elapsed());
+                let _ = req.resp.send(Ok(vals));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            let msg = format!("{e:#}");
+            for req in batch.requests {
+                let _ = req.resp.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

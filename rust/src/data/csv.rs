@@ -1,0 +1,112 @@
+//! CSV loading so users can explain models over real data.
+//!
+//! Minimal dialect: comma separator, optional header, numeric columns,
+//! label in a designated column. Non-numeric cells become NaN (the GBDT
+//! treats NaN as "missing" by routing to the majority-cover child).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+pub struct CsvOptions {
+    pub has_header: bool,
+    /// column index of the label; negative counts from the end
+    pub label_col: i64,
+    /// 0 = regression, else number of classes
+    pub num_classes: usize,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions { has_header: true, label_col: -1, num_classes: 0 }
+    }
+}
+
+pub fn load_csv(path: &Path, opts: &CsvOptions) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text, opts, path.file_stem().and_then(|s| s.to_str()).unwrap_or("csv"))
+}
+
+pub fn parse_csv(text: &str, opts: &CsvOptions, name: &str) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    if opts.has_header {
+        lines.next();
+    }
+    let rows: Vec<&str> = lines.collect();
+    if rows.is_empty() {
+        bail!("no data rows");
+    }
+    let ncols_total = rows[0].split(',').count();
+    if ncols_total < 2 {
+        bail!("need at least 2 columns (features + label)");
+    }
+    let label_col = if opts.label_col < 0 {
+        (ncols_total as i64 + opts.label_col) as usize
+    } else {
+        opts.label_col as usize
+    };
+    if label_col >= ncols_total {
+        bail!("label column {label_col} out of range ({ncols_total} cols)");
+    }
+    let cols = ncols_total - 1;
+    let mut d = Dataset::new(name, rows.len(), cols, opts.num_classes);
+    for (r, line) in rows.iter().enumerate() {
+        let mut c_out = 0;
+        let mut seen = 0;
+        for (c, cell) in line.split(',').enumerate() {
+            let v: f32 = cell.trim().parse().unwrap_or(f32::NAN);
+            if c == label_col {
+                d.labels[r] = v;
+            } else {
+                d.set(r, c_out, v);
+                c_out += 1;
+            }
+            seen += 1;
+        }
+        if seen != ncols_total {
+            bail!("row {r} has {seen} columns, expected {ncols_total}");
+        }
+    }
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let text = "a,b,y\n1,2,0\n3,4,1\n";
+        let d = parse_csv(text, &CsvOptions { num_classes: 2, ..Default::default() }, "t").unwrap();
+        assert_eq!((d.rows, d.cols), (2, 2));
+        assert_eq!(d.labels, vec![0.0, 1.0]);
+        assert_eq!(d.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn label_col_first() {
+        let text = "0.5,1,2\n1.5,3,4\n";
+        let opts = CsvOptions { has_header: false, label_col: 0, num_classes: 0 };
+        let d = parse_csv(text, &opts, "t").unwrap();
+        assert_eq!(d.labels, vec![0.5, 1.5]);
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn non_numeric_becomes_nan() {
+        let text = "x,?,1\n";
+        let opts = CsvOptions { has_header: false, label_col: 2, num_classes: 0 };
+        let d = parse_csv(text, &opts, "t").unwrap();
+        assert!(d.get(0, 0).is_nan() && d.get(0, 1).is_nan());
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let text = "1,2,3\n1,2\n";
+        let opts = CsvOptions { has_header: false, ..Default::default() };
+        assert!(parse_csv(text, &opts, "t").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Dataset substrate: dense row-major matrices with labels, synthetic
+//! generators mirroring the paper's Table 2 corpus, and a CSV loader for
+//! bringing real data.
+
+pub mod csv;
+pub mod synth;
+
+pub use synth::{SynthSpec, TaskKind};
+
+/// Dense row-major feature matrix + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major [rows * cols]
+    pub features: Vec<f32>,
+    /// regression target or class index as f32
+    pub labels: Vec<f32>,
+    /// 0 for regression, ≥ 2 for classification
+    pub num_classes: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, rows: usize, cols: usize, num_classes: usize) -> Self {
+        Dataset {
+            rows,
+            cols,
+            features: vec![0.0; rows * cols],
+            labels: vec![0.0; rows],
+            num_classes,
+            name: name.to_string(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.features[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.features[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.features[r * self.cols + c] = v;
+    }
+
+    pub fn is_regression(&self) -> bool {
+        self.num_classes == 0
+    }
+
+    /// Take the first `n` rows (for train/test style splits of synthetic data).
+    pub fn head(&self, n: usize) -> Dataset {
+        let n = n.min(self.rows);
+        Dataset {
+            rows: n,
+            cols: self.cols,
+            features: self.features[..n * self.cols].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            num_classes: self.num_classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Rows `[start, end)` as a new dataset.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Dataset {
+        let end = end.min(self.rows);
+        let start = start.min(end);
+        Dataset {
+            rows: end - start,
+            cols: self.cols,
+            features: self.features[start * self.cols..end * self.cols].to_vec(),
+            labels: self.labels[start..end].to_vec(),
+            num_classes: self.num_classes,
+            name: self.name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let mut d = Dataset::new("t", 3, 2, 0);
+        d.set(1, 1, 5.0);
+        assert_eq!(d.get(1, 1), 5.0);
+        assert_eq!(d.row(1), &[0.0, 5.0]);
+    }
+
+    #[test]
+    fn slicing() {
+        let mut d = Dataset::new("t", 4, 2, 3);
+        for r in 0..4 {
+            d.set(r, 0, r as f32);
+            d.labels[r] = r as f32;
+        }
+        let s = d.slice_rows(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.get(0, 0), 1.0);
+        assert_eq!(s.labels, vec![1.0, 2.0]);
+        assert_eq!(d.head(2).rows, 2);
+    }
+}

@@ -1,0 +1,184 @@
+//! Model serialization: compact little-endian binary format.
+//!
+//! Layout: magic "GTSM", u32 version, header (u32 counts + f32
+//! base_score), then per tree: u32 node count + the six node arrays as
+//! raw LE bytes. Large zoo models (10⁵–10⁶ nodes) load in milliseconds.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gbdt::loss::Objective;
+use crate::gbdt::tree::Tree;
+use crate::gbdt::Model;
+
+const MAGIC: &[u8; 4] = b"GTSM";
+const VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated model file");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+pub fn encode(model: &Model) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, model.trees.len() as u32);
+    put_u32(&mut out, model.num_groups as u32);
+    put_u32(&mut out, model.num_features as u32);
+    put_u32(&mut out, model.objective.id());
+    put_f32(&mut out, model.base_score);
+    for g in &model.tree_group {
+        put_u32(&mut out, *g as u32);
+    }
+    for t in &model.trees {
+        put_u32(&mut out, t.num_nodes() as u32);
+        put_i32s(&mut out, &t.left);
+        put_i32s(&mut out, &t.right);
+        put_i32s(&mut out, &t.feature);
+        put_f32s(&mut out, &t.threshold);
+        put_f32s(&mut out, &t.value);
+        put_f32s(&mut out, &t.cover);
+    }
+    out
+}
+
+pub fn decode(buf: &[u8]) -> Result<Model> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("not a GTSM model file");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported model version {version}");
+    }
+    let n_trees = r.u32()? as usize;
+    let num_groups = r.u32()? as usize;
+    let num_features = r.u32()? as usize;
+    let obj_id = r.u32()?;
+    let base_score = r.f32()?;
+    let mut tree_group = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        tree_group.push(r.u32()? as usize);
+    }
+    let mut trees = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        let n = r.u32()? as usize;
+        trees.push(Tree {
+            left: r.i32s(n)?,
+            right: r.i32s(n)?,
+            feature: r.i32s(n)?,
+            threshold: r.f32s(n)?,
+            value: r.f32s(n)?,
+            cover: r.f32s(n)?,
+        });
+    }
+    if r.pos != buf.len() {
+        bail!("trailing bytes in model file");
+    }
+    Ok(Model {
+        trees,
+        tree_group,
+        num_groups,
+        num_features,
+        base_score,
+        objective: Objective::from_id(obj_id, num_groups),
+    })
+}
+
+pub fn save(model: &Model, path: &Path) -> Result<()> {
+    let bytes = encode(model);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Model> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    decode(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::trainer::{train, TrainParams};
+
+    #[test]
+    fn roundtrip_preserves_model() {
+        let d = SynthSpec::adult(0.005).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let back = decode(&encode(&model)).unwrap();
+        assert_eq!(back.trees.len(), model.trees.len());
+        assert_eq!(back.tree_group, model.tree_group);
+        assert_eq!(back.objective, model.objective);
+        for (a, b) in model.trees.iter().zip(&back.trees) {
+            assert_eq!(a, b);
+        }
+        // predictions identical
+        for r in 0..10.min(d.rows) {
+            assert_eq!(model.predict_row_raw(d.row(r)), back.predict_row_raw(d.row(r)));
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let d = SynthSpec::cal_housing(0.003).generate();
+        let model = train(&d, &TrainParams { rounds: 1, ..Default::default() });
+        let mut bytes = encode(&model);
+        assert!(decode(&bytes[..bytes.len() - 3]).is_err());
+        bytes[0] = b'X';
+        assert!(decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Training objectives: gradients/hessians in raw-score space.
+
+/// Objective selects gradient computation and number of output groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// squared error, 1 group
+    SquaredError,
+    /// binary cross-entropy on logits, 1 group
+    Logistic,
+    /// softmax cross-entropy, K groups (one tree per class per round)
+    Softmax(usize),
+}
+
+impl Objective {
+    pub fn num_groups(&self) -> usize {
+        match self {
+            Objective::SquaredError | Objective::Logistic => 1,
+            Objective::Softmax(k) => *k,
+        }
+    }
+
+    pub fn id(&self) -> u32 {
+        match self {
+            Objective::SquaredError => 0,
+            Objective::Logistic => 1,
+            Objective::Softmax(_) => 2,
+        }
+    }
+
+    pub fn from_id(id: u32, groups: usize) -> Objective {
+        match id {
+            0 => Objective::SquaredError,
+            1 => Objective::Logistic,
+            _ => Objective::Softmax(groups),
+        }
+    }
+
+    /// Fill grad/hess for group `k` given raw scores [rows × groups]
+    /// (row-major) and labels.
+    pub fn grad_hess(
+        &self,
+        scores: &[f32],
+        labels: &[f32],
+        k: usize,
+        grad: &mut [f32],
+        hess: &mut [f32],
+    ) {
+        let groups = self.num_groups();
+        let rows = labels.len();
+        match self {
+            Objective::SquaredError => {
+                for r in 0..rows {
+                    grad[r] = scores[r] - labels[r];
+                    hess[r] = 1.0;
+                }
+            }
+            Objective::Logistic => {
+                for r in 0..rows {
+                    let p = sigmoid(scores[r]);
+                    grad[r] = p - labels[r];
+                    hess[r] = (p * (1.0 - p)).max(1e-6);
+                }
+            }
+            Objective::Softmax(_) => {
+                for r in 0..rows {
+                    let row = &scores[r * groups..(r + 1) * groups];
+                    let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let sum: f32 = row.iter().map(|&s| (s - maxv).exp()).sum();
+                    let p = (row[k] - maxv).exp() / sum;
+                    let y = if labels[r] as usize == k { 1.0 } else { 0.0 };
+                    grad[r] = p - y;
+                    hess[r] = (2.0 * p * (1.0 - p)).max(1e-6);
+                }
+            }
+        }
+    }
+
+    /// Transform raw scores to the reporting space (probability / value).
+    pub fn transform(&self, raw: &mut [f32]) {
+        match self {
+            Objective::SquaredError => {}
+            Objective::Logistic => {
+                for v in raw.iter_mut() {
+                    *v = sigmoid(*v);
+                }
+            }
+            Objective::Softmax(k) => {
+                for row in raw.chunks_mut(*k) {
+                    let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let mut sum = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - maxv).exp();
+                        sum += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= sum;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_error_grads() {
+        let mut g = vec![0.0; 2];
+        let mut h = vec![0.0; 2];
+        Objective::SquaredError.grad_hess(&[3.0, -1.0], &[1.0, -1.0], 0, &mut g, &mut h);
+        assert_eq!(g, vec![2.0, 0.0]);
+        assert_eq!(h, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn logistic_grad_signs() {
+        let mut g = vec![0.0; 2];
+        let mut h = vec![0.0; 2];
+        Objective::Logistic.grad_hess(&[0.0, 0.0], &[1.0, 0.0], 0, &mut g, &mut h);
+        assert!(g[0] < 0.0 && g[1] > 0.0);
+        assert!(h.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_probs_sum_to_one() {
+        let obj = Objective::Softmax(3);
+        let mut raw = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        obj.transform(&mut raw);
+        for row in raw.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_grads_sum_to_zero_over_classes() {
+        let obj = Objective::Softmax(3);
+        let scores = vec![0.3, -0.2, 0.5];
+        let labels = vec![2.0];
+        let mut total = 0.0;
+        for k in 0..3 {
+            let mut g = vec![0.0];
+            let mut h = vec![0.0];
+            obj.grad_hess(&scores, &labels, k, &mut g, &mut h);
+            total += g[0];
+        }
+        assert!(total.abs() < 1e-6);
+    }
+
+    #[test]
+    fn objective_id_roundtrip() {
+        for obj in [Objective::SquaredError, Objective::Logistic, Objective::Softmax(5)] {
+            let back = Objective::from_id(obj.id(), obj.num_groups());
+            assert_eq!(back, obj);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Array-of-nodes regression tree (XGBoost layout) with cover statistics.
+//!
+//! `cover` (sum of training hessians through each node) is what TreeShap's
+//! "cover weighting" uses for the missing-feature Bernoulli probabilities,
+//! so it is a first-class part of the model, not a training by-product.
+
+/// Binary regression tree. Node `i` is a leaf iff `left[i] < 0`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub feature: Vec<i32>,
+    /// split: go left iff x[feature] < threshold
+    pub threshold: Vec<f32>,
+    /// leaf value (interior nodes: unused)
+    pub value: Vec<f32>,
+    /// training weight (Σ hessian) through the node
+    pub cover: Vec<f32>,
+}
+
+impl Tree {
+    pub fn new() -> Tree {
+        Tree::default()
+    }
+
+    /// Append a node, returning its index.
+    pub fn add_node(&mut self) -> usize {
+        self.left.push(-1);
+        self.right.push(-1);
+        self.feature.push(-1);
+        self.threshold.push(0.0);
+        self.value.push(0.0);
+        self.cover.push(0.0);
+        self.left.len() - 1
+    }
+
+    /// Single leaf tree with the given value and cover.
+    pub fn leaf(value: f32, cover: f32) -> Tree {
+        let mut t = Tree::new();
+        let i = t.add_node();
+        t.value[i] = value;
+        t.cover[i] = cover;
+        t
+    }
+
+    #[inline]
+    pub fn is_leaf(&self, i: usize) -> bool {
+        self.left[i] < 0
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.left.len()
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.left.iter().filter(|&&l| l < 0).count()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        if self.left.is_empty() {
+            return 0;
+        }
+        // iterative DFS to avoid recursion limits on deep trees
+        let mut best = 0;
+        let mut stack = vec![(0usize, 0usize)];
+        while let Some((i, d)) = stack.pop() {
+            if self.is_leaf(i) {
+                best = best.max(d);
+            } else {
+                stack.push((self.left[i] as usize, d + 1));
+                stack.push((self.right[i] as usize, d + 1));
+            }
+        }
+        best
+    }
+
+    /// Evaluate on one row. NaN features route to the heavier-cover child
+    /// (the "majority direction", a common missing-value policy).
+    pub fn predict_row(&self, x: &[f32]) -> f32 {
+        let mut i = 0usize;
+        while !self.is_leaf(i) {
+            let v = x[self.feature[i] as usize];
+            let (l, r) = (self.left[i] as usize, self.right[i] as usize);
+            i = if v.is_nan() {
+                if self.cover[l] >= self.cover[r] { l } else { r }
+            } else if v < self.threshold[i] {
+                l
+            } else {
+                r
+            };
+        }
+        self.value[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// x0 < 0 ? (x1 < 1 ? 1 : 2) : 3
+    pub fn sample_tree() -> Tree {
+        let mut t = Tree::new();
+        let root = t.add_node();
+        let l = t.add_node();
+        let r = t.add_node();
+        let ll = t.add_node();
+        let lr = t.add_node();
+        t.feature[root] = 0;
+        t.threshold[root] = 0.0;
+        t.left[root] = l as i32;
+        t.right[root] = r as i32;
+        t.cover[root] = 10.0;
+        t.feature[l] = 1;
+        t.threshold[l] = 1.0;
+        t.left[l] = ll as i32;
+        t.right[l] = lr as i32;
+        t.cover[l] = 6.0;
+        t.value[r] = 3.0;
+        t.cover[r] = 4.0;
+        t.value[ll] = 1.0;
+        t.cover[ll] = 2.0;
+        t.value[lr] = 2.0;
+        t.cover[lr] = 4.0;
+        t
+    }
+
+    #[test]
+    fn predict_and_shape() {
+        let t = sample_tree();
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.max_depth(), 2);
+        assert_eq!(t.predict_row(&[-1.0, 0.0]), 1.0);
+        assert_eq!(t.predict_row(&[-1.0, 2.0]), 2.0);
+        assert_eq!(t.predict_row(&[1.0, 0.0]), 3.0);
+    }
+
+    #[test]
+    fn nan_routes_to_heavier_child() {
+        let t = sample_tree();
+        // root: left cover 6 >= right 4 -> left; inner: ll 2 < lr 4 -> lr
+        assert_eq!(t.predict_row(&[f32::NAN, f32::NAN]), 2.0);
+    }
+
+    #[test]
+    fn leaf_tree() {
+        let t = Tree::leaf(7.0, 3.0);
+        assert_eq!(t.predict_row(&[1.0]), 7.0);
+        assert_eq!(t.max_depth(), 0);
+        assert_eq!(t.num_leaves(), 1);
+    }
+}

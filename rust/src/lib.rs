@@ -1,0 +1,25 @@
+//! # GPUTreeShap (reproduction)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *GPUTreeShap:
+//! Massively Parallel Exact Calculation of SHAP Scores for Tree
+//! Ensembles* (Mitchell, Frank, Holmes, 2020).
+//!
+//! - **L1/L2** (build time, `python/`): the SHAP dynamic program as a
+//!   Pallas kernel inside JAX graphs, AOT-lowered to HLO artifacts.
+//! - **L3** (this crate): everything on the request path — GBDT model
+//!   substrate, path extraction + duplicate merging, bin packing, the
+//!   CPU TreeShap baseline, the PJRT runtime executing the artifacts,
+//!   and a batching/serving coordinator.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured evaluation.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod gbdt;
+pub mod parallel;
+pub mod runtime;
+pub mod shap;
+pub mod util;

@@ -1,0 +1,341 @@
+//! gputreeshap — CLI for the GPUTreeShap reproduction.
+//!
+//! ```text
+//! gputreeshap train   --dataset cal_housing --scale 0.05 --rounds 50 --depth 8 --out model.gtsm
+//! gputreeshap info    --model model.gtsm
+//! gputreeshap pack    --model model.gtsm
+//! gputreeshap shap    --model model.gtsm --dataset cal_housing --rows 256 --backend xla|cpu|host
+//! gputreeshap interactions --model model.gtsm --dataset adult --rows 32
+//! gputreeshap serve   --model model.gtsm --dataset adult --devices 2 --clients 4 --requests 32
+//! gputreeshap zoo     --scale 0.02
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use gputreeshap::cli::Args;
+use gputreeshap::coordinator::{ServiceConfig, ShapService};
+use gputreeshap::data::csv::{load_csv, CsvOptions};
+use gputreeshap::data::{Dataset, SynthSpec};
+use gputreeshap::gbdt::{io as model_io, train, Model, TrainParams, ZooSize};
+use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
+use gputreeshap::shap::{pack_model, treeshap, Packing};
+use gputreeshap::util::time_it;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        Some("pack") => cmd_pack(&args),
+        Some("shap") => cmd_shap(&args),
+        Some("interactions") => cmd_interactions(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("zoo") => cmd_zoo(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: gputreeshap <train|info|pack|shap|interactions|predict|serve|zoo> [options]
+see rust/src/main.rs header for examples";
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    let scale = args.get_f64("scale", 0.01)?;
+    match args.get_or("dataset", "cal_housing") {
+        "covtype" => Ok(SynthSpec::covtype(scale).generate()),
+        "cal_housing" => Ok(SynthSpec::cal_housing(scale).generate()),
+        "fashion_mnist" => Ok(SynthSpec::fashion_mnist(scale).generate()),
+        "adult" => Ok(SynthSpec::adult(scale).generate()),
+        "csv" => {
+            let path = args.get("csv").ok_or_else(|| anyhow!("--csv <path> required"))?;
+            let opts = CsvOptions {
+                num_classes: args.get_usize("classes", 0)?,
+                ..Default::default()
+            };
+            load_csv(Path::new(path), &opts)
+        }
+        other => bail!("unknown dataset '{other}'"),
+    }
+}
+
+fn load_model(args: &Args) -> Result<Model> {
+    let path = args.get("model").ok_or_else(|| anyhow!("--model <path> required"))?;
+    if path.ends_with(".json") {
+        // real XGBoost model.json (the paper's integration target)
+        gputreeshap::gbdt::xgb_import::load_xgboost_json(Path::new(path))
+    } else {
+        model_io::load(Path::new(path))
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let params = TrainParams {
+        rounds: args.get_usize("rounds", 50)?,
+        max_depth: args.get_usize("depth", 8)?,
+        learning_rate: args.get_f64("lr", 0.01)? as f32,
+        max_bins: args.get_usize("bins", 64)?,
+        threads: args.get_usize("threads", gputreeshap::parallel::default_threads())?,
+        ..Default::default()
+    };
+    println!("training on {} ({} rows × {} cols)…", data.name, data.rows, data.cols);
+    let (model, dt) = time_it(|| train(&data, &params));
+    println!("trained in {dt:.2}s: {}", model.summary());
+    let out = args.get_or("out", "model.gtsm");
+    model_io::save(&model, Path::new(out))?;
+    println!("saved to {out}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    println!("{}", model.summary());
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let bins: usize = pm.groups.iter().map(|g| g.num_bins).sum();
+    println!(
+        "packed: {} bins (bfd), max path depth {}, E[f] = {:?}",
+        bins, pm.max_depth, pm.expected_values
+    );
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let mut table = gputreeshap::bench::Table::new(&["alg", "time(s)", "utilisation", "bins"]);
+    for alg in Packing::ALL {
+        let (pm, dt) = time_it(|| pack_model(&model, alg));
+        let bins: usize = pm.groups.iter().map(|g| g.num_bins).sum();
+        let active: f64 = pm
+            .groups
+            .iter()
+            .map(|g| g.utilisation * (g.num_bins * gputreeshap::shap::LANES) as f64)
+            .sum();
+        let util = active / ((bins * gputreeshap::shap::LANES) as f64).max(1.0);
+        table.row(vec![
+            alg.name().into(),
+            format!("{dt:.4}"),
+            format!("{util:.6}"),
+            bins.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn take_rows(data: &Dataset, rows: usize) -> (Vec<f32>, usize) {
+    let rows = rows.min(data.rows);
+    (data.features[..rows * data.cols].to_vec(), rows)
+}
+
+fn cmd_shap(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let data = load_dataset(args)?;
+    if data.cols != model.num_features {
+        bail!("dataset has {} features, model expects {}", data.cols, model.num_features);
+    }
+    let (x, rows) = take_rows(&data, args.get_usize("rows", 256)?);
+    let threads = args.get_usize("threads", gputreeshap::parallel::default_threads())?;
+    let m = model.num_features;
+    let backend = args.get_or("backend", "xla");
+    let (phis, dt) = match backend {
+        "cpu" => time_it(|| treeshap::shap_values(&model, &x, rows, threads)),
+        "host" => {
+            let pm = pack_model(&model, Packing::BestFitDecreasing);
+            time_it(|| gputreeshap::shap::host_kernel::shap_values(&pm, &x, rows, threads))
+        }
+        "xla" => {
+            let pm = pack_model(&model, Packing::BestFitDecreasing);
+            let mut engine = ShapEngine::new(&artifacts_dir(args))?;
+            let prep = engine.prepare(&pm, ArtifactKind::Shap, rows)?;
+            let (r, dt) = time_it(|| engine.shap_values(&pm, &prep, &x, rows));
+            (r?, dt)
+        }
+        other => bail!("unknown backend '{other}' (cpu|host|xla)"),
+    };
+    println!(
+        "{} rows × {} groups in {:.3}s ({:.0} rows/s) [{} backend]",
+        rows,
+        model.num_groups,
+        dt,
+        rows as f64 / dt,
+        backend
+    );
+    let mut imp: Vec<(usize, f64)> = (0..m)
+        .map(|f| {
+            let s: f64 = (0..rows)
+                .map(|r| (phis[r * model.num_groups * (m + 1) + f] as f64).abs())
+                .sum();
+            (f, s / rows as f64)
+        })
+        .collect();
+    imp.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("top features by mean |φ| (group 0):");
+    for (f, v) in imp.iter().take(8) {
+        println!("  f{f:<4} {v:.5}");
+    }
+    Ok(())
+}
+
+fn cmd_interactions(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let data = load_dataset(args)?;
+    let (x, rows) = take_rows(&data, args.get_usize("rows", 32)?);
+    let m = model.num_features;
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let backend = args.get_or("backend", "xla");
+    let (inter, dt) = match backend {
+        "cpu" => time_it(|| {
+            gputreeshap::shap::interactions::interaction_values(
+                &model,
+                &x,
+                rows,
+                gputreeshap::parallel::default_threads(),
+            )
+        }),
+        "xla" => {
+            let mut engine = ShapEngine::new(&artifacts_dir(args))?;
+            let prep = engine.prepare(&pm, ArtifactKind::Interactions, rows)?;
+            let (r, dt) = time_it(|| engine.interactions(&pm, &prep, &x, rows));
+            (r?, dt)
+        }
+        other => bail!("unknown backend '{other}' (cpu|xla)"),
+    };
+    println!("{rows} rows interactions in {dt:.3}s [{backend}]");
+    let ms = (m + 1) * (m + 1);
+    let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let s: f64 = (0..rows)
+                .map(|r| (inter[r * model.num_groups * ms + i * (m + 1) + j] as f64).abs())
+                .sum();
+            pairs.push((i, j, s / rows as f64));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.total_cmp(&a.2));
+    println!("top interacting pairs by mean |φ_ij|:");
+    for (i, j, v) in pairs.iter().take(8) {
+        println!("  (f{i}, f{j})  {v:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let data = load_dataset(args)?;
+    let (x, rows) = take_rows(&data, args.get_usize("rows", 16)?);
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let mut engine = ShapEngine::new(&artifacts_dir(args))?;
+    let prep = engine.prepare(&pm, ArtifactKind::Predict, rows)?;
+    let preds = engine.predict(&pm, &prep, &x, rows)?;
+    for r in 0..rows.min(16) {
+        println!("row {r}: {:?}", &preds[r * model.num_groups..(r + 1) * model.num_groups]);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let data = load_dataset(args)?;
+    let m = model.num_features;
+    let devices = args.get_usize("devices", 1)?;
+    let clients = args.get_usize("clients", 4)?;
+    let requests = args.get_usize("requests", 32)?;
+    let req_rows = args.get_usize("req-rows", 16)?;
+
+    let cfg = ServiceConfig {
+        devices,
+        artifacts_dir: artifacts_dir(args),
+        max_batch_rows: args.get_usize("max-batch", 256)?,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
+        ..Default::default()
+    };
+    // padded engine by default (EXPERIMENTS.md §Perf); --engine warp for
+    // the faithful CUDA-layout adaptation
+    let svc = match args.get_or("engine", "padded") {
+        "warp" => ShapService::start(
+            Arc::new(pack_model(&model, Packing::BestFitDecreasing)),
+            cfg,
+        )?,
+        _ => {
+            let depth =
+                pack_model(&model, Packing::BestFitDecreasing).max_depth.max(1);
+            let width = gputreeshap::runtime::Manifest::load(&cfg.artifacts_dir)?
+                .select(gputreeshap::runtime::ArtifactKind::ShapPadded, m, depth, 256)?
+                .depth
+                + 1;
+            ShapService::start_padded(
+                Arc::new(gputreeshap::shap::pad_model(&model, width)),
+                cfg,
+            )?
+        }
+    };
+    println!(
+        "service up: {devices} device(s); {clients} clients × {requests} requests × {req_rows} rows"
+    );
+
+    let svc = Arc::new(svc);
+    let data = Arc::new(data);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            let data = data.clone();
+            scope.spawn(move || {
+                for q in 0..requests {
+                    let start = (c * 31 + q * 7) % (data.rows.saturating_sub(req_rows).max(1));
+                    let x = data.features[start * m..(start + req_rows) * m].to_vec();
+                    if let Err(e) = svc.explain(x, req_rows) {
+                        eprintln!("client {c} request {q}: {e:#}");
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total_rows = clients * requests * req_rows;
+    println!(
+        "done in {wall:.2}s → {:.0} rows/s, {:.1} req/s",
+        total_rows as f64 / wall,
+        (clients * requests) as f64 / wall
+    );
+    let svc = Arc::try_unwrap(svc).ok().expect("clients done");
+    println!("metrics: {}", svc.metrics.snapshot().to_string_pretty());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_zoo(args: &Args) -> Result<()> {
+    let scale = args.get_f64("scale", 0.01)?;
+    let mut table = gputreeshap::bench::Table::new(&["model", "trees", "leaves", "max_depth"]);
+    for spec in SynthSpec::all(scale) {
+        let data = spec.generate();
+        for size in [ZooSize::Small, ZooSize::Medium, ZooSize::Large] {
+            let (rounds, depth) = size.rounds_depth();
+            let model =
+                train(&data, &TrainParams { rounds, max_depth: depth, ..Default::default() });
+            table.row(vec![
+                format!("{}-{}", spec.name, size.name()),
+                model.trees.len().to_string(),
+                model.total_leaves().to_string(),
+                model.max_depth().to_string(),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

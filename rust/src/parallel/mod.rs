@@ -1,0 +1,130 @@
+//! Minimal data-parallel substrate (no `rayon` offline).
+//!
+//! Work-stealing-lite: a shared atomic cursor hands out fixed-size chunks
+//! of the index range to scoped worker threads, which keeps load balanced
+//! even when per-item cost varies wildly (deep vs shallow decision-tree
+//! paths — exactly the imbalance §3 of the paper describes for warps).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use when the caller does not care.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(start..end)` over chunks of `0..total` on `threads` threads.
+///
+/// `f` must be safe to call concurrently on disjoint ranges.
+pub fn parallel_for_chunks<F>(threads: usize, total: usize, chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    let chunk = chunk.max(1);
+    if threads == 1 || total <= chunk {
+        let mut s = 0;
+        while s < total {
+            let e = (s + chunk).min(total);
+            f(s..e);
+            s = e;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let s = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if s >= total {
+                    break;
+                }
+                let e = (s + chunk).min(total);
+                f(s..e);
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..total`, writing into a preallocated output via a
+/// per-index closure. The closure gets (index, &mut slot).
+pub fn parallel_fill<T, F>(threads: usize, out: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let total = out.len();
+    let base = out.as_mut_ptr() as usize;
+    let f = &f;
+    parallel_for_chunks(threads, total, chunk, move |range| {
+        // Disjoint ranges => exclusive access to these slots.
+        for i in range {
+            let slot = unsafe { &mut *(base as *mut T).add(i) };
+            f(i, slot);
+        }
+    });
+}
+
+/// Map each index to a value, collecting results in order.
+pub fn parallel_map<T, F>(threads: usize, total: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); total];
+    parallel_fill(threads, &mut out, chunk, |i, slot| *slot = f(i));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(8, 1000, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let hits: Vec<AtomicU64> = (0..57).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1, 57, 10, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let v = parallel_map(4, 100, 3, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_total() {
+        parallel_for_chunks(4, 0, 8, |_| panic!("should not run"));
+        let v: Vec<usize> = parallel_map(4, 0, 8, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn parallel_fill_disjoint() {
+        let mut out = vec![0usize; 513];
+        parallel_fill(8, &mut out, 5, |i, s| *s = i + 1);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i + 1);
+        }
+    }
+}

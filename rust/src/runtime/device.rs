@@ -1,0 +1,63 @@
+//! PJRT device wrapper: compiles HLO-text artifacts once and caches the
+//! loaded executables (adapted from /opt/xla-example/load_hlo).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::ArtifactSpec;
+
+/// One PJRT device (CPU client here; `PjRtClient::gpu/tpu` on real HW)
+/// plus its compiled-executable cache.
+pub struct Device {
+    pub client: PjRtClient,
+    execs: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Device> {
+        Ok(Device { client: PjRtClient::cpu()?, execs: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&PjRtLoadedExecutable> {
+        if !self.execs.contains_key(&spec.name) {
+            let proto = HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("parsing {}", spec.file.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            self.execs.insert(spec.name.clone(), exe);
+        }
+        Ok(&self.execs[&spec.name])
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    /// Upload a host f32 array to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host i32 array to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute a loaded artifact on device buffers; returns the first
+    /// element of the 1-tuple output as a host literal.
+    pub fn execute(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Literal> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
+        let out = exe.execute_b(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}

@@ -1,0 +1,437 @@
+//! The execution engine: tiles (rows × groups × bins) workloads over
+//! fixed-shape artifact executions and accumulates φ.
+//!
+//! Packed model tensors are uploaded to the device **once** per
+//! (model, artifact) as `PjRtBuffer`s and reused across every batch
+//! (`execute_b`) — only the feature matrix X is uploaded per row chunk.
+//! This mirrors the paper's amortisation of preprocessing/packing cost
+//! over the test set, extended to device residency.
+
+use std::path::Path;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::runtime::device::Device;
+use crate::runtime::manifest::{ArtifactKind, Manifest};
+use crate::shap::packed::{PackedModel, PaddedModel};
+use crate::shap::LANES;
+
+/// Device-resident packed model for one artifact bucket:
+/// `chunks[group][chunk]` = the 7 path tensors of one bin chunk.
+pub struct Prepared {
+    pub artifact: String,
+    pub rows: usize,
+    pub bins: usize,
+    pub features: usize,
+    pub kind: ArtifactKind,
+    chunks: Vec<Vec<[PjRtBuffer; 7]>>,
+}
+
+/// Engine over one device. Multi-device scaling composes several engines
+/// (see `runtime::pool`).
+pub struct ShapEngine {
+    pub device: Device,
+    pub manifest: Manifest,
+}
+
+impl ShapEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<ShapEngine> {
+        Ok(ShapEngine { device: Device::cpu()?, manifest: Manifest::load(artifacts_dir)? })
+    }
+
+    /// Select a bucket, compile it, and upload the packed model.
+    pub fn prepare(
+        &mut self,
+        pm: &PackedModel,
+        kind: ArtifactKind,
+        rows_hint: usize,
+    ) -> Result<Prepared> {
+        let spec = self
+            .manifest
+            .select(kind, pm.num_features, pm.max_depth.max(1), rows_hint)?
+            .clone();
+        self.device.load(&spec)?;
+        let mut chunks = Vec::with_capacity(pm.groups.len());
+        for g in &pm.groups {
+            let mut group_chunks = Vec::new();
+            let mut b = 0;
+            while b < g.num_bins.max(1) {
+                let end = (b + spec.bins).min(g.num_bins);
+                let chunk = g.slice_bins(b, end).padded_to(spec.bins);
+                let dims = [spec.bins, LANES];
+                group_chunks.push([
+                    self.device.upload_i32(&chunk.fidx, &dims)?,
+                    self.device.upload_f32(&chunk.lower, &dims)?,
+                    self.device.upload_f32(&chunk.upper, &dims)?,
+                    self.device.upload_f32(&chunk.zfrac, &dims)?,
+                    self.device.upload_f32(&chunk.v, &dims)?,
+                    self.device.upload_i32(&chunk.pos, &dims)?,
+                    self.device.upload_i32(&chunk.plen, &dims)?,
+                ]);
+                b = end.max(b + spec.bins);
+            }
+            chunks.push(group_chunks);
+        }
+        Ok(Prepared {
+            artifact: spec.name,
+            rows: spec.rows,
+            bins: spec.bins,
+            features: spec.features,
+            kind,
+            chunks,
+        })
+    }
+
+    /// Device-upload the padded-path layout (perf variant). Each chunk
+    /// holds `spec.bins` paths of width `spec.depth + 1`.
+    pub fn prepare_padded(
+        &mut self,
+        pm: &PaddedModel,
+        rows_hint: usize,
+    ) -> Result<PreparedPadded> {
+        self.prepare_padded_kind(pm, ArtifactKind::ShapPadded, rows_hint)
+    }
+
+    /// As `prepare_padded` for any padded-layout artifact kind.
+    pub fn prepare_padded_kind(
+        &mut self,
+        pm: &PaddedModel,
+        kind: ArtifactKind,
+        rows_hint: usize,
+    ) -> Result<PreparedPadded> {
+        let units = pm.groups.iter().map(|g| g.num_paths).max().unwrap_or(1);
+        let spec = self
+            .manifest
+            .select_with_units(
+                kind,
+                pm.num_features,
+                pm.max_depth.max(1),
+                rows_hint,
+                units,
+            )?
+            .clone();
+        self.device.load(&spec)?;
+        let width = spec.depth + 1;
+        let mut chunks = Vec::with_capacity(pm.groups.len());
+        for g in &pm.groups {
+            // re-pad the group to the artifact width
+            assert!(g.width <= width, "group width {} > artifact {}", g.width, width);
+            let mut group_chunks = Vec::new();
+            let mut p0 = 0;
+            while p0 < g.num_paths.max(1) {
+                let end = (p0 + spec.bins).min(g.num_paths);
+                let chunk = repad(g, p0, end, spec.bins, width);
+                let dims2 = [spec.bins, width];
+                let dims1 = [spec.bins];
+                group_chunks.push([
+                    self.device.upload_i32(&chunk.fidx, &dims2)?,
+                    self.device.upload_f32(&chunk.lower, &dims2)?,
+                    self.device.upload_f32(&chunk.upper, &dims2)?,
+                    self.device.upload_f32(&chunk.zfrac, &dims2)?,
+                    self.device.upload_f32(&chunk.v, &dims1)?,
+                    self.device.upload_i32(&chunk.plen, &dims1)?,
+                ]);
+                p0 = end.max(p0 + spec.bins);
+            }
+            chunks.push(group_chunks);
+        }
+        Ok(PreparedPadded {
+            artifact: spec.name,
+            rows: spec.rows,
+            paths: spec.bins,
+            features: spec.features,
+            chunks,
+        })
+    }
+
+    /// SHAP values through the padded-path artifact.
+    pub fn shap_values_padded(
+        &self,
+        pm: &PaddedModel,
+        prep: &PreparedPadded,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let stride = groups * (m + 1);
+        let mut out = vec![0.0f32; rows * stride];
+        let mb = prep.features;
+
+        let mut xpad = vec![0.0f32; prep.rows * mb];
+        let mut r0 = 0;
+        while r0 < rows {
+            let rc = (rows - r0).min(prep.rows);
+            pad_x(x, m, r0, rc, &mut xpad, mb);
+            let xbuf = self.device.upload_f32(&xpad, &[prep.rows, mb])?;
+            for (g, group_chunks) in prep.chunks.iter().enumerate() {
+                for bufs in group_chunks {
+                    let args: Vec<&PjRtBuffer> =
+                        std::iter::once(&xbuf).chain(bufs.iter()).collect();
+                    let lit = self.device.execute(&prep.artifact, &args)?;
+                    let vals: Vec<f32> = lit.to_vec()?;
+                    for r in 0..rc {
+                        let src = &vals[r * (mb + 1)..(r + 1) * (mb + 1)];
+                        let dst = &mut out[(r0 + r) * stride + g * (m + 1)
+                            ..(r0 + r) * stride + (g + 1) * (m + 1)];
+                        for f in 0..m {
+                            dst[f] += src[f];
+                        }
+                        dst[m] += src[mb];
+                    }
+                }
+            }
+            r0 += rc;
+        }
+        for r in 0..rows {
+            for g in 0..groups {
+                out[r * stride + g * (m + 1) + m] += pm.expected_values[g] as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Interactions through the padded-path artifact:
+    /// output [rows × groups × (m+1)²], base value at [M, M].
+    pub fn interactions_padded(
+        &self,
+        pm: &PaddedModel,
+        prep: &PreparedPadded,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let ms = (m + 1) * (m + 1);
+        let stride = groups * ms;
+        let mut out = vec![0.0f32; rows * stride];
+        let mb = prep.features;
+        let msb = (mb + 1) * (mb + 1);
+
+        let mut xpad = vec![0.0f32; prep.rows * mb];
+        let mut r0 = 0;
+        while r0 < rows {
+            let rc = (rows - r0).min(prep.rows);
+            pad_x(x, m, r0, rc, &mut xpad, mb);
+            let xbuf = self.device.upload_f32(&xpad, &[prep.rows, mb])?;
+            for (g, group_chunks) in prep.chunks.iter().enumerate() {
+                for bufs in group_chunks {
+                    let args: Vec<&PjRtBuffer> =
+                        std::iter::once(&xbuf).chain(bufs.iter()).collect();
+                    let lit = self.device.execute(&prep.artifact, &args)?;
+                    let vals: Vec<f32> = lit.to_vec()?;
+                    for r in 0..rc {
+                        let src = &vals[r * msb..(r + 1) * msb];
+                        let dst = &mut out
+                            [(r0 + r) * stride + g * ms..(r0 + r) * stride + (g + 1) * ms];
+                        for i in 0..m {
+                            for j in 0..m {
+                                dst[i * (m + 1) + j] += src[i * (mb + 1) + j];
+                            }
+                        }
+                    }
+                }
+            }
+            r0 += rc;
+        }
+        for r in 0..rows {
+            for g in 0..groups {
+                out[r * stride + g * ms + m * (m + 1) + m] += pm.expected_values[g] as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// SHAP values: output [rows × groups × (m+1)], base values included.
+    pub fn shap_values(
+        &self,
+        pm: &PackedModel,
+        prep: &Prepared,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(prep.kind, ArtifactKind::Shap);
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let stride = groups * (m + 1);
+        let mut out = vec![0.0f32; rows * stride];
+        let mb = prep.features;
+
+        let mut xpad = vec![0.0f32; prep.rows * mb];
+        let mut r0 = 0;
+        while r0 < rows {
+            let rc = (rows - r0).min(prep.rows);
+            pad_x(x, m, r0, rc, &mut xpad, mb);
+            let xbuf = self.device.upload_f32(&xpad, &[prep.rows, mb])?;
+            for (g, group_chunks) in prep.chunks.iter().enumerate() {
+                for bufs in group_chunks {
+                    let args: Vec<&PjRtBuffer> = std::iter::once(&xbuf)
+                        .chain(bufs.iter())
+                        .collect();
+                    let lit = self.device.execute(&prep.artifact, &args)?;
+                    let vals: Vec<f32> = lit.to_vec()?;
+                    // accumulate [rc, mb+1] into out
+                    for r in 0..rc {
+                        let src = &vals[r * (mb + 1)..(r + 1) * (mb + 1)];
+                        let dst = &mut out
+                            [(r0 + r) * stride + g * (m + 1)..(r0 + r) * stride + (g + 1) * (m + 1)];
+                        for f in 0..m {
+                            dst[f] += src[f];
+                        }
+                        dst[m] += src[mb]; // bias lanes (always ~0)
+                    }
+                }
+            }
+            r0 += rc;
+        }
+        // base values
+        for r in 0..rows {
+            for g in 0..groups {
+                out[r * stride + g * (m + 1) + m] += pm.expected_values[g] as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Interaction values: output [rows × groups × (m+1)²].
+    pub fn interactions(
+        &self,
+        pm: &PackedModel,
+        prep: &Prepared,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(prep.kind, ArtifactKind::Interactions);
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let ms = (m + 1) * (m + 1);
+        let stride = groups * ms;
+        let mut out = vec![0.0f32; rows * stride];
+        let mb = prep.features;
+        let msb = (mb + 1) * (mb + 1);
+
+        let mut xpad = vec![0.0f32; prep.rows * mb];
+        let mut r0 = 0;
+        while r0 < rows {
+            let rc = (rows - r0).min(prep.rows);
+            pad_x(x, m, r0, rc, &mut xpad, mb);
+            let xbuf = self.device.upload_f32(&xpad, &[prep.rows, mb])?;
+            for (g, group_chunks) in prep.chunks.iter().enumerate() {
+                for bufs in group_chunks {
+                    let args: Vec<&PjRtBuffer> =
+                        std::iter::once(&xbuf).chain(bufs.iter()).collect();
+                    let lit = self.device.execute(&prep.artifact, &args)?;
+                    let vals: Vec<f32> = lit.to_vec()?;
+                    for r in 0..rc {
+                        let src = &vals[r * msb..(r + 1) * msb];
+                        let dst = &mut out
+                            [(r0 + r) * stride + g * ms..(r0 + r) * stride + (g + 1) * ms];
+                        // Eq. 6 diagonals are additive across bin chunks
+                        for i in 0..m {
+                            for j in 0..m {
+                                dst[i * (m + 1) + j] += src[i * (mb + 1) + j];
+                            }
+                        }
+                    }
+                }
+            }
+            r0 += rc;
+        }
+        for r in 0..rows {
+            for g in 0..groups {
+                out[r * stride + g * ms + m * (m + 1) + m] += pm.expected_values[g] as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Predictions: output [rows × groups], raw scores.
+    pub fn predict(
+        &self,
+        pm: &PackedModel,
+        prep: &Prepared,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(prep.kind, ArtifactKind::Predict);
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let mut out = vec![pm.base_score; rows * groups];
+        let mb = prep.features;
+
+        let mut xpad = vec![0.0f32; prep.rows * mb];
+        let mut r0 = 0;
+        while r0 < rows {
+            let rc = (rows - r0).min(prep.rows);
+            pad_x(x, m, r0, rc, &mut xpad, mb);
+            let xbuf = self.device.upload_f32(&xpad, &[prep.rows, mb])?;
+            for (g, group_chunks) in prep.chunks.iter().enumerate() {
+                for bufs in group_chunks {
+                    let args: Vec<&PjRtBuffer> =
+                        std::iter::once(&xbuf).chain(bufs.iter()).collect();
+                    let lit = self.device.execute(&prep.artifact, &args)?;
+                    let vals: Vec<f32> = lit.to_vec()?;
+                    for r in 0..rc {
+                        out[(r0 + r) * groups + g] += vals[r];
+                    }
+                }
+            }
+            r0 += rc;
+        }
+        Ok(out)
+    }
+}
+
+/// Device-resident padded-path model for one artifact bucket.
+pub struct PreparedPadded {
+    pub artifact: String,
+    pub rows: usize,
+    pub paths: usize,
+    pub features: usize,
+    chunks: Vec<Vec<[PjRtBuffer; 6]>>,
+}
+
+/// Slice paths [start, end) of a padded group and re-pad to
+/// (`paths` rows × `width` elements) for a fixed artifact shape.
+fn repad(
+    g: &crate::shap::packed::PaddedGroup,
+    start: usize,
+    end: usize,
+    paths: usize,
+    width: usize,
+) -> crate::shap::packed::PaddedGroup {
+    let narrow = g.slice_padded(start, end, paths);
+    if narrow.width == width {
+        return narrow;
+    }
+    let mut out = crate::shap::packed::PaddedGroup {
+        fidx: vec![-1; paths * width],
+        lower: vec![-crate::shap::packed::F32_BIG; paths * width],
+        upper: vec![crate::shap::packed::F32_BIG; paths * width],
+        zfrac: vec![1.0; paths * width],
+        v: narrow.v.clone(),
+        plen: narrow.plen.clone(),
+        num_paths: paths,
+        width,
+        utilisation: narrow.utilisation,
+    };
+    for p in 0..paths {
+        let (src, dst) = (p * narrow.width, p * width);
+        let w = narrow.width.min(width);
+        out.fidx[dst..dst + w].copy_from_slice(&narrow.fidx[src..src + w]);
+        out.lower[dst..dst + w].copy_from_slice(&narrow.lower[src..src + w]);
+        out.upper[dst..dst + w].copy_from_slice(&narrow.upper[src..src + w]);
+        out.zfrac[dst..dst + w].copy_from_slice(&narrow.zfrac[src..src + w]);
+    }
+    out
+}
+
+/// Copy rows [r0, r0+rc) of x (m cols) into the padded [R × mb] buffer.
+fn pad_x(x: &[f32], m: usize, r0: usize, rc: usize, xpad: &mut [f32], mb: usize) {
+    xpad.iter_mut().for_each(|v| *v = 0.0);
+    for r in 0..rc {
+        let src = &x[(r0 + r) * m..(r0 + r + 1) * m];
+        xpad[r * mb..r * mb + m].copy_from_slice(src);
+    }
+}

@@ -1,0 +1,170 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Lists every AOT HLO artifact with its shape bucket
+//! (rows, bins, features, depth); the runtime selects the cheapest
+//! compatible bucket and tiles workloads over it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Shap,
+    /// padded-path perf variant (lanes = paths); `bins` counts paths
+    ShapPadded,
+    Interactions,
+    /// padded-path interactions; `bins` counts paths
+    InteractionsPadded,
+    Predict,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "shap" => ArtifactKind::Shap,
+            "shap_padded" => ArtifactKind::ShapPadded,
+            "interactions" => ArtifactKind::Interactions,
+            "interactions_padded" => ArtifactKind::InteractionsPadded,
+            "predict" => ArtifactKind::Predict,
+            _ => bail!("unknown artifact kind '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub rows: usize,
+    pub bins: usize,
+    pub features: usize,
+    pub depth: usize,
+    pub lanes: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                kind: ArtifactKind::parse(a.get("kind")?.as_str()?)?,
+                rows: a.get("rows")?.as_usize()?,
+                bins: a.get("bins")?.as_usize()?,
+                features: a.get("features")?.as_usize()?,
+                depth: a.get("depth")?.as_usize()?,
+                lanes: a.get("lanes")?.as_usize()?,
+                file: dir.join(a.get("file")?.as_str()?),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Cheapest compatible bucket: features ≥ m, depth ≥ d (shap /
+    /// interactions). Cost model = padded work per row-chunk execution,
+    /// rows·bins·features·(depth+1), preferring small-row buckets when
+    /// `rows_hint` is small (latency) and large ones otherwise.
+    pub fn select(
+        &self,
+        kind: ArtifactKind,
+        m: usize,
+        depth: usize,
+        rows_hint: usize,
+    ) -> Result<&ArtifactSpec> {
+        self.select_with_units(kind, m, depth, rows_hint, usize::MAX)
+    }
+
+    /// Like `select`, also weighing work-unit padding: `units_hint` is
+    /// the typical number of bins (warp layout) or paths (padded layout)
+    /// per group, so a 230-path group prefers a 256-path bucket over a
+    /// 1024-path one.
+    pub fn select_with_units(
+        &self,
+        kind: ArtifactKind,
+        m: usize,
+        depth: usize,
+        rows_hint: usize,
+        units_hint: usize,
+    ) -> Result<&ArtifactSpec> {
+        let need_depth = if kind == ArtifactKind::Predict { 0 } else { depth };
+        let mut best: Option<(&ArtifactSpec, f64)> = None;
+        for a in &self.artifacts {
+            if a.kind != kind || a.features < m || a.depth < need_depth {
+                continue;
+            }
+            // row padding waste: requests smaller than the bucket pay it
+            let eff_rows = a.rows.max(rows_hint.min(a.rows)) as f64;
+            let row_waste = a.rows as f64 / eff_rows.max(1.0);
+            // unit padding waste: last chunk is padded to a.bins
+            let unit_waste = if units_hint == usize::MAX {
+                1.0
+            } else {
+                let h = units_hint.max(1) as f64;
+                let chunks = (h / a.bins as f64).ceil().max(1.0);
+                chunks * a.bins as f64 / h
+            };
+            let cost =
+                a.features as f64 * (a.depth + 1) as f64 * row_waste * unit_waste;
+            if best.map_or(true, |(_, c)| cost < c) {
+                best = Some((a, cost));
+            }
+        }
+        best.map(|(a, _)| a).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for kind={kind:?} features≥{m} depth≥{need_depth}; \
+                 add a bucket to python/compile/aot.py CONFIGS"
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_and_selects() {
+        let Some(man) = repo_manifest() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        assert!(man.artifacts.len() >= 5);
+        let a = man.select(ArtifactKind::Shap, 8, 4, 1000).unwrap();
+        assert!(a.features >= 8 && a.depth >= 4);
+        // wide-feature bucket exists for fashion_mnist-like models
+        let w = man.select(ArtifactKind::Shap, 784, 8, 64).unwrap();
+        assert!(w.features >= 784);
+        // impossible request errors cleanly
+        assert!(man.select(ArtifactKind::Shap, 10_000, 8, 64).is_err());
+    }
+
+    #[test]
+    fn small_requests_prefer_small_row_buckets() {
+        let Some(man) = repo_manifest() else {
+            return;
+        };
+        let small = man.select(ArtifactKind::Shap, 8, 4, 8).unwrap();
+        assert!(small.rows <= 64, "picked {} for 8 rows", small.name);
+    }
+}

@@ -1,0 +1,24 @@
+//! The PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path with no
+//! python anywhere. `Device` wraps a PJRT client + executable cache;
+//! `ShapEngine` tiles workloads over fixed-shape executions with
+//! device-resident packed models; `pool` scales across devices.
+
+pub mod device;
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+
+pub use device::Device;
+pub use engine::{Prepared, PreparedPadded, ShapEngine};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$GTS_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("GTS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,71 @@
+//! Multi-device execution pool (Fig 5): one engine per simulated device,
+//! each on its own worker thread with its own PJRT client and compiled
+//! executables; row chunks are handed out via a shared cursor.
+//!
+//! On a DGX this would be 8 GPU clients; here every "device" is a CPU
+//! PJRT client, so scaling flattens once physical cores saturate — the
+//! bench records the curve either way (DESIGN.md §5 scale substitutions).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use crate::runtime::engine::ShapEngine;
+use crate::runtime::manifest::ArtifactKind;
+use crate::shap::packed::PackedModel;
+
+/// SHAP values over `devices` simulated devices. Output layout matches
+/// `ShapEngine::shap_values`.
+pub fn shap_values_multi(
+    pm: &PackedModel,
+    x: &[f32],
+    rows: usize,
+    devices: usize,
+    artifacts_dir: &Path,
+) -> Result<Vec<f32>> {
+    let devices = devices.max(1);
+    let m = pm.num_features;
+    let stride = pm.num_groups * (m + 1);
+    let mut out = vec![0.0f32; rows * stride];
+    let out_ptr = out.as_mut_ptr() as usize;
+    let cursor = AtomicUsize::new(0);
+    let dir: PathBuf = artifacts_dir.to_path_buf();
+    let errs: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..devices {
+            scope.spawn(|| {
+                let run = || -> Result<()> {
+                    let mut engine = ShapEngine::new(&dir)?;
+                    let prep = engine.prepare(pm, ArtifactKind::Shap, rows)?;
+                    let chunk = prep.rows;
+                    loop {
+                        let r0 = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if r0 >= rows {
+                            return Ok(());
+                        }
+                        let rc = (rows - r0).min(chunk);
+                        let vals =
+                            engine.shap_values(pm, &prep, &x[r0 * m..(r0 + rc) * m], rc)?;
+                        // exclusive slice of the output
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                vals.as_ptr(),
+                                (out_ptr as *mut f32).add(r0 * stride),
+                                rc * stride,
+                            );
+                        }
+                    }
+                };
+                if let Err(e) = run() {
+                    errs.lock().unwrap().push(e);
+                }
+            });
+        }
+    });
+    if let Some(e) = errs.into_inner().unwrap().pop() {
+        return Err(e);
+    }
+    Ok(out)
+}

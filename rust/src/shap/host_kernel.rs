@@ -1,0 +1,290 @@
+//! Host (rust-native) evaluation of the packed-path DP — the same math
+//! the L1 Pallas kernel vectorizes, executed directly over `PackedGroup`
+//! tensors. Two roles:
+//!
+//! 1. **Parity oracle**: runtime output must equal this bit-for-bit-ish
+//!    (same f32 inputs, same DP recurrence) — checked in `tests/parity.rs`.
+//! 2. **Ablation backend**: "the GPU algorithm on a CPU", isolating the
+//!    gain from the algorithm reformulation vs the accelerator.
+
+use crate::parallel;
+use crate::shap::binpack::LANES;
+use crate::shap::packed::{PackedGroup, PackedModel};
+
+#[inline]
+fn one_fraction(g: &PackedGroup, i: usize, x: &[f32]) -> f64 {
+    let f = g.fidx[i];
+    if f < 0 {
+        return 0.0;
+    }
+    let v = x[f as usize];
+    if v >= g.lower[i] && v < g.upper[i] {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// EXTEND over one path (lanes [start, start+len)), weights out.
+fn path_weights(g: &PackedGroup, start: usize, len: usize, x: &[f32], w: &mut [f64], skip: usize) {
+    let eff_len = if skip < len { len - 1 } else { len };
+    let map = |q: usize| if skip < len && q >= skip { q + 1 } else { q };
+    for wi in w.iter_mut().take(eff_len) {
+        *wi = 0.0;
+    }
+    w[0] = 1.0;
+    let mut prev = [0.0f64; LANES];
+    for d in 1..eff_len {
+        let ed = start + map(d);
+        let zd = g.zfrac[ed] as f64;
+        let od = one_fraction(g, ed, x);
+        prev[..eff_len].copy_from_slice(&w[..eff_len]);
+        for p in 0..eff_len {
+            let lw = if p > 0 { prev[p - 1] } else { 0.0 };
+            w[p] = zd * prev[p] * (d as f64 - p as f64) / (d + 1) as f64
+                + od * lw * p as f64 / (d + 1) as f64;
+        }
+    }
+}
+
+/// UNWOUNDSUM for the element at remapped position `i`.
+fn unwound_sum(
+    g: &PackedGroup,
+    start: usize,
+    len: usize,
+    x: &[f32],
+    w: &[f64],
+    i: usize,
+    skip: usize,
+) -> f64 {
+    let eff_len = if skip < len { len - 1 } else { len };
+    let map = |q: usize| if skip < len && q >= skip { q + 1 } else { q };
+    let l = eff_len - 1;
+    let e = start + map(i);
+    let o = one_fraction(g, e, x);
+    let z = g.zfrac[e] as f64;
+    let mut nxt = w[l];
+    let mut total = 0.0;
+    if o != 0.0 {
+        for j in (0..l).rev() {
+            let tmp = nxt / ((j + 1) as f64 * o);
+            total += tmp;
+            nxt = w[j] - tmp * z * (l - j) as f64;
+        }
+    } else {
+        for j in (0..l).rev() {
+            total += w[j] / (z * (l - j) as f64);
+        }
+    }
+    total * (l + 1) as f64
+}
+
+/// φ contributions of one packed group for one row, added into
+/// `phis[0..=M]` (slot M untouched — base value is the caller's job).
+pub fn shap_row(g: &PackedGroup, x: &[f32], phis: &mut [f64]) {
+    let mut w = [0.0f64; LANES];
+    for b in 0..g.num_bins {
+        let mut lane = 0usize;
+        while lane < LANES {
+            let i0 = b * LANES + lane;
+            let len = g.plen[i0] as usize;
+            if len == 0 {
+                break;
+            }
+            let start = i0;
+            path_weights(g, start, len, x, &mut w, usize::MAX);
+            let v = g.v[start] as f64;
+            for k in 1..len {
+                let e = start + k;
+                let s = unwound_sum(g, start, len, x, &w, k, usize::MAX);
+                let o = one_fraction(g, e, x);
+                phis[g.fidx[e] as usize] += s * (o - g.zfrac[e] as f64) * v;
+            }
+            lane += len;
+        }
+    }
+}
+
+/// Off-diagonal interaction contributions of one group for one row,
+/// added into `mat[(M+1)²]`. The O(TLD³) formulation: condition only on
+/// on-path positions; one DP serves the present and absent cases.
+pub fn interactions_row(g: &PackedGroup, x: &[f32], m: usize, mat: &mut [f64]) {
+    let mut w = [0.0f64; LANES];
+    for b in 0..g.num_bins {
+        let mut lane = 0usize;
+        while lane < LANES {
+            let i0 = b * LANES + lane;
+            let len = g.plen[i0] as usize;
+            if len == 0 {
+                break;
+            }
+            let start = i0;
+            let v = g.v[start] as f64;
+            for k in 1..len {
+                let ek = start + k;
+                let ok = one_fraction(g, ek, x);
+                let zk = g.zfrac[ek] as f64;
+                let fk = g.fidx[ek] as usize;
+                path_weights(g, start, len, x, &mut w, k);
+                for q in 1..len - 1 {
+                    // remapped position q corresponds to original q + (q>=k)
+                    let orig = if q >= k { q + 1 } else { q };
+                    let e = start + orig;
+                    let s = unwound_sum(g, start, len, x, &w, q, k);
+                    let o = one_fraction(g, e, x);
+                    let contrib = s * (o - g.zfrac[e] as f64) * v;
+                    let fi = g.fidx[e] as usize;
+                    mat[fi * (m + 1) + fk] += 0.5 * contrib * (ok - zk);
+                }
+            }
+            lane += len;
+        }
+    }
+}
+
+/// Batched SHAP values over all groups: [rows × groups × (M+1)],
+/// base values included (mirrors `treeshap::shap_values` output layout).
+pub fn shap_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+    let m = pm.num_features;
+    let groups = pm.num_groups;
+    let stride = groups * (m + 1);
+    let mut out = vec![0.0f32; rows * stride];
+    let out_ptr = out.as_mut_ptr() as usize;
+    parallel::parallel_for_chunks(threads, rows, 8, |range| {
+        let mut phis = vec![0.0f64; m + 1];
+        for r in range {
+            let xr = &x[r * m..(r + 1) * m];
+            for (gi, g) in pm.groups.iter().enumerate() {
+                phis.iter_mut().for_each(|p| *p = 0.0);
+                shap_row(g, xr, &mut phis);
+                phis[m] += pm.expected_values[gi];
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (out_ptr as *mut f32).add(r * stride + gi * (m + 1)),
+                        m + 1,
+                    )
+                };
+                for (d, s) in dst.iter_mut().zip(&phis) {
+                    *d = *s as f32;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Batched interaction values: [rows × groups × (M+1)²], diagonal via
+/// Eq. 6, base at [M, M].
+pub fn interaction_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+    let m = pm.num_features;
+    let groups = pm.num_groups;
+    let ms = (m + 1) * (m + 1);
+    let stride = groups * ms;
+    let mut out = vec![0.0f32; rows * stride];
+    let out_ptr = out.as_mut_ptr() as usize;
+    parallel::parallel_for_chunks(threads, rows, 2, |range| {
+        let mut mat = vec![0.0f64; ms];
+        let mut phis = vec![0.0f64; m + 1];
+        for r in range {
+            let xr = &x[r * m..(r + 1) * m];
+            for (gi, g) in pm.groups.iter().enumerate() {
+                mat.iter_mut().for_each(|v| *v = 0.0);
+                phis.iter_mut().for_each(|v| *v = 0.0);
+                interactions_row(g, xr, m, &mut mat);
+                shap_row(g, xr, &mut phis);
+                for i in 0..m {
+                    let row_sum: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| mat[i * (m + 1) + j])
+                        .sum();
+                    mat[i * (m + 1) + i] = phis[i] - row_sum;
+                }
+                mat[m * (m + 1) + m] = pm.expected_values[gi];
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (out_ptr as *mut f32).add(r * stride + gi * ms),
+                        ms,
+                    )
+                };
+                for (d, s) in dst.iter_mut().zip(&mat) {
+                    *d = *s as f32;
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+    use crate::shap::binpack::Packing;
+    use crate::shap::packed::pack_model;
+    use crate::shap::treeshap;
+
+    fn setup(depth: usize) -> (crate::gbdt::Model, PackedModel, crate::data::Dataset) {
+        let d = SynthSpec::cal_housing(0.006).generate();
+        let model =
+            train(&d, &TrainParams { rounds: 5, max_depth: depth, ..Default::default() });
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        (model, pm, d)
+    }
+
+    #[test]
+    fn matches_recursive_baseline() {
+        let (model, pm, d) = setup(5);
+        let m = model.num_features;
+        let rows = 24;
+        let a = treeshap::shap_values(&model, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&pm, &d.features[..rows * m], rows, 1);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 2e-4, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn interactions_match_recursive_baseline() {
+        let (model, pm, d) = setup(4);
+        let m = model.num_features;
+        let rows = 4;
+        let a = crate::shap::interactions::interaction_values(
+            &model, &d.features[..rows * m], rows, 1,
+        );
+        let b = interaction_values(&pm, &d.features[..rows * m], rows, 1);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 2e-4, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn multiclass_groups() {
+        let d = SynthSpec::covtype(0.0006).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() });
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        let m = model.num_features;
+        let rows = 4;
+        let a = treeshap::shap_values(&model, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&pm, &d.features[..rows * m], rows, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-4);
+        }
+    }
+
+    #[test]
+    fn packing_choice_does_not_change_values() {
+        let (_, pm_bfd, d) = setup(4);
+        let d2 = d.clone();
+        let model =
+            train(&d2, &TrainParams { rounds: 5, max_depth: 4, ..Default::default() });
+        let pm_none = pack_model(&model, Packing::None);
+        let m = model.num_features;
+        let rows = 8;
+        let a = shap_values(&pm_bfd, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&pm_none, &d.features[..rows * m], rows, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-4);
+        }
+    }
+}

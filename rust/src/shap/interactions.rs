@@ -1,0 +1,155 @@
+//! CPU SHAP interaction values baseline — the O(T·L·D²·M) algorithm the
+//! paper's Table 7 compares against: for every feature j present in a
+//! tree, evaluate TreeShap twice (j fixed present / fixed absent);
+//! φ_ij = (φ_i|on − φ_i|off)/2, diagonal via Eq. 6, base value at [M, M].
+
+use crate::gbdt::{Model, Tree};
+use crate::parallel;
+use crate::shap::path::expected_values;
+use crate::shap::treeshap::{tree_shap_row, Condition, Scratch};
+
+fn tree_features(tree: &Tree) -> Vec<i32> {
+    let mut feats: Vec<i32> = (0..tree.num_nodes())
+        .filter(|&i| !tree.is_leaf(i))
+        .map(|i| tree.feature[i])
+        .collect();
+    feats.sort_unstable();
+    feats.dedup();
+    feats
+}
+
+/// Interaction matrices for a batch: [rows × groups × (M+1)²] row-major.
+pub fn interaction_values(
+    model: &Model,
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let m = model.num_features;
+    let groups = model.num_groups;
+    let ev = expected_values(model);
+    let mstride = (m + 1) * (m + 1);
+    let stride = groups * mstride;
+    let max_depth = model.max_depth();
+    // precompute per-tree feature lists once
+    let feats: Vec<Vec<i32>> = model.trees.iter().map(tree_features).collect();
+
+    let mut out = vec![0.0f32; rows * stride];
+    let out_ptr = out.as_mut_ptr() as usize;
+    parallel::parallel_for_chunks(threads, rows, 2, |range| {
+        let mut slab = Scratch::new(max_depth);
+        let mut mat = vec![0.0f64; stride];
+        let mut phis = vec![0.0f64; groups * (m + 1)];
+        let mut on = vec![0.0f64; m + 1];
+        let mut off = vec![0.0f64; m + 1];
+        for r in range {
+            mat.iter_mut().for_each(|v| *v = 0.0);
+            phis.iter_mut().for_each(|v| *v = 0.0);
+            let xr = &x[r * m..(r + 1) * m];
+            for (ti, (tree, &g)) in model.trees.iter().zip(&model.tree_group).enumerate() {
+                tree_shap_row(
+                    tree,
+                    xr,
+                    &mut phis[g * (m + 1)..(g + 1) * (m + 1)],
+                    Condition::None,
+                    &mut slab,
+                );
+                for &j in &feats[ti] {
+                    on.iter_mut().for_each(|v| *v = 0.0);
+                    off.iter_mut().for_each(|v| *v = 0.0);
+                    tree_shap_row(tree, xr, &mut on, Condition::On(j), &mut slab);
+                    tree_shap_row(tree, xr, &mut off, Condition::Off(j), &mut slab);
+                    let gm = &mut mat[g * mstride..(g + 1) * mstride];
+                    for i in 0..m {
+                        gm[i * (m + 1) + j as usize] += (on[i] - off[i]) / 2.0;
+                    }
+                }
+            }
+            // diagonal (Eq. 6) + base value
+            for g in 0..groups {
+                let gm = &mut mat[g * mstride..(g + 1) * mstride];
+                for i in 0..m {
+                    let row_sum: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| gm[i * (m + 1) + j])
+                        .sum();
+                    gm[i * (m + 1) + i] = phis[g * (m + 1) + i] - row_sum;
+                }
+                gm[m * (m + 1) + m] = ev[g];
+            }
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_ptr as *mut f32).add(r * stride),
+                    stride,
+                )
+            };
+            for (d, s) in dst.iter_mut().zip(&mat) {
+                *d = *s as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+    use crate::shap::treeshap::shap_values;
+
+    #[test]
+    fn rows_sum_to_phi() {
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 6;
+        let inter = interaction_values(&model, &d.features[..rows * m], rows, 1);
+        let phis = shap_values(&model, &d.features[..rows * m], rows, 1);
+        let ms = (m + 1) * (m + 1);
+        for r in 0..rows {
+            for i in 0..m {
+                let s: f64 = (0..m)
+                    .map(|j| inter[r * ms + i * (m + 1) + j] as f64)
+                    .sum();
+                let phi = phis[r * (m + 1) + i] as f64;
+                assert!((s - phi).abs() < 1e-3, "row {r} feat {i}: {s} vs {phi}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_symmetric() {
+        let d = SynthSpec::adult(0.003).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 4;
+        let inter = interaction_values(&model, &d.features[..rows * m], rows, 2);
+        let ms = (m + 1) * (m + 1);
+        for r in 0..rows {
+            for i in 0..m {
+                for j in 0..m {
+                    let a = inter[r * ms + i * (m + 1) + j];
+                    let b = inter[r * ms + j * (m + 1) + i];
+                    assert!((a - b).abs() < 2e-4, "asym at ({i},{j}): {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_sums_to_prediction() {
+        // Σ_ij φ_ij + E[f] == f(x)
+        let d = SynthSpec::cal_housing(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 3, ..Default::default() });
+        let m = model.num_features;
+        let rows = 4;
+        let inter = interaction_values(&model, &d.features[..rows * m], rows, 1);
+        let ms = (m + 1) * (m + 1);
+        for r in 0..rows {
+            let total: f64 = inter[r * ms..(r + 1) * ms].iter().map(|&v| v as f64).sum();
+            let pred = model.predict_row_raw(d.row(r))[0] as f64;
+            assert!((total - pred).abs() < 1e-3, "{total} vs {pred}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The GPUTreeShap pipeline: path extraction (§3.1), duplicate merging
+//! (§3.2), bin packing (§3.3), packed tensors (§3.4 inputs), plus the CPU
+//! baselines (recursive Algorithm 1 and its interactions variant) and a
+//! rust-native evaluation of the packed DP.
+
+pub mod binpack;
+pub mod host_kernel;
+pub mod interactions;
+pub mod packed;
+pub mod path;
+pub mod summary;
+pub mod treeshap;
+
+pub use binpack::{Packing, LANES};
+pub use packed::{pack_model, pad_model, PackedGroup, PackedModel, PaddedGroup, PaddedModel};
+pub use path::{expected_values, extract_paths, model_paths, Path, PathElement};

@@ -1,0 +1,351 @@
+//! Packed device-tensor layout: bins × 32 lanes, one element per lane
+//! (paper §3.3–3.4). This is the host-side twin of
+//! `python/compile/kernels/packing.py` — layouts must match bit-for-bit,
+//! since these arrays are the runtime inputs to the AOT HLO artifacts.
+
+use crate::gbdt::Model;
+use crate::shap::binpack::{pack, PackResult, Packing, LANES};
+use crate::shap::path::{expected_values, model_paths, Path};
+
+/// ±inf replaced by ±F32_MAX to keep HLO literals finite-friendly
+/// (mirrors packing.py).
+pub const F32_BIG: f32 = f32::MAX;
+
+/// Packed paths of one output group. All arrays are `[num_bins × LANES]`
+/// row-major.
+#[derive(Clone, Debug)]
+pub struct PackedGroup {
+    pub fidx: Vec<i32>,
+    pub lower: Vec<f32>,
+    pub upper: Vec<f32>,
+    pub zfrac: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: Vec<i32>,
+    pub plen: Vec<i32>,
+    pub num_bins: usize,
+    /// longest path length − 1 (DP trip-count requirement)
+    pub max_depth: usize,
+    pub utilisation: f64,
+}
+
+impl PackedGroup {
+    fn empty(bins: usize) -> PackedGroup {
+        PackedGroup {
+            fidx: vec![-1; bins * LANES],
+            lower: vec![-F32_BIG; bins * LANES],
+            upper: vec![F32_BIG; bins * LANES],
+            zfrac: vec![1.0; bins * LANES],
+            v: vec![0.0; bins * LANES],
+            pos: vec![0; bins * LANES],
+            plen: vec![0; bins * LANES],
+            num_bins: bins,
+            max_depth: 0,
+            utilisation: 1.0,
+        }
+    }
+
+    /// Pad the bin axis to `bins` (plen = 0 marks padding lanes).
+    pub fn padded_to(&self, bins: usize) -> PackedGroup {
+        assert!(bins >= self.num_bins);
+        let mut out = PackedGroup::empty(bins);
+        let n = self.num_bins * LANES;
+        out.fidx[..n].copy_from_slice(&self.fidx);
+        out.lower[..n].copy_from_slice(&self.lower);
+        out.upper[..n].copy_from_slice(&self.upper);
+        out.zfrac[..n].copy_from_slice(&self.zfrac);
+        out.v[..n].copy_from_slice(&self.v);
+        out.pos[..n].copy_from_slice(&self.pos);
+        out.plen[..n].copy_from_slice(&self.plen);
+        out.max_depth = self.max_depth;
+        out.utilisation = self.utilisation;
+        out
+    }
+
+    /// Bins `[start, end)` as a standalone group (for chunked execution).
+    pub fn slice_bins(&self, start: usize, end: usize) -> PackedGroup {
+        let end = end.min(self.num_bins);
+        let (a, b) = (start * LANES, end * LANES);
+        PackedGroup {
+            fidx: self.fidx[a..b].to_vec(),
+            lower: self.lower[a..b].to_vec(),
+            upper: self.upper[a..b].to_vec(),
+            zfrac: self.zfrac[a..b].to_vec(),
+            v: self.v[a..b].to_vec(),
+            pos: self.pos[a..b].to_vec(),
+            plen: self.plen[a..b].to_vec(),
+            num_bins: end - start,
+            max_depth: self.max_depth,
+            utilisation: self.utilisation,
+        }
+    }
+}
+
+/// A whole model in packed form: one `PackedGroup` per output group.
+#[derive(Clone, Debug)]
+pub struct PackedModel {
+    pub groups: Vec<PackedGroup>,
+    pub num_features: usize,
+    pub num_groups: usize,
+    /// φ base values per group (E[f] + base_score)
+    pub expected_values: Vec<f64>,
+    /// raw-score offset of the originating model (for predictions)
+    pub base_score: f32,
+    pub max_depth: usize,
+}
+
+/// Pack paths (already merged) of one group into bins.
+pub fn pack_paths(paths: &[&Path], algorithm: Packing) -> PackedGroup {
+    let sizes: Vec<usize> = paths.iter().map(|p| p.len()).collect();
+    assert!(
+        sizes.iter().all(|&s| s >= 1 && s <= LANES),
+        "path length must be in 1..=32 (tree depth ≤ 31 after merging)"
+    );
+    let PackResult { bins, utilisation } = pack(&sizes, algorithm, LANES);
+    let mut g = PackedGroup::empty(bins.len());
+    g.utilisation = utilisation;
+    for (b, items) in bins.iter().enumerate() {
+        let mut lane = 0usize;
+        for &pi in items {
+            let p = paths[pi as usize];
+            let e_count = p.len();
+            g.max_depth = g.max_depth.max(e_count - 1);
+            for (k, e) in p.elements.iter().enumerate() {
+                let i = b * LANES + lane;
+                g.fidx[i] = e.feature;
+                g.lower[i] = e.lower.max(-F32_BIG);
+                g.upper[i] = e.upper.min(F32_BIG);
+                g.zfrac[i] = e.zero_fraction;
+                g.v[i] = e.v;
+                g.pos[i] = k as i32;
+                g.plen[i] = e_count as i32;
+                lane += 1;
+            }
+        }
+        debug_assert!(lane <= LANES);
+    }
+    g
+}
+
+/// Pack a full model, segregating paths by output group.
+pub fn pack_model(model: &Model, algorithm: Packing) -> PackedModel {
+    let tagged = model_paths(model);
+    let mut groups = Vec::with_capacity(model.num_groups);
+    for g in 0..model.num_groups {
+        let paths: Vec<&Path> =
+            tagged.iter().filter(|(tg, _)| *tg == g).map(|(_, p)| p).collect();
+        groups.push(pack_paths(&paths, algorithm));
+    }
+    let max_depth = groups.iter().map(|g| g.max_depth).max().unwrap_or(0);
+    PackedModel {
+        num_features: model.num_features,
+        num_groups: model.num_groups,
+        expected_values: expected_values(model),
+        base_score: model.base_score,
+        groups,
+        max_depth,
+    }
+}
+
+/// Padded-path layout (perf variant, DESIGN.md §Perf): one row per path,
+/// element axis padded to `width = depth_bucket + 1`. Gather-free on the
+/// device at the cost of padding (utilisation = Σlen / (paths·width)).
+#[derive(Clone, Debug)]
+pub struct PaddedGroup {
+    /// [num_paths × width] element tensors
+    pub fidx: Vec<i32>,
+    pub lower: Vec<f32>,
+    pub upper: Vec<f32>,
+    pub zfrac: Vec<f32>,
+    /// [num_paths] leaf value / path length
+    pub v: Vec<f32>,
+    pub plen: Vec<i32>,
+    pub num_paths: usize,
+    pub width: usize,
+    pub utilisation: f64,
+}
+
+impl PaddedGroup {
+    fn empty(paths: usize, width: usize) -> PaddedGroup {
+        PaddedGroup {
+            fidx: vec![-1; paths * width],
+            lower: vec![-F32_BIG; paths * width],
+            upper: vec![F32_BIG; paths * width],
+            zfrac: vec![1.0; paths * width],
+            v: vec![0.0; paths],
+            plen: vec![0; paths],
+            num_paths: paths,
+            width,
+            utilisation: 1.0,
+        }
+    }
+
+    /// Paths `[start, end)` as a standalone group padded to `paths` rows.
+    pub fn slice_padded(&self, start: usize, end: usize, paths: usize) -> PaddedGroup {
+        let end = end.min(self.num_paths);
+        let n = end - start;
+        assert!(paths >= n);
+        let w = self.width;
+        let mut out = PaddedGroup::empty(paths, w);
+        out.fidx[..n * w].copy_from_slice(&self.fidx[start * w..end * w]);
+        out.lower[..n * w].copy_from_slice(&self.lower[start * w..end * w]);
+        out.upper[..n * w].copy_from_slice(&self.upper[start * w..end * w]);
+        out.zfrac[..n * w].copy_from_slice(&self.zfrac[start * w..end * w]);
+        out.v[..n].copy_from_slice(&self.v[start..end]);
+        out.plen[..n].copy_from_slice(&self.plen[start..end]);
+        out.utilisation = self.utilisation;
+        out
+    }
+}
+
+/// A model in padded-path form: one `PaddedGroup` per output group.
+#[derive(Clone, Debug)]
+pub struct PaddedModel {
+    pub groups: Vec<PaddedGroup>,
+    pub num_features: usize,
+    pub num_groups: usize,
+    pub expected_values: Vec<f64>,
+    pub base_score: f32,
+    pub max_depth: usize,
+}
+
+/// Build the padded layout with element axis `width ≥ max path length`.
+pub fn pad_model(model: &Model, width: usize) -> PaddedModel {
+    let tagged = model_paths(model);
+    let max_len = tagged.iter().map(|(_, p)| p.len()).max().unwrap_or(1);
+    assert!(width >= max_len, "width {width} < deepest path {max_len}");
+    let mut groups = Vec::with_capacity(model.num_groups);
+    for g in 0..model.num_groups {
+        let paths: Vec<&Path> =
+            tagged.iter().filter(|(tg, _)| *tg == g).map(|(_, p)| p).collect();
+        let mut out = PaddedGroup::empty(paths.len().max(1), width);
+        let mut used = 0usize;
+        for (i, p) in paths.iter().enumerate() {
+            for (k, e) in p.elements.iter().enumerate() {
+                let idx = i * width + k;
+                out.fidx[idx] = e.feature;
+                out.lower[idx] = e.lower.max(-F32_BIG);
+                out.upper[idx] = e.upper.min(F32_BIG);
+                out.zfrac[idx] = e.zero_fraction;
+            }
+            out.v[i] = p.leaf_value();
+            out.plen[i] = p.len() as i32;
+            used += p.len();
+        }
+        out.utilisation = used as f64 / (out.num_paths * width) as f64;
+        groups.push(out);
+    }
+    PaddedModel {
+        num_features: model.num_features,
+        num_groups: model.num_groups,
+        expected_values: expected_values(model),
+        base_score: model.base_score,
+        max_depth: max_len - 1,
+        groups,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn packed() -> (Model, PackedModel) {
+        let d = SynthSpec::adult(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        (model, pm)
+    }
+
+    use crate::gbdt::Model;
+
+    #[test]
+    fn lane_layout_invariants() {
+        let (_, pm) = packed();
+        for g in &pm.groups {
+            for b in 0..g.num_bins {
+                let mut lane = 0;
+                while lane < LANES && g.plen[b * LANES + lane] > 0 {
+                    let e = g.plen[b * LANES + lane] as usize;
+                    assert_eq!(g.pos[b * LANES + lane], 0);
+                    assert_eq!(g.fidx[b * LANES + lane], -1);
+                    for k in 0..e {
+                        assert_eq!(g.plen[b * LANES + lane + k] as usize, e);
+                        assert_eq!(g.pos[b * LANES + lane + k] as usize, k);
+                    }
+                    lane += e;
+                }
+                for k in lane..LANES {
+                    assert_eq!(g.plen[b * LANES + k], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_count_preserved() {
+        let (model, pm) = packed();
+        let total_paths: usize = pm
+            .groups
+            .iter()
+            .flat_map(|g| (0..g.num_bins * LANES).filter(|&i| g.pos[i] == 0 && g.plen[i] > 0))
+            .count();
+        assert_eq!(total_paths, model.total_leaves());
+    }
+
+    #[test]
+    fn padding_and_slicing() {
+        let (_, pm) = packed();
+        let g = &pm.groups[0];
+        let padded = g.padded_to(g.num_bins + 5);
+        assert_eq!(padded.num_bins, g.num_bins + 5);
+        assert_eq!(&padded.fidx[..g.num_bins * LANES], &g.fidx[..]);
+        let s = padded.slice_bins(1, 3);
+        assert_eq!(s.num_bins, 2);
+        assert_eq!(s.fidx[..], padded.fidx[LANES..3 * LANES]);
+    }
+
+    #[test]
+    fn utilisation_reasonable_for_bfd() {
+        let (_, pm) = packed();
+        for g in &pm.groups {
+            assert!(g.utilisation > 0.5, "BFD utilisation {}", g.utilisation);
+        }
+    }
+
+    #[test]
+    fn padded_layout_roundtrips_paths() {
+        let (model, _) = packed();
+        let pm = pad_model(&model, 17);
+        assert_eq!(pm.groups.len(), model.num_groups);
+        let total_paths: usize = pm.groups.iter().map(|g| {
+            (0..g.num_paths).filter(|&i| g.plen[i] > 0).count()
+        }).sum();
+        assert_eq!(total_paths, model.total_leaves());
+        for g in &pm.groups {
+            for i in 0..g.num_paths {
+                let e = g.plen[i] as usize;
+                if e == 0 {
+                    continue;
+                }
+                assert_eq!(g.fidx[i * g.width], -1); // root first
+                for k in e..g.width {
+                    assert_eq!(g.fidx[i * g.width + k], -1); // padding
+                }
+            }
+            assert!(g.utilisation > 0.0 && g.utilisation <= 1.0);
+        }
+    }
+
+    #[test]
+    fn padded_slice_preserves_rows() {
+        let (model, _) = packed();
+        let pm = pad_model(&model, 9);
+        let g = &pm.groups[0];
+        let s = g.slice_padded(1, 3.min(g.num_paths), 8);
+        assert_eq!(s.num_paths, 8);
+        assert_eq!(s.width, g.width);
+        assert_eq!(s.plen[0], g.plen[1]);
+        assert_eq!(s.fidx[..s.width], g.fidx[g.width..2 * g.width]);
+    }
+}

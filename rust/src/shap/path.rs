@@ -1,0 +1,242 @@
+//! Path extraction and duplicate-feature merging (paper §3.1–3.2).
+//!
+//! Every unique root→leaf path of a decision tree becomes a list of
+//! `PathElement`s: the root/bias element (feature −1) followed by one
+//! element per *unique* feature split on the path. Repeated features are
+//! merged by intersecting their value intervals (a path is a
+//! hyperrectangle) and multiplying their zero_fractions — removing the
+//! FINDFIRST/UNWIND branching of the recursive algorithm.
+
+use crate::gbdt::{Model, Tree};
+
+/// One merged feature occurrence on a path (paper Listing 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PathElement {
+    /// feature index, −1 for the root/bias element
+    pub feature: i32,
+    /// stay on this path iff lower ≤ x < upper (when feature present)
+    pub lower: f32,
+    pub upper: f32,
+    /// P(stay on path | feature missing) — product of cover ratios
+    pub zero_fraction: f32,
+    /// leaf value of the owning path
+    pub v: f32,
+}
+
+/// A unique root→leaf path; `elements[0]` is always the root element.
+#[derive(Clone, Debug, Default)]
+pub struct Path {
+    pub elements: Vec<PathElement>,
+}
+
+impl Path {
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    pub fn leaf_value(&self) -> f32 {
+        self.elements.last().map_or(0.0, |e| e.v)
+    }
+
+    /// P(reach this leaf) under cover weighting: Π zero_fraction.
+    pub fn reach_probability(&self) -> f64 {
+        self.elements.iter().map(|e| e.zero_fraction as f64).product()
+    }
+}
+
+/// Extract all unique paths of `tree` with duplicates merged.
+pub fn extract_paths(tree: &Tree) -> Vec<Path> {
+    let mut out = Vec::with_capacity(tree.num_leaves());
+    let mut stack: Vec<PathElement> = vec![PathElement {
+        feature: -1,
+        lower: f32::NEG_INFINITY,
+        upper: f32::INFINITY,
+        zero_fraction: 1.0,
+        v: 0.0,
+    }];
+    walk(tree, 0, &mut stack, &mut out);
+    out
+}
+
+fn walk(tree: &Tree, node: usize, stack: &mut Vec<PathElement>, out: &mut Vec<Path>) {
+    if tree.is_leaf(node) {
+        let v = tree.value[node];
+        let mut merged = merge_duplicates(stack);
+        for e in &mut merged.elements {
+            e.v = v;
+        }
+        out.push(merged);
+        return;
+    }
+    let f = tree.feature[node];
+    let t = tree.threshold[node];
+    let cov = tree.cover[node];
+    let (l, r) = (tree.left[node] as usize, tree.right[node] as usize);
+
+    stack.push(PathElement {
+        feature: f,
+        lower: f32::NEG_INFINITY,
+        upper: t,
+        zero_fraction: tree.cover[l] / cov,
+        v: 0.0,
+    });
+    walk(tree, l, stack, out);
+    stack.pop();
+
+    stack.push(PathElement {
+        feature: f,
+        lower: t,
+        upper: f32::INFINITY,
+        zero_fraction: tree.cover[r] / cov,
+        v: 0.0,
+    });
+    walk(tree, r, stack, out);
+    stack.pop();
+}
+
+/// Merge repeated features: intervals intersect, zero_fractions multiply.
+/// Elements are sorted by feature (EXTEND/UNWIND commute, order is free).
+pub fn merge_duplicates(raw: &[PathElement]) -> Path {
+    debug_assert_eq!(raw[0].feature, -1);
+    let mut merged: Vec<PathElement> = Vec::with_capacity(raw.len());
+    merged.push(raw[0]);
+    for e in &raw[1..] {
+        match merged[1..].iter_mut().find(|m| m.feature == e.feature) {
+            Some(m) => {
+                m.lower = m.lower.max(e.lower);
+                m.upper = m.upper.min(e.upper);
+                m.zero_fraction *= e.zero_fraction;
+            }
+            None => merged.push(*e),
+        }
+    }
+    merged[1..].sort_by_key(|e| e.feature);
+    Path { elements: merged }
+}
+
+/// All paths of a model, tagged with the tree's output group.
+pub fn model_paths(model: &Model) -> Vec<(usize, Path)> {
+    let mut out = Vec::new();
+    for (tree, &g) in model.trees.iter().zip(&model.tree_group) {
+        for p in extract_paths(tree) {
+            out.push((g, p));
+        }
+    }
+    out
+}
+
+/// E[f] per output group under cover weighting (the φ base values),
+/// including the model's base_score.
+pub fn expected_values(model: &Model) -> Vec<f64> {
+    let mut ev = vec![model.base_score as f64; model.num_groups];
+    for (g, p) in model_paths(model) {
+        ev[g] += p.reach_probability() * p.leaf_value() as f64;
+    }
+    ev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn small_model() -> Model {
+        let d = SynthSpec::adult(0.005).generate();
+        train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn one_path_per_leaf() {
+        let model = small_model();
+        for t in &model.trees {
+            assert_eq!(extract_paths(t).len(), t.num_leaves());
+        }
+    }
+
+    #[test]
+    fn paths_start_at_root_and_carry_leaf_value() {
+        let model = small_model();
+        for t in &model.trees {
+            for p in extract_paths(t) {
+                assert_eq!(p.elements[0].feature, -1);
+                assert!(p.elements.iter().all(|e| e.v == p.leaf_value()));
+            }
+        }
+    }
+
+    #[test]
+    fn features_unique_and_sorted_after_merge() {
+        let model = small_model();
+        for t in &model.trees {
+            for p in extract_paths(t) {
+                let feats: Vec<i32> = p.elements[1..].iter().map(|e| e.feature).collect();
+                let mut sorted = feats.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(feats, sorted, "not unique+sorted: {feats:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reach_probabilities_sum_to_one_per_tree() {
+        let model = small_model();
+        for t in &model.trees {
+            let total: f64 = extract_paths(t).iter().map(|p| p.reach_probability()).sum();
+            assert!((total - 1.0).abs() < 1e-4, "{total}");
+        }
+    }
+
+    #[test]
+    fn intervals_consistent_with_tree_walk() {
+        // a row inside every interval of a path must reach that leaf
+        let model = small_model();
+        let m = model.num_features;
+        for t in model.trees.iter().take(2) {
+            for p in extract_paths(t) {
+                let mut x = vec![0.0f32; m];
+                let mut representable = true;
+                for e in &p.elements[1..] {
+                    if e.lower >= e.upper {
+                        representable = false;
+                        break;
+                    }
+                    let mid = if e.lower.is_infinite() && e.upper.is_infinite() {
+                        0.0
+                    } else if e.lower.is_infinite() {
+                        e.upper - 1.0
+                    } else if e.upper.is_infinite() {
+                        e.lower + 1.0
+                    } else {
+                        0.5 * (e.lower + e.upper)
+                    };
+                    x[e.feature as usize] = mid;
+                }
+                if representable {
+                    assert_eq!(t.predict_row(&x), p.leaf_value());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expected_value_matches_mean_prediction() {
+        // E[f] under cover weighting == cover-weighted mean of leaves; for
+        // squared loss cover == row count, so it equals the mean training
+        // prediction of each tree.
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+        let ev = expected_values(&model)[0];
+        let mut mean = 0.0f64;
+        for r in 0..d.rows {
+            mean += model.predict_row_raw(d.row(r))[0] as f64;
+        }
+        mean /= d.rows as f64;
+        assert!((ev - mean).abs() < 1e-3, "ev {ev} mean {mean}");
+    }
+}

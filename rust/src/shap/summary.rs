@@ -1,0 +1,111 @@
+//! Aggregation utilities over φ matrices: global importance (mean |φ|),
+//! top-k rankings, and interaction-pair rankings — the views the shap
+//! package's summary plots are built from, as plain data.
+
+/// Mean |φ| per feature for one output group.
+/// `phis` is the `[rows × groups × (M+1)]` layout of the engines.
+pub fn mean_abs_phi(
+    phis: &[f32],
+    rows: usize,
+    groups: usize,
+    m: usize,
+    group: usize,
+) -> Vec<f64> {
+    let stride = groups * (m + 1);
+    let mut out = vec![0.0f64; m];
+    for r in 0..rows {
+        let base = r * stride + group * (m + 1);
+        for (f, o) in out.iter_mut().enumerate() {
+            *o += phis[base + f].abs() as f64;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= rows.max(1) as f64;
+    }
+    out
+}
+
+/// Features ranked by mean |φ| descending: (feature, importance).
+pub fn top_features(
+    phis: &[f32],
+    rows: usize,
+    groups: usize,
+    m: usize,
+    group: usize,
+    k: usize,
+) -> Vec<(usize, f64)> {
+    let imp = mean_abs_phi(phis, rows, groups, m, group);
+    let mut order: Vec<(usize, f64)> = imp.into_iter().enumerate().collect();
+    order.sort_by(|a, b| b.1.total_cmp(&a.1));
+    order.truncate(k);
+    order
+}
+
+/// Off-diagonal pairs ranked by mean |φ_ij|: (i, j, strength), i < j.
+/// `inter` is the `[rows × groups × (M+1)²]` layout.
+pub fn top_interactions(
+    inter: &[f32],
+    rows: usize,
+    groups: usize,
+    m: usize,
+    group: usize,
+    k: usize,
+) -> Vec<(usize, usize, f64)> {
+    let ms = (m + 1) * (m + 1);
+    let stride = groups * ms;
+    let mut pairs = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let mut s = 0.0f64;
+            for r in 0..rows {
+                s += inter[r * stride + group * ms + i * (m + 1) + j].abs() as f64;
+            }
+            pairs.push((i, j, s / rows.max(1) as f64));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.total_cmp(&a.2));
+    pairs.truncate(k);
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_abs_and_ranking() {
+        // 2 rows, 1 group, m=3 (+bias): f1 dominates
+        let phis = vec![
+            0.1, -2.0, 0.0, 9.0, // row 0 (last = bias)
+            -0.3, 1.0, 0.0, 9.0, // row 1
+        ];
+        let imp = mean_abs_phi(&phis, 2, 1, 3, 0);
+        assert!((imp[0] - 0.2).abs() < 1e-6);
+        assert!((imp[1] - 1.5).abs() < 1e-6);
+        assert_eq!(imp[2], 0.0);
+        let top = top_features(&phis, 2, 1, 3, 0, 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 0);
+    }
+
+    #[test]
+    fn interaction_ranking() {
+        let m = 2;
+        let ms = (m + 1) * (m + 1);
+        let mut inter = vec![0.0f32; 2 * ms];
+        // rows 0 and 1: pair (0,1) strength 0.5 / 1.5
+        inter[0 * ms + 0 * (m + 1) + 1] = 0.5;
+        inter[1 * ms + 0 * (m + 1) + 1] = -1.5;
+        let top = top_interactions(&inter, 2, 1, m, 0, 5);
+        assert_eq!(top[0], (0, 1, 1.0));
+    }
+
+    #[test]
+    fn multigroup_indexing() {
+        let m = 1;
+        // 1 row, 2 groups: φ differs per group
+        let phis = vec![1.0, 0.0, 3.0, 0.0];
+        assert_eq!(mean_abs_phi(&phis, 1, 2, m, 0)[0], 1.0);
+        assert_eq!(mean_abs_phi(&phis, 1, 2, m, 1)[0], 3.0);
+    }
+}

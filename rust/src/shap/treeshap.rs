@@ -1,0 +1,347 @@
+//! CPU TreeShap baseline: the recursive Algorithm 1 of the paper
+//! (Lundberg et al. 2020), multithreaded over rows — the comparator for
+//! Tables 6/7 and Figs 4/6, functionally matching XGBoost's
+//! `pred_contribs` implementation.
+//!
+//! The path state lives in a per-thread triangular slab (depth d owns
+//! `d+1` slots at offset d(d+1)/2), so recursion performs no heap
+//! allocation per node — the baseline must be honest to make measured
+//! speedups meaningful.
+
+use crate::gbdt::{Model, Tree};
+use crate::parallel;
+use crate::shap::path::expected_values;
+
+/// Conditioning mode for interaction values (Eq. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Condition {
+    None,
+    /// feature fixed to present
+    On(i32),
+    /// feature fixed to absent
+    Off(i32),
+}
+
+/// Per-element path state of Algorithm 1 (struct-of-arrays slab).
+struct PathSlab {
+    d: Vec<i32>,
+    z: Vec<f64>,
+    o: Vec<f64>,
+    w: Vec<f64>,
+}
+
+impl PathSlab {
+    fn new(max_depth: usize) -> PathSlab {
+        let cap = (max_depth + 2) * (max_depth + 3) / 2;
+        PathSlab {
+            d: vec![0; cap],
+            z: vec![0.0; cap],
+            o: vec![0.0; cap],
+            w: vec![0.0; cap],
+        }
+    }
+}
+
+#[inline]
+fn slab_offset(depth: usize) -> usize {
+    depth * (depth + 1) / 2
+}
+
+/// EXTEND at slab offset `off`, path currently `len` elements long.
+#[inline]
+fn extend(slab: &mut PathSlab, off: usize, len: usize, pz: f64, po: f64, pi: i32) {
+    let l = len;
+    slab.d[off + l] = pi;
+    slab.z[off + l] = pz;
+    slab.o[off + l] = po;
+    slab.w[off + l] = if l == 0 { 1.0 } else { 0.0 };
+    for i in (0..l).rev() {
+        slab.w[off + i + 1] += po * slab.w[off + i] * (i + 1) as f64 / (l + 1) as f64;
+        slab.w[off + i] *= pz * (l - i) as f64 / (l + 1) as f64;
+    }
+}
+
+/// UNWIND element `i` in place; caller decrements the path length.
+#[inline]
+fn unwind(slab: &mut PathSlab, off: usize, len: usize, i: usize) {
+    let l = len - 1;
+    let o_i = slab.o[off + i];
+    let z_i = slab.z[off + i];
+    let mut n = slab.w[off + l];
+    if o_i != 0.0 {
+        for j in (0..l).rev() {
+            let t = slab.w[off + j];
+            slab.w[off + j] = n * (l + 1) as f64 / ((j + 1) as f64 * o_i);
+            n = t - slab.w[off + j] * z_i * (l - j) as f64 / (l + 1) as f64;
+        }
+    } else {
+        for j in (0..l).rev() {
+            slab.w[off + j] = slab.w[off + j] * (l + 1) as f64 / (z_i * (l - j) as f64);
+        }
+    }
+    for j in i..l {
+        slab.d[off + j] = slab.d[off + j + 1];
+        slab.z[off + j] = slab.z[off + j + 1];
+        slab.o[off + j] = slab.o[off + j + 1];
+    }
+}
+
+/// Σ of weights after hypothetically unwinding element `i`.
+#[inline]
+fn unwound_sum(slab: &PathSlab, off: usize, len: usize, i: usize) -> f64 {
+    let l = len - 1;
+    let o_i = slab.o[off + i];
+    let z_i = slab.z[off + i];
+    let mut nxt = slab.w[off + l];
+    let mut total = 0.0;
+    if o_i != 0.0 {
+        for j in (0..l).rev() {
+            let tmp = nxt / ((j + 1) as f64 * o_i);
+            total += tmp;
+            nxt = slab.w[off + j] - tmp * z_i * (l - j) as f64;
+        }
+    } else {
+        for j in (0..l).rev() {
+            total += slab.w[off + j] / (z_i * (l - j) as f64);
+        }
+    }
+    total * (l + 1) as f64
+}
+
+/// TreeShap for a single tree and row, accumulating into `phis[0..=M]`.
+/// `condition`/`cond_feature` implement Eq. 5 conditioning.
+#[allow(clippy::too_many_arguments)]
+pub fn tree_shap_row(
+    tree: &Tree,
+    x: &[f32],
+    phis: &mut [f64],
+    condition: Condition,
+    slab: &mut Scratch,
+) {
+    let slab = &mut slab.0;
+    recurse(tree, x, phis, condition, slab, 0, 0, 0, 1.0, 1.0, -1, 1.0);
+}
+
+/// Opaque reusable scratch (wraps the slab so callers can preallocate).
+pub struct Scratch(PathSlab);
+
+impl Scratch {
+    pub fn new(max_depth: usize) -> Self {
+        Scratch(PathSlab::new(max_depth))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    tree: &Tree,
+    x: &[f32],
+    phis: &mut [f64],
+    condition: Condition,
+    slab: &mut PathSlab,
+    node: usize,
+    depth: usize,
+    parent_len: usize,
+    pz: f64,
+    po: f64,
+    pi: i32,
+    cond_frac: f64,
+) {
+    if cond_frac == 0.0 {
+        return;
+    }
+    let off = slab_offset(depth);
+    // copy parent path into this level's slab range
+    if depth > 0 {
+        let poff = slab_offset(depth - 1);
+        for k in 0..parent_len {
+            slab.d[off + k] = slab.d[poff + k];
+            slab.z[off + k] = slab.z[poff + k];
+            slab.o[off + k] = slab.o[poff + k];
+            slab.w[off + k] = slab.w[poff + k];
+        }
+    }
+    let mut len = parent_len;
+    let mut cond_frac = cond_frac;
+
+    let conditioned = match condition {
+        Condition::None => false,
+        Condition::On(f) => pi == f,
+        Condition::Off(f) => pi == f,
+    };
+    if conditioned {
+        // feature is fixed: never enters the path, scales everything below
+        cond_frac *= match condition {
+            Condition::On(_) => po,
+            Condition::Off(_) => pz,
+            Condition::None => unreachable!(),
+        };
+    } else {
+        extend(slab, off, len, pz, po, pi);
+        len += 1;
+    }
+
+    if tree.is_leaf(node) {
+        let v = tree.value[node] as f64;
+        for i in 1..len {
+            let w = unwound_sum(slab, off, len, i);
+            phis[slab.d[off + i] as usize] +=
+                w * (slab.o[off + i] - slab.z[off + i]) * v * cond_frac;
+        }
+        return;
+    }
+
+    let f = tree.feature[node];
+    let t = tree.threshold[node];
+    let l = tree.left[node] as usize;
+    let r = tree.right[node] as usize;
+    let xv = x[f as usize];
+    let (hot, cold) = if !xv.is_nan() && xv < t { (l, r) } else { (r, l) };
+    let cov = tree.cover[node] as f64;
+
+    let mut iz = 1.0;
+    let mut io = 1.0;
+    // duplicate feature on the path: unwind the old occurrence
+    if let Some(k) = (1..len).find(|&k| slab.d[off + k] == f) {
+        iz = slab.z[off + k];
+        io = slab.o[off + k];
+        unwind(slab, off, len, k);
+        len -= 1;
+    }
+
+    let zh = tree.cover[hot] as f64 / cov;
+    let zc = tree.cover[cold] as f64 / cov;
+    recurse(tree, x, phis, condition, slab, hot, depth + 1, len, iz * zh, io, f, cond_frac);
+    recurse(tree, x, phis, condition, slab, cold, depth + 1, len, iz * zc, 0.0, f, cond_frac);
+}
+
+/// SHAP values for a batch: output [rows × groups × (M+1)] row-major,
+/// base value E[f] (incl. base_score) in slot M. The paper's baseline:
+/// parallel-for over rows, recursive algorithm per (row, tree).
+pub fn shap_values(
+    model: &Model,
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let m = model.num_features;
+    let groups = model.num_groups;
+    let ev = expected_values(model);
+    let stride = groups * (m + 1);
+    let mut out = vec![0.0f32; rows * stride];
+    let out_ptr = out.as_mut_ptr() as usize;
+    let max_depth = model.max_depth();
+    parallel::parallel_for_chunks(threads, rows, 8, |range| {
+        let mut slab = Scratch::new(max_depth);
+        let mut phis = vec![0.0f64; stride];
+        for r in range {
+            phis.iter_mut().for_each(|p| *p = 0.0);
+            let xr = &x[r * m..(r + 1) * m];
+            for (tree, &g) in model.trees.iter().zip(&model.tree_group) {
+                tree_shap_row(
+                    tree,
+                    xr,
+                    &mut phis[g * (m + 1)..(g + 1) * (m + 1)],
+                    Condition::None,
+                    &mut slab,
+                );
+            }
+            for g in 0..groups {
+                phis[g * (m + 1) + m] += ev[g];
+            }
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_ptr as *mut f32).add(r * stride),
+                    stride,
+                )
+            };
+            for (d, s) in dst.iter_mut().zip(&phis) {
+                *d = *s as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn model_and_data(scale: f64, rounds: usize, depth: usize) -> (Model, crate::data::Dataset) {
+        let d = SynthSpec::cal_housing(scale).generate();
+        let m = train(&d, &TrainParams { rounds, max_depth: depth, ..Default::default() });
+        (m, d)
+    }
+
+    #[test]
+    fn local_accuracy() {
+        let (model, d) = model_and_data(0.01, 8, 5);
+        let m = model.num_features;
+        let rows = 32.min(d.rows);
+        let phis = shap_values(&model, &d.features[..rows * m], rows, 2);
+        for r in 0..rows {
+            let pred = model.predict_row_raw(d.row(r))[0] as f64;
+            let total: f64 = phis[r * (m + 1)..(r + 1) * (m + 1)]
+                .iter()
+                .map(|&v| v as f64)
+                .sum();
+            assert!((total - pred).abs() < 1e-3, "row {r}: {total} vs {pred}");
+        }
+    }
+
+    #[test]
+    fn multiclass_local_accuracy() {
+        let d = SynthSpec::covtype(0.0008).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let g = model.num_groups;
+        let rows = 8;
+        let phis = shap_values(&model, &d.features[..rows * m], rows, 1);
+        for r in 0..rows {
+            let preds = model.predict_row_raw(d.row(r));
+            for k in 0..g {
+                let s: f64 = phis
+                    [r * g * (m + 1) + k * (m + 1)..r * g * (m + 1) + (k + 1) * (m + 1)]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum();
+                assert!((s - preds[k] as f64).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let (model, d) = model_and_data(0.005, 4, 4);
+        let m = model.num_features;
+        let rows = 16.min(d.rows);
+        let a = shap_values(&model, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&model, &d.features[..rows * m], rows, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn null_feature_gets_zero_phi() {
+        // feature never split on ⇒ φ = 0 exactly
+        let (model, d) = model_and_data(0.01, 6, 3);
+        let m = model.num_features;
+        let mut used = vec![false; m];
+        for t in &model.trees {
+            for (i, &f) in t.feature.iter().enumerate() {
+                if !t.is_leaf(i) {
+                    used[f as usize] = true;
+                }
+            }
+        }
+        let rows = 8;
+        let phis = shap_values(&model, &d.features[..rows * m], rows, 1);
+        for r in 0..rows {
+            for f in 0..m {
+                if !used[f] {
+                    assert_eq!(phis[r * (m + 1) + f], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared substrates: deterministic RNG, minimal JSON, timing/stats.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::{time_it, Stats};

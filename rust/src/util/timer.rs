@@ -1,0 +1,76 @@
+//! Timing and summary-statistics helpers shared by benches and metrics.
+
+use std::time::Instant;
+
+/// Measure wall time of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Summary statistics over a set of timing samples.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let q = |p: f64| sorted[((n as f64 - 1.0) * p).round() as usize];
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: q(0.5),
+            p95: q(0.95),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::from_samples(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn time_it_positive() {
+        let (_, dt) = time_it(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(dt >= 0.002);
+    }
+}

@@ -1,0 +1,190 @@
+//! Cross-module integration: train → save/load → pack → explain → verify,
+//! CSV ingestion → explain, and the model zoo summary (Table 3 shape).
+
+use gputreeshap::data::csv::{parse_csv, CsvOptions};
+use gputreeshap::data::SynthSpec;
+use gputreeshap::gbdt::{io, train, Objective, TrainParams, ZooSize};
+use gputreeshap::shap::{pack_model, treeshap, Packing};
+
+#[test]
+fn full_pipeline_train_save_load_explain() {
+    let data = SynthSpec::cal_housing(0.01).generate();
+    let model = train(&data, &TrainParams { rounds: 6, max_depth: 5, ..Default::default() });
+
+    let dir = std::env::temp_dir().join(format!("gts_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.gtsm");
+    io::save(&model, &path).unwrap();
+    let loaded = io::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let m = loaded.num_features;
+    let rows = 16;
+    let phis = treeshap::shap_values(&loaded, &data.features[..rows * m], rows, 2);
+    for r in 0..rows {
+        let pred = loaded.predict_row_raw(data.row(r))[0] as f64;
+        let total: f64 = phis[r * (m + 1)..(r + 1) * (m + 1)].iter().map(|&v| v as f64).sum();
+        assert!((total - pred).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn csv_to_explanations() {
+    // tiny synthetic CSV: y = x0 > 0
+    let mut text = String::from("f0,f1,label\n");
+    let mut rng = gputreeshap::util::Rng::new(5);
+    for _ in 0..300 {
+        let a = rng.normal() as f32;
+        let b = rng.normal() as f32;
+        let y = if a > 0.0 { 1 } else { 0 };
+        text.push_str(&format!("{a},{b},{y}\n"));
+    }
+    let data = parse_csv(&text, &CsvOptions { num_classes: 2, ..Default::default() }, "toy").unwrap();
+    assert_eq!(data.num_classes, 2);
+    let model = train(
+        &data,
+        &TrainParams { rounds: 10, max_depth: 3, learning_rate: 0.3, ..Default::default() },
+    );
+    assert_eq!(model.objective, Objective::Logistic);
+    let rows = 8;
+    let phis = treeshap::shap_values(&model, &data.features[..rows * 2], rows, 1);
+    // feature 0 must dominate attribution
+    let (mut s0, mut s1) = (0.0f64, 0.0f64);
+    for r in 0..rows {
+        s0 += (phis[r * 3] as f64).abs();
+        s1 += (phis[r * 3 + 1] as f64).abs();
+    }
+    assert!(s0 > 5.0 * s1, "f0 attribution {s0} vs f1 {s1}");
+}
+
+#[test]
+fn zoo_models_have_table3_shape() {
+    // small/med/large per dataset: trees = rounds × groups, depth bounded
+    let data = SynthSpec::adult(0.01).generate();
+    for size in [ZooSize::Small, ZooSize::Medium] {
+        let (rounds, depth) = size.rounds_depth();
+        let model = train(
+            &data,
+            &TrainParams { rounds, max_depth: depth, ..Default::default() },
+        );
+        assert_eq!(model.trees.len(), rounds); // binary: 1 group
+        assert!(model.max_depth() <= depth);
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        assert!(pm.max_depth <= 31, "paths must fit a warp");
+    }
+}
+
+#[test]
+fn packed_model_counts_are_consistent() {
+    let data = SynthSpec::covtype(0.0008).generate();
+    let model = train(&data, &TrainParams { rounds: 2, max_depth: 5, ..Default::default() });
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    assert_eq!(pm.num_groups, 8);
+    assert_eq!(pm.groups.len(), 8);
+    // every group's bins hold exactly the group's leaves
+    for (g, group) in pm.groups.iter().enumerate() {
+        let leaves: usize = model
+            .trees
+            .iter()
+            .zip(&model.tree_group)
+            .filter(|(_, &tg)| tg == g)
+            .map(|(t, _)| t.num_leaves())
+            .sum();
+        let paths = (0..group.num_bins * gputreeshap::shap::LANES)
+            .filter(|&i| group.pos[i] == 0 && group.plen[i] > 0)
+            .count();
+        assert_eq!(paths, leaves, "group {g}");
+    }
+}
+
+#[test]
+fn failure_injection_corrupt_manifest_and_artifacts() {
+    use gputreeshap::runtime::Manifest;
+    let dir = std::env::temp_dir().join(format!("gts_fail_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // missing manifest
+    assert!(Manifest::load(&dir).is_err());
+
+    // syntactically broken manifest
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // structurally broken manifest (missing keys)
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": [{"name": "x"}]}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // empty artifact list
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // valid manifest pointing at a missing/corrupt HLO file: load must
+    // fail at compile time with context, not crash
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [{"name": "bad", "kind": "shap",
+            "rows": 64, "bins": 64, "features": 16, "depth": 4,
+            "lanes": 32, "file": "bad.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    let man = Manifest::load(&dir).unwrap();
+    let mut dev = gputreeshap::runtime::Device::cpu().unwrap();
+    assert!(dev.load(&man.artifacts[0]).is_err()); // file missing
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule garbage !!!").unwrap();
+    assert!(dev.load(&man.artifacts[0]).is_err()); // unparseable
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_model_files_are_rejected() {
+    let dir = std::env::temp_dir().join(format!("gts_badmodel_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.gtsm");
+    std::fs::write(&p, b"GTSMxxxxx").unwrap();
+    assert!(io::load(&p).is_err());
+    std::fs::write(&p, b"NOPE").unwrap();
+    assert!(io::load(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn summary_rankings_on_real_model() {
+    use gputreeshap::shap::summary;
+    let data = SynthSpec::adult(0.005).generate();
+    let model = train(&data, &TrainParams { rounds: 5, max_depth: 4, ..Default::default() });
+    let m = model.num_features;
+    let rows = 32;
+    let phis = treeshap::shap_values(&model, &data.features[..rows * m], rows, 2);
+    let top = summary::top_features(&phis, rows, model.num_groups, m, 0, m);
+    assert_eq!(top.len(), m);
+    // descending, and the top feature actually used by the model
+    for w in top.windows(2) {
+        assert!(w[0].1 >= w[1].1);
+    }
+    assert!(top[0].1 > 0.0);
+}
+
+#[test]
+fn fashion_like_wide_features_work_on_cpu_baseline() {
+    // 784-feature dataset exercises wide-feature paths end to end
+    let mut spec = SynthSpec::fashion_mnist(0.0002);
+    spec.rows = spec.rows.max(60);
+    let data = spec.generate();
+    assert_eq!(data.cols, 784);
+    let model = train(&data, &TrainParams { rounds: 1, max_depth: 3, ..Default::default() });
+    let rows = 4;
+    let phis = treeshap::shap_values(&model, &data.features[..rows * 784], rows, 2);
+    let g = model.num_groups;
+    for r in 0..rows {
+        let preds = model.predict_row_raw(data.row(r));
+        for k in 0..g {
+            let s: f64 = phis
+                [r * g * 785 + k * 785..r * g * 785 + (k + 1) * 785]
+                .iter()
+                .map(|&v| v as f64)
+                .sum();
+            assert!((s - preds[k] as f64).abs() < 2e-3);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Coordinator service tests: batching, concurrency, backpressure,
+//! correctness of per-request response slicing.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gputreeshap::coordinator::{ServiceConfig, ShapService};
+use gputreeshap::data::SynthSpec;
+use gputreeshap::gbdt::{train, TrainParams};
+use gputreeshap::runtime::default_artifacts_dir;
+use gputreeshap::shap::{pack_model, treeshap, Packing};
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn setup() -> (gputreeshap::gbdt::Model, gputreeshap::data::Dataset) {
+    let d = SynthSpec::adult(0.005).generate();
+    let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+    (model, d)
+}
+
+#[test]
+fn serves_correct_values_across_concurrent_clients() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (model, d) = setup();
+    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
+    let m = model.num_features;
+    let svc = ShapService::start(
+        pm,
+        ServiceConfig {
+            devices: 2,
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // 8 concurrent clients, 5 requests each, varying sizes
+    let svc = Arc::new(svc);
+    let model = Arc::new(model);
+    let d = Arc::new(d);
+    std::thread::scope(|scope| {
+        for c in 0..8usize {
+            let svc = svc.clone();
+            let model = model.clone();
+            let d = d.clone();
+            scope.spawn(move || {
+                for q in 0..5usize {
+                    let rows = 1 + (c + q) % 7;
+                    let start = (c * 17 + q * 3) % (d.rows - rows);
+                    let x = d.features[start * m..(start + rows) * m].to_vec();
+                    let phis = svc.explain(x.clone(), rows).unwrap();
+                    let want = treeshap::shap_values(&model, &x, rows, 1);
+                    assert_eq!(phis.len(), want.len());
+                    for (a, b) in phis.iter().zip(&want) {
+                        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+                    }
+                }
+            });
+        }
+    });
+
+    let svc = Arc::try_unwrap(svc).ok().unwrap();
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.get("requests").unwrap().as_usize().unwrap(), 40);
+    assert_eq!(snap.get("errors").unwrap().as_usize().unwrap(), 0);
+    let batches = snap.get("batches").unwrap().as_usize().unwrap();
+    assert!(batches <= 40, "batches {batches}");
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (model, d) = setup();
+    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
+    let m = model.num_features;
+    let svc = ShapService::start(
+        pm,
+        ServiceConfig {
+            devices: 1,
+            max_batch_rows: 32,
+            max_wait: Duration::from_millis(100),
+            queue_cap: 2, // tiny queue to force rejection
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let x = d.features[..8 * m].to_vec();
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..300 {
+        match svc.submit(x.clone(), 8) {
+            Ok(rx) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "queue_cap=2 never rejected under a 300-req burst");
+    assert!(accepted > 0);
+    for rx in rxs {
+        let _ = rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        svc.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed),
+        rejected as u64
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pending_work() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (model, d) = setup();
+    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
+    let m = model.num_features;
+    let svc = ShapService::start(
+        pm,
+        ServiceConfig {
+            devices: 1,
+            max_batch_rows: 1024,
+            max_wait: Duration::from_secs(5), // would wait a long time...
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let x = d.features[..4 * m].to_vec();
+    let rx = svc.submit(x, 4).unwrap();
+    svc.shutdown(); // ...but shutdown must flush it
+    assert!(rx.recv().unwrap().is_ok());
+}
+
+#[test]
+fn padded_service_serves_correct_values() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (model, d) = setup();
+    let m = model.num_features;
+    let depth = gputreeshap::shap::pack_model(&model, Packing::BestFitDecreasing)
+        .max_depth
+        .max(1);
+    let width = gputreeshap::runtime::Manifest::load(&default_artifacts_dir())
+        .unwrap()
+        .select(gputreeshap::runtime::ArtifactKind::ShapPadded, m, depth, 64)
+        .unwrap()
+        .depth
+        + 1;
+    let pm = Arc::new(gputreeshap::shap::pad_model(&model, width));
+    let svc = ShapService::start_padded(
+        pm,
+        ServiceConfig {
+            devices: 1,
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rows = 12;
+    let x = d.features[..rows * m].to_vec();
+    let phis = svc.explain(x.clone(), rows).unwrap();
+    let want = treeshap::shap_values(&model, &x, rows, 1);
+    for (a, b) in phis.iter().zip(&want) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn multi_device_pool_matches_single() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (model, d) = setup();
+    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let m = model.num_features;
+    let rows = 150;
+    let x = &d.features[..rows * m];
+    let a =
+        gputreeshap::runtime::pool::shap_values_multi(&pm, x, rows, 1, &default_artifacts_dir())
+            .unwrap();
+    let b =
+        gputreeshap::runtime::pool::shap_values_multi(&pm, x, rows, 3, &default_artifacts_dir())
+            .unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x1, x2) in a.iter().zip(&b) {
+        assert!((x1 - x2).abs() < 1e-5);
+    }
+}
