@@ -1,18 +1,19 @@
 //! Latency/throughput crossover (the paper's Fig 4 workload, interactive
-//! version): sweep the number of test rows and time the CPU baseline vs
-//! the batched XLA engine, printing the crossover point where batching
-//! wins.
+//! version): sweep the number of test rows and time the recursive CPU
+//! backend vs the planner's best accelerated backend, printing the
+//! measured crossover next to the planner's predicted one.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example crossover
+//! cargo run --release --example crossover
 //! ```
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend};
 use gputreeshap::bench::fmt_secs;
 use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{pack_model, treeshap, Packing};
+use gputreeshap::util::error::Result;
 
 fn main() -> Result<()> {
     // cal_housing-med-like model (the paper's Fig 4 subject)
@@ -23,39 +24,54 @@ fn main() -> Result<()> {
     );
     println!("model: {}", model.summary());
     let m = model.num_features;
-    let threads = gputreeshap::parallel::default_threads();
+    let model = Arc::new(model);
 
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let mut engine = ShapEngine::new(&default_artifacts_dir())?;
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, usize::MAX)?;
+    let cfg = BackendConfig { rows_hint: 512, ..Default::default() };
+    let cpu = backend::build(&model, BackendKind::Recursive, &cfg)?;
+    let mut accel = None;
+    for kind in [BackendKind::XlaPadded, BackendKind::XlaWarp, BackendKind::Host] {
+        if let Ok(b) = backend::build(&model, kind, &cfg) {
+            accel = Some((kind, b));
+            break;
+        }
+    }
+    let (akind, accel) = accel.expect("no accelerated backend");
+    let planner = Planner::for_model(&model);
+    println!(
+        "accel: {} — planner predicts crossover at {:?} rows",
+        accel.describe(),
+        planner.crossover_rows(BackendKind::Recursive, akind)
+    );
 
-    println!("\n{:<8} {:>12} {:>12}   winner", "rows", "cpu", "xla");
+    println!("\n{:<8} {:>12} {:>12}   winner", "rows", "cpu", "accel");
     let mut crossover: Option<usize> = None;
     for &rows in &[1usize, 4, 16, 64, 128, 256, 512, 1024] {
         let rows = rows.min(data.rows);
         let x = &data.features[..rows * m];
         // median of 3
         let mut cpu_times = Vec::new();
-        let mut xla_times = Vec::new();
+        let mut accel_times = Vec::new();
         for _ in 0..3 {
             let t = std::time::Instant::now();
-            std::hint::black_box(treeshap::shap_values(&model, x, rows, threads));
+            std::hint::black_box(cpu.contributions(x, rows)?);
             cpu_times.push(t.elapsed().as_secs_f64());
             let t = std::time::Instant::now();
-            std::hint::black_box(engine.shap_values(&pm, &prep, x, rows)?);
-            xla_times.push(t.elapsed().as_secs_f64());
+            std::hint::black_box(accel.contributions(x, rows)?);
+            accel_times.push(t.elapsed().as_secs_f64());
         }
         cpu_times.sort_by(|a, b| a.total_cmp(b));
-        xla_times.sort_by(|a, b| a.total_cmp(b));
-        let (cpu, xla) = (cpu_times[1], xla_times[1]);
-        let winner = if xla < cpu { "xla" } else { "cpu" };
-        if xla < cpu && crossover.is_none() {
+        accel_times.sort_by(|a, b| a.total_cmp(b));
+        let (cpu_t, accel_t) = (cpu_times[1], accel_times[1]);
+        let winner = if accel_t < cpu_t { akind.name() } else { "cpu" };
+        if accel_t < cpu_t && crossover.is_none() {
             crossover = Some(rows);
         }
-        println!("{rows:<8} {:>12} {:>12}   {winner}", fmt_secs(cpu), fmt_secs(xla));
+        println!("{rows:<8} {:>12} {:>12}   {winner}", fmt_secs(cpu_t), fmt_secs(accel_t));
     }
     match crossover {
-        Some(r) => println!("\ncrossover: batched engine wins from ~{r} rows (paper: ~200 rows on V100 vs 40 cores)"),
+        Some(r) => println!(
+            "\ncrossover: batched backend wins from ~{r} rows (paper: ~200 rows on V100 vs 40 cores)"
+        ),
         None => println!("\nno crossover observed on this testbed within the sweep"),
     }
     Ok(())

@@ -1,17 +1,19 @@
 //! SHAP interaction values end to end: train an adult-shaped classifier,
-//! compute the full (M+1)² interaction matrix through the XLA runtime,
-//! verify its consistency identities, and report the strongest feature
-//! interactions — the workload of the paper's Table 7.
+//! compute the full (M+1)² interaction matrix through the packed
+//! pipeline (planner-chosen backend), verify its consistency identities,
+//! and report the strongest feature interactions — the workload of the
+//! paper's Table 7.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example interactions
+//! cargo run --release --example interactions
 //! ```
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, ShapBackend};
 use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{pack_model, Packing};
+use gputreeshap::util::error::Result;
 
 fn main() -> Result<()> {
     let data = SynthSpec::adult(0.02).generate();
@@ -24,17 +26,17 @@ fn main() -> Result<()> {
     let rows = 32;
     let x = &data.features[..rows * m];
 
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let mut engine = ShapEngine::new(&default_artifacts_dir())?;
-    let iprep = engine.prepare(&pm, ArtifactKind::Interactions, rows)?;
-    let sprep = engine.prepare(&pm, ArtifactKind::Shap, rows)?;
+    let model = Arc::new(model);
+    let cfg = BackendConfig { rows_hint: rows, with_interactions: true, ..Default::default() };
+    let (_, backend) = backend::build_auto(&model, &cfg)?;
+    println!("backend: {}", backend.describe());
 
     let t = std::time::Instant::now();
-    let inter = engine.interactions(&pm, &iprep, x, rows)?;
+    let inter = backend.interactions(x, rows)?;
     let dt = t.elapsed().as_secs_f64();
     println!("interactions for {rows} rows in {dt:.3}s ({:.1} rows/s)", rows as f64 / dt);
 
-    let phis = engine.shap_values(&pm, &sprep, x, rows)?;
+    let phis = backend.contributions(x, rows)?;
     let ms = (m + 1) * (m + 1);
 
     // identity 1: row sums of the interaction matrix equal φ

@@ -1,16 +1,20 @@
-//! Quickstart: train a model, explain predictions through all three
-//! layers (rust coordinator → AOT HLO → Pallas-derived kernel), verify
-//! the SHAP additivity property, and print an attribution report.
+//! Quickstart: train a model, let the crossover-aware planner pick a
+//! SHAP backend, explain predictions through the `ShapBackend` trait,
+//! verify the SHAP additivity property, and print an attribution report.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! # (build with --features xla and `make artifacts` to let the planner
+//! #  pick the AOT HLO engines)
 //! ```
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, ShapBackend};
 use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
 use gputreeshap::shap::{pack_model, Packing};
+use gputreeshap::util::error::Result;
 
 fn main() -> Result<()> {
     // 1. train a GBDT on a cal_housing-shaped regression dataset
@@ -29,15 +33,21 @@ fn main() -> Result<()> {
         pm.groups[0].utilisation
     );
 
-    // 3. run the AOT kernel through the PJRT runtime
+    // 3. let the planner pick a backend for this batch size
     let rows = 256.min(data.rows);
     let m = data.cols;
     let x = &data.features[..rows * m];
-    let mut engine = ShapEngine::new(&default_artifacts_dir())?;
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, rows)?;
-    println!("artifact: {}", prep.artifact);
+    let model = Arc::new(model);
+    let cfg = BackendConfig { rows_hint: rows, ..Default::default() };
+    let (plan, backend) = backend::build_auto(&model, &cfg)?;
+    println!(
+        "backend: {} (planner estimate {:.1} ms/batch, setup {:.3}s)",
+        backend.describe(),
+        plan.est_latency_s * 1e3,
+        backend.caps().setup_cost_s
+    );
     let t = std::time::Instant::now();
-    let phis = engine.shap_values(&pm, &prep, x, rows)?;
+    let phis = backend.contributions(x, rows)?;
     println!("explained {rows} rows in {:.3}s", t.elapsed().as_secs_f64());
 
     // 4. verify local accuracy: Σφ == f(x)

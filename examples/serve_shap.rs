@@ -1,23 +1,22 @@
-//! End-to-end serving driver (the repo's E2E validation): load a real
-//! trained model, run the SHAP service with dynamic batching over N
-//! simulated devices, drive it with concurrent clients, and report
-//! latency percentiles + throughput. Results are recorded in
-//! EXPERIMENTS.md.
+//! End-to-end serving driver (the repo's E2E validation): train a real
+//! model, start the SHAP service with a planner-chosen backend and
+//! dynamic batching over N workers, drive it with concurrent clients
+//! (contributions AND interactions through the same pipeline), and
+//! report latency percentiles + per-backend throughput.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_shap [-- --devices 2 --clients 8]
+//! cargo run --release --example serve_shap [-- --devices 2 --clients 8]
 //! ```
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use gputreeshap::backend::{BackendConfig, RecursiveBackend, ShapBackend};
 use gputreeshap::cli::Args;
 use gputreeshap::coordinator::{ServiceConfig, ShapService};
 use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, Manifest};
-use gputreeshap::shap::{pack_model, pad_model, treeshap, Packing};
+use gputreeshap::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -34,16 +33,12 @@ fn main() -> Result<()> {
     );
     println!("model: {}", model.summary());
     let m = model.num_features;
-    // padded-path layout: the optimized engine (EXPERIMENTS.md §Perf)
-    let depth_needed = pack_model(&model, Packing::BestFitDecreasing).max_depth.max(1);
-    let width = Manifest::load(&default_artifacts_dir())?
-        .select(ArtifactKind::ShapPadded, m, depth_needed, 256)?
-        .depth
-        + 1;
-    let pm = Arc::new(pad_model(&model, width));
+    let model = Arc::new(model);
 
-    let svc = ShapService::start_padded(
-        pm,
+    let bcfg = BackendConfig { rows_hint: 256, with_interactions: true, ..Default::default() };
+    let (kind, svc) = ShapService::start_planned(
+        model.clone(),
+        bcfg,
         ServiceConfig {
             devices,
             max_batch_rows: 256,
@@ -51,18 +46,24 @@ fn main() -> Result<()> {
             ..Default::default()
         },
     )?;
-    println!("service: {devices} devices (padded engine), dynamic batching ≤256 rows / 4ms");
+    println!(
+        "service: {devices} worker(s), backend {} (planner), dynamic batching ≤256 rows / 4ms",
+        kind.name()
+    );
+
+    // the parity oracle for on-the-fly spot checks (concrete type so it
+    // can be shared by reference across the client threads)
+    let oracle = RecursiveBackend::new(model.clone(), 1);
 
     // drive with concurrent clients; spot-check correctness on the fly
     let svc = Arc::new(svc);
     let data = Arc::new(data);
-    let model = Arc::new(model);
+    let oracle = &oracle;
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
             let svc = svc.clone();
             let data = data.clone();
-            let model = model.clone();
             scope.spawn(move || {
                 for q in 0..requests {
                     let start =
@@ -70,10 +71,25 @@ fn main() -> Result<()> {
                     let x = data.features[start * m..(start + req_rows) * m].to_vec();
                     let phis = svc.explain(x.clone(), req_rows).expect("explain");
                     if q == 0 {
-                        // verify against the CPU baseline once per client
-                        let want = treeshap::shap_values(&model, &x, req_rows, 1);
+                        // verify against the recursive oracle once per client
+                        let want =
+                            oracle.contributions(&x, req_rows).expect("oracle");
                         for (a, b) in phis.iter().zip(&want) {
                             assert!((a - b).abs() < 2e-3, "served {a} vs baseline {b}");
+                        }
+                        // and route one interactions request through the
+                        // same batched pipeline
+                        let inter =
+                            svc.explain_interactions(x.clone(), req_rows).expect("interactions");
+                        let ms = (m + 1) * (m + 1);
+                        for r in 0..req_rows {
+                            for i in 0..m {
+                                let s: f64 = (0..m)
+                                    .map(|j| inter[r * ms + i * (m + 1) + j] as f64)
+                                    .sum();
+                                let phi = phis[r * (m + 1) + i] as f64;
+                                assert!((s - phi).abs() < 5e-3, "Σ_j Φ_ij {s} vs φ_i {phi}");
+                            }
                         }
                     }
                 }
@@ -92,7 +108,7 @@ fn main() -> Result<()> {
              (clients * requests) as f64 / wall);
     println!("latency p50      {:.1} ms", lat.p50 * 1e3);
     println!("latency p95      {:.1} ms", lat.p95 * 1e3);
-    println!("latency mean     {:.1} ms", lat.mean * 1e3);
+    println!("latency p99      {:.1} ms", lat.p99 * 1e3);
     println!("mean batch size  {:.1} rows", bat.mean);
     println!("metrics json     {}", svc.metrics.snapshot().to_string_pretty().replace('\n', " "));
     svc.shutdown();

@@ -120,8 +120,11 @@ def lower_config(name, kind, rows, bins, features, depth, rb, bb):
 
 
 def main():
+    # default matches the rust runtime's `default_artifacts_dir()`
+    # (<repo>/rust/artifacts) regardless of the invoking CWD
+    repo_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out-dir", default=os.path.join(repo_root, "rust", "artifacts"))
     ap.add_argument("--only", default=None, help="comma-separated artifact names")
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)

@@ -1,17 +1,19 @@
 //! Ablation (DESIGN.md §Perf): warp-packed layout (faithful CUDA
 //! adaptation, gathers for lane shuffles) vs padded-path layout
-//! (gather-free slices/shifts, element axis padded to the depth bucket).
+//! (gather-free slices/shifts, element axis padded to the depth bucket),
+//! both behind `backend::ShapBackend`.
 //!
-//! Measures both engines on the model zoo's medium models plus a
-//! large, and verifies identical φ. The padded layout trades lane
-//! utilisation (Σlen/(P·(D+1)) vs BFD's ~0.95) for the removal of every
-//! gather in the DP inner loop — the right trade on both this CPU
-//! testbed and a real TPU VPU.
+//! Measures both engines on the model zoo's medium+large models and
+//! verifies identical φ. The padded layout trades lane utilisation for
+//! the removal of every gather in the DP inner loop — the right trade on
+//! both this CPU testbed and a real TPU VPU. Requires the `xla` feature
+//! and built artifacts; prints a note and exits cleanly otherwise.
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
 use gputreeshap::gbdt::ZooSize;
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{pack_model, pad_model, Packing};
 use gputreeshap::util::Json;
 
 const ROWS: usize = 256;
@@ -23,10 +25,8 @@ fn median(mut v: Vec<f64>) -> f64 {
 }
 
 fn main() {
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
-    let mut table = Table::new(&[
-        "model", "warp util", "pad util", "warp(s)", "padded(s)", "speedup",
-    ]);
+    let mut table = Table::new(&["model", "warp(s)", "padded(s)", "speedup"]);
+    let mut measured = false;
     for entry in zoo::zoo_entries() {
         if entry.size == ZooSize::Small {
             continue; // launch-overhead dominated either way
@@ -35,18 +35,24 @@ fn main() {
         let m = model.num_features;
         let rows = ROWS.min(data.rows);
         let x = &data.features[..rows * m];
+        let model = Arc::new(model);
+        let cfg = BackendConfig { rows_hint: rows, ..Default::default() };
 
-        let pm = pack_model(&model, Packing::BestFitDecreasing);
-        // pick the padded width from the artifact the manifest will choose
-        let spec_depth = engine
-            .manifest
-            .select(ArtifactKind::ShapPadded, m, pm.max_depth.max(1), rows)
-            .expect("padded bucket")
-            .depth;
-        let pad = pad_model(&model, spec_depth + 1);
-
-        let prep_w = engine.prepare(&pm, ArtifactKind::Shap, rows).expect("warp prep");
-        let prep_p = engine.prepare_padded(&pad, rows).expect("padded prep");
+        let warp = match backend::build(&model, BackendKind::XlaWarp, &cfg) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("  [skip {}: {e}]", entry.name);
+                continue;
+            }
+        };
+        let padded = match backend::build(&model, BackendKind::XlaPadded, &cfg) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("  [skip {}: {e}]", entry.name);
+                continue;
+            }
+        };
+        measured = true;
 
         let mut warp_t = Vec::new();
         let mut pad_t = Vec::new();
@@ -54,10 +60,10 @@ fn main() {
         let mut b = Vec::new();
         for _ in 0..ITERS {
             let t = std::time::Instant::now();
-            a = engine.shap_values(&pm, &prep_w, x, rows).expect("warp");
+            a = warp.contributions(x, rows).expect("warp");
             warp_t.push(t.elapsed().as_secs_f64());
             let t = std::time::Instant::now();
-            b = engine.shap_values_padded(&pad, &prep_p, x, rows).expect("padded");
+            b = padded.contributions(x, rows).expect("padded");
             pad_t.push(t.elapsed().as_secs_f64());
         }
         for (i, (p, q)) in a.iter().zip(&b).enumerate() {
@@ -67,13 +73,9 @@ fn main() {
                 entry.name
             );
         }
-        let wu = pm.groups.iter().map(|g| g.utilisation).fold(f64::MAX, f64::min);
-        let pu = pad.groups.iter().map(|g| g.utilisation).fold(f64::MAX, f64::min);
         let (wt, pt) = (median(warp_t), median(pad_t));
         table.row(vec![
             entry.name.clone(),
-            format!("{wu:.3}"),
-            format!("{pu:.3}"),
             fmt_secs(wt),
             fmt_secs(pt),
             format!("{:.2}x", wt / pt),
@@ -85,11 +87,13 @@ fn main() {
                 ("warp_s", Json::from(wt)),
                 ("padded_s", Json::from(pt)),
                 ("speedup", Json::from(wt / pt)),
-                ("warp_util", Json::from(wu)),
-                ("padded_util", Json::from(pu)),
             ],
         );
     }
     table.print();
-    println!("\n(padded layout is the §Perf outcome; warp layout is the faithful CUDA mapping)");
+    if measured {
+        println!("\n(padded layout is the §Perf outcome; warp layout is the faithful CUDA mapping)");
+    } else {
+        println!("\n(no XLA backends available — build with --features xla and run `make artifacts`)");
+    }
 }

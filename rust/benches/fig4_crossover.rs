@@ -1,18 +1,22 @@
 //! Fig 4 reproduction: time-to-explain vs number of test rows for the
-//! cal_housing-med model, CPU baseline vs the batched engine, locating
-//! the crossover where batch amortisation beats per-row recursion.
+//! cal_housing-med model, recursive CPU backend vs the best accelerated
+//! backend, locating the crossover where batch amortisation beats
+//! per-row recursion — and checking the planner's crossover-aware choice
+//! at batch sizes straddling its own predicted crossover.
 //!
-//! Paper: V100 beats 40 cores from ~200 rows. Here the "device" is the
-//! CPU PJRT backend on the same single core as the baseline, so the
-//! crossover may not occur; the bench records the two latency curves
-//! and the per-row marginal costs either way, which is the figure's
-//! actual content (fixed overhead vs slope).
+//! Paper: V100 beats 40 cores from ~200 rows. Here the "device" may be
+//! the CPU PJRT backend (or the host packed DP when built without
+//! `--features xla`) on the same cores as the baseline, so the measured
+//! crossover may not occur; the bench records the two latency curves and
+//! the planner's decisions either way, which is the figure's actual
+//! content (fixed overhead vs slope).
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::parallel::default_threads;
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{pack_model, treeshap, Packing};
 use gputreeshap::util::Json;
 
 fn median3(mut f: impl FnMut() -> f64) -> f64 {
@@ -28,49 +32,98 @@ fn main() {
         .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Medium)
         .unwrap();
     let (model, data) = zoo::build(&entry);
-    println!("fig4: {} ({}), {} thread(s)\n", entry.name, model.summary(), threads);
+    println!("fig4: {} ({}), {} thread(s)", entry.name, model.summary(), threads);
     let m = model.num_features;
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, usize::MAX).expect("prepare");
+    let model = Arc::new(model);
+    let planner = Planner::for_model(&model);
+    let cfg = BackendConfig { threads, rows_hint: 512, ..Default::default() };
 
-    let mut table = Table::new(&["rows", "cpu", "xla", "cpu rows/s", "xla rows/s"]);
+    let cpu = backend::build(&model, BackendKind::Recursive, &cfg).expect("cpu backend");
+    // accelerated side: the best non-recursive backend that constructs
+    let mut accel = None;
+    for kind in [BackendKind::XlaPadded, BackendKind::XlaWarp, BackendKind::Host] {
+        match backend::build(&model, kind, &cfg) {
+            Ok(b) => {
+                accel = Some((kind, b));
+                break;
+            }
+            Err(e) => eprintln!("  [skip {}: {e}]", kind.name()),
+        }
+    }
+    let (akind, accel) = accel.expect("no accelerated backend available");
+    // head-to-head planner over exactly the two measured backends
+    let duel = Planner::with_candidates(
+        planner.shape,
+        vec![
+            (
+                BackendKind::Recursive,
+                backend::planner::estimate(BackendKind::Recursive, &planner.shape),
+            ),
+            (akind, backend::planner::estimate(akind, &planner.shape)),
+        ],
+    );
+    let predicted = duel.crossover_rows(BackendKind::Recursive, akind);
+    println!(
+        "accel backend: {} — planner predicts crossover at {:?} rows\n",
+        accel.describe(),
+        predicted
+    );
+
+    let mut table = Table::new(&["rows", "cpu", "accel", "cpu rows/s", "accel rows/s", "planner"]);
     let mut crossover = None;
     for &rows in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
         let rows = rows.min(data.rows);
         let x = &data.features[..rows * m];
-        let cpu = median3(|| {
+        let cpu_t = median3(|| {
             let t = std::time::Instant::now();
-            std::hint::black_box(treeshap::shap_values(&model, x, rows, threads));
+            std::hint::black_box(cpu.contributions(x, rows).expect("cpu"));
             t.elapsed().as_secs_f64()
         });
-        let xla = median3(|| {
+        let accel_t = median3(|| {
             let t = std::time::Instant::now();
-            std::hint::black_box(engine.shap_values(&pm, &prep, x, rows).unwrap());
+            std::hint::black_box(accel.contributions(x, rows).expect("accel"));
             t.elapsed().as_secs_f64()
         });
-        if xla < cpu && crossover.is_none() {
+        if accel_t < cpu_t && crossover.is_none() {
             crossover = Some(rows);
         }
         table.row(vec![
             rows.to_string(),
-            fmt_secs(cpu),
-            fmt_secs(xla),
-            format!("{:.0}", rows as f64 / cpu),
-            format!("{:.0}", rows as f64 / xla),
+            fmt_secs(cpu_t),
+            fmt_secs(accel_t),
+            format!("{:.0}", rows as f64 / cpu_t),
+            format!("{:.0}", rows as f64 / accel_t),
+            planner.choose(rows).kind.name().to_string(),
         ]);
         dump_record(
             "fig4",
             vec![
                 ("rows", Json::from(rows)),
-                ("cpu_s", Json::from(cpu)),
-                ("xla_s", Json::from(xla)),
+                ("cpu_s", Json::from(cpu_t)),
+                ("accel_s", Json::from(accel_t)),
+                ("accel_backend", Json::from(akind.name())),
+                ("planner_choice", Json::from(planner.choose(rows).kind.name())),
             ],
         );
     }
     table.print();
+
+    // exercise the planner at two batch sizes straddling its crossover
+    if let Some(c) = predicted.filter(|&c| c >= 2) {
+        let below = duel.choose(c / 2).kind;
+        let above = duel.choose(c.saturating_mul(2)).kind;
+        println!(
+            "\nplanner straddle: {} rows → {}, {} rows → {}",
+            c / 2,
+            below.name(),
+            c.saturating_mul(2),
+            above.name()
+        );
+        assert_eq!(below, BackendKind::Recursive, "below crossover must stay on cpu");
+        assert_eq!(above, akind, "above crossover must switch to {}", akind.name());
+    }
     match crossover {
-        Some(r) => println!("\ncrossover at ~{r} rows (paper: ~200 rows, V100 vs 40 cores)"),
-        None => println!("\nno crossover on this 1-core testbed (see EXPERIMENTS.md)"),
+        Some(r) => println!("measured crossover at ~{r} rows (paper: ~200 rows, V100 vs 40 cores)"),
+        None => println!("no measured crossover on this testbed (see EXPERIMENTS.md)"),
     }
 }

@@ -6,9 +6,11 @@
 //! and the bench records it (the paper's dip-at-40-cores OS-contention
 //! caveat becomes "everything contends" here).
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{RecursiveBackend, ShapBackend};
 use gputreeshap::bench::{dump_record, zoo, Table};
 use gputreeshap::gbdt::ZooSize;
-use gputreeshap::shap::treeshap;
 use gputreeshap::util::Json;
 
 const ROWS: usize = 512; // paper: 1M rows — scaled (DESIGN.md §5)
@@ -21,6 +23,7 @@ fn main() {
     let (model, data) = zoo::build(&entry);
     println!("fig6: {} — {} rows\n", entry.name, ROWS);
     let m = model.num_features;
+    let model = Arc::new(model);
     let rows = ROWS.min(data.rows);
     let x = &data.features[..rows * m];
 
@@ -28,12 +31,13 @@ fn main() {
     let mut base = None;
     let mut reference: Option<Vec<f32>> = None;
     for threads in [1usize, 2, 4, 8] {
+        let backend = RecursiveBackend::new(model.clone(), threads);
         // median of 3
         let mut times = Vec::new();
         let mut out = Vec::new();
         for _ in 0..3 {
             let t = std::time::Instant::now();
-            out = treeshap::shap_values(&model, x, rows, threads);
+            out = backend.contributions(x, rows).expect("contributions");
             times.push(t.elapsed().as_secs_f64());
         }
         times.sort_by(|a, b| a.total_cmp(b));

@@ -6,8 +6,7 @@
 //! heuristics; utilisation(none) worsens with shallower trees.
 
 use gputreeshap::bench::{dump_record, zoo, Table};
-use gputreeshap::shap::binpack::{pack, Packing, LANES};
-use gputreeshap::shap::model_paths;
+use gputreeshap::shap::{model_paths, pack, Packing, LANES};
 use gputreeshap::util::{time_it, Json};
 
 fn main() {

@@ -1,18 +1,19 @@
-//! Table 6 reproduction: SHAP-value throughput, CPU baseline (recursive
-//! Algorithm 1, all cores) vs the batched packed-DP engines — `host`
-//! (rust-native, the GPU algorithm on CPU) and `xla` (AOT Pallas kernel
-//! via PJRT).
+//! Table 6 reproduction: SHAP-value throughput across every registered
+//! backend — recursive Algorithm 1 (`cpu`), the host packed DP (`host`),
+//! and the XLA engines (`xla`, `xla-padded`) when compiled in and
+//! artifacts exist. All execution goes through `backend::ShapBackend`.
 //!
 //! The paper ran a V100 against 40 Xeon cores; this testbed has one CPU
 //! core and a CPU PJRT backend, so absolute speedups differ — what must
 //! reproduce is the *structure*: per-model ranking of work (small ≪ med
 //! ≪ large), engine overhead amortising with model size, and identical
-//! outputs across all engines (checked here row-for-row).
+//! outputs across all backends (checked here row-for-row).
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
 use gputreeshap::parallel::default_threads;
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{host_kernel, pack_model, pad_model, treeshap, Packing};
 use gputreeshap::util::{Json, Stats};
 
 const ROWS: usize = 256; // paper: 10 000 — scaled (DESIGN.md §5)
@@ -21,85 +22,72 @@ const ITERS: usize = 3;
 fn main() {
     let threads = default_threads();
     println!("table6: {ROWS} test rows, {threads} cpu thread(s), median of {ITERS}\n");
-    let mut table = Table::new(&[
-        "model", "cpu(s)", "std", "host(s)", "xla-warp(s)", "xla-pad(s)", "warp/cpu", "pad/cpu",
-    ]);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
+    let mut table = Table::new(&["model", "backend", "time(s)", "std", "rows/s", "vs cpu"]);
     for entry in zoo::zoo_entries() {
         let (model, data) = zoo::build(&entry);
         let m = model.num_features;
         let rows = ROWS.min(data.rows);
         let x = &data.features[..rows * m];
-        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        let model = Arc::new(model);
+        let cfg = BackendConfig { threads, rows_hint: rows, ..Default::default() };
 
-        let mut cpu_s = Vec::new();
-        let mut host_s = Vec::new();
-        let mut xla_s = Vec::new();
-        let mut pad_s = Vec::new();
-        let mut outs: Vec<Vec<f32>> = Vec::new();
-        let prep = engine.prepare(&pm, ArtifactKind::Shap, rows).expect("prepare");
-        let width = engine
-            .manifest
-            .select(ArtifactKind::ShapPadded, m, pm.max_depth.max(1), rows)
-            .expect("padded bucket")
-            .depth
-            + 1;
-        let pad = pad_model(&model, width);
-        let pad_prep = engine.prepare_padded(&pad, rows).expect("padded prepare");
-        for i in 0..ITERS {
-            let t = std::time::Instant::now();
-            let a = treeshap::shap_values(&model, x, rows, threads);
-            cpu_s.push(t.elapsed().as_secs_f64());
-            let t = std::time::Instant::now();
-            let b = host_kernel::shap_values(&pm, x, rows, threads);
-            host_s.push(t.elapsed().as_secs_f64());
-            let t = std::time::Instant::now();
-            let c = engine.shap_values(&pm, &prep, x, rows).expect("xla");
-            xla_s.push(t.elapsed().as_secs_f64());
-            let t = std::time::Instant::now();
-            let p = engine.shap_values_padded(&pad, &pad_prep, x, rows).expect("padded");
-            pad_s.push(t.elapsed().as_secs_f64());
-            if i == 0 {
-                outs = vec![a, b, c, p];
+        let mut cpu_p50: Option<f64> = None;
+        let mut reference: Option<Vec<f32>> = None;
+        for kind in BackendKind::ALL {
+            let b = match backend::build(&model, kind, &cfg) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("  [skip {} on {}: {e}]", kind.name(), entry.name);
+                    continue;
+                }
+            };
+            let mut times = Vec::new();
+            let mut out = Vec::new();
+            for _ in 0..ITERS {
+                let t = std::time::Instant::now();
+                out = b.contributions(x, rows).expect("contributions");
+                times.push(t.elapsed().as_secs_f64());
             }
+            // every backend must agree with the recursive oracle
+            match &reference {
+                Some(r) => {
+                    for (i, (a, c)) in r.iter().zip(&out).enumerate() {
+                        assert!(
+                            (a - c).abs() < 5e-2 + 5e-3 * a.abs(),
+                            "{} / {}: mismatch idx {i}: {a} vs {c}",
+                            entry.name,
+                            kind.name()
+                        );
+                    }
+                }
+                None => reference = Some(out),
+            }
+            let st = Stats::from_samples(&times);
+            if kind == BackendKind::Recursive {
+                cpu_p50 = Some(st.p50);
+            }
+            let vs_cpu = cpu_p50
+                .map(|c| format!("{:.2}x", c / st.p50))
+                .unwrap_or_else(|| "-".to_string());
+            table.row(vec![
+                entry.name.clone(),
+                kind.name().to_string(),
+                fmt_secs(st.p50),
+                fmt_secs(st.std),
+                format!("{:.0}", rows as f64 / st.p50),
+                vs_cpu,
+            ]);
+            dump_record(
+                "table6",
+                vec![
+                    ("model", Json::from(entry.name.as_str())),
+                    ("backend", Json::from(kind.name())),
+                    ("rows", Json::from(rows)),
+                    ("p50_s", Json::from(st.p50)),
+                    ("speedup_over_cpu", Json::from(cpu_p50.map_or(1.0, |c| c / st.p50))),
+                ],
+            );
         }
-        // all engines agree
-        for (i, (a, b)) in outs[0].iter().zip(&outs[1]).enumerate() {
-            assert!((a - b).abs() < 5e-3, "{}: host mismatch idx {i}", entry.name);
-        }
-        for (i, (a, c)) in outs[0].iter().zip(&outs[2]).enumerate() {
-            assert!((a - c).abs() < 5e-2 + 5e-3 * a.abs(), "{}: xla mismatch idx {i}: {a} vs {c}", entry.name);
-        }
-        for (i, (a, c)) in outs[0].iter().zip(&outs[3]).enumerate() {
-            assert!((a - c).abs() < 5e-2 + 5e-3 * a.abs(), "{}: padded mismatch idx {i}: {a} vs {c}", entry.name);
-        }
-        let cpu = Stats::from_samples(&cpu_s);
-        let xla = Stats::from_samples(&xla_s);
-        let host = Stats::from_samples(&host_s);
-        let pad_st = Stats::from_samples(&pad_s);
-        table.row(vec![
-            entry.name.clone(),
-            fmt_secs(cpu.p50),
-            fmt_secs(cpu.std),
-            fmt_secs(host.p50),
-            fmt_secs(xla.p50),
-            fmt_secs(pad_st.p50),
-            format!("{:.2}x", cpu.p50 / xla.p50),
-            format!("{:.2}x", cpu.p50 / pad_st.p50),
-        ]);
-        dump_record(
-            "table6",
-            vec![
-                ("model", Json::from(entry.name.as_str())),
-                ("rows", Json::from(ROWS)),
-                ("cpu_s", Json::from(cpu.p50)),
-                ("host_s", Json::from(host.p50)),
-                ("xla_s", Json::from(xla.p50)),
-                ("xla_padded_s", Json::from(pad_st.p50)),
-                ("speedup_xla_over_cpu", Json::from(cpu.p50 / xla.p50)),
-                ("speedup_padded_over_cpu", Json::from(cpu.p50 / pad_st.p50)),
-            ],
-        );
     }
     table.print();
 }

@@ -1,23 +1,24 @@
 //! Table 7 reproduction: SHAP *interaction* values — the paper's
-//! headline algorithmic win. Three engines:
+//! headline algorithmic win — across every backend that supports them:
 //!
 //! - `cpu`:  the O(T·L·D²·M) baseline (conditioning on every feature in
 //!           the tree, Algorithm 1 twice per feature) — what XGBoost does
 //! - `host`: the paper's O(T·L·D³) reformulation (condition only on
-//!           on-path features), rust-native
-//! - `xla`:  the same reformulation through the AOT Pallas kernel
+//!           on-path features) over packed tensors, rust-native
+//! - `xla`/`xla-padded`: the same reformulation through the AOT kernels
 //!
 //! On this 1-core testbed, the *algorithmic* gap (M/D ratio) is the
 //! reproducible signal: covtype (M=54, D≤8) and fashion_mnist96 (M=96)
 //! must show host ≫ cpu, while cal_housing (M=8 ≈ D) shows little —
 //! exactly the pattern of the paper's Table 7 (340× on fashion_mnist vs
-//! 11× on cal_housing).
+//! 11× on cal_housing). All execution goes through `backend::ShapBackend`.
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::parallel::default_threads;
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{host_kernel, interactions, pack_model, pad_model, Packing};
 use gputreeshap::util::Json;
 
 const ROWS: usize = 8; // paper: 200 — scaled (DESIGN.md §5)
@@ -25,10 +26,8 @@ const ROWS: usize = 8; // paper: 200 — scaled (DESIGN.md §5)
 fn main() {
     let threads = default_threads();
     println!("table7: {ROWS} test rows, {threads} cpu thread(s)\n");
-    let mut table = Table::new(&[
-        "model", "M", "D", "cpu(s)", "host(s)", "xla(s)", "xla-pad(s)", "host/cpu", "pad/cpu",
-    ]);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).expect("artifacts");
+    let mut table =
+        Table::new(&["model", "M", "D", "backend", "time(s)", "vs cpu"]);
 
     // interaction zoo: covtype / cal_housing / adult (small+med) and the
     // reduced-feature fashion variant (M=96; XLA buckets cap at M=128)
@@ -51,79 +50,71 @@ fn main() {
 
     for (name, model, data) in entries {
         let m = model.num_features;
+        let depth = model.max_depth();
         let rows = ROWS.min(data.rows);
         let x = &data.features[..rows * m];
-        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        let model = Arc::new(model);
+        let cfg = BackendConfig {
+            threads,
+            rows_hint: rows,
+            with_interactions: true,
+            ..Default::default()
+        };
 
-        let t = std::time::Instant::now();
-        let a = interactions::interaction_values(&model, x, rows, threads);
-        let cpu = t.elapsed().as_secs_f64();
-
-        let t = std::time::Instant::now();
-        let b = host_kernel::interaction_values(&pm, x, rows, threads);
-        let host = t.elapsed().as_secs_f64();
-
-        let prep = engine.prepare(&pm, ArtifactKind::Interactions, rows).expect("prepare");
-        let t = std::time::Instant::now();
-        let c = engine.interactions(&pm, &prep, x, rows).expect("xla");
-        let xla = t.elapsed().as_secs_f64();
-
-        let width = engine
-            .manifest
-            .select(ArtifactKind::InteractionsPadded, m, pm.max_depth.max(2), rows)
-            .expect("padded int bucket")
-            .depth
-            + 1;
-        let pad = pad_model(&model, width);
-        let pad_prep = engine
-            .prepare_padded_kind(&pad, ArtifactKind::InteractionsPadded, rows)
-            .expect("padded int prepare");
-        let t = std::time::Instant::now();
-        let cp = engine.interactions_padded(&pad, &pad_prep, x, rows).expect("padded");
-        let pad_t = t.elapsed().as_secs_f64();
-
-        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
-            assert!((p - q).abs() < 5e-3, "{name}: host mismatch idx {i}: {p} vs {q}");
-        }
-        for (i, (p, q)) in a.iter().zip(&c).enumerate() {
-            assert!(
-                (p - q).abs() < 5e-2 + 5e-3 * p.abs(),
-                "{name}: xla mismatch idx {i}: {p} vs {q}"
+        let mut cpu_t: Option<f64> = None;
+        let mut reference: Option<Vec<f32>> = None;
+        for kind in BackendKind::ALL {
+            let b = match backend::build(&model, kind, &cfg) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("  [skip {} on {name}: {e}]", kind.name());
+                    continue;
+                }
+            };
+            if !b.caps().supports_interactions {
+                eprintln!("  [skip {} on {name}: no interaction support]", kind.name());
+                continue;
+            }
+            let t = std::time::Instant::now();
+            let out = b.interactions(x, rows).expect("interactions");
+            let dt = t.elapsed().as_secs_f64();
+            match &reference {
+                Some(r) => {
+                    for (i, (a, c)) in r.iter().zip(&out).enumerate() {
+                        assert!(
+                            (a - c).abs() < 5e-2 + 5e-3 * a.abs(),
+                            "{name} / {}: mismatch idx {i}: {a} vs {c}",
+                            kind.name()
+                        );
+                    }
+                }
+                None => reference = Some(out),
+            }
+            if kind == BackendKind::Recursive {
+                cpu_t = Some(dt);
+            }
+            let vs_cpu =
+                cpu_t.map(|c| format!("{:.2}x", c / dt)).unwrap_or_else(|| "-".to_string());
+            table.row(vec![
+                name.clone(),
+                m.to_string(),
+                depth.to_string(),
+                kind.name().to_string(),
+                fmt_secs(dt),
+                vs_cpu,
+            ]);
+            dump_record(
+                "table7",
+                vec![
+                    ("model", Json::from(name.as_str())),
+                    ("backend", Json::from(kind.name())),
+                    ("features", Json::from(m)),
+                    ("depth", Json::from(depth)),
+                    ("time_s", Json::from(dt)),
+                    ("speedup_over_cpu", Json::from(cpu_t.map_or(1.0, |c| c / dt))),
+                ],
             );
         }
-        for (i, (p, q)) in a.iter().zip(&cp).enumerate() {
-            assert!(
-                (p - q).abs() < 5e-2 + 5e-3 * p.abs(),
-                "{name}: padded mismatch idx {i}: {p} vs {q}"
-            );
-        }
-
-        table.row(vec![
-            name.clone(),
-            m.to_string(),
-            pm.max_depth.to_string(),
-            fmt_secs(cpu),
-            fmt_secs(host),
-            fmt_secs(xla),
-            fmt_secs(pad_t),
-            format!("{:.2}x", cpu / host),
-            format!("{:.2}x", cpu / pad_t),
-        ]);
-        dump_record(
-            "table7",
-            vec![
-                ("model", Json::from(name.as_str())),
-                ("features", Json::from(m)),
-                ("depth", Json::from(pm.max_depth)),
-                ("cpu_s", Json::from(cpu)),
-                ("host_s", Json::from(host)),
-                ("xla_s", Json::from(xla)),
-                ("xla_padded_s", Json::from(pad_t)),
-                ("speedup_host_over_cpu", Json::from(cpu / host)),
-                ("speedup_xla_over_cpu", Json::from(cpu / xla)),
-                ("speedup_padded_over_cpu", Json::from(cpu / pad_t)),
-            ],
-        );
     }
     table.print();
     println!("\nexpected pattern (paper Table 7): speedups grow with M/D —");

@@ -1,0 +1,83 @@
+//! The host-native packed-DP [`ShapBackend`]: the GPU algorithm's
+//! prepare→pack→execute pipeline run on CPU over `PackedGroup` tensors.
+//! Both contributions and interactions flow through the packed
+//! representation (§3.4 inputs; §3.5 per-feature-pair DP) — the setup
+//! cost it reports is the *measured* packing time.
+
+use crate::backend::{planner, BackendCaps, BackendConfig, BackendKind, ModelShape, ShapBackend};
+use crate::gbdt::Model;
+use crate::shap::{host_kernel, pack_model, PackedModel, Packing};
+use crate::util::error::Result;
+use crate::util::time_it;
+
+pub struct HostPackedBackend {
+    pm: PackedModel,
+    packing: Packing,
+    threads: usize,
+    caps: BackendCaps,
+}
+
+impl HostPackedBackend {
+    pub fn new(model: &Model, packing: Packing, threads: usize) -> HostPackedBackend {
+        let shape = ModelShape::of(model);
+        let (pm, setup_s) = time_it(|| pack_model(model, packing));
+        let est = planner::estimate(BackendKind::Host, &shape);
+        HostPackedBackend {
+            pm,
+            packing,
+            threads,
+            caps: BackendCaps {
+                supports_interactions: true,
+                setup_cost_s: setup_s,
+                batch_overhead_s: est.batch_overhead_s,
+                rows_per_s: est.rows_per_s,
+            },
+        }
+    }
+
+    /// Construct from a [`BackendConfig`] (factory convenience).
+    pub fn from_config(model: &Model, cfg: &BackendConfig) -> HostPackedBackend {
+        HostPackedBackend::new(model, cfg.packing, cfg.threads)
+    }
+
+    /// The packed representation this backend executes over.
+    pub fn packed(&self) -> &PackedModel {
+        &self.pm
+    }
+}
+
+impl ShapBackend for HostPackedBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Host.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.pm.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.pm.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(host_kernel::shap_values(&self.pm, x, rows, self.threads))
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(host_kernel::interaction_values(&self.pm, x, rows, self.threads))
+    }
+
+    fn describe(&self) -> String {
+        let bins: usize = self.pm.groups.iter().map(|g| g.num_bins).sum();
+        format!(
+            "host[packed-dp, {} packing, {} bins, depth {}]",
+            self.packing.name(),
+            bins,
+            self.pm.max_depth
+        )
+    }
+}

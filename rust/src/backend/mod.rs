@@ -1,0 +1,254 @@
+//! The unified SHAP execution layer: every way of computing φ — the
+//! recursive CPU baseline, the host-native packed DP, and the XLA/PJRT
+//! engines (warp-packed and padded layouts) — implements [`ShapBackend`]
+//! behind one trait, and the [`Planner`] picks among them with the
+//! Fig 4 crossover heuristic.
+//!
+//! The coordinator, CLI, benches and parity tests all dispatch through
+//! this trait; no caller outside this module touches `host_kernel` or
+//! `ShapEngine` directly. Future algorithm backends (Fast TreeSHAP's
+//! precomputation variants, Linear TreeShap) slot in as additional
+//! [`BackendKind`]s with their own [`BackendCaps`].
+
+pub mod host;
+pub mod planner;
+pub mod recursive;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::gbdt::Model;
+use crate::shap::Packing;
+use crate::util::error::Result;
+
+pub use host::HostPackedBackend;
+pub use planner::{CostEstimate, ModelShape, Plan, Planner};
+pub use recursive::RecursiveBackend;
+#[cfg(feature = "xla")]
+pub use xla::{XlaPaddedBackend, XlaWarpBackend};
+
+/// What a backend can do, and the cost metadata the planner compares.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendCaps {
+    /// can this instance serve `interactions()`?
+    pub supports_interactions: bool,
+    /// one-time prepare cost (packing, device upload, compilation), s
+    pub setup_cost_s: f64,
+    /// fixed overhead paid per executed batch, s
+    pub batch_overhead_s: f64,
+    /// sustained contributions throughput estimate, rows/s
+    pub rows_per_s: f64,
+}
+
+/// One prepared SHAP execution engine over one model.
+///
+/// Output layouts (shared by every implementation):
+/// - `contributions`: `[rows × groups × (M+1)]`, base value in slot M.
+/// - `interactions`:  `[rows × groups × (M+1)²]`, base value at [M, M].
+/// - `predictions`:   `[rows × groups]` raw margin scores.
+pub trait ShapBackend {
+    fn name(&self) -> &'static str;
+    fn caps(&self) -> BackendCaps;
+    fn num_features(&self) -> usize;
+    fn num_groups(&self) -> usize;
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>>;
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>>;
+    /// Raw predictions; optional (not every backend carries leaf routing).
+    fn predictions(&self, _x: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        Err(crate::anyhow!("backend '{}' does not serve predictions", self.name()))
+    }
+    /// Human-readable detail (artifact bucket, packing, …) for logs.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+}
+
+/// The registered backend kinds. `XlaWarp`/`XlaPadded` parse and plan on
+/// every build, but construct only when compiled with `--features xla`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// recursive Algorithm 1 on the raw trees (`shap::treeshap`)
+    Recursive,
+    /// packed-path DP executed rust-native (`shap::host_kernel`)
+    Host,
+    /// AOT HLO artifacts over the warp-packed layout (PJRT)
+    XlaWarp,
+    /// AOT HLO artifacts over the padded-path layout (PJRT)
+    XlaPadded,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Recursive,
+        BackendKind::Host,
+        BackendKind::XlaWarp,
+        BackendKind::XlaPadded,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Recursive => "cpu",
+            BackendKind::Host => "host",
+            BackendKind::XlaWarp => "xla",
+            BackendKind::XlaPadded => "xla-padded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "cpu" | "recursive" => BackendKind::Recursive,
+            "host" => BackendKind::Host,
+            "xla" | "warp" | "xla-warp" => BackendKind::XlaWarp,
+            "xla-padded" | "padded" => BackendKind::XlaPadded,
+            _ => return None,
+        })
+    }
+
+    /// Is this kind present in the current binary?
+    pub fn compiled_in(&self) -> bool {
+        match self {
+            BackendKind::Recursive | BackendKind::Host => true,
+            BackendKind::XlaWarp | BackendKind::XlaPadded => cfg!(feature = "xla"),
+        }
+    }
+}
+
+/// Construction parameters shared by all backends.
+#[derive(Clone, Debug)]
+pub struct BackendConfig {
+    pub threads: usize,
+    pub packing: Packing,
+    pub artifacts_dir: PathBuf,
+    /// expected batch size (artifact bucket selection)
+    pub rows_hint: usize,
+    /// also prepare the interaction pipeline (device backends prepare
+    /// per-kind artifacts; host/recursive always support interactions)
+    pub with_interactions: bool,
+    /// also prepare the prediction pipeline where applicable
+    pub with_predict: bool,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            threads: crate::parallel::default_threads(),
+            packing: Packing::BestFitDecreasing,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            rows_hint: 256,
+            with_interactions: false,
+            with_predict: false,
+        }
+    }
+}
+
+/// Build one backend of the given kind over `model`.
+pub fn build(
+    model: &Arc<Model>,
+    kind: BackendKind,
+    cfg: &BackendConfig,
+) -> Result<Box<dyn ShapBackend>> {
+    match kind {
+        BackendKind::Recursive => {
+            Ok(Box::new(RecursiveBackend::new(Arc::clone(model), cfg.threads)))
+        }
+        BackendKind::Host => Ok(Box::new(HostPackedBackend::new(model, cfg.packing, cfg.threads))),
+        #[cfg(feature = "xla")]
+        BackendKind::XlaWarp => Ok(Box::new(XlaWarpBackend::new(model, cfg)?)),
+        #[cfg(feature = "xla")]
+        BackendKind::XlaPadded => Ok(Box::new(XlaPaddedBackend::new(model, cfg)?)),
+        #[cfg(not(feature = "xla"))]
+        BackendKind::XlaWarp | BackendKind::XlaPadded => Err(crate::anyhow!(
+            "backend '{}' requires building with `--features xla`",
+            kind.name()
+        )),
+    }
+}
+
+/// Every backend that actually constructs in this environment (compiled
+/// in, artifacts present, …), paired with its kind. Order follows
+/// `BackendKind::ALL`.
+pub fn available(model: &Arc<Model>, cfg: &BackendConfig) -> Vec<(BackendKind, Box<dyn ShapBackend>)> {
+    let mut out = Vec::new();
+    for kind in BackendKind::ALL {
+        if let Ok(b) = build(model, kind, cfg) {
+            out.push((kind, b));
+        }
+    }
+    out
+}
+
+/// Planner-driven construction: try backends in estimated-latency order
+/// for `cfg.rows_hint`-row batches, returning the first that builds (and
+/// supports interactions when `cfg.with_interactions` demands them).
+pub fn build_auto(
+    model: &Arc<Model>,
+    cfg: &BackendConfig,
+) -> Result<(Plan, Box<dyn ShapBackend>)> {
+    let planner = Planner::for_model(model);
+    let rows = cfg.rows_hint.clamp(1, 1 << 24);
+    let mut last_err = None;
+    for plan in planner.ranked(rows) {
+        match build(model, plan.kind, cfg) {
+            Ok(b) => {
+                if cfg.with_interactions && !b.caps().supports_interactions {
+                    continue;
+                }
+                return Ok((plan, b));
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| crate::anyhow!("no backend available")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn tiny_model() -> Arc<Model> {
+        let d = SynthSpec::cal_housing(0.004).generate();
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() }))
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("recursive"), Some(BackendKind::Recursive));
+        assert_eq!(BackendKind::parse("padded"), Some(BackendKind::XlaPadded));
+        assert_eq!(BackendKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn cpu_backends_always_available() {
+        let model = tiny_model();
+        let cfg = BackendConfig { threads: 1, ..Default::default() };
+        let avail = available(&model, &cfg);
+        let kinds: Vec<BackendKind> = avail.iter().map(|(k, _)| *k).collect();
+        assert!(kinds.contains(&BackendKind::Recursive));
+        assert!(kinds.contains(&BackendKind::Host));
+        for (_, b) in &avail {
+            assert_eq!(b.num_features(), model.num_features);
+            assert_eq!(b.num_groups(), model.num_groups);
+        }
+    }
+
+    #[test]
+    fn build_auto_returns_a_working_backend() {
+        let model = tiny_model();
+        let cfg =
+            BackendConfig { threads: 1, rows_hint: 4, with_interactions: true, ..Default::default() };
+        let (plan, b) = build_auto(&model, &cfg).unwrap();
+        assert!(plan.est_latency_s >= 0.0);
+        assert!(b.caps().supports_interactions);
+        let m = model.num_features;
+        let d = SynthSpec::cal_housing(0.004).generate();
+        let phis = b.contributions(&d.features[..4 * m], 4).unwrap();
+        assert_eq!(phis.len(), 4 * model.num_groups * (m + 1));
+    }
+}

@@ -1,0 +1,256 @@
+//! Crossover-aware backend planner (the Fig 4 heuristic as code).
+//!
+//! Every backend's batch latency is modelled as the paper's two-term
+//! line: `latency(rows) = batch_overhead + rows / throughput`. CPU-side
+//! backends have ~zero overhead but a per-row cost quadratic in path
+//! length (the DP unwind); the accelerator backends pay a fixed
+//! launch/upload overhead per batch but a far smaller per-row marginal.
+//! The planner picks the backend minimising estimated latency for the
+//! requested batch size — reproducing Fig 4's CPU/accelerator crossover
+//! — and exposes the predicted crossover point for benches to check
+//! against measurement.
+
+use crate::backend::BackendKind;
+use crate::gbdt::Model;
+use crate::shap::model_paths;
+
+/// Shape statistics the cost model keys on, derivable from the model
+/// alone (no packing or artifacts needed).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    pub features: usize,
+    pub groups: usize,
+    pub trees: usize,
+    pub leaves: usize,
+    pub max_depth: usize,
+    /// mean merged-path length (elements incl. the root element)
+    pub avg_path_len: f64,
+    /// longest merged-path length — the padded layout's element width
+    pub max_path_len: usize,
+}
+
+impl ModelShape {
+    pub fn of(model: &Model) -> ModelShape {
+        let paths = model_paths(model);
+        let total: usize = paths.iter().map(|(_, p)| p.len()).sum();
+        let max_path_len = paths.iter().map(|(_, p)| p.len()).max().unwrap_or(1);
+        ModelShape {
+            features: model.num_features,
+            groups: model.num_groups,
+            trees: model.trees.len(),
+            leaves: model.total_leaves(),
+            max_depth: model.max_depth(),
+            avg_path_len: total as f64 / paths.len().max(1) as f64,
+            max_path_len,
+        }
+    }
+}
+
+/// The two-term latency model for one backend, plus its one-time setup.
+#[derive(Clone, Copy, Debug)]
+pub struct CostEstimate {
+    pub setup_s: f64,
+    pub batch_overhead_s: f64,
+    pub rows_per_s: f64,
+}
+
+/// Default a-priori cost estimate for a backend on a model shape. The
+/// constants are rough single-core calibrations; what matters is the
+/// *structure* (overhead ordering vs per-row ordering), which produces
+/// the crossover. Benches record reality next to these predictions.
+pub fn estimate(kind: BackendKind, s: &ModelShape) -> CostEstimate {
+    let l = s.leaves.max(1) as f64;
+    let a = s.avg_path_len.max(1.0);
+    let w = s.max_path_len.max(1) as f64; // padded element-axis width
+    match kind {
+        // recursive Algorithm 1: no setup, no batch cost, O(L·a²) per row
+        BackendKind::Recursive => CostEstimate {
+            setup_s: 0.0,
+            batch_overhead_s: 0.0,
+            rows_per_s: 1.0 / (l * a * a * 40e-9),
+        },
+        // packed DP on host: pays packing once, smaller per-row constant
+        BackendKind::Host => CostEstimate {
+            setup_s: l * 2e-7,
+            batch_overhead_s: 1e-5,
+            rows_per_s: 1.0 / (l * a * a * 15e-9),
+        },
+        // warp-packed accelerator: compile+upload setup, launch overhead
+        // per batch, vectorised per-row marginal (linear in path length)
+        BackendKind::XlaWarp => CostEstimate {
+            setup_s: 0.5,
+            batch_overhead_s: 5e-3,
+            rows_per_s: 1.0 / (l * a * 0.4e-9),
+        },
+        // padded layout: gather-free (≈2× the warp constant) but pays
+        // the padding waste w/a on every element
+        BackendKind::XlaPadded => CostEstimate {
+            setup_s: 0.5,
+            batch_overhead_s: 4e-3,
+            rows_per_s: 1.0 / (l * w * 0.2e-9),
+        },
+    }
+}
+
+/// One planning decision: the chosen backend and its estimated latency.
+#[derive(Clone, Copy, Debug)]
+pub struct Plan {
+    pub kind: BackendKind,
+    pub est_latency_s: f64,
+}
+
+/// Picks backend + representation from model shape and batch size.
+pub struct Planner {
+    pub shape: ModelShape,
+    candidates: Vec<(BackendKind, CostEstimate)>,
+}
+
+impl Planner {
+    /// Planner over every backend kind compiled into this binary.
+    pub fn for_model(model: &Model) -> Planner {
+        let shape = ModelShape::of(model);
+        let candidates = BackendKind::ALL
+            .iter()
+            .copied()
+            .filter(|k| k.compiled_in())
+            .map(|k| (k, estimate(k, &shape)))
+            .collect();
+        Planner { shape, candidates }
+    }
+
+    /// Planner with explicit candidates (tests, measured calibrations).
+    pub fn with_candidates(
+        shape: ModelShape,
+        candidates: Vec<(BackendKind, CostEstimate)>,
+    ) -> Planner {
+        Planner { shape, candidates }
+    }
+
+    /// Estimated latency to explain `rows` rows in one batch.
+    pub fn batch_cost(&self, kind: BackendKind, rows: usize) -> Option<f64> {
+        self.candidates
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, c)| c.batch_overhead_s + rows as f64 / c.rows_per_s)
+    }
+
+    /// All candidates ordered by estimated latency for this batch size.
+    pub fn ranked(&self, rows: usize) -> Vec<Plan> {
+        let mut plans: Vec<Plan> = self
+            .candidates
+            .iter()
+            .map(|(k, c)| Plan {
+                kind: *k,
+                est_latency_s: c.batch_overhead_s + rows as f64 / c.rows_per_s,
+            })
+            .collect();
+        plans.sort_by(|a, b| a.est_latency_s.total_cmp(&b.est_latency_s));
+        plans
+    }
+
+    /// The winning backend for this batch size.
+    pub fn choose(&self, rows: usize) -> Plan {
+        self.ranked(rows)
+            .into_iter()
+            .next()
+            .expect("planner has no candidate backends")
+    }
+
+    /// Batch size at which `fast` overtakes `slow` (Fig 4's crossover):
+    /// `None` if `fast` never catches up, `Some(0)` if it always wins.
+    pub fn crossover_rows(&self, slow: BackendKind, fast: BackendKind) -> Option<usize> {
+        let cs = self.candidates.iter().find(|(k, _)| *k == slow)?.1;
+        let cf = self.candidates.iter().find(|(k, _)| *k == fast)?.1;
+        let d_over = cf.batch_overhead_s - cs.batch_overhead_s;
+        let d_rate = 1.0 / cs.rows_per_s - 1.0 / cf.rows_per_s;
+        if d_rate <= 0.0 {
+            return None;
+        }
+        if d_over <= 0.0 {
+            return Some(0);
+        }
+        Some((d_over / d_rate).ceil() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn synthetic_planner() -> Planner {
+        let shape = ModelShape {
+            features: 8,
+            groups: 1,
+            trees: 10,
+            leaves: 100,
+            max_depth: 6,
+            avg_path_len: 5.0,
+            max_path_len: 7,
+        };
+        Planner::with_candidates(
+            shape,
+            vec![
+                (
+                    BackendKind::Recursive,
+                    CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+                ),
+                (
+                    BackendKind::XlaWarp,
+                    CostEstimate { setup_s: 0.5, batch_overhead_s: 0.05, rows_per_s: 1e6 },
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn choice_straddles_the_crossover() {
+        // overhead 0.05s ÷ (1e-4 − 1e-6 s/row) ⇒ crossover ≈ 506 rows
+        let p = synthetic_planner();
+        let cross = p
+            .crossover_rows(BackendKind::Recursive, BackendKind::XlaWarp)
+            .expect("crossover exists");
+        assert!(cross > 1, "degenerate crossover {cross}");
+        let below = p.choose((cross / 2).max(1));
+        let above = p.choose(cross * 2);
+        assert_eq!(below.kind, BackendKind::Recursive, "below crossover → CPU");
+        assert_eq!(above.kind, BackendKind::XlaWarp, "above crossover → accelerator");
+        // and exactly at the crossover the accelerated backend has caught up
+        assert!(
+            p.batch_cost(BackendKind::XlaWarp, cross).unwrap()
+                <= p.batch_cost(BackendKind::Recursive, cross).unwrap() + 1e-9
+        );
+    }
+
+    #[test]
+    fn crossover_edge_cases() {
+        let p = synthetic_planner();
+        // slower per-row AND more overhead: never catches up
+        assert_eq!(p.crossover_rows(BackendKind::XlaWarp, BackendKind::Recursive), None);
+        // a backend vs itself: d_rate = 0 ⇒ None
+        assert_eq!(p.crossover_rows(BackendKind::Recursive, BackendKind::Recursive), None);
+        // unknown candidate ⇒ None
+        assert_eq!(p.crossover_rows(BackendKind::Recursive, BackendKind::Host), None);
+    }
+
+    #[test]
+    fn for_model_prefers_cheap_backends_on_tiny_batches() {
+        let d = SynthSpec::cal_housing(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() });
+        let p = Planner::for_model(&model);
+        assert!(p.shape.leaves > 0 && p.shape.avg_path_len >= 1.0);
+        let one = p.choose(1);
+        assert!(
+            matches!(one.kind, BackendKind::Recursive | BackendKind::Host),
+            "1-row batch should stay on a CPU backend, got {:?}",
+            one.kind
+        );
+        // cost is monotone in rows for every candidate
+        for k in [BackendKind::Recursive, BackendKind::Host] {
+            let c1 = p.batch_cost(k, 1).unwrap();
+            let c2 = p.batch_cost(k, 1000).unwrap();
+            assert!(c2 > c1);
+        }
+    }
+}

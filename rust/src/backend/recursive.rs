@@ -1,0 +1,74 @@
+//! The recursive Algorithm 1 baseline as a [`ShapBackend`]: zero setup,
+//! zero batch overhead, per-row cost quadratic in path depth. The
+//! planner's pick for small, latency-sensitive batches, and the parity
+//! oracle every other backend is checked against.
+
+use std::sync::Arc;
+
+use crate::backend::{planner, BackendCaps, BackendKind, ModelShape, ShapBackend};
+use crate::gbdt::Model;
+use crate::shap::{interactions, treeshap};
+use crate::util::error::Result;
+
+pub struct RecursiveBackend {
+    model: Arc<Model>,
+    threads: usize,
+    caps: BackendCaps,
+}
+
+impl RecursiveBackend {
+    pub fn new(model: Arc<Model>, threads: usize) -> RecursiveBackend {
+        let shape = ModelShape::of(&model);
+        let est = planner::estimate(BackendKind::Recursive, &shape);
+        RecursiveBackend {
+            model,
+            threads,
+            caps: BackendCaps {
+                supports_interactions: true,
+                setup_cost_s: est.setup_s,
+                batch_overhead_s: est.batch_overhead_s,
+                rows_per_s: est.rows_per_s,
+            },
+        }
+    }
+}
+
+impl ShapBackend for RecursiveBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Recursive.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.model.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.model.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(treeshap::shap_values(&self.model, x, rows, self.threads))
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(interactions::interaction_values(&self.model, x, rows, self.threads))
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let m = self.model.num_features;
+        let g = self.model.num_groups;
+        let mut out = Vec::with_capacity(rows * g);
+        for r in 0..rows {
+            out.extend(self.model.predict_row_raw(&x[r * m..(r + 1) * m]));
+        }
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu[recursive, {} threads]", self.threads)
+    }
+}

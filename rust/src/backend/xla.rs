@@ -1,0 +1,215 @@
+//! The PJRT/XLA [`ShapBackend`]s: AOT HLO artifacts executed on device,
+//! in both model representations — warp-packed (faithful CUDA layout
+//! adaptation) and padded-path (gather-free perf variant). Artifact
+//! selection, device upload and compilation happen once at construction;
+//! the reported setup cost is measured, so the planner's a-priori
+//! estimate can be compared against reality.
+
+use std::time::Instant;
+
+use crate::backend::{planner, BackendCaps, BackendConfig, BackendKind, ModelShape, ShapBackend};
+use crate::gbdt::Model;
+use crate::runtime::engine::{Prepared, PreparedPadded, ShapEngine};
+use crate::runtime::manifest::ArtifactKind;
+use crate::shap::{pack_model, pad_model, PackedModel, PaddedModel};
+use crate::util::error::Result;
+
+/// Warp-packed layout: 32-lane bins, the paper's §3.3 representation.
+pub struct XlaWarpBackend {
+    pm: PackedModel,
+    engine: ShapEngine,
+    prep: Prepared,
+    prep_int: Option<Prepared>,
+    /// why the interactions pipeline is unavailable, when it is
+    int_err: Option<String>,
+    prep_pred: Option<Prepared>,
+    caps: BackendCaps,
+}
+
+impl XlaWarpBackend {
+    pub fn new(model: &Model, cfg: &BackendConfig) -> Result<XlaWarpBackend> {
+        let shape = ModelShape::of(model);
+        let t0 = Instant::now();
+        let pm = pack_model(model, cfg.packing);
+        let mut engine = ShapEngine::new(&cfg.artifacts_dir)?;
+        let prep = engine.prepare(&pm, ArtifactKind::Shap, cfg.rows_hint)?;
+        // a missing/broken interactions artifact must not take the
+        // contributions path down with it: degrade to
+        // supports_interactions = false, but keep the cause
+        let (prep_int, int_err) = if cfg.with_interactions {
+            match engine.prepare(&pm, ArtifactKind::Interactions, cfg.rows_hint) {
+                Ok(p) => (Some(p), None),
+                Err(e) => (None, Some(format!("{e:#}"))),
+            }
+        } else {
+            (None, Some("built without with_interactions".to_string()))
+        };
+        let prep_pred = if cfg.with_predict {
+            engine.prepare(&pm, ArtifactKind::Predict, cfg.rows_hint).ok()
+        } else {
+            None
+        };
+        let est = planner::estimate(BackendKind::XlaWarp, &shape);
+        let caps = BackendCaps {
+            supports_interactions: prep_int.is_some(),
+            setup_cost_s: t0.elapsed().as_secs_f64(),
+            batch_overhead_s: est.batch_overhead_s,
+            rows_per_s: est.rows_per_s,
+        };
+        Ok(XlaWarpBackend { pm, engine, prep, prep_int, int_err, prep_pred, caps })
+    }
+
+    /// The artifact bucket serving contributions.
+    pub fn artifact(&self) -> &str {
+        &self.prep.artifact
+    }
+}
+
+impl ShapBackend for XlaWarpBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::XlaWarp.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.pm.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.pm.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.engine.shap_values(&self.pm, &self.prep, x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        match &self.prep_int {
+            Some(p) => self.engine.interactions(&self.pm, p, x, rows),
+            None => Err(crate::anyhow!(
+                "xla backend cannot serve interactions: {}",
+                self.int_err.as_deref().unwrap_or("no interactions artifact")
+            )),
+        }
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        match &self.prep_pred {
+            Some(p) => self.engine.predict(&self.pm, p, x, rows),
+            None => Err(crate::anyhow!(
+                "xla backend prepared without a predict artifact (set with_predict)"
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("xla[warp, artifact {}]", self.prep.artifact)
+    }
+}
+
+/// Padded-path layout: one row per path, element axis padded to the
+/// artifact depth bucket (gather-free DP, the optimized default).
+pub struct XlaPaddedBackend {
+    pm: PaddedModel,
+    engine: ShapEngine,
+    prep: PreparedPadded,
+    /// interactions may need a different element width — own model+prep
+    pad_int: Option<(PaddedModel, PreparedPadded)>,
+    /// why the interactions pipeline is unavailable, when it is
+    int_err: Option<String>,
+    caps: BackendCaps,
+}
+
+impl XlaPaddedBackend {
+    pub fn new(model: &Model, cfg: &BackendConfig) -> Result<XlaPaddedBackend> {
+        let shape = ModelShape::of(model);
+        let m = model.num_features;
+        let depth = shape.max_path_len.saturating_sub(1).max(1);
+        let t0 = Instant::now();
+        let mut engine = ShapEngine::new(&cfg.artifacts_dir)?;
+        let width = engine
+            .manifest
+            .select(ArtifactKind::ShapPadded, m, depth, cfg.rows_hint)?
+            .depth
+            + 1;
+        let pm = pad_model(model, width);
+        let prep = engine.prepare_padded(&pm, cfg.rows_hint)?;
+        // a missing/broken interactions artifact must not take the
+        // contributions path down with it: degrade to
+        // supports_interactions = false, but keep the cause
+        let (pad_int, int_err) = if cfg.with_interactions {
+            let picked = engine
+                .manifest
+                .select(ArtifactKind::InteractionsPadded, m, depth.max(2), cfg.rows_hint)
+                .map(|s| s.depth + 1);
+            match picked {
+                Ok(w) => {
+                    let pmi = pad_model(model, w);
+                    match engine.prepare_padded_kind(
+                        &pmi,
+                        ArtifactKind::InteractionsPadded,
+                        cfg.rows_hint,
+                    ) {
+                        Ok(prepi) => (Some((pmi, prepi)), None),
+                        Err(e) => (None, Some(format!("{e:#}"))),
+                    }
+                }
+                Err(e) => (None, Some(format!("{e:#}"))),
+            }
+        } else {
+            (None, Some("built without with_interactions".to_string()))
+        };
+        let est = planner::estimate(BackendKind::XlaPadded, &shape);
+        let caps = BackendCaps {
+            supports_interactions: pad_int.is_some(),
+            setup_cost_s: t0.elapsed().as_secs_f64(),
+            batch_overhead_s: est.batch_overhead_s,
+            rows_per_s: est.rows_per_s,
+        };
+        Ok(XlaPaddedBackend { pm, engine, prep, pad_int, int_err, caps })
+    }
+
+    /// The artifact bucket serving contributions.
+    pub fn artifact(&self) -> &str {
+        &self.prep.artifact
+    }
+}
+
+impl ShapBackend for XlaPaddedBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::XlaPadded.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.pm.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.pm.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.engine.shap_values_padded(&self.pm, &self.prep, x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        match &self.pad_int {
+            Some((pmi, prepi)) => self.engine.interactions_padded(pmi, prepi, x, rows),
+            None => Err(crate::anyhow!(
+                "xla-padded backend cannot serve interactions: {}",
+                self.int_err.as_deref().unwrap_or("no interactions artifact")
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("xla[padded, artifact {}]", self.prep.artifact)
+    }
+}

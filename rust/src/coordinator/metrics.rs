@@ -1,10 +1,40 @@
-//! Serving metrics: counters + latency histogram, lock-light.
+//! Serving metrics: counters + latency histogram, lock-light, plus
+//! per-backend execution counters (rows served, batches, latency
+//! percentiles) so multi-backend deployments can be compared in the
+//! service stats output.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::{Json, Stats};
+
+/// Cap on retained per-backend latency samples: a sliding window keeps
+/// p50/p99 meaningful at O(1) memory on long-running services.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Per-backend execution tallies (batch-granular).
+#[derive(Clone, Debug, Default)]
+pub struct BackendCounters {
+    pub rows: u64,
+    pub batches: u64,
+    /// per-batch execution latencies, seconds (last `LATENCY_WINDOW`)
+    pub latencies: Vec<f64>,
+    /// ring cursor once `latencies` is full
+    next: usize,
+}
+
+impl BackendCounters {
+    fn push_latency(&mut self, v: f64) {
+        if self.latencies.len() < LATENCY_WINDOW {
+            self.latencies.push(v);
+        } else {
+            self.latencies[self.next] = v;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -15,6 +45,7 @@ pub struct Metrics {
     pub errors: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
+    per_backend: Mutex<BTreeMap<String, BackendCounters>>,
 }
 
 impl Metrics {
@@ -44,12 +75,47 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One executed batch on the named backend.
+    pub fn record_backend_batch(&self, backend: &str, rows: usize, d: Duration) {
+        let mut map = self.per_backend.lock().unwrap();
+        let c = map.entry(backend.to_string()).or_default();
+        c.rows += rows as u64;
+        c.batches += 1;
+        c.push_latency(d.as_secs_f64());
+    }
+
     pub fn latency_stats(&self) -> Stats {
         Stats::from_samples(&self.latencies.lock().unwrap())
     }
 
     pub fn batch_stats(&self) -> Stats {
         Stats::from_samples(&self.batch_sizes.lock().unwrap())
+    }
+
+    /// Per-backend counters, cloned out of the lock.
+    pub fn backend_counters(&self) -> BTreeMap<String, BackendCounters> {
+        self.per_backend.lock().unwrap().clone()
+    }
+
+    /// Per-backend stats as JSON: name → {rows, batches, p50_s, p99_s}.
+    pub fn backend_snapshot(&self) -> Json {
+        let map = self.backend_counters();
+        Json::Obj(
+            map.into_iter()
+                .map(|(name, c)| {
+                    let lat = Stats::from_samples(&c.latencies);
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("rows", Json::from(c.rows as usize)),
+                            ("batches", Json::from(c.batches as usize)),
+                            ("batch_p50_s", Json::from(lat.p50)),
+                            ("batch_p99_s", Json::from(lat.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
     }
 
     pub fn snapshot(&self) -> Json {
@@ -63,8 +129,10 @@ impl Metrics {
             ("errors", Json::from(self.errors.load(Ordering::Relaxed) as usize)),
             ("latency_p50_s", Json::from(lat.p50)),
             ("latency_p95_s", Json::from(lat.p95)),
+            ("latency_p99_s", Json::from(lat.p99)),
             ("latency_mean_s", Json::from(lat.mean)),
             ("mean_batch_rows", Json::from(bat.mean)),
+            ("backends", self.backend_snapshot()),
         ])
     }
 }
@@ -86,5 +154,28 @@ mod tests {
         assert_eq!(snap.get("rows").unwrap().as_usize().unwrap(), 15);
         let p50 = snap.get("latency_p50_s").unwrap().as_f64().unwrap();
         assert!(p50 >= 0.01 && p50 <= 0.03);
+    }
+
+    #[test]
+    fn per_backend_counters_aggregate() {
+        let m = Metrics::new();
+        m.record_backend_batch("host", 32, Duration::from_millis(4));
+        m.record_backend_batch("host", 16, Duration::from_millis(8));
+        m.record_backend_batch("xla", 256, Duration::from_millis(2));
+        let counters = m.backend_counters();
+        assert_eq!(counters["host"].rows, 48);
+        assert_eq!(counters["host"].batches, 2);
+        assert_eq!(counters["xla"].rows, 256);
+        // the latency window is bounded
+        for _ in 0..(LATENCY_WINDOW + 100) {
+            m.record_backend_batch("host", 1, Duration::from_micros(5));
+        }
+        assert_eq!(m.backend_counters()["host"].latencies.len(), LATENCY_WINDOW);
+        let snap = m.snapshot();
+        let be = snap.get("backends").unwrap();
+        assert_eq!(be.get("host").unwrap().get("rows").unwrap().as_usize().unwrap(), 48);
+        assert_eq!(be.get("xla").unwrap().get("batches").unwrap().as_usize().unwrap(), 1);
+        let p99 = be.get("host").unwrap().get("batch_p99_s").unwrap().as_f64().unwrap();
+        assert!(p99 >= 0.004);
     }
 }

@@ -1,11 +1,13 @@
-//! L3 serving coordinator: dynamic batching, device workers,
+//! L3 serving coordinator: dynamic batching, backend workers,
 //! backpressure, metrics — SHAP explanations as a service with python
-//! nowhere on the request path.
+//! nowhere on the request path. Workers execute through the
+//! `backend::ShapBackend` trait, so any registered backend (recursive,
+//! host packed DP, XLA warp/padded) can serve.
 
 pub mod batcher;
 pub mod metrics;
 pub mod service;
 
 pub use batcher::Batcher;
-pub use metrics::Metrics;
-pub use service::{ModelRep, ServiceConfig, ShapService};
+pub use metrics::{BackendCounters, Metrics};
+pub use service::{BackendFactory, ServiceConfig, ShapService, Task};

@@ -1,59 +1,65 @@
-//! The serving coordinator: SHAP-as-a-service over the XLA runtime.
+//! The serving coordinator: SHAP-as-a-service over any [`ShapBackend`].
 //!
 //! Topology (vLLM-router-like, scaled to this problem):
 //!
 //! ```text
 //!   clients --submit()--> bounded ingress --batcher thread--+
 //!                                                           v
-//!                                             job queue (batches)
+//!                                   per-task job queues (batches)
 //!                                                           v
-//!                      worker threads (one engine+device each) --responses-->
+//!                  worker threads (one ShapBackend each) --responses-->
 //! ```
+//!
+//! Workers are backend-agnostic: each builds its own backend instance
+//! from a [`BackendFactory`] (device clients and buffers are constructed
+//! on the thread that uses them) and dispatches through the trait, so
+//! the recursive CPU path, the host packed DP and the XLA engines are
+//! all served by the same coordinator. Contributions *and* interactions
+//! flow through the same ingress → batcher → worker pipeline; batches
+//! are kept task-homogeneous by batching per [`Task`].
 //!
 //! Backpressure: the ingress channel is bounded; `submit` fails fast when
 //! the queue is full (callers see `Rejected`). The batcher coalesces
-//! requests up to the artifact row bucket or `max_wait`, whichever first.
+//! requests up to `max_batch_rows` or `max_wait`, whichever first.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
+use crate::backend::{self, BackendConfig, BackendKind, ShapBackend};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
-use crate::runtime::engine::ShapEngine;
-use crate::runtime::manifest::ArtifactKind;
-use crate::shap::packed::{PackedModel, PaddedModel};
+use crate::gbdt::Model;
+use crate::util::error::Result;
 
-/// Which device layout the workers execute (DESIGN.md §Perf: padded is
-/// the optimized default; warp is the faithful CUDA adaptation).
-pub enum ModelRep {
-    Warp(Arc<PackedModel>),
-    Padded(Arc<PaddedModel>),
+/// Which computation a request wants; batches are task-homogeneous.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Contributions,
+    Interactions,
 }
 
-impl ModelRep {
-    fn num_features(&self) -> usize {
+impl Task {
+    const ALL: [Task; 2] = [Task::Contributions, Task::Interactions];
+
+    fn index(self) -> usize {
         match self {
-            ModelRep::Warp(m) => m.num_features,
-            ModelRep::Padded(m) => m.num_features,
-        }
-    }
-    fn num_groups(&self) -> usize {
-        match self {
-            ModelRep::Warp(m) => m.num_groups,
-            ModelRep::Padded(m) => m.num_groups,
+            Task::Contributions => 0,
+            Task::Interactions => 1,
         }
     }
 }
+
+/// Builds one backend instance per worker thread.
+pub type BackendFactory = dyn Fn() -> Result<Box<dyn ShapBackend>> + Send + Sync;
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// worker threads, one backend instance (device) each
     pub devices: usize,
-    pub artifacts_dir: std::path::PathBuf,
-    /// flush threshold (defaults to the artifact row bucket)
+    /// flush threshold in rows
     pub max_batch_rows: usize,
     pub max_wait: Duration,
     /// ingress queue capacity (requests) — the backpressure bound
@@ -64,7 +70,6 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             devices: 1,
-            artifacts_dir: crate::runtime::default_artifacts_dir(),
             max_batch_rows: 256,
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
@@ -72,15 +77,17 @@ impl Default for ServiceConfig {
     }
 }
 
-/// One explain request: feature rows in, φ rows out.
+/// One explain request: feature rows in, φ (or Φ) rows out.
 struct Request {
     x: Vec<f32>,
     rows: usize,
+    task: Task,
     resp: Sender<Result<Vec<f32>>>,
     submitted: Instant,
 }
 
 struct Batch {
+    task: Task,
     requests: Vec<Request>,
     rows: usize,
 }
@@ -98,57 +105,29 @@ pub struct ShapService {
     pub metrics: Arc<Metrics>,
 }
 
-enum WorkerEngine {
-    Warp(crate::runtime::engine::Prepared),
-    Padded(crate::runtime::engine::PreparedPadded),
-}
-
 impl ShapService {
-    /// Start the service with the warp-packed layout.
-    pub fn start(pm: Arc<PackedModel>, cfg: ServiceConfig) -> Result<ShapService> {
-        Self::start_rep(Arc::new(ModelRep::Warp(pm)), cfg)
-    }
-
-    /// Start the service with the padded-path layout (optimized default).
-    pub fn start_padded(pm: Arc<PaddedModel>, cfg: ServiceConfig) -> Result<ShapService> {
-        Self::start_rep(Arc::new(ModelRep::Padded(pm)), cfg)
-    }
-
-    /// Start the service for one device-layout model representation.
-    pub fn start_rep(pm: Arc<ModelRep>, cfg: ServiceConfig) -> Result<ShapService> {
+    /// Start workers over backends built by `factory`.
+    pub fn start_with_factory(factory: Arc<BackendFactory>, cfg: ServiceConfig) -> Result<ShapService> {
         let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
         let (job_tx, job_rx) = sync_channel::<Batch>(cfg.devices * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
 
-        // worker threads: one engine (device + compiled artifacts) each
+        // worker threads: one backend (device + prepared model) each
         let mut worker_handles = Vec::new();
         let ready = Arc::new(std::sync::Barrier::new(cfg.devices + 1));
         let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         for _ in 0..cfg.devices {
-            let pm = pm.clone();
-            let dir = cfg.artifacts_dir.clone();
+            let factory = factory.clone();
             let job_rx = job_rx.clone();
             let metrics = metrics.clone();
             let ready = ready.clone();
             let init_err = init_err.clone();
             worker_handles.push(std::thread::spawn(move || {
-                let built = (|| -> Result<_> {
-                    let mut engine = ShapEngine::new(&dir)?;
-                    let prep = match pm.as_ref() {
-                        ModelRep::Warp(m) => WorkerEngine::Warp(
-                            engine.prepare(m, ArtifactKind::Shap, usize::MAX)?,
-                        ),
-                        ModelRep::Padded(m) => {
-                            WorkerEngine::Padded(engine.prepare_padded(m, usize::MAX)?)
-                        }
-                    };
-                    Ok((engine, prep))
-                })();
-                let (engine, prep) = match built {
-                    Ok(v) => {
+                let backend = match factory() {
+                    Ok(b) => {
                         ready.wait();
-                        v
+                        b
                     }
                     Err(e) => {
                         *init_err.lock().unwrap() = Some(format!("{e:#}"));
@@ -162,7 +141,7 @@ impl ShapService {
                         guard.recv()
                     };
                     let Ok(batch) = batch else { return };
-                    process_batch(&engine, &prep, &pm, batch, &metrics);
+                    process_batch(backend.as_ref(), batch, &metrics);
                 }
             }));
         }
@@ -192,12 +171,48 @@ impl ShapService {
         })
     }
 
-    /// Submit rows for explanation; returns the response channel.
+    /// Start with one concrete backend kind over `model`.
+    pub fn start(
+        model: Arc<Model>,
+        kind: BackendKind,
+        bcfg: BackendConfig,
+        cfg: ServiceConfig,
+    ) -> Result<ShapService> {
+        let factory: Arc<BackendFactory> =
+            Arc::new(move || backend::build(&model, kind, &bcfg));
+        Self::start_with_factory(factory, cfg)
+    }
+
+    /// Planner-driven start: rank backend kinds by estimated latency for
+    /// `max_batch_rows`-row batches and probe-build through
+    /// `backend::build_auto` (so capability gaps, e.g. a model with no
+    /// interaction artifact bucket, disqualify a kind up front), then
+    /// start workers on the winning kind. Returns the chosen kind
+    /// alongside the service.
+    pub fn start_planned(
+        model: Arc<Model>,
+        bcfg: BackendConfig,
+        cfg: ServiceConfig,
+    ) -> Result<(BackendKind, ShapService)> {
+        let mut probe_cfg = bcfg;
+        probe_cfg.rows_hint = cfg.max_batch_rows.clamp(1, 1 << 24);
+        let (plan, probe) = backend::build_auto(&model, &probe_cfg)?;
+        drop(probe); // workers build their own instances on their threads
+        let svc = Self::start(model, plan.kind, probe_cfg, cfg)?;
+        Ok((plan.kind, svc))
+    }
+
+    /// Submit rows for a task; returns the response channel.
     /// Fails fast with `Rejected` when the ingress queue is full.
-    pub fn submit(&self, x: Vec<f32>, rows: usize) -> Result<Receiver<Result<Vec<f32>>>> {
+    pub fn submit_task(
+        &self,
+        task: Task,
+        x: Vec<f32>,
+        rows: usize,
+    ) -> Result<Receiver<Result<Vec<f32>>>> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.metrics.record_request(rows);
-        let req = Request { x, rows, resp: tx, submitted: Instant::now() };
+        let req = Request { x, rows, task, resp: tx, submitted: Instant::now() };
         match self.ingress.try_send(Ingress::Req(req)) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
@@ -208,9 +223,30 @@ impl ShapService {
         }
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Submit a contributions request.
+    pub fn submit(&self, x: Vec<f32>, rows: usize) -> Result<Receiver<Result<Vec<f32>>>> {
+        self.submit_task(Task::Contributions, x, rows)
+    }
+
+    /// Submit an interactions request.
+    pub fn submit_interactions(
+        &self,
+        x: Vec<f32>,
+        rows: usize,
+    ) -> Result<Receiver<Result<Vec<f32>>>> {
+        self.submit_task(Task::Interactions, x, rows)
+    }
+
+    /// Blocking convenience: submit contributions and wait.
     pub fn explain(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
         self.submit(x, rows)?
+            .recv()
+            .map_err(|_| anyhow!("service dropped response"))?
+    }
+
+    /// Blocking convenience: submit interactions and wait.
+    pub fn explain_interactions(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        self.submit_interactions(x, rows)?
             .recv()
             .map_err(|_| anyhow!("service dropped response"))?
     }
@@ -234,65 +270,75 @@ fn run_batcher(
     max_wait: Duration,
     metrics: Arc<Metrics>,
 ) {
-    let mut batcher: Batcher<Request> = Batcher::new(max_rows, max_wait);
+    let mut batchers: [Batcher<Request>; 2] =
+        [Batcher::new(max_rows, max_wait), Batcher::new(max_rows, max_wait)];
     loop {
-        let timeout = if batcher.is_empty() { Duration::from_millis(50) } else { max_wait };
+        let timeout = if batchers.iter().all(|b| b.is_empty()) {
+            Duration::from_millis(50)
+        } else {
+            max_wait
+        };
         match ingress.recv_timeout(timeout) {
             Ok(Ingress::Req(req)) => {
-                let rows = req.rows;
-                batcher.push(rows, req);
+                let (rows, i) = (req.rows, req.task.index());
+                batchers[i].push(rows, req);
             }
             Ok(Ingress::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
-        while batcher.ready(Instant::now()) {
-            dispatch(&mut batcher, &job_tx, &metrics);
+        for task in Task::ALL {
+            while batchers[task.index()].ready(Instant::now()) {
+                dispatch(&mut batchers[task.index()], task, &job_tx, &metrics);
+            }
         }
     }
     // drain on shutdown
-    while !batcher.is_empty() {
-        dispatch(&mut batcher, &job_tx, &metrics);
+    for task in Task::ALL {
+        while !batchers[task.index()].is_empty() {
+            dispatch(&mut batchers[task.index()], task, &job_tx, &metrics);
+        }
     }
 }
 
-fn dispatch(batcher: &mut Batcher<Request>, job_tx: &SyncSender<Batch>, metrics: &Metrics) {
+fn dispatch(
+    batcher: &mut Batcher<Request>,
+    task: Task,
+    job_tx: &SyncSender<Batch>,
+    metrics: &Metrics,
+) {
     let pending = batcher.take_batch();
     if pending.is_empty() {
         return;
     }
     let rows: usize = pending.iter().map(|p| p.rows).sum();
     metrics.record_batch(rows);
-    let batch = Batch { requests: pending.into_iter().map(|p| p.payload).collect(), rows };
+    let batch =
+        Batch { task, requests: pending.into_iter().map(|p| p.payload).collect(), rows };
     // blocking send: workers apply backpressure to the batcher
     let _ = job_tx.send(batch);
 }
 
-fn process_batch(
-    engine: &ShapEngine,
-    prep: &WorkerEngine,
-    pm: &ModelRep,
-    batch: Batch,
-    metrics: &Metrics,
-) {
-    let m = pm.num_features();
-    // concatenate request rows into one device batch
+fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) {
+    let m = backend.num_features();
+    let groups = backend.num_groups();
+    // concatenate request rows into one backend batch
     let mut x = Vec::with_capacity(batch.rows * m);
     for r in &batch.requests {
         x.extend_from_slice(&r.x);
     }
-    let result = match (pm, prep) {
-        (ModelRep::Warp(pm), WorkerEngine::Warp(prep)) => {
-            engine.shap_values(pm, prep, &x, batch.rows)
-        }
-        (ModelRep::Padded(pm), WorkerEngine::Padded(prep)) => {
-            engine.shap_values_padded(pm, prep, &x, batch.rows)
-        }
-        _ => unreachable!("layout mismatch"),
+    let t0 = Instant::now();
+    let result = match batch.task {
+        Task::Contributions => backend.contributions(&x, batch.rows),
+        Task::Interactions => backend.interactions(&x, batch.rows),
+    };
+    let stride = match batch.task {
+        Task::Contributions => groups * (m + 1),
+        Task::Interactions => groups * (m + 1) * (m + 1),
     };
     match result {
         Ok(all) => {
-            let stride = pm.num_groups() * (m + 1);
+            metrics.record_backend_batch(backend.name(), batch.rows, t0.elapsed());
             let mut offset = 0;
             for req in batch.requests {
                 let vals = all[offset * stride..(offset + req.rows) * stride].to_vec();

@@ -47,15 +47,11 @@ impl BinnedMatrix {
 
         let mut bins = vec![0u8; rows * cols];
         let cuts_ref = &cuts;
-        let bins_ptr = bins.as_mut_ptr() as usize;
-        parallel::parallel_for_chunks(threads, rows, 256, |range| {
-            for r in range {
+        parallel::parallel_for_rows(threads, &mut bins, cols, 256, |range, chunk| {
+            for (i, r) in range.enumerate() {
                 for f in 0..cols {
                     let v = data.get(r, f);
-                    let b = bin_of(&cuts_ref[f], v);
-                    unsafe {
-                        *(bins_ptr as *mut u8).add(r * cols + f) = b;
-                    }
+                    chunk[i * cols + f] = bin_of(&cuts_ref[f], v);
                 }
             }
         });

@@ -47,15 +47,10 @@ impl Model {
     pub fn predict_raw(&self, data: &Dataset, threads: usize) -> Vec<f32> {
         let groups = self.num_groups;
         let mut out = vec![0.0f32; data.rows * groups];
-        let out_ptr = out.as_mut_ptr() as usize;
-        parallel::parallel_for_chunks(threads, data.rows, 256, |range| {
-            for r in range {
+        parallel::parallel_for_rows(threads, &mut out, groups, 256, |range, chunk| {
+            for (k, r) in range.enumerate() {
                 let p = self.predict_row_raw(data.row(r));
-                for (g, v) in p.iter().enumerate() {
-                    unsafe {
-                        *(out_ptr as *mut f32).add(r * groups + g) = *v;
-                    }
-                }
+                chunk[k * groups..(k + 1) * groups].copy_from_slice(&p);
             }
         });
         out

@@ -59,7 +59,7 @@ pub fn train(data: &Dataset, params: &TrainParams) -> Model {
     let binned = BinnedMatrix::build(data, params.max_bins, params.threads);
 
     let rows = data.rows;
-    let scores = vec![0.0f32; rows * groups];
+    let mut scores = vec![0.0f32; rows * groups];
     let mut grad = vec![0.0f32; rows];
     let mut hess = vec![0.0f32; rows];
     let mut trees = Vec::with_capacity(params.rounds * groups);
@@ -70,13 +70,9 @@ pub fn train(data: &Dataset, params: &TrainParams) -> Model {
             objective.grad_hess(&scores, &data.labels, k, &mut grad, &mut hess);
             let tree = grow_tree(&binned, &grad, &hess, params);
             // update raw scores for group k
-            parallel::parallel_for_chunks(params.threads, rows, 512, |range| {
-                let scores_ptr = scores.as_ptr() as usize;
-                for r in range {
-                    let p = tree.predict_row(data.row(r));
-                    unsafe {
-                        *(scores_ptr as *mut f32).add(r * groups + k) += p;
-                    }
+            parallel::parallel_for_rows(params.threads, &mut scores, groups, 512, |range, chunk| {
+                for (i, r) in range.enumerate() {
+                    chunk[i * groups + k] += tree.predict_row(data.row(r));
                 }
             });
             trees.push(tree);

@@ -13,7 +13,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::gbdt::loss::Objective;
 use crate::gbdt::tree::Tree;

@@ -14,6 +14,7 @@
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured evaluation.
 
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -1,29 +1,35 @@
 //! gputreeshap — CLI for the GPUTreeShap reproduction.
 //!
 //! ```text
-//! gputreeshap train   --dataset cal_housing --scale 0.05 --rounds 50 --depth 8 --out model.gtsm
-//! gputreeshap info    --model model.gtsm
-//! gputreeshap pack    --model model.gtsm
-//! gputreeshap shap    --model model.gtsm --dataset cal_housing --rows 256 --backend xla|cpu|host
-//! gputreeshap interactions --model model.gtsm --dataset adult --rows 32
-//! gputreeshap serve   --model model.gtsm --dataset adult --devices 2 --clients 4 --requests 32
-//! gputreeshap zoo     --scale 0.02
+//! gputreeshap train    --dataset cal_housing --scale 0.05 --rounds 50 --depth 8 --out model.gtsm
+//! gputreeshap info     --model model.gtsm
+//! gputreeshap pack     --model model.gtsm
+//! gputreeshap backends --model model.gtsm
+//! gputreeshap shap     --model model.gtsm --dataset cal_housing --rows 256 --backend auto|cpu|host|xla|xla-padded
+//! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto
+//! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
+//! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --clients 4 --requests 32
+//! gputreeshap zoo      --scale 0.02
 //! ```
+//!
+//! Every SHAP execution goes through the `backend::ShapBackend` trait;
+//! `--backend auto` lets the crossover-aware planner pick.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
-
+use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend};
 use gputreeshap::cli::Args;
 use gputreeshap::coordinator::{ServiceConfig, ShapService};
 use gputreeshap::data::csv::{load_csv, CsvOptions};
 use gputreeshap::data::{Dataset, SynthSpec};
 use gputreeshap::gbdt::{io as model_io, train, Model, TrainParams, ZooSize};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{pack_model, treeshap, Packing};
+use gputreeshap::runtime::default_artifacts_dir;
+use gputreeshap::shap::{pack_model, Packing};
+use gputreeshap::util::error::Result;
 use gputreeshap::util::time_it;
+use gputreeshap::{anyhow, bail};
 
 fn main() {
     let args = Args::from_env();
@@ -31,6 +37,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
         Some("pack") => cmd_pack(&args),
+        Some("backends") => cmd_backends(&args),
         Some("shap") => cmd_shap(&args),
         Some("interactions") => cmd_interactions(&args),
         Some("predict") => cmd_predict(&args),
@@ -47,7 +54,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: gputreeshap <train|info|pack|shap|interactions|predict|serve|zoo> [options]
+const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|shap|interactions|predict|serve|zoo> [options]
 see rust/src/main.rs header for examples";
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
@@ -81,6 +88,42 @@ fn load_model(args: &Args) -> Result<Model> {
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
+    let packing = args.get_or("packing", "bfd");
+    Ok(BackendConfig {
+        threads: args.get_usize("threads", gputreeshap::parallel::default_threads())?,
+        packing: Packing::parse(packing)
+            .ok_or_else(|| anyhow!("unknown packing '{packing}' (none|nf|ffd|bfd)"))?,
+        artifacts_dir: artifacts_dir(args),
+        rows_hint,
+        with_interactions: false,
+        with_predict: false,
+    })
+}
+
+/// Resolve `--backend` (with a per-command default) into a built backend.
+fn build_backend(
+    model: &Arc<Model>,
+    args: &Args,
+    cfg: &BackendConfig,
+    default: &str,
+) -> Result<(String, Box<dyn ShapBackend>)> {
+    match args.get_or("backend", default) {
+        "auto" => {
+            let (plan, b) = backend::build_auto(model, cfg)?;
+            Ok((
+                format!("auto→{} (planner est {:.1} ms)", plan.kind.name(), plan.est_latency_s * 1e3),
+                b,
+            ))
+        }
+        s => {
+            let kind = BackendKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown backend '{s}' (auto|cpu|host|xla|xla-padded)"))?;
+            Ok((kind.name().to_string(), backend::build(model, kind, cfg)?))
+        }
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -137,6 +180,42 @@ fn cmd_pack(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_backends(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let planner = Planner::for_model(&model);
+    println!("{}\n", model.summary());
+    let mut table =
+        gputreeshap::bench::Table::new(&["backend", "compiled", "setup(s)", "overhead(s)", "rows/s"]);
+    for kind in BackendKind::ALL {
+        let est = backend::planner::estimate(kind, &planner.shape);
+        table.row(vec![
+            kind.name().into(),
+            kind.compiled_in().to_string(),
+            format!("{:.3}", est.setup_s),
+            format!("{:.4}", est.batch_overhead_s),
+            format!("{:.0}", est.rows_per_s),
+        ]);
+    }
+    table.print();
+    println!();
+    let mut t2 = gputreeshap::bench::Table::new(&["batch rows", "planner choice", "est latency(s)"]);
+    for rows in [1usize, 16, 64, 256, 1024, 4096, 16384] {
+        let plan = planner.choose(rows);
+        t2.row(vec![
+            rows.to_string(),
+            plan.kind.name().into(),
+            format!("{:.5}", plan.est_latency_s),
+        ]);
+    }
+    t2.print();
+    for fast in [BackendKind::XlaPadded, BackendKind::XlaWarp, BackendKind::Host] {
+        if let Some(cross) = planner.crossover_rows(BackendKind::Recursive, fast) {
+            println!("\npredicted cpu→{} crossover: ~{cross} rows", fast.name());
+        }
+    }
+    Ok(())
+}
+
 fn take_rows(data: &Dataset, rows: usize) -> (Vec<f32>, usize) {
     let rows = rows.min(data.rows);
     (data.features[..rows * data.cols].to_vec(), rows)
@@ -149,36 +228,26 @@ fn cmd_shap(args: &Args) -> Result<()> {
         bail!("dataset has {} features, model expects {}", data.cols, model.num_features);
     }
     let (x, rows) = take_rows(&data, args.get_usize("rows", 256)?);
-    let threads = args.get_usize("threads", gputreeshap::parallel::default_threads())?;
     let m = model.num_features;
-    let backend = args.get_or("backend", "xla");
-    let (phis, dt) = match backend {
-        "cpu" => time_it(|| treeshap::shap_values(&model, &x, rows, threads)),
-        "host" => {
-            let pm = pack_model(&model, Packing::BestFitDecreasing);
-            time_it(|| gputreeshap::shap::host_kernel::shap_values(&pm, &x, rows, threads))
-        }
-        "xla" => {
-            let pm = pack_model(&model, Packing::BestFitDecreasing);
-            let mut engine = ShapEngine::new(&artifacts_dir(args))?;
-            let prep = engine.prepare(&pm, ArtifactKind::Shap, rows)?;
-            let (r, dt) = time_it(|| engine.shap_values(&pm, &prep, &x, rows));
-            (r?, dt)
-        }
-        other => bail!("unknown backend '{other}' (cpu|host|xla)"),
-    };
+    let groups = model.num_groups;
+    let cfg = backend_config(args, rows)?;
+    let model = Arc::new(model);
+    let (label, b) = build_backend(&model, args, &cfg, "auto")?;
+    let (phis, dt) = time_it(|| b.contributions(&x, rows));
+    let phis = phis?;
     println!(
-        "{} rows × {} groups in {:.3}s ({:.0} rows/s) [{} backend]",
+        "{} rows × {} groups in {:.3}s ({:.0} rows/s) [{} — {}]",
         rows,
-        model.num_groups,
+        groups,
         dt,
         rows as f64 / dt,
-        backend
+        label,
+        b.describe()
     );
     let mut imp: Vec<(usize, f64)> = (0..m)
         .map(|f| {
             let s: f64 = (0..rows)
-                .map(|r| (phis[r * model.num_groups * (m + 1) + f] as f64).abs())
+                .map(|r| (phis[r * groups * (m + 1) + f] as f64).abs())
                 .sum();
             (f, s / rows as f64)
         })
@@ -196,32 +265,20 @@ fn cmd_interactions(args: &Args) -> Result<()> {
     let data = load_dataset(args)?;
     let (x, rows) = take_rows(&data, args.get_usize("rows", 32)?);
     let m = model.num_features;
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let backend = args.get_or("backend", "xla");
-    let (inter, dt) = match backend {
-        "cpu" => time_it(|| {
-            gputreeshap::shap::interactions::interaction_values(
-                &model,
-                &x,
-                rows,
-                gputreeshap::parallel::default_threads(),
-            )
-        }),
-        "xla" => {
-            let mut engine = ShapEngine::new(&artifacts_dir(args))?;
-            let prep = engine.prepare(&pm, ArtifactKind::Interactions, rows)?;
-            let (r, dt) = time_it(|| engine.interactions(&pm, &prep, &x, rows));
-            (r?, dt)
-        }
-        other => bail!("unknown backend '{other}' (cpu|xla)"),
-    };
-    println!("{rows} rows interactions in {dt:.3}s [{backend}]");
+    let groups = model.num_groups;
+    let mut cfg = backend_config(args, rows)?;
+    cfg.with_interactions = true;
+    let model = Arc::new(model);
+    let (label, b) = build_backend(&model, args, &cfg, "auto")?;
+    let (inter, dt) = time_it(|| b.interactions(&x, rows));
+    let inter = inter?;
+    println!("{rows} rows interactions in {dt:.3}s [{label} — {}]", b.describe());
     let ms = (m + 1) * (m + 1);
     let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
     for i in 0..m {
         for j in (i + 1)..m {
             let s: f64 = (0..rows)
-                .map(|r| (inter[r * model.num_groups * ms + i * (m + 1) + j] as f64).abs())
+                .map(|r| (inter[r * groups * ms + i * (m + 1) + j] as f64).abs())
                 .sum();
             pairs.push((i, j, s / rows as f64));
         }
@@ -238,12 +295,15 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let data = load_dataset(args)?;
     let (x, rows) = take_rows(&data, args.get_usize("rows", 16)?);
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let mut engine = ShapEngine::new(&artifacts_dir(args))?;
-    let prep = engine.prepare(&pm, ArtifactKind::Predict, rows)?;
-    let preds = engine.predict(&pm, &prep, &x, rows)?;
+    let groups = model.num_groups;
+    let mut cfg = backend_config(args, rows)?;
+    cfg.with_predict = true;
+    let model = Arc::new(model);
+    let (label, b) = build_backend(&model, args, &cfg, "cpu")?;
+    let preds = b.predictions(&x, rows)?;
+    println!("[{label}]");
     for r in 0..rows.min(16) {
-        println!("row {r}: {:?}", &preds[r * model.num_groups..(r + 1) * model.num_groups]);
+        println!("row {r}: {:?}", &preds[r * groups..(r + 1) * groups]);
     }
     Ok(())
 }
@@ -256,36 +316,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 4)?;
     let requests = args.get_usize("requests", 32)?;
     let req_rows = args.get_usize("req-rows", 16)?;
+    let max_batch = args.get_usize("max-batch", 256)?;
 
     let cfg = ServiceConfig {
         devices,
-        artifacts_dir: artifacts_dir(args),
-        max_batch_rows: args.get_usize("max-batch", 256)?,
+        max_batch_rows: max_batch,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
         ..Default::default()
     };
-    // padded engine by default (EXPERIMENTS.md §Perf); --engine warp for
-    // the faithful CUDA-layout adaptation
-    let svc = match args.get_or("engine", "padded") {
-        "warp" => ShapService::start(
-            Arc::new(pack_model(&model, Packing::BestFitDecreasing)),
-            cfg,
-        )?,
-        _ => {
-            let depth =
-                pack_model(&model, Packing::BestFitDecreasing).max_depth.max(1);
-            let width = gputreeshap::runtime::Manifest::load(&cfg.artifacts_dir)?
-                .select(gputreeshap::runtime::ArtifactKind::ShapPadded, m, depth, 256)?
-                .depth
-                + 1;
-            ShapService::start_padded(
-                Arc::new(gputreeshap::shap::pad_model(&model, width)),
-                cfg,
-            )?
+    let bcfg = backend_config(args, max_batch)?;
+    let model = Arc::new(model);
+    let (label, svc) = match args.get_or("backend", "auto") {
+        "auto" => {
+            let (kind, svc) = ShapService::start_planned(model.clone(), bcfg, cfg)?;
+            (format!("auto→{}", kind.name()), svc)
+        }
+        s => {
+            let kind = BackendKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown backend '{s}' (auto|cpu|host|xla|xla-padded)"))?;
+            (
+                kind.name().to_string(),
+                ShapService::start(model.clone(), kind, bcfg, cfg)?,
+            )
         }
     };
     println!(
-        "service up: {devices} device(s); {clients} clients × {requests} requests × {req_rows} rows"
+        "service up [{label}]: {devices} device(s); {clients} clients × {requests} requests × {req_rows} rows"
     );
 
     let svc = Arc::new(svc);

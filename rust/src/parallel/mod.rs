@@ -4,8 +4,15 @@
 //! of the index range to scoped worker threads, which keeps load balanced
 //! even when per-item cost varies wildly (deep vs shallow decision-tree
 //! paths — exactly the imbalance §3 of the paper describes for warps).
+//!
+//! Output-writing helpers are safe by construction: the output slice is
+//! pre-split with `chunks_mut` into disjoint sub-slices, each wrapped in
+//! its own (uncontended) `Mutex`; a worker claims a chunk index from the
+//! cursor and locks exactly that chunk, so no two threads can ever hold
+//! overlapping `&mut` views. No raw pointers, no `unsafe`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use when the caller does not care.
 pub fn default_threads() -> usize {
@@ -47,6 +54,54 @@ where
     });
 }
 
+/// Parallel fill of a row-major output: `out` is viewed as
+/// `out.len() / stride` logical rows of `stride` elements, and
+/// `f(rows, chunk)` receives a row range plus the exclusive sub-slice
+/// holding exactly those rows (`chunk.len() == rows.len() * stride`).
+///
+/// The chunking is static (`rows_per_chunk` rows each) but assignment is
+/// dynamic via an atomic cursor, so imbalanced rows still load-balance.
+pub fn parallel_for_rows<T, F>(threads: usize, out: &mut [T], stride: usize, rows_per_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    let stride = stride.max(1);
+    let rows_per_chunk = rows_per_chunk.max(1);
+    let total_rows = out.len() / stride;
+    debug_assert_eq!(out.len(), total_rows * stride, "out not a whole number of rows");
+    let threads = threads.max(1);
+    if threads == 1 || total_rows <= rows_per_chunk {
+        let mut r = 0;
+        while r < total_rows {
+            let e = (r + rows_per_chunk).min(total_rows);
+            f(r..e, &mut out[r * stride..e * stride]);
+            r = e;
+        }
+        return;
+    }
+    // Disjoint &mut sub-slices, one lock each. Every chunk is claimed by
+    // exactly one thread (cursor), so locks never contend.
+    let chunks: Vec<Mutex<&mut [T]>> =
+        out.chunks_mut(rows_per_chunk * stride).map(Mutex::new).collect();
+    let num_chunks = chunks.len();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(num_chunks) {
+            scope.spawn(|| loop {
+                let ci = cursor.fetch_add(1, Ordering::Relaxed);
+                if ci >= num_chunks {
+                    break;
+                }
+                let mut guard = chunks[ci].lock().unwrap();
+                let r0 = ci * rows_per_chunk;
+                let r1 = (r0 + rows_per_chunk).min(total_rows);
+                f(r0..r1, &mut **guard);
+            });
+        }
+    });
+}
+
 /// Parallel map over `0..total`, writing into a preallocated output via a
 /// per-index closure. The closure gets (index, &mut slot).
 pub fn parallel_fill<T, F>(threads: usize, out: &mut [T], chunk: usize, f: F)
@@ -54,14 +109,10 @@ where
     T: Send,
     F: Fn(usize, &mut T) + Sync,
 {
-    let total = out.len();
-    let base = out.as_mut_ptr() as usize;
     let f = &f;
-    parallel_for_chunks(threads, total, chunk, move |range| {
-        // Disjoint ranges => exclusive access to these slots.
-        for i in range {
-            let slot = unsafe { &mut *(base as *mut T).add(i) };
-            f(i, slot);
+    parallel_for_rows(threads, out, 1, chunk, move |range, slots| {
+        for (k, slot) in slots.iter_mut().enumerate() {
+            f(range.start + k, slot);
         }
     });
 }
@@ -126,5 +177,48 @@ mod tests {
         for (i, x) in out.iter().enumerate() {
             assert_eq!(*x, i + 1);
         }
+    }
+
+    #[test]
+    fn parallel_fill_writes_each_slot_exactly_once() {
+        // count closure invocations per index: overlapping chunk hand-out
+        // would double-invoke; a dropped chunk would zero-invoke
+        let n = 777;
+        let calls: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let mut out = vec![0u8; n];
+        parallel_fill(6, &mut out, 13, |i, s| {
+            calls[i].fetch_add(1, Ordering::Relaxed);
+            *s = 1;
+        });
+        assert!(calls.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        assert!(out.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn parallel_for_rows_partitions_exactly() {
+        let stride = 7;
+        let rows = 101;
+        let mut out = vec![0usize; rows * stride];
+        parallel_for_rows(5, &mut out, stride, 4, |range, chunk| {
+            assert_eq!(chunk.len(), range.len() * stride);
+            for (k, r) in range.enumerate() {
+                for c in 0..stride {
+                    chunk[k * stride + c] = r * stride + c + 1;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_rows_single_row() {
+        let mut out = vec![0u32; 16];
+        parallel_for_rows(4, &mut out, 16, 8, |range, chunk| {
+            assert_eq!(range, 0..1);
+            chunk.iter_mut().for_each(|v| *v = 9);
+        });
+        assert!(out.iter().all(|&v| v == 9));
     }
 }

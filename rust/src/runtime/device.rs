@@ -3,8 +3,9 @@
 
 use std::collections::HashMap;
 
-use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::error::{Context, Result};
 
 use crate::runtime::manifest::ArtifactSpec;
 
@@ -55,7 +56,7 @@ impl Device {
         let exe = self
             .execs
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
+            .ok_or_else(|| crate::anyhow!("artifact '{name}' not loaded"))?;
         let out = exe.execute_b(args)?;
         let lit = out[0][0].to_literal_sync()?;
         Ok(lit.to_tuple1()?)

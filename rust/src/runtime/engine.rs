@@ -9,10 +9,10 @@
 
 use std::path::Path;
 
-use anyhow::Result;
 use xla::PjRtBuffer;
 
 use crate::runtime::device::Device;
+use crate::util::error::Result;
 use crate::runtime::manifest::{ArtifactKind, Manifest};
 use crate::shap::packed::{PackedModel, PaddedModel};
 use crate::shap::LANES;

@@ -5,8 +5,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -126,7 +126,7 @@ impl Manifest {
             }
         }
         best.map(|(a, _)| a).ok_or_else(|| {
-            anyhow::anyhow!(
+            crate::anyhow!(
                 "no artifact for kind={kind:?} features≥{m} depth≥{need_depth}; \
                  add a bucket to python/compile/aot.py CONFIGS"
             )
@@ -139,8 +139,7 @@ mod tests {
     use super::*;
 
     fn repo_manifest() -> Option<Manifest> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).ok()
+        Manifest::load(&crate::runtime::default_artifacts_dir()).ok()
     }
 
     #[test]

@@ -3,22 +3,33 @@
 //! python anywhere. `Device` wraps a PJRT client + executable cache;
 //! `ShapEngine` tiles workloads over fixed-shape executions with
 //! device-resident packed models; `pool` scales across devices.
+//!
+//! Everything that needs the `xla` bindings crate is gated behind the
+//! `xla` cargo feature; the manifest (a pure-JSON contract) is always
+//! available so planners and tools can inspect artifact buckets without
+//! a device runtime. Callers outside this layer should reach execution
+//! through `backend::ShapBackend`, never `ShapEngine` directly.
 
+#[cfg(feature = "xla")]
 pub mod device;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+#[cfg(feature = "xla")]
 pub mod pool;
 
+#[cfg(feature = "xla")]
 pub use device::Device;
+#[cfg(feature = "xla")]
 pub use engine::{Prepared, PreparedPadded, ShapEngine};
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
 
 use std::path::PathBuf;
 
-/// Default artifacts directory: `$GTS_ARTIFACTS` or `<repo>/artifacts`.
+/// Default artifacts directory: `$GTS_ARTIFACTS` or `<repo>/rust/artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("GTS_ARTIFACTS") {
         return PathBuf::from(dir);
     }
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust").join("artifacts")
 }

@@ -1,6 +1,8 @@
 //! Multi-device execution pool (Fig 5): one engine per simulated device,
 //! each on its own worker thread with its own PJRT client and compiled
-//! executables; row chunks are handed out via a shared cursor.
+//! executables; row chunks are handed out via a shared cursor and the
+//! results are assembled on the coordinating thread (no shared mutable
+//! output, no raw pointers).
 //!
 //! On a DGX this would be 8 GPU clients; here every "device" is a CPU
 //! PJRT client, so scaling flattens once physical cores saturate — the
@@ -9,11 +11,10 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use anyhow::Result;
-
 use crate::runtime::engine::ShapEngine;
 use crate::runtime::manifest::ArtifactKind;
 use crate::shap::packed::PackedModel;
+use crate::util::error::{Error, Result};
 
 /// SHAP values over `devices` simulated devices. Output layout matches
 /// `ShapEngine::shap_values`.
@@ -28,16 +29,20 @@ pub fn shap_values_multi(
     let m = pm.num_features;
     let stride = pm.num_groups * (m + 1);
     let mut out = vec![0.0f32; rows * stride];
-    let out_ptr = out.as_mut_ptr() as usize;
     let cursor = AtomicUsize::new(0);
     let dir: PathBuf = artifacts_dir.to_path_buf();
-    let errs: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
+    let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
 
     std::thread::scope(|scope| {
         for _ in 0..devices {
-            scope.spawn(|| {
+            let tx = tx.clone();
+            let dir = &dir;
+            let errs = &errs;
+            let cursor = &cursor;
+            scope.spawn(move || {
                 let run = || -> Result<()> {
-                    let mut engine = ShapEngine::new(&dir)?;
+                    let mut engine = ShapEngine::new(dir)?;
                     let prep = engine.prepare(pm, ArtifactKind::Shap, rows)?;
                     let chunk = prep.rows;
                     loop {
@@ -48,20 +53,19 @@ pub fn shap_values_multi(
                         let rc = (rows - r0).min(chunk);
                         let vals =
                             engine.shap_values(pm, &prep, &x[r0 * m..(r0 + rc) * m], rc)?;
-                        // exclusive slice of the output
-                        unsafe {
-                            std::ptr::copy_nonoverlapping(
-                                vals.as_ptr(),
-                                (out_ptr as *mut f32).add(r0 * stride),
-                                rc * stride,
-                            );
-                        }
+                        let _ = tx.send((r0, vals));
                     }
                 };
                 if let Err(e) = run() {
                     errs.lock().unwrap().push(e);
                 }
             });
+        }
+        drop(tx);
+        // assemble chunks as workers produce them; `rx` closes once every
+        // worker has dropped its sender, which also bounds this loop
+        for (r0, vals) in rx.iter() {
+            out[r0 * stride..r0 * stride + vals.len()].copy_from_slice(&vals);
         }
     });
     if let Some(e) = errs.into_inner().unwrap().pop() {

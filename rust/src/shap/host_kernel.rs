@@ -8,8 +8,8 @@
 //!    gain from the algorithm reformulation vs the accelerator.
 
 use crate::parallel;
-use crate::shap::binpack::LANES;
 use crate::shap::packed::{PackedGroup, PackedModel};
+use crate::shap::LANES;
 
 #[inline]
 fn one_fraction(g: &PackedGroup, i: usize, x: &[f32]) -> f64 {
@@ -149,21 +149,16 @@ pub fn shap_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usize) -> 
     let groups = pm.num_groups;
     let stride = groups * (m + 1);
     let mut out = vec![0.0f32; rows * stride];
-    let out_ptr = out.as_mut_ptr() as usize;
-    parallel::parallel_for_chunks(threads, rows, 8, |range| {
+    parallel::parallel_for_rows(threads, &mut out, stride, 8, |range, chunk| {
         let mut phis = vec![0.0f64; m + 1];
-        for r in range {
+        for (k, r) in range.enumerate() {
             let xr = &x[r * m..(r + 1) * m];
             for (gi, g) in pm.groups.iter().enumerate() {
                 phis.iter_mut().for_each(|p| *p = 0.0);
                 shap_row(g, xr, &mut phis);
                 phis[m] += pm.expected_values[gi];
-                let dst = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (out_ptr as *mut f32).add(r * stride + gi * (m + 1)),
-                        m + 1,
-                    )
-                };
+                let dst =
+                    &mut chunk[k * stride + gi * (m + 1)..k * stride + (gi + 1) * (m + 1)];
                 for (d, s) in dst.iter_mut().zip(&phis) {
                     *d = *s as f32;
                 }
@@ -181,11 +176,10 @@ pub fn interaction_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usi
     let ms = (m + 1) * (m + 1);
     let stride = groups * ms;
     let mut out = vec![0.0f32; rows * stride];
-    let out_ptr = out.as_mut_ptr() as usize;
-    parallel::parallel_for_chunks(threads, rows, 2, |range| {
+    parallel::parallel_for_rows(threads, &mut out, stride, 2, |range, chunk| {
         let mut mat = vec![0.0f64; ms];
         let mut phis = vec![0.0f64; m + 1];
-        for r in range {
+        for (k, r) in range.enumerate() {
             let xr = &x[r * m..(r + 1) * m];
             for (gi, g) in pm.groups.iter().enumerate() {
                 mat.iter_mut().for_each(|v| *v = 0.0);
@@ -200,12 +194,7 @@ pub fn interaction_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usi
                     mat[i * (m + 1) + i] = phis[i] - row_sum;
                 }
                 mat[m * (m + 1) + m] = pm.expected_values[gi];
-                let dst = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (out_ptr as *mut f32).add(r * stride + gi * ms),
-                        ms,
-                    )
-                };
+                let dst = &mut chunk[k * stride + gi * ms..k * stride + (gi + 1) * ms];
                 for (d, s) in dst.iter_mut().zip(&mat) {
                     *d = *s as f32;
                 }
@@ -220,8 +209,8 @@ mod tests {
     use super::*;
     use crate::data::SynthSpec;
     use crate::gbdt::{train, TrainParams};
-    use crate::shap::binpack::Packing;
     use crate::shap::packed::pack_model;
+    use crate::shap::Packing;
     use crate::shap::treeshap;
 
     fn setup(depth: usize) -> (crate::gbdt::Model, PackedModel, crate::data::Dataset) {

@@ -35,14 +35,13 @@ pub fn interaction_values(
     let feats: Vec<Vec<i32>> = model.trees.iter().map(tree_features).collect();
 
     let mut out = vec![0.0f32; rows * stride];
-    let out_ptr = out.as_mut_ptr() as usize;
-    parallel::parallel_for_chunks(threads, rows, 2, |range| {
+    parallel::parallel_for_rows(threads, &mut out, stride, 2, |range, chunk| {
         let mut slab = Scratch::new(max_depth);
         let mut mat = vec![0.0f64; stride];
         let mut phis = vec![0.0f64; groups * (m + 1)];
         let mut on = vec![0.0f64; m + 1];
         let mut off = vec![0.0f64; m + 1];
-        for r in range {
+        for (k, r) in range.enumerate() {
             mat.iter_mut().for_each(|v| *v = 0.0);
             phis.iter_mut().for_each(|v| *v = 0.0);
             let xr = &x[r * m..(r + 1) * m];
@@ -77,12 +76,7 @@ pub fn interaction_values(
                 }
                 gm[m * (m + 1) + m] = ev[g];
             }
-            let dst = unsafe {
-                std::slice::from_raw_parts_mut(
-                    (out_ptr as *mut f32).add(r * stride),
-                    stride,
-                )
-            };
+            let dst = &mut chunk[k * stride..(k + 1) * stride];
             for (d, s) in dst.iter_mut().zip(&mat) {
                 *d = *s as f32;
             }

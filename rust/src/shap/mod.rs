@@ -2,8 +2,17 @@
 //! (§3.2), bin packing (§3.3), packed tensors (§3.4 inputs), plus the CPU
 //! baselines (recursive Algorithm 1 and its interactions variant) and a
 //! rust-native evaluation of the packed DP.
+//!
+//! ## Canonical surface
+//!
+//! The packing vocabulary is re-exported **here and only here** — use
+//! `shap::{LANES, Packing, pack, PackResult}` and the packed types
+//! `shap::{PackedModel, PaddedModel, …}`; the `binpack` module itself is
+//! private so `shap::binpack::LANES`-style paths cannot leak. Execution
+//! entry points live behind `backend::ShapBackend`; the modules below
+//! are the algorithm substrate it is built from.
 
-pub mod binpack;
+mod binpack;
 pub mod host_kernel;
 pub mod interactions;
 pub mod packed;
@@ -11,6 +20,6 @@ pub mod path;
 pub mod summary;
 pub mod treeshap;
 
-pub use binpack::{Packing, LANES};
+pub use binpack::{pack, PackResult, Packing, LANES};
 pub use packed::{pack_model, pad_model, PackedGroup, PackedModel, PaddedGroup, PaddedModel};
 pub use path::{expected_values, extract_paths, model_paths, Path, PathElement};

@@ -228,12 +228,11 @@ pub fn shap_values(
     let ev = expected_values(model);
     let stride = groups * (m + 1);
     let mut out = vec![0.0f32; rows * stride];
-    let out_ptr = out.as_mut_ptr() as usize;
     let max_depth = model.max_depth();
-    parallel::parallel_for_chunks(threads, rows, 8, |range| {
+    parallel::parallel_for_rows(threads, &mut out, stride, 8, |range, chunk| {
         let mut slab = Scratch::new(max_depth);
         let mut phis = vec![0.0f64; stride];
-        for r in range {
+        for (k, r) in range.enumerate() {
             phis.iter_mut().for_each(|p| *p = 0.0);
             let xr = &x[r * m..(r + 1) * m];
             for (tree, &g) in model.trees.iter().zip(&model.tree_group) {
@@ -248,12 +247,7 @@ pub fn shap_values(
             for g in 0..groups {
                 phis[g * (m + 1) + m] += ev[g];
             }
-            let dst = unsafe {
-                std::slice::from_raw_parts_mut(
-                    (out_ptr as *mut f32).add(r * stride),
-                    stride,
-                )
-            };
+            let dst = &mut chunk[k * stride..(k + 1) * stride];
             for (d, s) in dst.iter_mut().zip(&phis) {
                 *d = *s as f32;
             }

@@ -1,0 +1,140 @@
+//! Minimal `anyhow`-compatible error substrate (no external crates
+//! offline): a context-chain error type, `Result` alias, `Context`
+//! extension trait, and the `anyhow!` / `bail!` macros exported at the
+//! crate root. `{e}` prints the outermost message, `{e:#}` the full
+//! chain (`outer: inner: root`), matching the `anyhow` conventions the
+//! codebase was written against.
+
+use std::fmt;
+
+/// An error as a chain of messages, outermost context first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.msgs.insert(0, c.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.join(": "))
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps this blanket conversion coherent (no overlap with `From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension: attach context to any error that
+/// converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = crate::anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = crate::anyhow!("bad {} of {}", "kind", 7);
+        assert_eq!(format!("{e:#}"), "bad kind of 7");
+        fn fails() -> Result<()> {
+            crate::bail!("nope");
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "nope");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let ok: Result<u32, std::io::Error> = Ok(5);
+        let v = ok.with_context(|| "unused").unwrap();
+        assert_eq!(v, 5);
+    }
+}

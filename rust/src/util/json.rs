@@ -5,7 +5,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {

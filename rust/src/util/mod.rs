@@ -1,9 +1,12 @@
-//! Shared substrates: deterministic RNG, minimal JSON, timing/stats.
+//! Shared substrates: deterministic RNG, minimal JSON, errors,
+//! timing/stats.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod timer;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::{time_it, Stats};

@@ -19,6 +19,7 @@ pub struct Stats {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Stats {
@@ -44,6 +45,7 @@ impl Stats {
             max: sorted[n - 1],
             p50: q(0.5),
             p95: q(0.95),
+            p99: q(0.99),
         }
     }
 }
@@ -60,6 +62,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
     }
 
     #[test]

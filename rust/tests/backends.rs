@@ -1,0 +1,117 @@
+//! Backend-parity property test over the `bench::zoo` models: every
+//! backend that constructs in this environment must agree with the
+//! recursive oracle on φ within 1e-4 and satisfy local accuracy
+//! (φ sums to prediction − expected value), for both contributions and
+//! interactions where supported. Row windows are randomized per model.
+
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
+use gputreeshap::bench::zoo;
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::util::Rng;
+
+fn close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 + 1e-3 * x.abs().max(y.abs()),
+            "{what}: idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn zoo_backends_agree_and_satisfy_local_accuracy() {
+    let mut rng = Rng::new(2024);
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue; // the small grid covers every dataset shape cheaply
+        }
+        let (model, data) = zoo::build(&entry);
+        let m = model.num_features;
+        let groups = model.num_groups;
+        let rows = 6.min(data.rows);
+        let span = data.rows.saturating_sub(rows).max(1);
+        let start = rng.below(span as u64) as usize;
+        let x = data.features[start * m..(start + rows) * m].to_vec();
+        let model = Arc::new(model);
+        let cfg = BackendConfig {
+            threads: 1,
+            rows_hint: rows,
+            with_interactions: true,
+            ..Default::default()
+        };
+
+        let backends = backend::available(&model, &cfg);
+        assert!(
+            backends.iter().any(|(k, _)| *k == BackendKind::Recursive)
+                && backends.iter().any(|(k, _)| *k == BackendKind::Host),
+            "{}: cpu backends must always be available",
+            entry.name
+        );
+        let oracle_phi = backends[0].1.contributions(&x, rows).unwrap();
+        let oracle_inter = backends[0].1.interactions(&x, rows).unwrap();
+        assert_eq!(backends[0].0, BackendKind::Recursive);
+
+        for (kind, b) in &backends {
+            let what = format!("{} / {}", entry.name, kind.name());
+            // contributions agree with the oracle…
+            let phis = b.contributions(&x, rows).unwrap();
+            close(&oracle_phi, &phis, &what);
+            // …and satisfy local accuracy: Σφ == f(x) per row and group
+            for r in 0..rows {
+                let preds = model.predict_row_raw(&x[r * m..(r + 1) * m]);
+                for g in 0..groups {
+                    let base = r * groups * (m + 1) + g * (m + 1);
+                    let total: f64 =
+                        phis[base..base + m + 1].iter().map(|&v| v as f64).sum();
+                    assert!(
+                        (total - preds[g] as f64).abs() < 2e-3,
+                        "{what}: local accuracy row {r} group {g}: {total} vs {}",
+                        preds[g]
+                    );
+                }
+            }
+            // interactions, where the backend supports them
+            if b.caps().supports_interactions {
+                let inter = b.interactions(&x, rows).unwrap();
+                close(&oracle_inter, &inter, &format!("{what} (interactions)"));
+                // grand total per group: ΣΣΦ == f(x)
+                let ms = (m + 1) * (m + 1);
+                for r in 0..rows {
+                    let preds = model.predict_row_raw(&x[r * m..(r + 1) * m]);
+                    for g in 0..groups {
+                        let base = r * groups * ms + g * ms;
+                        let total: f64 =
+                            inter[base..base + ms].iter().map(|&v| v as f64).sum();
+                        assert!(
+                            (total - preds[g] as f64).abs() < 2e-3,
+                            "{what}: Φ grand total row {r} group {g}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_choice_is_exercised_across_the_crossover() {
+    // build a planner from a real zoo model and check its decisions are
+    // consistent: whatever it picks for tiny batches must cost less there
+    // than the large-batch pick, and vice versa
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.size == ZooSize::Small)
+        .unwrap();
+    let (model, _) = zoo::build(&entry);
+    let planner = backend::Planner::for_model(&model);
+    let small = planner.choose(1);
+    let large = planner.choose(1 << 20);
+    assert!(small.est_latency_s <= planner.batch_cost(large.kind, 1).unwrap() + 1e-12);
+    assert!(
+        planner.batch_cost(large.kind, 1 << 20).unwrap()
+            <= planner.batch_cost(small.kind, 1 << 20).unwrap() + 1e-12
+    );
+}

@@ -98,7 +98,7 @@ fn packed_model_counts_are_consistent() {
 }
 
 #[test]
-fn failure_injection_corrupt_manifest_and_artifacts() {
+fn failure_injection_corrupt_manifest() {
     use gputreeshap::runtime::Manifest;
     let dir = std::env::temp_dir().join(format!("gts_fail_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -117,6 +117,26 @@ fn failure_injection_corrupt_manifest_and_artifacts() {
     // empty artifact list
     std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
     assert!(Manifest::load(&dir).is_err());
+
+    // a valid manifest still parses (sanity for the cases above)
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [{"name": "bad", "kind": "shap",
+            "rows": 64, "bins": 64, "features": 16, "depth": 4,
+            "lanes": 32, "file": "bad.hlo.txt"}]}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_ok());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[cfg(feature = "xla")]
+#[test]
+fn failure_injection_corrupt_artifacts() {
+    use gputreeshap::runtime::Manifest;
+    let dir = std::env::temp_dir().join(format!("gts_failxla_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
 
     // valid manifest pointing at a missing/corrupt HLO file: load must
     // fail at compile time with context, not crash

@@ -1,15 +1,15 @@
-//! Three-way parity: XLA runtime (AOT Pallas kernel) vs rust host DP vs
-//! recursive Algorithm 1 — the end-to-end correctness proof that all
-//! three layers compose. Requires `make artifacts`.
+//! Cross-backend parity through the unified `ShapBackend` trait: the
+//! recursive Algorithm 1 oracle vs the host packed DP (always compiled)
+//! and vs the XLA runtime engines (with `--features xla` + `make
+//! artifacts`) — the end-to-end correctness proof that every execution
+//! path computes the same φ and Φ.
 
+use std::sync::Arc;
+
+use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
 use gputreeshap::data::SynthSpec;
-use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::{default_artifacts_dir, ArtifactKind, ShapEngine};
-use gputreeshap::shap::{host_kernel, pack_model, pad_model, treeshap, Packing};
-
-fn artifacts_ready() -> bool {
-    default_artifacts_dir().join("manifest.json").exists()
-}
+use gputreeshap::gbdt::{train, Model, TrainParams};
+use gputreeshap::shap::Packing;
 
 fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");
@@ -21,208 +21,209 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
     }
 }
 
+fn cfg(rows: usize) -> BackendConfig {
+    BackendConfig { threads: 2, rows_hint: rows, with_interactions: true, ..Default::default() }
+}
+
+fn contributions(model: &Arc<Model>, kind: BackendKind, x: &[f32], rows: usize) -> Vec<f32> {
+    backend::build(model, kind, &cfg(rows))
+        .unwrap_or_else(|e| panic!("build {}: {e:#}", kind.name()))
+        .contributions(x, rows)
+        .unwrap()
+}
+
+fn interactions(model: &Arc<Model>, kind: BackendKind, x: &[f32], rows: usize) -> Vec<f32> {
+    backend::build(model, kind, &cfg(rows))
+        .unwrap_or_else(|e| panic!("build {}: {e:#}", kind.name()))
+        .interactions(x, rows)
+        .unwrap()
+}
+
 #[test]
-fn shap_values_three_way_parity() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
+fn host_backend_matches_recursive_oracle() {
     let d = SynthSpec::cal_housing(0.01).generate();
-    let model = train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() });
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() }));
     let rows = 100;
     let m = model.num_features;
     let x = &d.features[..rows * m];
-
-    let baseline = treeshap::shap_values(&model, x, rows, 2);
-    let host = host_kernel::shap_values(&pm, x, rows, 2);
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let host = contributions(&model, BackendKind::Host, x, rows);
     close(&baseline, &host, 2e-4, "recursive vs host DP");
-
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-    let xla = engine.shap_values(&pm, &prep, x, rows).unwrap();
-    close(&baseline, &xla, 2e-3, "recursive vs XLA runtime");
 }
 
 #[test]
-fn shap_values_multiclass_parity() {
-    if !artifacts_ready() {
-        return;
-    }
+fn host_interactions_match_recursive_oracle() {
+    let d = SynthSpec::cal_housing(0.005).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() }));
+    let rows = 8;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = interactions(&model, BackendKind::Recursive, x, rows);
+    let host = interactions(&model, BackendKind::Host, x, rows);
+    close(&baseline, &host, 5e-4, "interactions recursive vs host");
+}
+
+#[test]
+fn multiclass_host_parity() {
     let d = SynthSpec::covtype(0.001).generate();
-    let model = train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() });
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() }));
     let rows = 40;
     let m = model.num_features;
     let x = &d.features[..rows * m];
-
-    let baseline = treeshap::shap_values(&model, x, rows, 2);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-    let xla = engine.shap_values(&pm, &prep, x, rows).unwrap();
-    close(&baseline, &xla, 2e-3, "multiclass recursive vs XLA");
-}
-
-#[test]
-fn interactions_parity() {
-    if !artifacts_ready() {
-        return;
-    }
-    let d = SynthSpec::cal_housing(0.005).generate();
-    let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let rows = 8;
-    let m = model.num_features;
-    let x = &d.features[..rows * m];
-
-    let baseline = gputreeshap::shap::interactions::interaction_values(&model, x, rows, 2);
-    let host = host_kernel::interaction_values(&pm, x, rows, 2);
-    close(&baseline, &host, 5e-4, "interactions recursive vs host");
-
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let prep = engine.prepare(&pm, ArtifactKind::Interactions, rows).unwrap();
-    let xla = engine.interactions(&pm, &prep, x, rows).unwrap();
-    close(&baseline, &xla, 5e-3, "interactions recursive vs XLA");
-}
-
-#[test]
-fn padded_interactions_parity() {
-    if !artifacts_ready() {
-        return;
-    }
-    let d = SynthSpec::adult(0.004).generate();
-    let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
-    let rows = 8;
-    let m = model.num_features;
-    let x = &d.features[..rows * m];
-
-    let baseline = gputreeshap::shap::interactions::interaction_values(&model, x, rows, 2);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let depth = pack_model(&model, Packing::BestFitDecreasing).max_depth.max(2);
-    let width = engine
-        .manifest
-        .select(ArtifactKind::InteractionsPadded, m, depth, rows)
-        .unwrap()
-        .depth
-        + 1;
-    let pad = pad_model(&model, width);
-    let prep = engine
-        .prepare_padded_kind(&pad, ArtifactKind::InteractionsPadded, rows)
-        .unwrap();
-    let xla = engine.interactions_padded(&pad, &prep, x, rows).unwrap();
-    close(&baseline, &xla, 5e-3, "interactions recursive vs padded XLA");
-}
-
-#[test]
-fn predict_parity_and_additivity() {
-    if !artifacts_ready() {
-        return;
-    }
-    let d = SynthSpec::adult(0.005).generate();
-    let model = train(&d, &TrainParams { rounds: 5, max_depth: 5, ..Default::default() });
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let rows = 64;
-    let m = model.num_features;
-    let x = &d.features[..rows * m];
-
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let prep = engine.prepare(&pm, ArtifactKind::Predict, rows).unwrap();
-    let preds = engine.predict(&pm, &prep, x, rows).unwrap();
-    for r in 0..rows {
-        let want = model.predict_row_raw(d.row(r))[0];
-        assert!((preds[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", preds[r]);
-    }
-
-    // additivity: Σφ == prediction, through the XLA path end to end
-    let sprep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-    let phis = engine.shap_values(&pm, &sprep, x, rows).unwrap();
-    for r in 0..rows {
-        let total: f32 = phis[r * (m + 1)..(r + 1) * (m + 1)].iter().sum();
-        assert!(
-            (total - preds[r]).abs() < 5e-3,
-            "row {r}: Σφ {total} vs f(x) {}",
-            preds[r]
-        );
-    }
-}
-
-#[test]
-fn padded_layout_matches_warp_layout_and_baseline() {
-    if !artifacts_ready() {
-        return;
-    }
-    let d = SynthSpec::covtype(0.001).generate();
-    let model = train(&d, &TrainParams { rounds: 2, max_depth: 5, ..Default::default() });
-    let rows = 64;
-    let m = model.num_features;
-    let x = &d.features[..rows * m];
-
-    let baseline = treeshap::shap_values(&model, x, rows, 2);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let warp_prep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-    let warp = engine.shap_values(&pm, &warp_prep, x, rows).unwrap();
-
-    let spec_depth = engine
-        .manifest
-        .select(ArtifactKind::ShapPadded, m, pm.max_depth.max(1), rows)
-        .unwrap()
-        .depth;
-    let pad = pad_model(&model, spec_depth + 1);
-    let pad_prep = engine.prepare_padded(&pad, rows).unwrap();
-    let padded = engine.shap_values_padded(&pad, &pad_prep, x, rows).unwrap();
-
-    close(&baseline, &warp, 2e-3, "recursive vs warp layout");
-    close(&baseline, &padded, 2e-3, "recursive vs padded layout");
-    close(&warp, &padded, 2e-3, "warp vs padded layout");
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let host = contributions(&model, BackendKind::Host, x, rows);
+    close(&baseline, &host, 2e-4, "multiclass recursive vs host");
 }
 
 #[test]
 fn packing_algorithm_is_invisible_to_results() {
-    if !artifacts_ready() {
-        return;
-    }
     let d = SynthSpec::adult(0.004).generate();
-    let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() }));
     let rows = 32;
     let m = model.num_features;
     let x = &d.features[..rows * m];
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
     let mut results = Vec::new();
-    for alg in [
-        Packing::None,
-        Packing::NextFit,
-        Packing::FirstFitDecreasing,
-        Packing::BestFitDecreasing,
-    ] {
-        let pm = pack_model(&model, alg);
-        let prep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-        results.push(engine.shap_values(&pm, &prep, x, rows).unwrap());
+    for alg in Packing::ALL {
+        let c = BackendConfig { threads: 1, packing: alg, rows_hint: rows, ..Default::default() };
+        let b = backend::build(&model, BackendKind::Host, &c).unwrap();
+        results.push(b.contributions(x, rows).unwrap());
     }
     for r in &results[1..] {
         close(&results[0], r, 1e-4, "packing invariance");
     }
 }
 
-#[test]
-fn deep_model_uses_deep_bucket() {
-    if !artifacts_ready() {
-        return;
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use gputreeshap::runtime::default_artifacts_dir;
+
+    fn artifacts_ready() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
     }
-    // depth-12 trees over 54 features: merged paths stay deep (> 8
-    // unique features per path), forcing the d16 artifact
-    let d = SynthSpec::covtype(0.002).generate();
-    let model = train(&d, &TrainParams { rounds: 1, max_depth: 12, ..Default::default() });
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    assert!(pm.max_depth > 8, "test needs deep paths, got {}", pm.max_depth);
-    let rows = 16;
-    let m = model.num_features;
-    let x = &d.features[..rows * m];
-    let baseline = treeshap::shap_values(&model, x, rows, 2);
-    let mut engine = ShapEngine::new(&default_artifacts_dir()).unwrap();
-    let prep = engine.prepare(&pm, ArtifactKind::Shap, rows).unwrap();
-    assert!(prep.artifact.contains("d16"), "picked {}", prep.artifact);
-    let xla = engine.shap_values(&pm, &prep, x, rows).unwrap();
-    close(&baseline, &xla, 5e-3, "deep model recursive vs XLA");
+
+    #[test]
+    fn shap_values_three_way_parity() {
+        if !artifacts_ready() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let d = SynthSpec::cal_housing(0.01).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() }));
+        let rows = 100;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+        let host = contributions(&model, BackendKind::Host, x, rows);
+        let warp = contributions(&model, BackendKind::XlaWarp, x, rows);
+        let padded = contributions(&model, BackendKind::XlaPadded, x, rows);
+        close(&baseline, &host, 2e-4, "recursive vs host DP");
+        close(&baseline, &warp, 2e-3, "recursive vs XLA warp");
+        close(&baseline, &padded, 2e-3, "recursive vs XLA padded");
+        close(&warp, &padded, 2e-3, "warp vs padded layout");
+    }
+
+    #[test]
+    fn multiclass_xla_parity() {
+        if !artifacts_ready() {
+            return;
+        }
+        let d = SynthSpec::covtype(0.001).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() }));
+        let rows = 40;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+        let xla = contributions(&model, BackendKind::XlaWarp, x, rows);
+        close(&baseline, &xla, 2e-3, "multiclass recursive vs XLA");
+    }
+
+    #[test]
+    fn interactions_parity_all_backends() {
+        if !artifacts_ready() {
+            return;
+        }
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() }));
+        let rows = 8;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let baseline = interactions(&model, BackendKind::Recursive, x, rows);
+        let warp = interactions(&model, BackendKind::XlaWarp, x, rows);
+        close(&baseline, &warp, 5e-3, "interactions recursive vs XLA warp");
+    }
+
+    #[test]
+    fn padded_interactions_parity() {
+        if !artifacts_ready() {
+            return;
+        }
+        let d = SynthSpec::adult(0.004).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() }));
+        let rows = 8;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let baseline = interactions(&model, BackendKind::Recursive, x, rows);
+        let padded = interactions(&model, BackendKind::XlaPadded, x, rows);
+        close(&baseline, &padded, 5e-3, "interactions recursive vs padded XLA");
+    }
+
+    #[test]
+    fn predict_parity_and_additivity() {
+        if !artifacts_ready() {
+            return;
+        }
+        let d = SynthSpec::adult(0.005).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 5, max_depth: 5, ..Default::default() }));
+        let rows = 64;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let mut c = cfg(rows);
+        c.with_predict = true;
+        let b = backend::build(&model, BackendKind::XlaWarp, &c).unwrap();
+        let preds = b.predictions(x, rows).unwrap();
+        for r in 0..rows {
+            let want = model.predict_row_raw(d.row(r))[0];
+            assert!((preds[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", preds[r]);
+        }
+        // additivity: Σφ == prediction, through the XLA path end to end
+        let phis = b.contributions(x, rows).unwrap();
+        for r in 0..rows {
+            let total: f32 = phis[r * (m + 1)..(r + 1) * (m + 1)].iter().sum();
+            assert!(
+                (total - preds[r]).abs() < 5e-3,
+                "row {r}: Σφ {total} vs f(x) {}",
+                preds[r]
+            );
+        }
+    }
+
+    #[test]
+    fn deep_model_uses_deep_bucket() {
+        if !artifacts_ready() {
+            return;
+        }
+        // depth-12 trees over 54 features: merged paths stay deep (> 8
+        // unique features per path), forcing the d16 artifact
+        let d = SynthSpec::covtype(0.002).generate();
+        let model =
+            Arc::new(train(&d, &TrainParams { rounds: 1, max_depth: 12, ..Default::default() }));
+        let rows = 16;
+        let m = model.num_features;
+        let x = &d.features[..rows * m];
+        let b = backend::build(&model, BackendKind::XlaWarp, &cfg(rows)).unwrap();
+        assert!(b.describe().contains("d16"), "picked {}", b.describe());
+        let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+        let xla = b.contributions(x, rows).unwrap();
+        close(&baseline, &xla, 5e-3, "deep model recursive vs XLA");
+    }
 }

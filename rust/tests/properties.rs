@@ -4,9 +4,8 @@
 
 use gputreeshap::data::{Dataset, SynthSpec};
 use gputreeshap::gbdt::{train, Model, TrainParams};
-use gputreeshap::shap::binpack::{pack, Packing, LANES};
 use gputreeshap::shap::{
-    expected_values, extract_paths, host_kernel, pack_model, treeshap,
+    expected_values, extract_paths, host_kernel, pack, pack_model, treeshap, Packing, LANES,
 };
 use gputreeshap::util::Rng;
 

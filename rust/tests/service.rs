@@ -1,36 +1,37 @@
 //! Coordinator service tests: batching, concurrency, backpressure,
-//! correctness of per-request response slicing.
+//! correctness of per-request response slicing, interactions routed
+//! through the same batched pipeline, and per-backend metrics. The
+//! service runs over the trait — these tests use the always-available
+//! host backend, so they exercise the full coordinator without any
+//! artifacts; XLA-backed service tests live in the gated module below.
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use gputreeshap::backend::{BackendConfig, BackendKind, RecursiveBackend, ShapBackend};
 use gputreeshap::coordinator::{ServiceConfig, ShapService};
 use gputreeshap::data::SynthSpec;
-use gputreeshap::gbdt::{train, TrainParams};
-use gputreeshap::runtime::default_artifacts_dir;
-use gputreeshap::shap::{pack_model, treeshap, Packing};
+use gputreeshap::gbdt::{train, Model, TrainParams};
 
-fn artifacts_ready() -> bool {
-    default_artifacts_dir().join("manifest.json").exists()
+fn setup() -> (Arc<Model>, gputreeshap::data::Dataset) {
+    let d = SynthSpec::adult(0.005).generate();
+    let model =
+        train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+    (Arc::new(model), d)
 }
 
-fn setup() -> (gputreeshap::gbdt::Model, gputreeshap::data::Dataset) {
-    let d = SynthSpec::adult(0.005).generate();
-    let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
-    (model, d)
+fn bcfg() -> BackendConfig {
+    BackendConfig { threads: 1, with_interactions: true, ..Default::default() }
 }
 
 #[test]
 fn serves_correct_values_across_concurrent_clients() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     let (model, d) = setup();
-    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
     let m = model.num_features;
     let svc = ShapService::start(
-        pm,
+        model.clone(),
+        BackendKind::Host,
+        bcfg(),
         ServiceConfig {
             devices: 2,
             max_batch_rows: 64,
@@ -41,13 +42,19 @@ fn serves_correct_values_across_concurrent_clients() {
     .unwrap();
 
     // 8 concurrent clients, 5 requests each, varying sizes
+    let oracle = RecursiveBackend::new(model.clone(), 1);
     let svc = Arc::new(svc);
-    let model = Arc::new(model);
     let d = Arc::new(d);
+    let oracle = &oracle;
+    let mut expected_rows = 0usize;
+    for c in 0..8usize {
+        for q in 0..5usize {
+            expected_rows += 1 + (c + q) % 7;
+        }
+    }
     std::thread::scope(|scope| {
         for c in 0..8usize {
             let svc = svc.clone();
-            let model = model.clone();
             let d = d.clone();
             scope.spawn(move || {
                 for q in 0..5usize {
@@ -55,7 +62,7 @@ fn serves_correct_values_across_concurrent_clients() {
                     let start = (c * 17 + q * 3) % (d.rows - rows);
                     let x = d.features[start * m..(start + rows) * m].to_vec();
                     let phis = svc.explain(x.clone(), rows).unwrap();
-                    let want = treeshap::shap_values(&model, &x, rows, 1);
+                    let want = oracle.contributions(&x, rows).unwrap();
                     assert_eq!(phis.len(), want.len());
                     for (a, b) in phis.iter().zip(&want) {
                         assert!((a - b).abs() < 2e-3, "{a} vs {b}");
@@ -71,25 +78,68 @@ fn serves_correct_values_across_concurrent_clients() {
     assert_eq!(snap.get("errors").unwrap().as_usize().unwrap(), 0);
     let batches = snap.get("batches").unwrap().as_usize().unwrap();
     assert!(batches <= 40, "batches {batches}");
+    // per-backend counters: everything was served by the host backend
+    let counters = svc.metrics.backend_counters();
+    assert_eq!(counters["host"].rows as usize, expected_rows);
+    assert!(counters["host"].batches >= 1);
+    let be = snap.get("backends").unwrap().get("host").unwrap();
+    assert_eq!(be.get("rows").unwrap().as_usize().unwrap(), expected_rows);
+    assert!(be.get("batch_p99_s").unwrap().as_f64().unwrap() >= 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn interactions_flow_through_the_batched_pipeline() {
+    let (model, d) = setup();
+    let m = model.num_features;
+    let svc = ShapService::start(
+        model.clone(),
+        BackendKind::Host,
+        bcfg(),
+        ServiceConfig {
+            devices: 1,
+            max_batch_rows: 32,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rows = 6;
+    let x = d.features[..rows * m].to_vec();
+    // φ and Φ via the same service pipeline
+    let phis = svc.explain(x.clone(), rows).unwrap();
+    let inter = svc.explain_interactions(x.clone(), rows).unwrap();
+    let ms = (m + 1) * (m + 1);
+    assert_eq!(inter.len(), rows * ms);
+    // Φ matches the recursive oracle and its row sums reproduce φ
+    let oracle = RecursiveBackend::new(model.clone(), 1);
+    let want = oracle.interactions(&x, rows).unwrap();
+    for (a, b) in inter.iter().zip(&want) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+    for r in 0..rows {
+        for i in 0..m {
+            let s: f64 = (0..m).map(|j| inter[r * ms + i * (m + 1) + j] as f64).sum();
+            let phi = phis[r * (m + 1) + i] as f64;
+            assert!((s - phi).abs() < 1e-3, "row {r} feat {i}: {s} vs {phi}");
+        }
+    }
     svc.shutdown();
 }
 
 #[test]
 fn backpressure_rejects_when_queue_full() {
-    if !artifacts_ready() {
-        return;
-    }
     let (model, d) = setup();
-    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
     let m = model.num_features;
     let svc = ShapService::start(
-        pm,
+        model,
+        BackendKind::Host,
+        bcfg(),
         ServiceConfig {
             devices: 1,
             max_batch_rows: 32,
             max_wait: Duration::from_millis(100),
             queue_cap: 2, // tiny queue to force rejection
-            ..Default::default()
         },
     )
     .unwrap();
@@ -121,14 +171,12 @@ fn backpressure_rejects_when_queue_full() {
 
 #[test]
 fn shutdown_drains_pending_work() {
-    if !artifacts_ready() {
-        return;
-    }
     let (model, d) = setup();
-    let pm = Arc::new(pack_model(&model, Packing::BestFitDecreasing));
     let m = model.num_features;
     let svc = ShapService::start(
-        pm,
+        model,
+        BackendKind::Host,
+        bcfg(),
         ServiceConfig {
             devices: 1,
             max_batch_rows: 1024,
@@ -144,36 +192,26 @@ fn shutdown_drains_pending_work() {
 }
 
 #[test]
-fn padded_service_serves_correct_values() {
-    if !artifacts_ready() {
-        return;
-    }
+fn planned_service_picks_a_live_backend() {
     let (model, d) = setup();
     let m = model.num_features;
-    let depth = gputreeshap::shap::pack_model(&model, Packing::BestFitDecreasing)
-        .max_depth
-        .max(1);
-    let width = gputreeshap::runtime::Manifest::load(&default_artifacts_dir())
-        .unwrap()
-        .select(gputreeshap::runtime::ArtifactKind::ShapPadded, m, depth, 64)
-        .unwrap()
-        .depth
-        + 1;
-    let pm = Arc::new(gputreeshap::shap::pad_model(&model, width));
-    let svc = ShapService::start_padded(
-        pm,
+    let (kind, svc) = ShapService::start_planned(
+        model.clone(),
+        bcfg(),
         ServiceConfig {
             devices: 1,
-            max_batch_rows: 64,
+            max_batch_rows: 16,
             max_wait: Duration::from_millis(2),
             ..Default::default()
         },
     )
     .unwrap();
-    let rows = 12;
+    assert!(kind.compiled_in());
+    let rows = 5;
     let x = d.features[..rows * m].to_vec();
     let phis = svc.explain(x.clone(), rows).unwrap();
-    let want = treeshap::shap_values(&model, &x, rows, 1);
+    let oracle = RecursiveBackend::new(model, 1);
+    let want = oracle.contributions(&x, rows).unwrap();
     for (a, b) in phis.iter().zip(&want) {
         assert!((a - b).abs() < 2e-3, "{a} vs {b}");
     }
@@ -181,23 +219,85 @@ fn padded_service_serves_correct_values() {
 }
 
 #[test]
-fn multi_device_pool_matches_single() {
-    if !artifacts_ready() {
-        return;
+fn worker_init_failure_surfaces_at_start() {
+    let (model, _) = setup();
+    // XLA backends need artifacts + the xla feature; pointing the config
+    // at an empty artifacts dir must fail `start` cleanly either way.
+    let cfg = BackendConfig {
+        artifacts_dir: std::env::temp_dir().join("gts_no_artifacts_here"),
+        ..bcfg()
+    };
+    let err = ShapService::start(
+        model,
+        BackendKind::XlaWarp,
+        cfg,
+        ServiceConfig { devices: 1, ..Default::default() },
+    );
+    assert!(err.is_err());
+}
+
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use gputreeshap::runtime::default_artifacts_dir;
+    use gputreeshap::shap::{pack_model, Packing};
+
+    fn artifacts_ready() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
     }
-    let (model, d) = setup();
-    let pm = pack_model(&model, Packing::BestFitDecreasing);
-    let m = model.num_features;
-    let rows = 150;
-    let x = &d.features[..rows * m];
-    let a =
-        gputreeshap::runtime::pool::shap_values_multi(&pm, x, rows, 1, &default_artifacts_dir())
-            .unwrap();
-    let b =
-        gputreeshap::runtime::pool::shap_values_multi(&pm, x, rows, 3, &default_artifacts_dir())
-            .unwrap();
-    assert_eq!(a.len(), b.len());
-    for (x1, x2) in a.iter().zip(&b) {
-        assert!((x1 - x2).abs() < 1e-5);
+
+    #[test]
+    fn padded_service_serves_correct_values() {
+        if !artifacts_ready() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let (model, d) = setup();
+        let m = model.num_features;
+        let svc = ShapService::start(
+            model.clone(),
+            BackendKind::XlaPadded,
+            bcfg(),
+            ServiceConfig {
+                devices: 1,
+                max_batch_rows: 64,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rows = 12;
+        let x = d.features[..rows * m].to_vec();
+        let phis = svc.explain(x.clone(), rows).unwrap();
+        let oracle = RecursiveBackend::new(model, 1);
+        let want = oracle.contributions(&x, rows).unwrap();
+        for (a, b) in phis.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multi_device_pool_matches_single() {
+        if !artifacts_ready() {
+            return;
+        }
+        let (model, d) = setup();
+        let pm = pack_model(&model, Packing::BestFitDecreasing);
+        let m = model.num_features;
+        let rows = 150;
+        let x = &d.features[..rows * m];
+        let a = gputreeshap::runtime::pool::shap_values_multi(
+            &pm, x, rows, 1, &default_artifacts_dir(),
+        )
+        .unwrap();
+        let b = gputreeshap::runtime::pool::shap_values_multi(
+            &pm, x, rows, 3, &default_artifacts_dir(),
+        )
+        .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x1, x2) in a.iter().zip(&b) {
+            assert!((x1 - x2).abs() < 1e-5);
+        }
     }
 }
