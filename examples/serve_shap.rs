@@ -47,7 +47,7 @@ fn main() -> Result<()> {
         },
     )?;
     println!(
-        "service: {devices} worker(s), backend {} (planner), dynamic batching ≤256 rows / 4ms",
+        "service: {devices} device shard(s), backend {} (planner), dynamic batching ≤256 rows / 4ms",
         kind.name()
     );
 

@@ -13,6 +13,8 @@
 pub mod host;
 pub mod planner;
 pub mod recursive;
+pub mod shard;
+pub mod sharded;
 #[cfg(feature = "xla")]
 pub mod xla;
 
@@ -26,8 +28,17 @@ use crate::util::error::Result;
 pub use host::HostPackedBackend;
 pub use planner::{CostEstimate, ModelShape, Plan, Planner};
 pub use recursive::RecursiveBackend;
+pub use shard::ShardAxis;
+pub use sharded::ShardedBackend;
 #[cfg(feature = "xla")]
 pub use xla::{XlaPaddedBackend, XlaWarpBackend};
+
+/// Callback invoked after every per-shard execution of a
+/// [`ShardedBackend`]: `(shard index, rows executed, wall time)`. The
+/// coordinator installs one to surface per-shard rows/p50/p99 in its
+/// metrics without the backend layer depending on it.
+pub type ShardObserver =
+    Arc<dyn Fn(usize, usize, std::time::Duration) + Send + Sync>;
 
 /// What a backend can do, and the cost metadata the planner compares.
 #[derive(Clone, Copy, Debug)]
@@ -48,7 +59,9 @@ pub struct BackendCaps {
 /// - `contributions`: `[rows × groups × (M+1)]`, base value in slot M.
 /// - `interactions`:  `[rows × groups × (M+1)²]`, base value at [M, M].
 /// - `predictions`:   `[rows × groups]` raw margin scores.
-pub trait ShapBackend {
+/// `Send + Sync` is a trait bound because the sharded executor fans one
+/// call out across scoped worker threads sharing `&self`.
+pub trait ShapBackend: Send + Sync {
     fn name(&self) -> &'static str;
     fn caps(&self) -> BackendCaps;
     fn num_features(&self) -> usize;
@@ -59,6 +72,9 @@ pub trait ShapBackend {
     fn predictions(&self, _x: &[f32], _rows: usize) -> Result<Vec<f32>> {
         Err(crate::anyhow!("backend '{}' does not serve predictions", self.name()))
     }
+    /// Install a per-shard execution observer; a no-op everywhere except
+    /// [`ShardedBackend`], so callers can wire metrics without downcasts.
+    fn set_shard_observer(&mut self, _obs: ShardObserver) {}
     /// Human-readable detail (artifact bucket, packing, …) for logs.
     fn describe(&self) -> String {
         self.name().to_string()
@@ -128,6 +144,11 @@ pub struct BackendConfig {
     pub with_interactions: bool,
     /// also prepare the prediction pipeline where applicable
     pub with_predict: bool,
+    /// device count: > 1 builds a [`ShardedBackend`] over that many
+    /// inner instances of the requested kind
+    pub devices: usize,
+    /// shard axis override; `None` lets the planner pick per batch size
+    pub shard_axis: Option<ShardAxis>,
 }
 
 impl Default for BackendConfig {
@@ -139,16 +160,31 @@ impl Default for BackendConfig {
             rows_hint: 256,
             with_interactions: false,
             with_predict: false,
+            devices: 1,
+            shard_axis: None,
         }
     }
 }
 
-/// Build one backend of the given kind over `model`.
+/// Build one backend of the given kind over `model`. With
+/// `cfg.devices > 1` the result is a [`ShardedBackend`] over that many
+/// inner instances, on `cfg.shard_axis` (or the planner's pick for
+/// `cfg.rows_hint`-row batches when unset).
 pub fn build(
     model: &Arc<Model>,
     kind: BackendKind,
     cfg: &BackendConfig,
 ) -> Result<Box<dyn ShapBackend>> {
+    if cfg.devices > 1 {
+        let axis = cfg.shard_axis.unwrap_or_else(|| {
+            Planner::for_model(model)
+                .with_devices(cfg.devices)
+                .plan_for(kind, cfg.rows_hint.max(1))
+                .map(|p| p.axis)
+                .unwrap_or(ShardAxis::Rows)
+        });
+        return Ok(Box::new(ShardedBackend::build(model, kind, cfg, cfg.devices, axis)?));
+    }
     match kind {
         BackendKind::Recursive => {
             Ok(Box::new(RecursiveBackend::new(Arc::clone(model), cfg.threads)))
@@ -182,15 +218,32 @@ pub fn available(model: &Arc<Model>, cfg: &BackendConfig) -> Vec<(BackendKind, B
 /// Planner-driven construction: try backends in estimated-latency order
 /// for `cfg.rows_hint`-row batches, returning the first that builds (and
 /// supports interactions when `cfg.with_interactions` demands them).
+/// With `cfg.devices > 1` each candidate plan carries the shard count
+/// and axis the generalized crossover heuristic picked; an explicit
+/// `cfg.shard_axis` pins the axis and the full device count instead.
 pub fn build_auto(
     model: &Arc<Model>,
     cfg: &BackendConfig,
 ) -> Result<(Plan, Box<dyn ShapBackend>)> {
-    let planner = Planner::for_model(model);
+    let planner = Planner::for_model(model).with_devices(cfg.devices.max(1));
     let rows = cfg.rows_hint.clamp(1, 1 << 24);
+    // an explicit axis pins the layout for every candidate, and the
+    // ranking prices that pinned layout (not each kind's best)
+    let plans = match cfg.shard_axis {
+        Some(axis) => planner.ranked_pinned(rows, axis, cfg.devices.max(1)),
+        None => planner.ranked(rows),
+    };
     let mut last_err = None;
-    for plan in planner.ranked(rows) {
-        match build(model, plan.kind, cfg) {
+    for plan in plans {
+        let built = if plan.shards > 1 {
+            ShardedBackend::build(model, plan.kind, cfg, plan.shards, plan.axis)
+                .map(|b| Box::new(b) as Box<dyn ShapBackend>)
+        } else {
+            let mut one = cfg.clone();
+            one.devices = 1;
+            build(model, plan.kind, &one)
+        };
+        match built {
             Ok(b) => {
                 if cfg.with_interactions && !b.caps().supports_interactions {
                     continue;
@@ -235,6 +288,40 @@ mod tests {
         for (_, b) in &avail {
             assert_eq!(b.num_features(), model.num_features);
             assert_eq!(b.num_groups(), model.num_groups);
+        }
+    }
+
+    #[test]
+    fn build_with_devices_shards_transparently() {
+        let model = tiny_model();
+        let d = SynthSpec::cal_housing(0.004).generate();
+        let m = model.num_features;
+        let rows = 8.min(d.rows);
+        let x = &d.features[..rows * m];
+        let plain = build(
+            &model,
+            BackendKind::Host,
+            &BackendConfig { threads: 1, ..Default::default() },
+        )
+        .unwrap()
+        .contributions(x, rows)
+        .unwrap();
+        for axis in [ShardAxis::Rows, ShardAxis::Trees] {
+            let cfg = BackendConfig {
+                threads: 1,
+                devices: 3,
+                shard_axis: Some(axis),
+                rows_hint: rows,
+                ..Default::default()
+            };
+            let b = build(&model, BackendKind::Host, &cfg).unwrap();
+            assert!(b.describe().starts_with("sharded["), "{}", b.describe());
+            assert_eq!(b.name(), "host", "sharding keeps the inner kind's name");
+            let phis = b.contributions(x, rows).unwrap();
+            assert_eq!(phis.len(), plain.len());
+            for (a, b) in phis.iter().zip(&plain) {
+                assert!((a - b).abs() < 1e-5, "{axis:?}: {a} vs {b}");
+            }
         }
     }
 

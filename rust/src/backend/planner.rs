@@ -9,7 +9,17 @@
 //! requested batch size — reproducing Fig 4's CPU/accelerator crossover
 //! — and exposes the predicted crossover point for benches to check
 //! against measurement.
+//!
+//! With a device topology (`with_devices`) the heuristic generalizes to
+//! N devices: every candidate is additionally scored across shard
+//! counts `1..=devices` on both shard axes. Row sharding divides the
+//! per-row term by `min(shards, rows)` (each device pays its own batch
+//! overhead concurrently); tree sharding divides it by
+//! `min(shards, trees)` and adds a merge pass per extra shard — which
+//! is why small batches over wide ensembles plan onto the tree axis
+//! while large batches keep the paper's row axis.
 
+use crate::backend::shard::ShardAxis;
 use crate::backend::BackendKind;
 use crate::gbdt::Model;
 use crate::shap::model_paths;
@@ -92,21 +102,29 @@ pub fn estimate(kind: BackendKind, s: &ModelShape) -> CostEstimate {
     }
 }
 
-/// One planning decision: the chosen backend and its estimated latency.
+/// One planning decision: the chosen backend, how many device shards to
+/// spread it over and along which axis, and the estimated latency.
 #[derive(Clone, Copy, Debug)]
 pub struct Plan {
     pub kind: BackendKind,
+    /// device shards (1 = unsharded)
+    pub shards: usize,
+    pub axis: ShardAxis,
     pub est_latency_s: f64,
 }
 
-/// Picks backend + representation from model shape and batch size.
+/// Picks backend + representation + shard layout from model shape,
+/// batch size and device topology.
 pub struct Planner {
     pub shape: ModelShape,
     candidates: Vec<(BackendKind, CostEstimate)>,
+    /// device topology: how many shards a plan may spread over
+    devices: usize,
 }
 
 impl Planner {
-    /// Planner over every backend kind compiled into this binary.
+    /// Planner over every backend kind compiled into this binary,
+    /// single-device. Chain [`Planner::with_devices`] for a topology.
     pub fn for_model(model: &Model) -> Planner {
         let shape = ModelShape::of(model);
         let candidates = BackendKind::ALL
@@ -115,7 +133,7 @@ impl Planner {
             .filter(|k| k.compiled_in())
             .map(|k| (k, estimate(k, &shape)))
             .collect();
-        Planner { shape, candidates }
+        Planner { shape, candidates, devices: 1 }
     }
 
     /// Planner with explicit candidates (tests, measured calibrations).
@@ -123,10 +141,20 @@ impl Planner {
         shape: ModelShape,
         candidates: Vec<(BackendKind, CostEstimate)>,
     ) -> Planner {
-        Planner { shape, candidates }
+        Planner { shape, candidates, devices: 1 }
     }
 
-    /// Estimated latency to explain `rows` rows in one batch.
+    /// Set the device topology plans may shard across.
+    pub fn with_devices(mut self, devices: usize) -> Planner {
+        self.devices = devices.max(1);
+        self
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Estimated latency to explain `rows` rows in one unsharded batch.
     pub fn batch_cost(&self, kind: BackendKind, rows: usize) -> Option<f64> {
         self.candidates
             .iter()
@@ -134,21 +162,102 @@ impl Planner {
             .map(|(_, c)| c.batch_overhead_s + rows as f64 / c.rows_per_s)
     }
 
-    /// All candidates ordered by estimated latency for this batch size.
+    /// Estimated latency for `rows` rows over `shards` devices on the
+    /// given axis. Each shard pays the backend's batch overhead
+    /// concurrently; the per-row term divides across the *effective*
+    /// shards (rows can't split below one row per device, trees below
+    /// one tree); tree shards pay one output-merge pass per extra shard.
+    fn sharded_cost(
+        &self,
+        c: &CostEstimate,
+        rows: usize,
+        axis: ShardAxis,
+        shards: usize,
+    ) -> f64 {
+        let eff = match axis {
+            ShardAxis::Rows => shards.min(rows.max(1)),
+            ShardAxis::Trees => shards.min(self.shape.trees.max(1)),
+        } as f64;
+        let merge = match axis {
+            ShardAxis::Rows => 0.0,
+            ShardAxis::Trees => {
+                (shards as f64 - 1.0)
+                    * rows as f64
+                    * (self.shape.features as f64 + 1.0)
+                    * 2e-9
+            }
+        };
+        c.batch_overhead_s + (rows as f64 / eff) / c.rows_per_s + merge
+    }
+
+    /// Best shard layout for one backend kind at this batch size, or
+    /// `None` when the kind is not a candidate. Ties prefer fewer
+    /// shards, and the row axis over the tree axis (the paper's scheme).
+    pub fn plan_for(&self, kind: BackendKind, rows: usize) -> Option<Plan> {
+        let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
+        let mut best: Option<Plan> = None;
+        for shards in 1..=self.devices {
+            for axis in ShardAxis::ALL {
+                let shards = match axis {
+                    ShardAxis::Rows => shards,
+                    ShardAxis::Trees => shards.min(self.shape.trees.max(1)),
+                };
+                let est = self.sharded_cost(&c, rows, axis, shards);
+                let better = match &best {
+                    None => true,
+                    Some(b) => est < b.est_latency_s - 1e-15,
+                };
+                if better {
+                    best = Some(Plan { kind, shards, axis, est_latency_s: est });
+                }
+            }
+        }
+        best
+    }
+
+    /// The plan for one backend kind with the shard layout pinned by the
+    /// caller (`--shard-axis`): the tree axis clamps to the tree count,
+    /// and the estimate prices the pinned layout, not the kind's best.
+    pub fn plan_pinned(
+        &self,
+        kind: BackendKind,
+        rows: usize,
+        axis: ShardAxis,
+        shards: usize,
+    ) -> Option<Plan> {
+        let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
+        let shards = match axis {
+            ShardAxis::Rows => shards.max(1),
+            ShardAxis::Trees => shards.clamp(1, self.shape.trees.max(1)),
+        };
+        Some(Plan { kind, shards, axis, est_latency_s: self.sharded_cost(&c, rows, axis, shards) })
+    }
+
+    /// All candidates (each with its best shard layout) ordered by
+    /// estimated latency for this batch size.
     pub fn ranked(&self, rows: usize) -> Vec<Plan> {
         let mut plans: Vec<Plan> = self
             .candidates
             .iter()
-            .map(|(k, c)| Plan {
-                kind: *k,
-                est_latency_s: c.batch_overhead_s + rows as f64 / c.rows_per_s,
-            })
+            .filter_map(|(k, _)| self.plan_for(*k, rows))
             .collect();
         plans.sort_by(|a, b| a.est_latency_s.total_cmp(&b.est_latency_s));
         plans
     }
 
-    /// The winning backend for this batch size.
+    /// All candidates priced at one pinned shard layout, ordered by
+    /// estimated latency.
+    pub fn ranked_pinned(&self, rows: usize, axis: ShardAxis, shards: usize) -> Vec<Plan> {
+        let mut plans: Vec<Plan> = self
+            .candidates
+            .iter()
+            .filter_map(|(k, _)| self.plan_pinned(*k, rows, axis, shards))
+            .collect();
+        plans.sort_by(|a, b| a.est_latency_s.total_cmp(&b.est_latency_s));
+        plans
+    }
+
+    /// The winning backend + shard layout for this batch size.
     pub fn choose(&self, rows: usize) -> Plan {
         self.ranked(rows)
             .into_iter()
@@ -232,6 +341,48 @@ mod tests {
         assert_eq!(p.crossover_rows(BackendKind::Recursive, BackendKind::Recursive), None);
         // unknown candidate ⇒ None
         assert_eq!(p.crossover_rows(BackendKind::Recursive, BackendKind::Host), None);
+    }
+
+    #[test]
+    fn device_topology_generalizes_the_crossover() {
+        let p = synthetic_planner().with_devices(4);
+        // large batch: shard by rows across the full topology
+        let big = p.plan_for(BackendKind::Recursive, 100_000).unwrap();
+        assert_eq!(big.shards, 4);
+        assert_eq!(big.axis, ShardAxis::Rows);
+        assert!(
+            big.est_latency_s < p.batch_cost(BackendKind::Recursive, 100_000).unwrap(),
+            "sharding must beat the unsharded estimate"
+        );
+        // one-row batch: rows cannot split, the tree axis takes over
+        let one = p.plan_for(BackendKind::Recursive, 1).unwrap();
+        assert_eq!(one.axis, ShardAxis::Trees);
+        assert!(one.shards > 1, "tree axis should engage spare devices");
+        // single-device planning is unchanged by the new fields
+        let single = synthetic_planner().plan_for(BackendKind::Recursive, 100_000).unwrap();
+        assert_eq!((single.shards, single.axis), (1, ShardAxis::Rows));
+        assert!(
+            (single.est_latency_s - p.batch_cost(BackendKind::Recursive, 100_000).unwrap())
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn tree_axis_shards_clamp_to_tree_count() {
+        let mut shape = synthetic_planner().shape;
+        shape.trees = 2;
+        let p = Planner::with_candidates(
+            shape,
+            vec![(
+                BackendKind::Recursive,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+            )],
+        )
+        .with_devices(8);
+        let one = p.plan_for(BackendKind::Recursive, 1).unwrap();
+        assert_eq!(one.axis, ShardAxis::Trees);
+        assert_eq!(one.shards, 2, "cannot split 2 trees over more than 2 shards");
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Shard-plan vocabulary: how a SHAP workload is split across devices.
+//!
+//! Two axes, both exact (φ and Φ are additive over trees, and rows are
+//! independent):
+//!
+//! - [`ShardAxis::Rows`] — split the batch, run every shard over the
+//!   full ensemble, concatenate outputs. The paper's Fig 5 scheme;
+//!   throughput-optimal when `rows ≫ devices`.
+//! - [`ShardAxis::Trees`] — split the packed ensemble, run every shard
+//!   over the full batch, sum the per-shard φ/Φ with a base-value
+//!   correction (each shard's output carries `base_score` once, so the
+//!   sum over-counts it `shards − 1` times). Helps wide-ensemble /
+//!   small-batch workloads where there are no rows left to split.
+//!
+//! This module holds the pure planning math — axis parsing, row
+//! chunking, leaf-balanced tree splitting, and the base correction —
+//! with no threads or devices; [`super::sharded::ShardedBackend`] is
+//! the executor built on top of it.
+
+use crate::gbdt::Model;
+
+/// The axis a [`super::ShardedBackend`] splits work along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardAxis {
+    /// split the batch across devices (Fig 5)
+    Rows,
+    /// split the ensemble across devices (additivity over trees)
+    Trees,
+}
+
+impl ShardAxis {
+    pub const ALL: [ShardAxis; 2] = [ShardAxis::Rows, ShardAxis::Trees];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardAxis::Rows => "rows",
+            ShardAxis::Trees => "trees",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardAxis> {
+        match s {
+            "rows" | "row" => Some(ShardAxis::Rows),
+            "trees" | "tree" => Some(ShardAxis::Trees),
+            _ => None,
+        }
+    }
+}
+
+/// Contiguous `(start, len)` row chunks, near-equal sized, empties
+/// dropped — at most `chunks` of them, fewer when `rows < chunks`.
+pub fn row_chunks(rows: usize, chunks: usize) -> Vec<(usize, usize)> {
+    let chunks = chunks.max(1).min(rows.max(1));
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0usize;
+    for c in 0..chunks {
+        let end = rows * (c + 1) / chunks;
+        if end > start {
+            out.push((start, end - start));
+            start = end;
+        }
+    }
+    out
+}
+
+/// Split `model` into `shards` contiguous sub-ensembles, balanced by
+/// leaf count (per-row SHAP cost is proportional to leaves, not trees).
+/// Every shard gets at least one tree; `shards` is clamped to the tree
+/// count. Concatenating the shards' tree lists reproduces the model.
+pub fn split_trees(model: &Model, shards: usize) -> Vec<Model> {
+    let n = model.trees.len();
+    let shards = shards.clamp(1, n.max(1));
+    let leaves: Vec<usize> = model.trees.iter().map(|t| t.num_leaves()).collect();
+    let total: usize = leaves.iter().sum();
+
+    // boundary b_s = first tree of shard s; advance each boundary until
+    // the cumulative leaf count reaches its proportional target, while
+    // keeping ≥1 tree on both sides of every cut
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    let mut idx = 0usize;
+    let mut cum = 0usize;
+    for s in 1..shards {
+        let target = total * s / shards;
+        let min_idx = bounds[s - 1] + 1;
+        let max_idx = n - (shards - s);
+        while idx < max_idx && (cum < target || idx < min_idx) {
+            cum += leaves[idx];
+            idx += 1;
+        }
+        bounds.push(idx);
+    }
+    bounds.push(n);
+
+    bounds
+        .windows(2)
+        .map(|w| Model {
+            trees: model.trees[w[0]..w[1]].to_vec(),
+            tree_group: model.tree_group[w[0]..w[1]].to_vec(),
+            num_groups: model.num_groups,
+            num_features: model.num_features,
+            base_score: model.base_score,
+            objective: model.objective,
+        })
+        .collect()
+}
+
+/// The summed tree-shard outputs carry `base_score` once per shard;
+/// subtract the surplus `(shards − 1) · base_score` at the base-value
+/// positions of the given task layout (slot `M` for contributions,
+/// `[M, M]` for interactions, every group entry for predictions).
+pub fn correct_base(
+    out: &mut [f32],
+    task: ShardTask,
+    shards: usize,
+    base_score: f32,
+    rows: usize,
+    groups: usize,
+    features: usize,
+) {
+    if shards <= 1 || base_score == 0.0 {
+        return;
+    }
+    let surplus = (shards - 1) as f32 * base_score;
+    let m = features;
+    match task {
+        ShardTask::Contributions => {
+            let stride = groups * (m + 1);
+            for r in 0..rows {
+                for g in 0..groups {
+                    out[r * stride + g * (m + 1) + m] -= surplus;
+                }
+            }
+        }
+        ShardTask::Interactions => {
+            let ms = (m + 1) * (m + 1);
+            let stride = groups * ms;
+            for r in 0..rows {
+                for g in 0..groups {
+                    out[r * stride + g * ms + m * (m + 1) + m] -= surplus;
+                }
+            }
+        }
+        ShardTask::Predictions => {
+            for v in out.iter_mut().take(rows * groups) {
+                *v -= surplus;
+            }
+        }
+    }
+}
+
+/// Which output layout a sharded execution produces (drives the
+/// per-task base correction and output stride).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardTask {
+    Contributions,
+    Interactions,
+    Predictions,
+}
+
+impl ShardTask {
+    /// Output floats per row for this task.
+    pub fn stride(&self, groups: usize, features: usize) -> usize {
+        match self {
+            ShardTask::Contributions => groups * (features + 1),
+            ShardTask::Interactions => groups * (features + 1) * (features + 1),
+            ShardTask::Predictions => groups,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    #[test]
+    fn axis_parse_roundtrip() {
+        for a in ShardAxis::ALL {
+            assert_eq!(ShardAxis::parse(a.name()), Some(a));
+        }
+        assert_eq!(ShardAxis::parse("tree"), Some(ShardAxis::Trees));
+        assert_eq!(ShardAxis::parse("nope"), None);
+    }
+
+    #[test]
+    fn row_chunks_cover_exactly() {
+        for (rows, chunks) in [(10, 3), (1, 4), (7, 7), (100, 1), (5, 8)] {
+            let cs = row_chunks(rows, chunks);
+            assert!(cs.len() <= chunks.min(rows));
+            let mut next = 0usize;
+            for (start, len) in &cs {
+                assert_eq!(*start, next, "contiguous");
+                assert!(*len > 0);
+                next = start + len;
+            }
+            assert_eq!(next, rows, "covers all rows");
+        }
+    }
+
+    #[test]
+    fn split_trees_partitions_and_balances() {
+        let d = SynthSpec::cal_housing(0.01).generate();
+        let model =
+            train(&d, &TrainParams { rounds: 9, max_depth: 4, ..Default::default() });
+        for shards in [1usize, 2, 3, 4, 9, 20] {
+            let subs = split_trees(&model, shards);
+            assert_eq!(subs.len(), shards.min(model.trees.len()));
+            let total: usize = subs.iter().map(|s| s.trees.len()).sum();
+            assert_eq!(total, model.trees.len(), "every tree assigned once");
+            for sub in &subs {
+                assert!(!sub.trees.is_empty());
+                assert_eq!(sub.trees.len(), sub.tree_group.len());
+                assert_eq!(sub.num_features, model.num_features);
+            }
+            // leaf balance: no shard holds more than ~2 proportional shares
+            if shards <= model.trees.len() {
+                let per = (model.total_leaves() / shards).max(1);
+                let heaviest_tree =
+                    model.trees.iter().map(|t| t.num_leaves()).max().unwrap_or(0);
+                for sub in &subs {
+                    assert!(
+                        sub.total_leaves() <= 2 * per + heaviest_tree,
+                        "shard too heavy: {} of {} total",
+                        sub.total_leaves(),
+                        model.total_leaves()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn base_correction_targets_only_base_slots() {
+        let (rows, groups, m, shards) = (2usize, 2usize, 3usize, 3usize);
+        let stride = groups * (m + 1);
+        let mut phi = vec![1.0f32; rows * stride];
+        correct_base(&mut phi, ShardTask::Contributions, shards, 0.5, rows, groups, m);
+        for r in 0..rows {
+            for g in 0..groups {
+                for f in 0..=m {
+                    let v = phi[r * stride + g * (m + 1) + f];
+                    if f == m {
+                        assert!((v - 0.0).abs() < 1e-6, "base slot corrected by (K−1)·b");
+                    } else {
+                        assert_eq!(v, 1.0, "feature slots untouched");
+                    }
+                }
+            }
+        }
+        // shards == 1 is the identity
+        let mut one = vec![1.0f32; rows * stride];
+        correct_base(&mut one, ShardTask::Contributions, 1, 0.5, rows, groups, m);
+        assert!(one.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,384 @@
+//! The multi-device [`ShapBackend`]: wraps N inner backend instances
+//! (one per device) and executes contributions, interactions and
+//! predictions across them along a [`ShardAxis`].
+//!
+//! - **Rows**: inner instances all hold the full model; row chunks are
+//!   handed out through a shared cursor (finer than one chunk per shard,
+//!   so a failed shard aborts the remaining work promptly) and outputs
+//!   are written into disjoint ranges of one buffer.
+//! - **Trees**: inner instances each hold a leaf-balanced slice of the
+//!   ensemble; every shard runs the full batch and the per-shard φ/Φ are
+//!   summed with the `(shards − 1) · base_score` correction of
+//!   [`shard::correct_base`].
+//!
+//! Failure semantics (the fix for the old `runtime/pool.rs`): a failed
+//! shard sets an abort flag that stops idle shards from taking more
+//! work, every shard error is aggregated into the returned error, and
+//! no result is returned unless every chunk completed — no hang, no
+//! silent partial output.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::backend::shard::{self, row_chunks, split_trees, ShardAxis, ShardTask};
+use crate::backend::{self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardObserver};
+use crate::gbdt::Model;
+use crate::util::error::{Error, Result};
+
+/// How many row chunks per shard the rows-axis queue is cut into:
+/// finer chunks mean prompter abort on failure and better balance when
+/// devices run at different speeds, at a small per-chunk dispatch cost.
+const CHUNKS_PER_SHARD: usize = 4;
+
+pub struct ShardedBackend {
+    inner: Vec<Box<dyn ShapBackend>>,
+    axis: ShardAxis,
+    /// the wrapped kind's name — metrics keep aggregating per backend
+    /// kind; shard granularity is reported through the observer
+    kind_name: &'static str,
+    num_features: usize,
+    num_groups: usize,
+    base_score: f32,
+    observer: Option<ShardObserver>,
+    caps: BackendCaps,
+}
+
+impl ShardedBackend {
+    /// Build `shards` instances of `kind` over `model`, split along
+    /// `axis`. `shards` is clamped to the tree count on the tree axis.
+    pub fn build(
+        model: &Arc<Model>,
+        kind: BackendKind,
+        cfg: &BackendConfig,
+        shards: usize,
+        axis: ShardAxis,
+    ) -> Result<ShardedBackend> {
+        let mut inner_cfg = cfg.clone();
+        inner_cfg.devices = 1; // inner builds must not re-shard
+        inner_cfg.shard_axis = None;
+        let shards = match axis {
+            ShardAxis::Rows => shards.max(1),
+            ShardAxis::Trees => shards.clamp(1, model.trees.len().max(1)),
+        };
+        if let ShardAxis::Rows = axis {
+            // row shards execute rows/(shards·CHUNKS_PER_SHARD)-row
+            // chunks, so size the inner backends' batch bucket to the
+            // chunk, not the full batch — device backends pad every
+            // execution to their prepared bucket, and a full-batch
+            // bucket would cost chunk-count× the unsharded device work
+            let per_chunk = shards * CHUNKS_PER_SHARD;
+            inner_cfg.rows_hint = (cfg.rows_hint.max(1) + per_chunk - 1) / per_chunk;
+        }
+        // one (sub-)model per shard; Rows shards all hold the full model
+        let sub_models: Vec<Arc<Model>> = match axis {
+            ShardAxis::Rows => (0..shards).map(|_| Arc::clone(model)).collect(),
+            ShardAxis::Trees => split_trees(model, shards).into_iter().map(Arc::new).collect(),
+        };
+        // build the inner instances concurrently, one per thread — setup
+        // (packing, device client + executable compilation) is the
+        // dominant cost at high shard counts, and on device backends the
+        // client should be constructed on its own thread anyway
+        let inner = build_concurrently(&sub_models, kind, &inner_cfg)?;
+        Ok(ShardedBackend::from_backends(inner, axis, model.base_score))
+    }
+
+    /// Wrap pre-built shard backends. On the tree axis the caller is
+    /// responsible for the inner backends holding disjoint tree slices
+    /// whose union is the full ensemble (as [`split_trees`] produces).
+    pub fn from_backends(
+        inner: Vec<Box<dyn ShapBackend>>,
+        axis: ShardAxis,
+        base_score: f32,
+    ) -> ShardedBackend {
+        assert!(!inner.is_empty(), "sharded backend needs ≥1 shard");
+        let supports_interactions = inner.iter().all(|b| b.caps().supports_interactions);
+        let setup = inner.iter().map(|b| b.caps().setup_cost_s).fold(0.0, f64::max);
+        let overhead =
+            inner.iter().map(|b| b.caps().batch_overhead_s).fold(0.0, f64::max);
+        // rows: devices run disjoint rows concurrently (rates add);
+        // trees: every device runs every row (slowest slice gates)
+        let rows_per_s = match axis {
+            ShardAxis::Rows => inner.iter().map(|b| b.caps().rows_per_s).sum(),
+            ShardAxis::Trees => inner
+                .iter()
+                .map(|b| b.caps().rows_per_s)
+                .fold(f64::INFINITY, f64::min),
+        };
+        ShardedBackend {
+            kind_name: inner[0].name(),
+            num_features: inner[0].num_features(),
+            num_groups: inner[0].num_groups(),
+            base_score,
+            axis,
+            observer: None,
+            caps: BackendCaps {
+                supports_interactions,
+                setup_cost_s: setup,
+                batch_overhead_s: overhead,
+                rows_per_s,
+            },
+            inner,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn axis(&self) -> ShardAxis {
+        self.axis
+    }
+
+    fn observe(&self, shard: usize, rows: usize, started: Instant) {
+        if let Some(obs) = &self.observer {
+            (obs.as_ref())(shard, rows, started.elapsed());
+        }
+    }
+
+    /// Rows axis: shards pull `(start, len)` chunks from a shared queue
+    /// and write into disjoint ranges of one output buffer.
+    fn run_rows<F>(&self, x: &[f32], rows: usize, stride: usize, f: F) -> Result<Vec<f32>>
+    where
+        F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
+    {
+        let m = self.num_features;
+        let n = self.inner.len();
+        if n == 1 || rows <= 1 {
+            let t0 = Instant::now();
+            let out = f(self.inner[0].as_ref(), x, rows)?;
+            self.observe(0, rows, t0);
+            return Ok(out);
+        }
+        let chunks = row_chunks(rows, n * CHUNKS_PER_SHARD);
+        let cursor = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+        let mut out = vec![0.0f32; rows * stride];
+        let mut done = 0usize;
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+        std::thread::scope(|scope| {
+            for (si, b) in self.inner.iter().enumerate() {
+                let (cursor, abort, errs) = (&cursor, &abort, &errs);
+                let (chunks, f, this) = (&chunks, &f, &*self);
+                let b = b.as_ref();
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    if abort.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(&(r0, rc)) = chunks.get(i) else { return };
+                    let t0 = Instant::now();
+                    match f(b, &x[r0 * m..(r0 + rc) * m], rc) {
+                        Ok(vals) if vals.len() == rc * stride => {
+                            this.observe(si, rc, t0);
+                            // the receiver lives until every sender is
+                            // dropped; a failed send means the call is
+                            // being torn down — stop instead of ignoring
+                            if tx.send((r0, vals)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(vals) => {
+                            abort.store(true, Ordering::Relaxed);
+                            errs.lock().unwrap().push(crate::anyhow!(
+                                "shard {si}: expected {} output floats, got {}",
+                                rc * stride,
+                                vals.len()
+                            ));
+                            return;
+                        }
+                        Err(e) => {
+                            abort.store(true, Ordering::Relaxed);
+                            errs.lock().unwrap().push(e.context(format!("shard {si}")));
+                            return;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // assemble chunks into their disjoint ranges as they arrive
+            // (no shared output lock); `rx` closes once every worker has
+            // dropped its sender, which also bounds this loop
+            for (r0, vals) in rx.iter() {
+                let rc = vals.len() / stride;
+                out[r0 * stride..(r0 + rc) * stride].copy_from_slice(&vals);
+                done += rc;
+            }
+        });
+        let errs = errs.into_inner().unwrap();
+        if !errs.is_empty() {
+            return Err(aggregate(errs));
+        }
+        debug_assert_eq!(done, rows);
+        Ok(out)
+    }
+
+    /// Trees axis: every shard runs the full batch over its slice of the
+    /// ensemble; partial outputs are summed and the base surplus removed.
+    fn run_trees<F>(
+        &self,
+        x: &[f32],
+        rows: usize,
+        task: ShardTask,
+        f: F,
+    ) -> Result<Vec<f32>>
+    where
+        F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
+    {
+        let stride = task.stride(self.num_groups, self.num_features);
+        let n = self.inner.len();
+        if n == 1 {
+            let t0 = Instant::now();
+            let out = f(self.inner[0].as_ref(), x, rows)?;
+            self.observe(0, rows, t0);
+            return Ok(out);
+        }
+        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+        let partials = Mutex::new(vec![None::<Vec<f32>>; n]);
+        std::thread::scope(|scope| {
+            for (si, b) in self.inner.iter().enumerate() {
+                let (errs, partials) = (&errs, &partials);
+                let (f, this) = (&f, &*self);
+                let b = b.as_ref();
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    match f(b, x, rows) {
+                        Ok(vals) if vals.len() == rows * stride => {
+                            this.observe(si, rows, t0);
+                            partials.lock().unwrap()[si] = Some(vals);
+                        }
+                        Ok(vals) => {
+                            errs.lock().unwrap().push(crate::anyhow!(
+                                "shard {si}: expected {} output floats, got {}",
+                                rows * stride,
+                                vals.len()
+                            ));
+                        }
+                        Err(e) => {
+                            errs.lock().unwrap().push(e.context(format!("shard {si}")));
+                        }
+                    }
+                });
+            }
+        });
+        let errs = errs.into_inner().unwrap();
+        if !errs.is_empty() {
+            return Err(aggregate(errs));
+        }
+        let mut acc = vec![0.0f32; rows * stride];
+        for partial in partials.into_inner().unwrap() {
+            let partial = partial.expect("no error ⇒ every shard produced output");
+            for (a, v) in acc.iter_mut().zip(&partial) {
+                *a += v;
+            }
+        }
+        shard::correct_base(
+            &mut acc,
+            task,
+            n,
+            self.base_score,
+            rows,
+            self.num_groups,
+            self.num_features,
+        );
+        Ok(acc)
+    }
+
+    fn run<F>(&self, x: &[f32], rows: usize, task: ShardTask, f: F) -> Result<Vec<f32>>
+    where
+        F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
+    {
+        match self.axis {
+            ShardAxis::Rows => {
+                self.run_rows(x, rows, task.stride(self.num_groups, self.num_features), f)
+            }
+            ShardAxis::Trees => self.run_trees(x, rows, task, f),
+        }
+    }
+}
+
+/// Build one backend instance per (sub-)model, each on its own thread.
+fn build_concurrently(
+    sub_models: &[Arc<Model>],
+    kind: BackendKind,
+    cfg: &BackendConfig,
+) -> Result<Vec<Box<dyn ShapBackend>>> {
+    if sub_models.len() == 1 {
+        return Ok(vec![backend::build(&sub_models[0], kind, cfg)?]);
+    }
+    let slots: Mutex<Vec<Option<Result<Box<dyn ShapBackend>>>>> =
+        Mutex::new(sub_models.iter().map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for (i, sub) in sub_models.iter().enumerate() {
+            let slots = &slots;
+            scope.spawn(move || {
+                let built = backend::build(sub, kind, cfg);
+                slots.lock().unwrap()[i] = Some(built);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.expect("every build thread fills its slot")
+                .map_err(|e| e.context(format!("shard {i}")))
+        })
+        .collect()
+}
+
+/// One error per failed shard, folded into a single aggregate.
+fn aggregate(mut errs: Vec<Error>) -> Error {
+    if errs.len() == 1 {
+        return errs.pop().unwrap();
+    }
+    let msgs: Vec<String> = errs.iter().map(|e| format!("{e:#}")).collect();
+    crate::anyhow!("{} shard(s) failed: {}", errs.len(), msgs.join("; "))
+}
+
+impl ShapBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        self.kind_name
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Contributions, |b, x, r| b.contributions(x, r))
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Interactions, |b, x, r| b.interactions(x, r))
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Predictions, |b, x, r| b.predictions(x, r))
+    }
+
+    fn set_shard_observer(&mut self, obs: ShardObserver) {
+        self.observer = Some(obs);
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded[{}×{} axis, {}]",
+            self.inner.len(),
+            self.axis.name(),
+            self.inner[0].describe()
+        )
+    }
+}

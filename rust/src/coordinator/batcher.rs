@@ -55,6 +55,14 @@ impl<T> Batcher<T> {
     }
 
     /// Drain requests up to `max_batch_rows` (always at least one).
+    ///
+    /// Fairness guarantee: requests leave in strict FIFO arrival order —
+    /// this drains a *prefix* of the queue, never skips around it. A
+    /// request at the head that is larger than `max_batch_rows` is
+    /// admitted alone rather than held (no starvation of oversized
+    /// requests), and later small requests can never overtake an
+    /// earlier large one, so per-request queueing delay is bounded by
+    /// the work admitted ahead of it plus `max_wait`.
     pub fn take_batch(&mut self) -> Vec<PendingRequest<T>> {
         let mut out = Vec::new();
         let mut rows = 0;
@@ -107,6 +115,41 @@ mod tests {
         let batch = b.take_batch();
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].rows, 25);
+    }
+
+    #[test]
+    fn oversized_first_request_is_admitted_alone_in_fifo_order() {
+        // a request larger than the bucket, with smaller ones queued
+        // behind it: it must dispatch alone, immediately, and the
+        // followers must keep their arrival order in the next batch
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_secs(1));
+        b.push(25, 1);
+        b.push(2, 2);
+        b.push(3, 3);
+        assert!(b.ready(Instant::now()), "full bucket must flush without waiting");
+        let first = b.take_batch();
+        assert_eq!(first.len(), 1, "oversized head dispatches alone");
+        assert_eq!((first[0].rows, first[0].payload), (25, 1));
+        assert_eq!(b.queued_rows(), 5);
+        let second = b.take_batch();
+        let payloads: Vec<u32> = second.iter().map(|p| p.payload).collect();
+        assert_eq!(payloads, vec![2, 3], "followers coalesce in FIFO order");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn exact_max_wait_boundary_is_inclusive() {
+        let max_wait = Duration::from_millis(50);
+        let mut b: Batcher<u32> = Batcher::new(1000, max_wait);
+        b.push(1, 9);
+        let arrived = b.queue[0].arrived;
+        assert!(!b.ready(arrived), "fresh request must not flush");
+        assert!(
+            !b.ready(arrived + max_wait - Duration::from_nanos(1)),
+            "just under the deadline must keep waiting"
+        );
+        assert!(b.ready(arrived + max_wait), "exactly max_wait must flush (>=)");
+        assert!(b.ready(arrived + max_wait + Duration::from_millis(1)));
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Serving metrics: counters + latency histogram, lock-light, plus
 //! per-backend execution counters (rows served, batches, latency
 //! percentiles) so multi-backend deployments can be compared in the
-//! service stats output.
+//! service stats output, and per-shard counters (fed by the sharded
+//! backend's observer) so multi-device deployments can see how work and
+//! tail latency distribute across devices.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,6 +48,7 @@ pub struct Metrics {
     latencies: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     per_backend: Mutex<BTreeMap<String, BackendCounters>>,
+    per_shard: Mutex<BTreeMap<usize, BackendCounters>>,
 }
 
 impl Metrics {
@@ -84,6 +87,16 @@ impl Metrics {
         c.push_latency(d.as_secs_f64());
     }
 
+    /// One executed chunk on device shard `shard` (sharded-backend
+    /// observer hook).
+    pub fn record_shard_batch(&self, shard: usize, rows: usize, d: Duration) {
+        let mut map = self.per_shard.lock().unwrap();
+        let c = map.entry(shard).or_default();
+        c.rows += rows as u64;
+        c.batches += 1;
+        c.push_latency(d.as_secs_f64());
+    }
+
     pub fn latency_stats(&self) -> Stats {
         Stats::from_samples(&self.latencies.lock().unwrap())
     }
@@ -95,6 +108,33 @@ impl Metrics {
     /// Per-backend counters, cloned out of the lock.
     pub fn backend_counters(&self) -> BTreeMap<String, BackendCounters> {
         self.per_backend.lock().unwrap().clone()
+    }
+
+    /// Per-shard counters, cloned out of the lock. Empty unless the
+    /// service runs a sharded backend.
+    pub fn shard_counters(&self) -> BTreeMap<usize, BackendCounters> {
+        self.per_shard.lock().unwrap().clone()
+    }
+
+    /// Per-shard stats as JSON: "shardN" → {rows, batches, p50_s, p99_s}.
+    pub fn shard_snapshot(&self) -> Json {
+        let map = self.shard_counters();
+        Json::Obj(
+            map.into_iter()
+                .map(|(shard, c)| {
+                    let lat = Stats::from_samples(&c.latencies);
+                    (
+                        format!("shard{shard}"),
+                        Json::obj(vec![
+                            ("rows", Json::from(c.rows as usize)),
+                            ("batches", Json::from(c.batches as usize)),
+                            ("p50_s", Json::from(lat.p50)),
+                            ("p99_s", Json::from(lat.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
     }
 
     /// Per-backend stats as JSON: name → {rows, batches, p50_s, p99_s}.
@@ -133,6 +173,7 @@ impl Metrics {
             ("latency_mean_s", Json::from(lat.mean)),
             ("mean_batch_rows", Json::from(bat.mean)),
             ("backends", self.backend_snapshot()),
+            ("shards", self.shard_snapshot()),
         ])
     }
 }
@@ -154,6 +195,31 @@ mod tests {
         assert_eq!(snap.get("rows").unwrap().as_usize().unwrap(), 15);
         let p50 = snap.get("latency_p50_s").unwrap().as_f64().unwrap();
         assert!(p50 >= 0.01 && p50 <= 0.03);
+    }
+
+    #[test]
+    fn per_shard_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        // no sharded backend → empty map, still present in the snapshot
+        assert!(m.shard_counters().is_empty());
+        m.record_shard_batch(0, 32, Duration::from_millis(4));
+        m.record_shard_batch(0, 32, Duration::from_millis(6));
+        m.record_shard_batch(1, 64, Duration::from_millis(2));
+        let counters = m.shard_counters();
+        assert_eq!(counters[&0].rows, 64);
+        assert_eq!(counters[&0].batches, 2);
+        assert_eq!(counters[&1].rows, 64);
+        let snap = m.snapshot();
+        let shards = snap.get("shards").unwrap();
+        assert_eq!(shards.get("shard0").unwrap().get("rows").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(
+            shards.get("shard1").unwrap().get("batches").unwrap().as_usize().unwrap(),
+            1
+        );
+        let p50 = shards.get("shard0").unwrap().get("p50_s").unwrap().as_f64().unwrap();
+        assert!(p50 >= 0.004 && p50 <= 0.006);
+        let p99 = shards.get("shard1").unwrap().get("p99_s").unwrap().as_f64().unwrap();
+        assert!(p99 >= 0.002);
     }
 
     #[test]

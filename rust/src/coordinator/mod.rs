@@ -1,8 +1,10 @@
-//! L3 serving coordinator: dynamic batching, backend workers,
+//! L3 serving coordinator: dynamic batching, a sharding-aware executor,
 //! backpressure, metrics — SHAP explanations as a service with python
-//! nowhere on the request path. Workers execute through the
+//! nowhere on the request path. The executor dispatches through the
 //! `backend::ShapBackend` trait, so any registered backend (recursive,
-//! host packed DP, XLA warp/padded) can serve.
+//! host packed DP, XLA warp/padded) can serve, and with `devices > 1`
+//! each batch fans out across every device shard of one
+//! `ShardedBackend` (per-shard rows/p50/p99 land in `Metrics`).
 
 pub mod batcher;
 pub mod metrics;

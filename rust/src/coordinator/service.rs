@@ -10,13 +10,18 @@
 //!                  worker threads (one ShapBackend each) --responses-->
 //! ```
 //!
-//! Workers are backend-agnostic: each builds its own backend instance
-//! from a [`BackendFactory`] (device clients and buffers are constructed
-//! on the thread that uses them) and dispatches through the trait, so
-//! the recursive CPU path, the host packed DP and the XLA engines are
-//! all served by the same coordinator. Contributions *and* interactions
-//! flow through the same ingress → batcher → worker pipeline; batches
-//! are kept task-homogeneous by batching per [`Task`].
+//! The executor is backend-agnostic: it builds one backend instance
+//! from a [`BackendFactory`] on its own thread (device clients and
+//! buffers are constructed on the thread that uses them) and dispatches
+//! through the trait, so the recursive CPU path, the host packed DP and
+//! the XLA engines are all served by the same coordinator. With
+//! `devices > 1` that single instance is a `ShardedBackend` spanning
+//! the device topology — each batch fans out across every device at
+//! once (row- or tree-axis, see `backend::shard`) instead of the old
+//! per-worker model duplication, and per-shard rows/p50/p99 surface in
+//! [`Metrics`]. Contributions *and* interactions flow through the same
+//! ingress → batcher → executor pipeline; batches are kept
+//! task-homogeneous by batching per [`Task`].
 //!
 //! Backpressure: the ingress channel is bounded; `submit` fails fast when
 //! the queue is full (callers see `Rejected`). The batcher coalesces
@@ -28,7 +33,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::anyhow;
-use crate::backend::{self, BackendConfig, BackendKind, ShapBackend};
+use crate::backend::{self, BackendConfig, BackendKind, ShapBackend, ShardAxis};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::gbdt::Model;
@@ -52,13 +57,16 @@ impl Task {
     }
 }
 
-/// Builds one backend instance per worker thread.
+/// Builds the executor's backend instance (possibly sharded).
 pub type BackendFactory = dyn Fn() -> Result<Box<dyn ShapBackend>> + Send + Sync;
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// worker threads, one backend instance (device) each
+    /// device shards of the executor's one backend: every batch fans
+    /// out across all of them through a `ShardedBackend`
     pub devices: usize,
+    /// shard axis for `devices > 1`; `None` lets the planner pick
+    pub shard_axis: Option<ShardAxis>,
     /// flush threshold in rows
     pub max_batch_rows: usize,
     pub max_wait: Duration,
@@ -70,6 +78,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             devices: 1,
+            shard_axis: None,
             max_batch_rows: 256,
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
@@ -106,25 +115,26 @@ pub struct ShapService {
 }
 
 impl ShapService {
-    /// Start workers over backends built by `factory`.
+    /// Start the executor over the backend built by `factory` (a
+    /// `ShardedBackend` when the factory shards; its per-shard
+    /// executions are recorded into the service metrics).
     pub fn start_with_factory(factory: Arc<BackendFactory>, cfg: ServiceConfig) -> Result<ShapService> {
         let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
-        let (job_tx, job_rx) = sync_channel::<Batch>(cfg.devices * 2);
-        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (job_tx, job_rx) = sync_channel::<Batch>(2);
 
-        // worker threads: one backend (device + prepared model) each
-        let mut worker_handles = Vec::new();
-        let ready = Arc::new(std::sync::Barrier::new(cfg.devices + 1));
+        // the executor thread: builds the (possibly sharded) backend on
+        // the thread that uses it, then drains batches through it — each
+        // batch fans out across every device shard inside the backend
+        let ready = Arc::new(std::sync::Barrier::new(2));
         let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
-        for _ in 0..cfg.devices {
-            let factory = factory.clone();
-            let job_rx = job_rx.clone();
+        let mut worker_handles = Vec::new();
+        {
             let metrics = metrics.clone();
             let ready = ready.clone();
             let init_err = init_err.clone();
             worker_handles.push(std::thread::spawn(move || {
-                let backend = match factory() {
+                let mut backend = match factory() {
                     Ok(b) => {
                         ready.wait();
                         b
@@ -135,12 +145,11 @@ impl ShapService {
                         return;
                     }
                 };
-                loop {
-                    let batch = {
-                        let guard = job_rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { return };
+                let shard_metrics = metrics.clone();
+                backend.set_shard_observer(Arc::new(move |shard, rows, dt| {
+                    shard_metrics.record_shard_batch(shard, rows, dt);
+                }));
+                while let Ok(batch) = job_rx.recv() {
                     process_batch(backend.as_ref(), batch, &metrics);
                 }
             }));
@@ -171,24 +180,35 @@ impl ShapService {
         })
     }
 
-    /// Start with one concrete backend kind over `model`.
+    /// Start with one concrete backend kind over `model`. The service
+    /// topology (`cfg.devices`, `cfg.shard_axis`) is forwarded into the
+    /// backend build, so `devices > 1` serves through one sharded
+    /// backend spanning every device.
     pub fn start(
         model: Arc<Model>,
         kind: BackendKind,
         bcfg: BackendConfig,
         cfg: ServiceConfig,
     ) -> Result<ShapService> {
+        let mut bcfg = bcfg;
+        bcfg.devices = cfg.devices.max(1);
+        if bcfg.shard_axis.is_none() {
+            bcfg.shard_axis = cfg.shard_axis;
+        }
+        bcfg.rows_hint = bcfg.rows_hint.max(1);
         let factory: Arc<BackendFactory> =
             Arc::new(move || backend::build(&model, kind, &bcfg));
         Self::start_with_factory(factory, cfg)
     }
 
     /// Planner-driven start: rank backend kinds by estimated latency for
-    /// `max_batch_rows`-row batches and probe-build through
-    /// `backend::build_auto` (so capability gaps, e.g. a model with no
-    /// interaction artifact bucket, disqualify a kind up front), then
-    /// start workers on the winning kind. Returns the chosen kind
-    /// alongside the service.
+    /// `max_batch_rows`-row batches over the service's device topology
+    /// and probe-build through `backend::build_auto` (so capability
+    /// gaps, e.g. a model with no interaction artifact bucket,
+    /// disqualify a kind up front), then start the executor on the
+    /// winning kind — with the plan's shard axis pinned so the executor
+    /// builds the same layout. Returns the chosen kind alongside the
+    /// service.
     pub fn start_planned(
         model: Arc<Model>,
         bcfg: BackendConfig,
@@ -196,8 +216,16 @@ impl ShapService {
     ) -> Result<(BackendKind, ShapService)> {
         let mut probe_cfg = bcfg;
         probe_cfg.rows_hint = cfg.max_batch_rows.clamp(1, 1 << 24);
+        probe_cfg.devices = cfg.devices.max(1);
         let (plan, probe) = backend::build_auto(&model, &probe_cfg)?;
-        drop(probe); // workers build their own instances on their threads
+        drop(probe); // the executor builds its own instance on its thread
+        // serve exactly the layout the plan priced: shard count AND axis
+        // (the planner may have chosen fewer shards than devices, or 1)
+        let mut cfg = cfg;
+        cfg.devices = plan.shards.max(1);
+        if plan.shards > 1 {
+            cfg.shard_axis = Some(plan.axis);
+        }
         let svc = Self::start(model, plan.kind, probe_cfg, cfg)?;
         Ok((plan.kind, svc))
     }

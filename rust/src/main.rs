@@ -4,22 +4,26 @@
 //! gputreeshap train    --dataset cal_housing --scale 0.05 --rounds 50 --depth 8 --out model.gtsm
 //! gputreeshap info     --model model.gtsm
 //! gputreeshap pack     --model model.gtsm
-//! gputreeshap backends --model model.gtsm
-//! gputreeshap shap     --model model.gtsm --dataset cal_housing --rows 256 --backend auto|cpu|host|xla|xla-padded
-//! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto
+//! gputreeshap backends --model model.gtsm --devices 4
+//! gputreeshap explain  --model model.gtsm --dataset cal_housing --rows 256 \
+//!                      --backend auto|cpu|host|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
+//! gputreeshap shap     …  (alias of explain)
+//! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto --devices 2
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
-//! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --clients 4 --requests 32
+//! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --shard-axis rows --clients 4 --requests 32
 //! gputreeshap zoo      --scale 0.02
 //! ```
 //!
 //! Every SHAP execution goes through the `backend::ShapBackend` trait;
-//! `--backend auto` lets the crossover-aware planner pick.
+//! `--backend auto` lets the crossover-aware planner pick, and
+//! `--devices N` shards any backend across N device instances (row- or
+//! tree-axis, `--shard-axis auto` lets the planner choose the axis).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend};
+use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend, ShardAxis};
 use gputreeshap::cli::Args;
 use gputreeshap::coordinator::{ServiceConfig, ShapService};
 use gputreeshap::data::csv::{load_csv, CsvOptions};
@@ -38,7 +42,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("pack") => cmd_pack(&args),
         Some("backends") => cmd_backends(&args),
-        Some("shap") => cmd_shap(&args),
+        Some("shap") | Some("explain") => cmd_shap(&args),
         Some("interactions") => cmd_interactions(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
@@ -54,7 +58,8 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|shap|interactions|predict|serve|zoo> [options]
+const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo> [options]
+multi-device: --devices N shards execution; --shard-axis auto|rows|trees picks the split
 see rust/src/main.rs header for examples";
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
@@ -90,6 +95,15 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
 }
 
+fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
+    match args.get("shard-axis") {
+        None | Some("auto") => Ok(None),
+        Some(s) => ShardAxis::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|rows|trees)")),
+    }
+}
+
 fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
     let packing = args.get_or("packing", "bfd");
     Ok(BackendConfig {
@@ -100,6 +114,8 @@ fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
         rows_hint,
         with_interactions: false,
         with_predict: false,
+        devices: args.get_usize("devices", 1)?.max(1),
+        shard_axis: shard_axis(args)?,
     })
 }
 
@@ -113,8 +129,18 @@ fn build_backend(
     match args.get_or("backend", default) {
         "auto" => {
             let (plan, b) = backend::build_auto(model, cfg)?;
+            let layout = if plan.shards > 1 {
+                format!(", {}×{}-sharded", plan.shards, plan.axis.name())
+            } else {
+                String::new()
+            };
             Ok((
-                format!("auto→{} (planner est {:.1} ms)", plan.kind.name(), plan.est_latency_s * 1e3),
+                format!(
+                    "auto→{}{} (planner est {:.1} ms)",
+                    plan.kind.name(),
+                    layout,
+                    plan.est_latency_s * 1e3
+                ),
                 b,
             ))
         }
@@ -182,7 +208,8 @@ fn cmd_pack(args: &Args) -> Result<()> {
 
 fn cmd_backends(args: &Args) -> Result<()> {
     let model = load_model(args)?;
-    let planner = Planner::for_model(&model);
+    let devices = args.get_usize("devices", 1)?.max(1);
+    let planner = Planner::for_model(&model).with_devices(devices);
     println!("{}\n", model.summary());
     let mut table =
         gputreeshap::bench::Table::new(&["backend", "compiled", "setup(s)", "overhead(s)", "rows/s"]);
@@ -197,13 +224,21 @@ fn cmd_backends(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
-    println!();
-    let mut t2 = gputreeshap::bench::Table::new(&["batch rows", "planner choice", "est latency(s)"]);
+    println!("\nplanner decisions over {devices} device(s):");
+    let mut t2 = gputreeshap::bench::Table::new(&[
+        "batch rows",
+        "planner choice",
+        "shards",
+        "axis",
+        "est latency(s)",
+    ]);
     for rows in [1usize, 16, 64, 256, 1024, 4096, 16384] {
         let plan = planner.choose(rows);
         t2.row(vec![
             rows.to_string(),
             plan.kind.name().into(),
+            plan.shards.to_string(),
+            plan.axis.name().into(),
             format!("{:.5}", plan.est_latency_s),
         ]);
     }
@@ -320,6 +355,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let cfg = ServiceConfig {
         devices,
+        shard_axis: shard_axis(args)?,
         max_batch_rows: max_batch,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
         ..Default::default()

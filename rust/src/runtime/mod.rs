@@ -7,15 +7,16 @@
 //! Everything that needs the `xla` bindings crate is gated behind the
 //! `xla` cargo feature; the manifest (a pure-JSON contract) is always
 //! available so planners and tools can inspect artifact buckets without
-//! a device runtime. Callers outside this layer should reach execution
-//! through `backend::ShapBackend`, never `ShapEngine` directly.
+//! a device runtime, and `pool` (a thin wrapper over the sharded
+//! backend) works on every backend kind. Callers outside this layer
+//! should reach execution through `backend::ShapBackend`, never
+//! `ShapEngine` directly.
 
 #[cfg(feature = "xla")]
 pub mod device;
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
-#[cfg(feature = "xla")]
 pub mod pool;
 
 #[cfg(feature = "xla")]

@@ -1,75 +1,72 @@
-//! Multi-device execution pool (Fig 5): one engine per simulated device,
-//! each on its own worker thread with its own PJRT client and compiled
-//! executables; row chunks are handed out via a shared cursor and the
-//! results are assembled on the coordinating thread (no shared mutable
-//! output, no raw pointers).
+//! Multi-device execution pool — a one-call convenience over the
+//! backend layer's [`ShardedBackend`] for callers that want the Fig-5
+//! row-sharded scheme without touching planner or backend types: pick
+//! the best backend for this batch size, split it over `devices`, run.
+//! The fig5 bench itself drives `ShardedBackend` directly (it sweeps
+//! axes and shard counts); this wrapper is the minimal embedding API.
 //!
-//! On a DGX this would be 8 GPU clients; here every "device" is a CPU
-//! PJRT client, so scaling flattens once physical cores saturate — the
-//! bench records the curve either way (DESIGN.md §5 scale substitutions).
+//! The original implementation here was XLA-only, reachable only from
+//! the fig5 bench, swallowed all but one worker error and kept feeding
+//! chunks to healthy workers after a failure. All of that now lives in
+//! `backend::sharded`, which this module merely parameterises: worker
+//! errors are aggregated into the returned error, a failed shard aborts
+//! the remaining work promptly, and results are only returned when every
+//! chunk completed (see `rust/tests/backends.rs` failure-semantics
+//! tests). On a DGX the shards would be 8 GPU clients; here every
+//! "device" is an independent backend instance, so scaling flattens
+//! once physical cores saturate (DESIGN.md §5 scale substitutions).
 
-use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::Path;
+use std::sync::Arc;
 
-use crate::runtime::engine::ShapEngine;
-use crate::runtime::manifest::ArtifactKind;
-use crate::shap::packed::PackedModel;
-use crate::util::error::{Error, Result};
+use crate::backend::{self, BackendConfig, ShardAxis};
+use crate::gbdt::Model;
+use crate::util::error::Result;
 
-/// SHAP values over `devices` simulated devices. Output layout matches
-/// `ShapEngine::shap_values`.
+/// SHAP values over `devices` row shards, each an independent instance
+/// of the planner's best backend for this batch size. Output layout
+/// matches `ShapBackend::contributions`.
 pub fn shap_values_multi(
-    pm: &PackedModel,
+    model: &Arc<Model>,
     x: &[f32],
     rows: usize,
     devices: usize,
     artifacts_dir: &Path,
 ) -> Result<Vec<f32>> {
-    let devices = devices.max(1);
-    let m = pm.num_features;
-    let stride = pm.num_groups * (m + 1);
-    let mut out = vec![0.0f32; rows * stride];
-    let cursor = AtomicUsize::new(0);
-    let dir: PathBuf = artifacts_dir.to_path_buf();
-    let errs: std::sync::Mutex<Vec<Error>> = std::sync::Mutex::new(Vec::new());
-    let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+    let cfg = BackendConfig {
+        rows_hint: rows.max(1),
+        devices: devices.max(1),
+        shard_axis: Some(ShardAxis::Rows),
+        artifacts_dir: artifacts_dir.to_path_buf(),
+        ..Default::default()
+    };
+    let (_plan, b) = backend::build_auto(model, &cfg)?;
+    b.contributions(x, rows)
+}
 
-    std::thread::scope(|scope| {
-        for _ in 0..devices {
-            let tx = tx.clone();
-            let dir = &dir;
-            let errs = &errs;
-            let cursor = &cursor;
-            scope.spawn(move || {
-                let run = || -> Result<()> {
-                    let mut engine = ShapEngine::new(dir)?;
-                    let prep = engine.prepare(pm, ArtifactKind::Shap, rows)?;
-                    let chunk = prep.rows;
-                    loop {
-                        let r0 = cursor.fetch_add(chunk, Ordering::Relaxed);
-                        if r0 >= rows {
-                            return Ok(());
-                        }
-                        let rc = (rows - r0).min(chunk);
-                        let vals =
-                            engine.shap_values(pm, &prep, &x[r0 * m..(r0 + rc) * m], rc)?;
-                        let _ = tx.send((r0, vals));
-                    }
-                };
-                if let Err(e) = run() {
-                    errs.lock().unwrap().push(e);
-                }
-            });
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn pool_matches_single_device() {
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model = Arc::new(train(
+            &d,
+            &TrainParams { rounds: 3, max_depth: 3, ..Default::default() },
+        ));
+        let m = model.num_features;
+        let rows = 12.min(d.rows);
+        let x = &d.features[..rows * m];
+        let dir = default_artifacts_dir();
+        let one = shap_values_multi(&model, x, rows, 1, &dir).unwrap();
+        let three = shap_values_multi(&model, x, rows, 3, &dir).unwrap();
+        assert_eq!(one.len(), three.len());
+        for (a, b) in one.iter().zip(&three) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
-        drop(tx);
-        // assemble chunks as workers produce them; `rx` closes once every
-        // worker has dropped its sender, which also bounds this loop
-        for (r0, vals) in rx.iter() {
-            out[r0 * stride..r0 * stride + vals.len()].copy_from_slice(&vals);
-        }
-    });
-    if let Some(e) = errs.into_inner().unwrap().pop() {
-        return Err(e);
     }
-    Ok(out)
 }

@@ -3,10 +3,18 @@
 //! recursive oracle on φ within 1e-4 and satisfy local accuracy
 //! (φ sums to prediction − expected value), for both contributions and
 //! interactions where supported. Row windows are randomized per model.
+//!
+//! The sharded layer rides the same oracle: `ShardedBackend` with
+//! 1/2/4 shards on both axes must reproduce its unsharded backend's φ
+//! and Φ within 1e-5 on every zoo model, and its failure semantics
+//! (aggregated errors, prompt abort, no partial output) are pinned at
+//! the bottom of this file.
 
 use std::sync::Arc;
 
-use gputreeshap::backend::{self, BackendConfig, BackendKind, ShapBackend};
+use gputreeshap::backend::{
+    self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardAxis, ShardedBackend,
+};
 use gputreeshap::bench::zoo;
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::util::Rng;
@@ -94,6 +102,182 @@ fn zoo_backends_agree_and_satisfy_local_accuracy() {
             }
         }
     }
+}
+
+#[test]
+fn sharded_backend_matches_unsharded_on_every_zoo_model() {
+    let mut rng = Rng::new(77);
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue; // the small grid covers every dataset shape cheaply
+        }
+        let (model, data) = zoo::build(&entry);
+        let m = model.num_features;
+        let groups = model.num_groups;
+        let rows = 4.min(data.rows);
+        let span = data.rows.saturating_sub(rows).max(1);
+        let start = rng.below(span as u64) as usize;
+        let x = data.features[start * m..(start + rows) * m].to_vec();
+        let model = Arc::new(model);
+        let cfg = BackendConfig {
+            threads: 1,
+            rows_hint: rows,
+            with_interactions: true,
+            ..Default::default()
+        };
+        // (M+1)² interaction matrices are quadratic in features: keep
+        // the Φ parity sweep to the non-pixel datasets (φ covers all)
+        let check_interactions = m <= 128;
+
+        for (kind, oracle) in backend::available(&model, &cfg) {
+            let want_phi = oracle.contributions(&x, rows).unwrap();
+            let want_inter = (check_interactions && oracle.caps().supports_interactions)
+                .then(|| oracle.interactions(&x, rows).unwrap());
+            for axis in ShardAxis::ALL {
+                for shards in [1usize, 2, 4] {
+                    let what =
+                        format!("{} / {} / {}×{}", entry.name, kind.name(), shards, axis.name());
+                    let sharded = ShardedBackend::build(&model, kind, &cfg, shards, axis)
+                        .unwrap_or_else(|e| panic!("{what}: build: {e:#}"));
+                    let phis = sharded.contributions(&x, rows).unwrap();
+                    assert_eq!(phis.len(), want_phi.len(), "{what}");
+                    for (i, (a, b)) in want_phi.iter().zip(&phis).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                            "{what}: φ idx {i}: {a} vs {b}"
+                        );
+                    }
+                    // local accuracy survives sharding: Σφ == f(x)
+                    for r in 0..rows {
+                        let preds = model.predict_row_raw(&x[r * m..(r + 1) * m]);
+                        for g in 0..groups {
+                            let base = r * groups * (m + 1) + g * (m + 1);
+                            let total: f64 =
+                                phis[base..base + m + 1].iter().map(|&v| v as f64).sum();
+                            assert!(
+                                (total - preds[g] as f64).abs() < 2e-3,
+                                "{what}: local accuracy row {r} group {g}: {total} vs {}",
+                                preds[g]
+                            );
+                        }
+                    }
+                    if let Some(want) = &want_inter {
+                        let inter = sharded.interactions(&x, rows).unwrap();
+                        assert_eq!(inter.len(), want.len(), "{what}");
+                        for (i, (a, b)) in want.iter().zip(&inter).enumerate() {
+                            assert!(
+                                (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                                "{what}: Φ idx {i}: {a} vs {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A backend whose every execution fails — the "device lost" stand-in
+/// for the failure-semantics tests.
+struct FailingBackend {
+    features: usize,
+    groups: usize,
+}
+
+impl ShapBackend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            supports_interactions: true,
+            setup_cost_s: 0.0,
+            batch_overhead_s: 0.0,
+            rows_per_s: 1.0,
+        }
+    }
+
+    fn num_features(&self) -> usize {
+        self.features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.groups
+    }
+
+    fn contributions(
+        &self,
+        _x: &[f32],
+        _rows: usize,
+    ) -> gputreeshap::util::error::Result<Vec<f32>> {
+        Err(gputreeshap::anyhow!("device lost"))
+    }
+
+    fn interactions(
+        &self,
+        _x: &[f32],
+        _rows: usize,
+    ) -> gputreeshap::util::error::Result<Vec<f32>> {
+        Err(gputreeshap::anyhow!("device lost"))
+    }
+}
+
+#[test]
+fn sharded_worker_failure_aborts_with_aggregated_error() {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.size == ZooSize::Small)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 16.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+
+    // tree axis, one healthy + one failing shard (every tree shard runs
+    // exactly once, so this is deterministic): the whole call must fail
+    // — no partial output even though one shard succeeded — naming the
+    // failed shard and preserving the cause
+    let healthy: Box<dyn ShapBackend> =
+        Box::new(backend::RecursiveBackend::new(model.clone(), 1));
+    let failing: Box<dyn ShapBackend> =
+        Box::new(FailingBackend { features: m, groups: model.num_groups });
+    let sharded =
+        ShardedBackend::from_backends(vec![healthy, failing], ShardAxis::Trees, model.base_score);
+    let err = sharded.contributions(&x, rows).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("device lost"), "cause must survive: {msg}");
+    assert!(msg.contains("shard 1"), "failed shard must be named: {msg}");
+
+    // rows axis, every shard failing: whichever shard reaches the chunk
+    // queue first errors and flips the abort flag; the call returns an
+    // aggregated error promptly instead of hanging on remaining chunks
+    let sharded = ShardedBackend::from_backends(
+        vec![
+            Box::new(FailingBackend { features: m, groups: model.num_groups }),
+            Box::new(FailingBackend { features: m, groups: model.num_groups }),
+        ],
+        ShardAxis::Rows,
+        model.base_score,
+    );
+    let err = sharded.contributions(&x, rows).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("device lost") && msg.contains("shard"), "{msg}");
+
+    // tree axis, every shard failing: all errors aggregate into one
+    let sharded = ShardedBackend::from_backends(
+        vec![
+            Box::new(FailingBackend { features: m, groups: model.num_groups }),
+            Box::new(FailingBackend { features: m, groups: model.num_groups }),
+        ],
+        ShardAxis::Trees,
+        model.base_score,
+    );
+    let err = sharded.interactions(&x, rows).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("2 shard(s) failed"), "errors must aggregate: {msg}");
+    assert!(msg.contains("shard 0") && msg.contains("shard 1"), "{msg}");
 }
 
 #[test]
