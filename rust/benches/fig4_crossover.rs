@@ -1,8 +1,16 @@
 //! Fig 4 reproduction: time-to-explain vs number of test rows for the
-//! cal_housing-med model, recursive CPU backend vs the best accelerated
+//! cal_housing model, recursive CPU backend vs the best accelerated
 //! backend, locating the crossover where batch amortisation beats
 //! per-row recursion — and checking the planner's crossover-aware choice
 //! at batch sizes straddling its own predicted crossover.
+//!
+//! The sweep also closes the calibration loop: every measured `(rows,
+//! latency)` point is fed back through `Planner::recalibrate`, and the
+//! bench reports the predicted crossover **before** (a-priori
+//! constants) and **after** calibration next to the measured one — on
+//! any testbed the calibrated prediction should land near the measured
+//! row count, which is the self-tuning claim the serving executor
+//! relies on.
 //!
 //! Paper: V100 beats 40 cores from ~200 rows. Here the "device" may be
 //! the CPU PJRT backend (or the host packed DP when built without
@@ -10,11 +18,17 @@
 //! crossover may not occur; the bench records the two latency curves and
 //! the planner's decisions either way, which is the figure's actual
 //! content (fixed overhead vs slope).
+//!
+//! Args (after `--`): `--rows N` caps the sweep's largest batch
+//! (default 512), `--size small|med|large` picks the zoo model
+//! (default med) — `--rows 16 --size small` is the CI calibration
+//! smoke configuration.
 
 use std::sync::Arc;
 
-use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend};
+use gputreeshap::backend::{self, BackendConfig, BackendKind, Observations, Planner, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, zoo, Table};
+use gputreeshap::cli::Args;
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::parallel::default_threads;
 use gputreeshap::util::Json;
@@ -26,17 +40,25 @@ fn median3(mut f: impl FnMut() -> f64) -> f64 {
 }
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let max_rows = args.get_usize("rows", 512).expect("--rows").max(1);
+    let size = match args.get_or("size", "med") {
+        "small" => ZooSize::Small,
+        "med" | "medium" => ZooSize::Medium,
+        "large" => ZooSize::Large,
+        other => panic!("unknown size '{other}' (small|med|large)"),
+    };
     let threads = default_threads();
     let entry = zoo::zoo_entries()
         .into_iter()
-        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Medium)
+        .find(|e| e.spec.name == "cal_housing" && e.size == size)
         .unwrap();
     let (model, data) = zoo::build(&entry);
     println!("fig4: {} ({}), {} thread(s)", entry.name, model.summary(), threads);
     let m = model.num_features;
     let model = Arc::new(model);
     let planner = Planner::for_model(&model);
-    let cfg = BackendConfig { threads, rows_hint: 512, ..Default::default() };
+    let cfg = BackendConfig { threads, rows_hint: max_rows, ..Default::default() };
 
     let cpu = backend::build(&model, BackendKind::Recursive, &cfg).expect("cpu backend");
     // accelerated side: the best non-recursive backend that constructs
@@ -52,7 +74,7 @@ fn main() {
     }
     let (akind, accel) = accel.expect("no accelerated backend available");
     // head-to-head planner over exactly the two measured backends
-    let duel = Planner::with_candidates(
+    let mut duel = Planner::with_candidates(
         planner.shape,
         vec![
             (
@@ -63,26 +85,31 @@ fn main() {
         ],
     );
     let predicted = duel.crossover_rows(BackendKind::Recursive, akind);
-    println!(
-        "accel backend: {} — planner predicts crossover at {:?} rows\n",
-        accel.describe(),
-        predicted
-    );
+    println!("accel backend: {}", accel.describe());
+    println!("prior predicted crossover: {predicted:?} rows\n");
 
     let mut table = Table::new(&["rows", "cpu", "accel", "cpu rows/s", "accel rows/s", "planner"]);
     let mut crossover = None;
+    let mut obs = Observations::new();
     for &rows in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+        if rows > max_rows {
+            break;
+        }
         let rows = rows.min(data.rows);
         let x = &data.features[..rows * m];
         let cpu_t = median3(|| {
             let t = std::time::Instant::now();
             std::hint::black_box(cpu.contributions(x, rows).expect("cpu"));
-            t.elapsed().as_secs_f64()
+            let dt = t.elapsed().as_secs_f64();
+            obs.record_backend(BackendKind::Recursive.name(), rows, dt);
+            dt
         });
         let accel_t = median3(|| {
             let t = std::time::Instant::now();
             std::hint::black_box(accel.contributions(x, rows).expect("accel"));
-            t.elapsed().as_secs_f64()
+            let dt = t.elapsed().as_secs_f64();
+            obs.record_backend(akind.name(), rows, dt);
+            dt
         });
         if accel_t < cpu_t && crossover.is_none() {
             crossover = Some(rows);
@@ -126,4 +153,30 @@ fn main() {
         Some(r) => println!("measured crossover at ~{r} rows (paper: ~200 rows, V100 vs 40 cores)"),
         None => println!("no measured crossover on this testbed (see EXPERIMENTS.md)"),
     }
+
+    // close the loop: feed the sweep's samples back into the duel
+    // planner and report where the calibrated line model now puts the
+    // crossover (should track the measured one on any testbed)
+    duel.recalibrate(&obs);
+    let calibrated = duel.crossover_rows(BackendKind::Recursive, akind);
+    println!("calibrated predicted crossover: {calibrated:?} rows");
+    let cpu_cal = duel.cost(BackendKind::Recursive).expect("cpu candidate");
+    let acc_cal = duel.cost(akind).expect("accel candidate");
+    println!(
+        "calibrated constants: cpu {{overhead {:.2e}s, {:.0} rows/s}}, {} {{overhead {:.2e}s, {:.0} rows/s}}",
+        cpu_cal.batch_overhead_s,
+        cpu_cal.rows_per_s,
+        akind.name(),
+        acc_cal.batch_overhead_s,
+        acc_cal.rows_per_s
+    );
+    dump_record(
+        "fig4_calibration",
+        vec![
+            ("prior_crossover", predicted.map(Json::from).unwrap_or(Json::Null)),
+            ("measured_crossover", crossover.map(Json::from).unwrap_or(Json::Null)),
+            ("calibrated_crossover", calibrated.map(Json::from).unwrap_or(Json::Null)),
+            ("accel_backend", Json::from(akind.name())),
+        ],
+    );
 }

@@ -1,0 +1,230 @@
+//! Measured cost calibration: turn the `(rows, latency)` batch samples
+//! the service records into [`CostEstimate`]s, replacing the planner's
+//! a-priori constants with the machine's own numbers.
+//!
+//! Every backend's batch latency is modelled as the paper's two-term
+//! line `latency(rows) = batch_overhead + rows · per_row`. Given enough
+//! observed batches at varying sizes, ordinary least squares recovers
+//! both terms directly. Two guards keep noisy telemetry from
+//! destabilizing plans:
+//!
+//! - **degenerate sample sets** (all batches the same size, or a
+//!   negative fitted slope) fall back to a through-origin fit, which is
+//!   exact at the observed batch size and conservative elsewhere;
+//! - **small sample sets** are blended with the a-priori estimate via
+//!   an exponential weight `α = 1 − exp(−n / BLEND_TAU)`, so the first
+//!   few (noisy) batches nudge the prior instead of replacing it, and
+//!   the measurement only dominates once the evidence accumulates.
+//!
+//! [`Observations`] is the transport type between the layers: the
+//! coordinator's metrics fill it from their per-backend / per-shard
+//! sample rings, and `Planner::recalibrate` consumes it. It also
+//! derives per-shard throughputs, which the sharded executor uses to
+//! skew row-chunk sizes toward faster devices.
+
+use std::collections::BTreeMap;
+
+use crate::backend::planner::CostEstimate;
+
+/// Fewest samples before a fit is attempted at all.
+pub const MIN_SAMPLES: usize = 4;
+
+/// Sample-count scale of the prior→measurement blend: at `n = BLEND_TAU`
+/// the measurement carries `1 − e⁻¹ ≈ 63%` of the weight.
+pub const BLEND_TAU: f64 = 8.0;
+
+/// Observed `(rows, latency_s)` batch samples, keyed by backend name and
+/// by device-shard index. Filled by `Metrics::observations()`; consumed
+/// by `Planner::recalibrate` and `ShapBackend::set_shard_throughputs`.
+#[derive(Clone, Debug, Default)]
+pub struct Observations {
+    pub per_backend: BTreeMap<String, Vec<(f64, f64)>>,
+    pub per_shard: BTreeMap<usize, Vec<(f64, f64)>>,
+}
+
+impl Observations {
+    pub fn new() -> Observations {
+        Observations::default()
+    }
+
+    pub fn record_backend(&mut self, name: &str, rows: usize, latency_s: f64) {
+        self.per_backend
+            .entry(name.to_string())
+            .or_default()
+            .push((rows as f64, latency_s));
+    }
+
+    pub fn record_shard(&mut self, shard: usize, rows: usize, latency_s: f64) {
+        self.per_shard.entry(shard).or_default().push((rows as f64, latency_s));
+    }
+
+    /// Sustained throughput per shard, `(shard, rows/s)`: total observed
+    /// rows over total observed wall time. Shards with no samples (or
+    /// zero observed time) are omitted — the executor keeps its own
+    /// estimate for those.
+    pub fn shard_throughputs(&self) -> Vec<(usize, f64)> {
+        self.per_shard
+            .iter()
+            .filter_map(|(&shard, samples)| {
+                let rows: f64 = samples.iter().map(|s| s.0).sum();
+                let secs: f64 = samples.iter().map(|s| s.1).sum();
+                (secs > 0.0 && rows > 0.0).then_some((shard, rows / secs))
+            })
+            .collect()
+    }
+}
+
+/// A fitted two-term latency line.
+#[derive(Clone, Copy, Debug)]
+pub struct LineFit {
+    pub batch_overhead_s: f64,
+    pub per_row_s: f64,
+    /// samples the fit was computed from (drives the blend weight)
+    pub samples: usize,
+}
+
+/// Least-squares fit of `latency = batch_overhead + rows · per_row` over
+/// `(rows, latency_s)` samples. `None` below [`MIN_SAMPLES`]. Degenerate
+/// inputs (a single batch size, or a non-positive fitted slope) fall
+/// back to the through-origin line `latency = rows · (ȳ/x̄)`.
+pub fn fit_line(samples: &[(f64, f64)]) -> Option<LineFit> {
+    let n = samples.len();
+    if n < MIN_SAMPLES {
+        return None;
+    }
+    let nf = n as f64;
+    let mean_x = samples.iter().map(|s| s.0).sum::<f64>() / nf;
+    let mean_y = samples.iter().map(|s| s.1).sum::<f64>() / nf;
+    if mean_x <= 0.0 || mean_y <= 0.0 {
+        return None;
+    }
+    let var_x: f64 = samples.iter().map(|s| (s.0 - mean_x) * (s.0 - mean_x)).sum::<f64>() / nf;
+    let cov: f64 =
+        samples.iter().map(|s| (s.0 - mean_x) * (s.1 - mean_y)).sum::<f64>() / nf;
+    let (mut overhead, mut per_row) = if var_x > 1e-12 {
+        let slope = cov / var_x;
+        (mean_y - slope * mean_x, slope)
+    } else {
+        (0.0, mean_y / mean_x)
+    };
+    if per_row <= 0.0 {
+        // latency not increasing in rows on this window: price everything
+        // into the per-row term at the observed operating point
+        overhead = 0.0;
+        per_row = mean_y / mean_x;
+    }
+    if overhead < 0.0 {
+        overhead = 0.0;
+    }
+    Some(LineFit { batch_overhead_s: overhead, per_row_s: per_row.max(1e-12), samples: n })
+}
+
+/// Blend a fitted line into the a-priori estimate with exponential
+/// weight `α = 1 − exp(−samples / BLEND_TAU)`. Overhead blends linearly;
+/// throughput blends in per-row-seconds space (the quantity the fit
+/// actually measures). `setup_s` is construction-time and not observable
+/// from batch samples, so the prior's value is kept.
+pub fn blend(prior: &CostEstimate, fit: &LineFit) -> CostEstimate {
+    let alpha = 1.0 - (-(fit.samples as f64) / BLEND_TAU).exp();
+    let prior_per_row = 1.0 / prior.rows_per_s.max(1e-12);
+    let per_row = (1.0 - alpha) * prior_per_row + alpha * fit.per_row_s;
+    CostEstimate {
+        setup_s: prior.setup_s,
+        batch_overhead_s: (1.0 - alpha) * prior.batch_overhead_s
+            + alpha * fit.batch_overhead_s,
+        rows_per_s: 1.0 / per_row.max(1e-12),
+    }
+}
+
+/// Fit + blend in one step: the calibrated estimate for `prior` given
+/// the observed samples, or `None` when there is not enough signal yet.
+pub fn calibrate(prior: &CostEstimate, samples: &[(f64, f64)]) -> Option<CostEstimate> {
+    fit_line(samples).map(|fit| blend(prior, &fit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_samples(
+        overhead: f64,
+        rows_per_s: f64,
+        sizes: &[usize],
+        reps: usize,
+    ) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..reps {
+            for &rows in sizes {
+                let exact = overhead + rows as f64 / rows_per_s;
+                // ±1% deterministic multiplicative noise
+                let noisy = exact * (1.0 + 0.02 * (rng.f64() - 0.5));
+                out.push((rows as f64, noisy));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_the_generating_line() {
+        let (overhead, rate) = (4e-3, 1e5);
+        let samples = synth_samples(overhead, rate, &[1, 8, 64, 256, 1024], 8);
+        let fit = fit_line(&samples).expect("enough samples");
+        assert!(
+            (fit.batch_overhead_s - overhead).abs() / overhead < 0.1,
+            "overhead {} vs {}",
+            fit.batch_overhead_s,
+            overhead
+        );
+        let fitted_rate = 1.0 / fit.per_row_s;
+        assert!(
+            (fitted_rate - rate).abs() / rate < 0.1,
+            "rate {fitted_rate} vs {rate}"
+        );
+    }
+
+    #[test]
+    fn fit_guards_degenerate_inputs() {
+        // below MIN_SAMPLES
+        assert!(fit_line(&[(8.0, 1e-3); 3]).is_none());
+        // one batch size only: through-origin fallback, exact there
+        let fit = fit_line(&[(8.0, 2e-3); 6]).unwrap();
+        assert_eq!(fit.batch_overhead_s, 0.0);
+        assert!((fit.per_row_s - 2.5e-4).abs() < 1e-9);
+        // latency *decreasing* in rows (pure noise): positive per-row cost
+        let fit = fit_line(&[(1.0, 4e-3), (10.0, 3e-3), (100.0, 2e-3), (1000.0, 1e-3)]).unwrap();
+        assert!(fit.per_row_s > 0.0);
+        assert_eq!(fit.batch_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn blend_moves_from_prior_to_measurement_with_evidence() {
+        let prior = CostEstimate { setup_s: 0.5, batch_overhead_s: 5e-3, rows_per_s: 1e4 };
+        let fit = LineFit { batch_overhead_s: 1e-4, per_row_s: 1e-6, samples: 4 };
+        let few = blend(&prior, &fit);
+        let fit_many = LineFit { samples: 64, ..fit };
+        let many = blend(&prior, &fit_many);
+        // setup is never touched by batch samples
+        assert_eq!(few.setup_s, prior.setup_s);
+        // few samples: still close to the prior; many: close to the fit
+        assert!(few.batch_overhead_s > many.batch_overhead_s);
+        assert!(many.batch_overhead_s < 2e-4, "{}", many.batch_overhead_s);
+        assert!(many.rows_per_s > 0.9e6, "{}", many.rows_per_s);
+        assert!(few.rows_per_s < many.rows_per_s);
+    }
+
+    #[test]
+    fn shard_throughputs_from_observations() {
+        let mut obs = Observations::new();
+        obs.record_shard(0, 100, 0.1); // 1000 rows/s
+        obs.record_shard(0, 300, 0.3);
+        obs.record_shard(2, 100, 1.0); // 100 rows/s
+        obs.record_shard(3, 0, 0.0); // no signal → omitted
+        let tputs = obs.shard_throughputs();
+        assert_eq!(tputs.len(), 2);
+        assert_eq!(tputs[0].0, 0);
+        assert!((tputs[0].1 - 1000.0).abs() < 1e-6);
+        assert_eq!(tputs[1].0, 2);
+        assert!((tputs[1].1 - 100.0).abs() < 1e-6);
+    }
+}

@@ -10,6 +10,7 @@
 //! precomputation variants, Linear TreeShap) slot in as additional
 //! [`BackendKind`]s with their own [`BackendCaps`].
 
+pub mod calibrate;
 pub mod host;
 pub mod planner;
 pub mod recursive;
@@ -25,6 +26,7 @@ use crate::gbdt::Model;
 use crate::shap::Packing;
 use crate::util::error::Result;
 
+pub use calibrate::Observations;
 pub use host::HostPackedBackend;
 pub use planner::{CostEstimate, ModelShape, Plan, Planner};
 pub use recursive::RecursiveBackend;
@@ -75,6 +77,35 @@ pub trait ShapBackend: Send + Sync {
     /// Install a per-shard execution observer; a no-op everywhere except
     /// [`ShardedBackend`], so callers can wire metrics without downcasts.
     fn set_shard_observer(&mut self, _obs: ShardObserver) {}
+    /// How many device shards this backend currently spans (1 for
+    /// unsharded backends; shrinks under quarantine, grows on hot-add).
+    fn shard_count(&self) -> usize {
+        1
+    }
+    /// Shard indices that failed in the most recent execution — empty
+    /// for unsharded backends and after a clean run. Drives the
+    /// coordinator's quarantine decision without downcasts.
+    fn failed_shards(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    /// Remove the given shards from the topology, keeping the backend
+    /// serving from the survivors (elastic quarantine). Errs on
+    /// unsharded backends and when no shard would survive. Returns how
+    /// many shards were removed.
+    fn quarantine(&mut self, _failed: &[usize]) -> Result<usize> {
+        Err(crate::anyhow!("backend '{}' has no shards to quarantine", self.name()))
+    }
+    /// Grow the shard topology back out to `target` shards (hot-add
+    /// recovery after quarantine). Errs on unsharded backends; returns
+    /// how many shards were added (0 when already at or above `target`).
+    fn hot_add(&mut self, _target: usize) -> Result<usize> {
+        Err(crate::anyhow!("backend '{}' has no shard topology to grow", self.name()))
+    }
+    /// Seed per-shard throughput estimates (`(shard, rows/s)` pairs) for
+    /// heterogeneous row-chunk sizing; a no-op everywhere except
+    /// [`ShardedBackend`]. The coordinator feeds the throughputs its
+    /// metrics derive from per-shard batch samples.
+    fn set_shard_throughputs(&self, _rows_per_s: &[(usize, f64)]) {}
     /// Human-readable detail (artifact bucket, packing, …) for logs.
     fn describe(&self) -> String {
         self.name().to_string()

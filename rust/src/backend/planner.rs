@@ -19,6 +19,7 @@
 //! is why small batches over wide ensembles plan onto the tree axis
 //! while large batches keep the paper's row axis.
 
+use crate::backend::calibrate::{self, Observations};
 use crate::backend::shard::ShardAxis;
 use crate::backend::BackendKind;
 use crate::gbdt::Model;
@@ -118,6 +119,11 @@ pub struct Plan {
 pub struct Planner {
     pub shape: ModelShape,
     candidates: Vec<(BackendKind, CostEstimate)>,
+    /// the a-priori estimates the candidates started from; calibration
+    /// always re-blends against these, never against its own output
+    priors: Vec<(BackendKind, CostEstimate)>,
+    /// measured samples behind each candidate's current estimate
+    samples: Vec<(BackendKind, usize)>,
     /// device topology: how many shards a plan may spread over
     devices: usize,
 }
@@ -127,13 +133,13 @@ impl Planner {
     /// single-device. Chain [`Planner::with_devices`] for a topology.
     pub fn for_model(model: &Model) -> Planner {
         let shape = ModelShape::of(model);
-        let candidates = BackendKind::ALL
+        let candidates: Vec<(BackendKind, CostEstimate)> = BackendKind::ALL
             .iter()
             .copied()
             .filter(|k| k.compiled_in())
             .map(|k| (k, estimate(k, &shape)))
             .collect();
-        Planner { shape, candidates, devices: 1 }
+        Planner { shape, priors: candidates.clone(), samples: Vec::new(), candidates, devices: 1 }
     }
 
     /// Planner with explicit candidates (tests, measured calibrations).
@@ -141,7 +147,7 @@ impl Planner {
         shape: ModelShape,
         candidates: Vec<(BackendKind, CostEstimate)>,
     ) -> Planner {
-        Planner { shape, candidates, devices: 1 }
+        Planner { shape, priors: candidates.clone(), samples: Vec::new(), candidates, devices: 1 }
     }
 
     /// Set the device topology plans may shard across.
@@ -280,6 +286,55 @@ impl Planner {
         }
         Some((d_over / d_rate).ceil() as usize)
     }
+
+    /// Re-fit every candidate's cost line from measured batch samples
+    /// (keyed by backend *name* — how the metrics record them), blending
+    /// against the a-priori estimate so thin evidence nudges rather than
+    /// replaces. Returns `true` when any candidate's estimate moved, so
+    /// callers know a cached plan may be stale. Idempotent for a fixed
+    /// observation set: the blend always starts from the stored prior.
+    pub fn recalibrate(&mut self, obs: &Observations) -> bool {
+        let mut changed = false;
+        for (kind, cost) in &mut self.candidates {
+            let Some(samples) = obs.per_backend.get(kind.name()) else { continue };
+            let prior = self
+                .priors
+                .iter()
+                .find(|(k, _)| k == kind)
+                .map(|(_, c)| *c)
+                .unwrap_or(*cost);
+            let Some(new) = calibrate::calibrate(&prior, samples) else { continue };
+            let moved = (new.batch_overhead_s - cost.batch_overhead_s).abs()
+                > 1e-12 + 1e-6 * cost.batch_overhead_s.abs()
+                || (new.rows_per_s - cost.rows_per_s).abs() > 1e-6 * cost.rows_per_s.abs();
+            if moved {
+                *cost = new;
+                changed = true;
+            }
+            match self.samples.iter_mut().find(|(k, _)| k == kind) {
+                Some(entry) => entry.1 = samples.len(),
+                None => self.samples.push((*kind, samples.len())),
+            }
+        }
+        changed
+    }
+
+    /// The candidate's *current* estimate (calibrated when observations
+    /// have been fed through [`Planner::recalibrate`]).
+    pub fn cost(&self, kind: BackendKind) -> Option<CostEstimate> {
+        self.candidates.iter().find(|(k, _)| *k == kind).map(|(_, c)| *c)
+    }
+
+    /// The candidate's a-priori estimate, untouched by calibration.
+    pub fn prior(&self, kind: BackendKind) -> Option<CostEstimate> {
+        self.priors.iter().find(|(k, _)| *k == kind).map(|(_, c)| *c)
+    }
+
+    /// Measured samples behind the candidate's current estimate (0 ⇒
+    /// still running on the prior).
+    pub fn calibration_samples(&self, kind: BackendKind) -> usize {
+        self.samples.iter().find(|(k, _)| *k == kind).map_or(0, |(_, n)| *n)
+    }
 }
 
 #[cfg(test)]
@@ -383,6 +438,35 @@ mod tests {
         let one = p.plan_for(BackendKind::Recursive, 1).unwrap();
         assert_eq!(one.axis, ShardAxis::Trees);
         assert_eq!(one.shards, 2, "cannot split 2 trees over more than 2 shards");
+    }
+
+    #[test]
+    fn recalibrate_blends_measurement_over_prior() {
+        let mut p = synthetic_planner();
+        let prior = p.cost(BackendKind::XlaWarp).unwrap();
+        assert_eq!(p.calibration_samples(BackendKind::XlaWarp), 0);
+        // measured: the accelerator's overhead is 100× smaller than the
+        // prior believed (0.0005s vs 0.05s) at the same throughput
+        let mut obs = Observations::new();
+        for _ in 0..8 {
+            for rows in [1usize, 16, 256, 1024] {
+                obs.record_backend("xla", rows, 5e-4 + rows as f64 / 1e6);
+            }
+        }
+        assert!(p.recalibrate(&obs), "estimates must move");
+        let cal = p.cost(BackendKind::XlaWarp).unwrap();
+        assert!(cal.batch_overhead_s < prior.batch_overhead_s / 10.0, "{cal:?}");
+        assert_eq!(p.prior(BackendKind::XlaWarp).unwrap().batch_overhead_s, 0.05);
+        assert_eq!(p.calibration_samples(BackendKind::XlaWarp), 32);
+        // the crossover moves accordingly: with ~0.5ms overhead it takes
+        // far fewer rows for the accelerator to win
+        let cross = p.crossover_rows(BackendKind::Recursive, BackendKind::XlaWarp).unwrap();
+        assert!(cross < 50, "calibrated crossover {cross}");
+        // feeding the same observations again is a no-op (prior-anchored)
+        assert!(!p.recalibrate(&obs), "idempotent for identical observations");
+        // cpu backend untouched: no samples for it
+        let cpu = p.cost(BackendKind::Recursive).unwrap();
+        assert_eq!(cpu.rows_per_s, 1e4);
     }
 
     #[test]

@@ -63,6 +63,48 @@ pub fn row_chunks(rows: usize, chunks: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Heterogeneous row split: shard `s` is assigned a contiguous span of
+/// rows proportional to `weights[s]` (a throughput estimate, any scale),
+/// cut into up to `chunks_per_shard` near-equal chunks. Returns one
+/// chunk list per shard; spans may be empty for shards whose weight
+/// rounds to zero rows (work stealing keeps them busy anyway).
+/// Non-finite or non-positive weights are treated as equal shares, so a
+/// cold start (no throughput estimates yet) degrades to the even split.
+pub fn weighted_chunks(
+    rows: usize,
+    weights: &[f64],
+    chunks_per_shard: usize,
+) -> Vec<Vec<(usize, usize)>> {
+    let n = weights.len().max(1);
+    let sane: Vec<f64> = weights
+        .iter()
+        .map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 })
+        .collect();
+    let total: f64 = sane.iter().sum();
+    let sane: Vec<f64> = if total > 0.0 { sane } else { vec![1.0; n] };
+    let total: f64 = sane.iter().sum();
+
+    // proportional boundaries, cumulative-rounded so spans tile exactly
+    let mut out = Vec::with_capacity(n);
+    let mut cum = 0.0f64;
+    let mut start = 0usize;
+    for (s, w) in sane.iter().enumerate() {
+        cum += w;
+        let end = if s + 1 == n {
+            rows // last boundary pins to the row count exactly
+        } else {
+            ((rows as f64 * cum / total).round() as usize).clamp(start, rows)
+        };
+        let chunks: Vec<(usize, usize)> = row_chunks(end - start, chunks_per_shard)
+            .into_iter()
+            .map(|(r0, rc)| (start + r0, rc))
+            .collect();
+        out.push(chunks);
+        start = end;
+    }
+    out
+}
+
 /// Split `model` into `shards` contiguous sub-ensembles, balanced by
 /// leaf count (per-row SHAP cost is proportional to leaves, not trees).
 /// Every shard gets at least one tree; `shards` is clamped to the tree
@@ -196,6 +238,51 @@ mod tests {
                 next = start + len;
             }
             assert_eq!(next, rows, "covers all rows");
+        }
+    }
+
+    #[test]
+    fn weighted_chunks_tile_rows_and_respect_weights() {
+        // equal weights reproduce the even split
+        let even = weighted_chunks(96, &[1.0, 1.0, 1.0], 4);
+        assert_eq!(even.len(), 3);
+        for shard in &even {
+            let span: usize = shard.iter().map(|c| c.1).sum();
+            assert_eq!(span, 32);
+        }
+        // skewed weights: fast shard's span ≈ its proportional share,
+        // and the whole batch is tiled contiguously exactly once
+        for weights in [vec![3.0, 1.0], vec![10.0, 1.0, 1.0], vec![0.5, 0.25, 0.25]] {
+            let chunks = weighted_chunks(100, &weights, 4);
+            assert_eq!(chunks.len(), weights.len());
+            let mut next = 0usize;
+            let total: f64 = weights.iter().sum();
+            for (s, shard) in chunks.iter().enumerate() {
+                let span: usize = shard.iter().map(|c| c.1).sum();
+                for &(r0, rc) in shard {
+                    assert_eq!(r0, next, "contiguous tiling");
+                    assert!(rc > 0);
+                    next = r0 + rc;
+                }
+                let share = 100.0 * weights[s] / total;
+                assert!(
+                    (span as f64 - share).abs() <= 1.0,
+                    "shard {s}: span {span} vs share {share}"
+                );
+            }
+            assert_eq!(next, 100, "covers all rows");
+        }
+        // extreme skew: the slow shard may receive nothing
+        let skew = weighted_chunks(10, &[1e6, 1.0], 4);
+        let slow_span: usize = skew[1].iter().map(|c| c.1).sum();
+        assert_eq!(slow_span, 0);
+        let fast_span: usize = skew[0].iter().map(|c| c.1).sum();
+        assert_eq!(fast_span, 10);
+        // degenerate weights (zero / NaN / negative) → even split
+        let fallback = weighted_chunks(8, &[0.0, f64::NAN, -3.0, 0.0], 2);
+        for shard in &fallback {
+            let span: usize = shard.iter().map(|c| c.1).sum();
+            assert_eq!(span, 2);
         }
     }
 

@@ -2,10 +2,15 @@
 //! (one per device) and executes contributions, interactions and
 //! predictions across them along a [`ShardAxis`].
 //!
-//! - **Rows**: inner instances all hold the full model; row chunks are
-//!   handed out through a shared cursor (finer than one chunk per shard,
-//!   so a failed shard aborts the remaining work promptly) and outputs
-//!   are written into disjoint ranges of one buffer.
+//! - **Rows**: inner instances all hold the full model; each shard gets
+//!   a queue of row chunks sized to its measured throughput (equal on a
+//!   cold start), drains its own queue first and steals from slower
+//!   shards when idle, and outputs are written into disjoint ranges of
+//!   one buffer. Per-chunk wall times feed an EWMA throughput estimate
+//!   per shard, so chunk sizing adapts to heterogeneous devices —
+//!   straggler mitigation for mixed CPU/GPU topologies; the coordinator
+//!   can also seed the estimates from its recorded per-shard latencies
+//!   via [`ShapBackend::set_shard_throughputs`].
 //! - **Trees**: inner instances each hold a leaf-balanced slice of the
 //!   ensemble; every shard runs the full batch and the per-shard φ/Φ are
 //!   summed with the `(shards − 1) · base_score` correction of
@@ -15,21 +20,41 @@
 //! shard sets an abort flag that stops idle shards from taking more
 //! work, every shard error is aggregated into the returned error, and
 //! no result is returned unless every chunk completed — no hang, no
-//! silent partial output.
+//! silent partial output. The indices of failed shards are retained
+//! ([`ShapBackend::failed_shards`]) so callers can go further than
+//! reporting: [`ShapBackend::quarantine`] removes the failed shards
+//! from the topology (rebuilding the ensemble split on the tree axis)
+//! and [`ShapBackend::hot_add`] grows it back once the device recovers
+//! — the elastic paths the serving coordinator drives.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::backend::shard::{self, row_chunks, split_trees, ShardAxis, ShardTask};
+use crate::backend::shard::{self, split_trees, weighted_chunks, ShardAxis, ShardTask};
 use crate::backend::{self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardObserver};
 use crate::gbdt::Model;
 use crate::util::error::{Error, Result};
 
-/// How many row chunks per shard the rows-axis queue is cut into:
+/// How many row chunks per shard the rows-axis queues are cut into:
 /// finer chunks mean prompter abort on failure and better balance when
 /// devices run at different speeds, at a small per-chunk dispatch cost.
 const CHUNKS_PER_SHARD: usize = 4;
+
+/// Weight of the newest per-chunk throughput sample in the per-shard
+/// EWMA (the rest stays on the running estimate).
+const TPUT_EWMA: f64 = 0.3;
+
+/// Everything needed to rebuild the topology at a different shard count
+/// — present when the backend was built through [`ShardedBackend::build`]
+/// (the elastic quarantine/hot-add paths need it on the tree axis, where
+/// survivors must re-cover the full ensemble).
+struct Recipe {
+    model: Arc<Model>,
+    kind: BackendKind,
+    cfg: BackendConfig,
+}
 
 pub struct ShardedBackend {
     inner: Vec<Box<dyn ShapBackend>>,
@@ -42,6 +67,14 @@ pub struct ShardedBackend {
     base_score: f32,
     observer: Option<ShardObserver>,
     caps: BackendCaps,
+    /// per-shard throughput estimate (rows/s), `None` until measured;
+    /// drives the weighted row-chunk split
+    tput: Mutex<Vec<Option<f64>>>,
+    /// shard indices that failed in the most recent execution
+    last_failed: Mutex<Vec<usize>>,
+    rebuild: Option<Recipe>,
+    /// shards removed by quarantine since construction (stats/describe)
+    quarantined: usize,
 }
 
 impl ShardedBackend {
@@ -80,31 +113,24 @@ impl ShardedBackend {
         // dominant cost at high shard counts, and on device backends the
         // client should be constructed on its own thread anyway
         let inner = build_concurrently(&sub_models, kind, &inner_cfg)?;
-        Ok(ShardedBackend::from_backends(inner, axis, model.base_score))
+        let mut built = ShardedBackend::from_backends(inner, axis, model.base_score);
+        built.rebuild =
+            Some(Recipe { model: Arc::clone(model), kind, cfg: cfg.clone() });
+        Ok(built)
     }
 
     /// Wrap pre-built shard backends. On the tree axis the caller is
     /// responsible for the inner backends holding disjoint tree slices
     /// whose union is the full ensemble (as [`split_trees`] produces).
+    /// Carries no rebuild recipe, so tree-axis quarantine and hot-add
+    /// are unavailable (row-axis quarantine still works: survivors hold
+    /// the full model).
     pub fn from_backends(
         inner: Vec<Box<dyn ShapBackend>>,
         axis: ShardAxis,
         base_score: f32,
     ) -> ShardedBackend {
         assert!(!inner.is_empty(), "sharded backend needs ≥1 shard");
-        let supports_interactions = inner.iter().all(|b| b.caps().supports_interactions);
-        let setup = inner.iter().map(|b| b.caps().setup_cost_s).fold(0.0, f64::max);
-        let overhead =
-            inner.iter().map(|b| b.caps().batch_overhead_s).fold(0.0, f64::max);
-        // rows: devices run disjoint rows concurrently (rates add);
-        // trees: every device runs every row (slowest slice gates)
-        let rows_per_s = match axis {
-            ShardAxis::Rows => inner.iter().map(|b| b.caps().rows_per_s).sum(),
-            ShardAxis::Trees => inner
-                .iter()
-                .map(|b| b.caps().rows_per_s)
-                .fold(f64::INFINITY, f64::min),
-        };
         ShardedBackend {
             kind_name: inner[0].name(),
             num_features: inner[0].num_features(),
@@ -112,12 +138,11 @@ impl ShardedBackend {
             base_score,
             axis,
             observer: None,
-            caps: BackendCaps {
-                supports_interactions,
-                setup_cost_s: setup,
-                batch_overhead_s: overhead,
-                rows_per_s,
-            },
+            caps: caps_over(&inner, axis),
+            tput: Mutex::new(vec![None; inner.len()]),
+            last_failed: Mutex::new(Vec::new()),
+            rebuild: None,
+            quarantined: 0,
             inner,
         }
     }
@@ -130,28 +155,162 @@ impl ShardedBackend {
         self.axis
     }
 
+    /// Shards removed by quarantine since construction.
+    pub fn quarantined_shards(&self) -> usize {
+        self.quarantined
+    }
+
+    /// The current per-shard throughput estimates (rows/s), `None` where
+    /// nothing has been measured or seeded yet.
+    pub fn shard_throughput_estimates(&self) -> Vec<Option<f64>> {
+        self.tput.lock().unwrap().clone()
+    }
+
+    /// Remove failed shards from the topology. Row-axis survivors hold
+    /// the full model, so the failed instances are simply dropped; the
+    /// tree axis rebuilds the survivors over a fresh ensemble split
+    /// (needs the rebuild recipe, i.e. a self-built backend). At least
+    /// one shard must survive.
+    pub fn quarantine_shards(&mut self, failed: &[usize]) -> Result<usize> {
+        let n = self.inner.len();
+        let mut targets: Vec<usize> = failed.iter().copied().filter(|&s| s < n).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        if targets.is_empty() {
+            return Ok(0);
+        }
+        if targets.len() >= n {
+            return Err(crate::anyhow!(
+                "cannot quarantine all {n} shard(s): no survivors to serve from"
+            ));
+        }
+        match self.axis {
+            ShardAxis::Rows => {
+                let mut idx = 0usize;
+                self.inner.retain(|_| {
+                    let keep = !targets.contains(&idx);
+                    idx += 1;
+                    keep
+                });
+                // indices shifted: measured throughputs no longer line up
+                *self.tput.lock().unwrap() = vec![None; self.inner.len()];
+                self.last_failed.lock().unwrap().clear();
+                self.caps = caps_over(&self.inner, self.axis);
+                self.quarantined += targets.len();
+                Ok(targets.len())
+            }
+            ShardAxis::Trees => {
+                let recipe = self.rebuild.as_ref().ok_or_else(|| {
+                    crate::anyhow!(
+                        "tree-axis quarantine needs a rebuild recipe (self-built backend)"
+                    )
+                })?;
+                let survivors = n - targets.len();
+                let rebuilt = ShardedBackend::build(
+                    &recipe.model,
+                    recipe.kind,
+                    &recipe.cfg,
+                    survivors,
+                    ShardAxis::Trees,
+                )?;
+                let quarantined = self.quarantined + targets.len();
+                let observer = self.observer.take();
+                *self = rebuilt;
+                self.quarantined = quarantined;
+                self.observer = observer;
+                Ok(targets.len())
+            }
+        }
+    }
+
+    /// Hot-add: rebuild the topology out to `target` shards (recovery
+    /// after quarantine, or scaling up). Needs the rebuild recipe. The
+    /// tree axis may end below `target` when the tree count clamps.
+    pub fn grow_to(&mut self, target: usize) -> Result<usize> {
+        let n = self.inner.len();
+        if target <= n {
+            return Ok(0);
+        }
+        let recipe = self.rebuild.as_ref().ok_or_else(|| {
+            crate::anyhow!("shard hot-add needs a rebuild recipe (self-built backend)")
+        })?;
+        let rebuilt = ShardedBackend::build(
+            &recipe.model,
+            recipe.kind,
+            &recipe.cfg,
+            target,
+            self.axis,
+        )?;
+        let quarantined = self.quarantined;
+        let observer = self.observer.take();
+        *self = rebuilt;
+        self.quarantined = quarantined;
+        self.observer = observer;
+        Ok(self.inner.len().saturating_sub(n))
+    }
+
     fn observe(&self, shard: usize, rows: usize, started: Instant) {
         if let Some(obs) = &self.observer {
             (obs.as_ref())(shard, rows, started.elapsed());
         }
     }
 
-    /// Rows axis: shards pull `(start, len)` chunks from a shared queue
-    /// and write into disjoint ranges of one output buffer.
+    /// Fold one successful chunk execution into the shard's throughput
+    /// EWMA (rows-axis only — that's where chunk sizing uses it).
+    fn learn(&self, shard: usize, rows: usize, started: Instant) {
+        let secs = started.elapsed().as_secs_f64().max(1e-9);
+        let rate = rows as f64 / secs;
+        let mut t = self.tput.lock().unwrap();
+        if let Some(slot) = t.get_mut(shard) {
+            *slot = Some(match *slot {
+                None => rate,
+                Some(prev) => prev * (1.0 - TPUT_EWMA) + rate * TPUT_EWMA,
+            });
+        }
+    }
+
+    /// Relative chunk-sizing weights: measured throughput where known,
+    /// the mean of the known estimates elsewhere (equal shares when
+    /// nothing is measured yet — the cold-start split).
+    fn shard_weights(&self) -> Vec<f64> {
+        let t = self.tput.lock().unwrap();
+        let known: Vec<f64> = t.iter().filter_map(|&v| v).collect();
+        let default = if known.is_empty() {
+            1.0
+        } else {
+            known.iter().sum::<f64>() / known.len() as f64
+        };
+        t.iter().map(|&v| v.unwrap_or(default)).collect()
+    }
+
+    /// Rows axis: each shard drains its own throughput-weighted chunk
+    /// queue (stealing from others when idle) and writes into disjoint
+    /// ranges of one output buffer.
     fn run_rows<F>(&self, x: &[f32], rows: usize, stride: usize, f: F) -> Result<Vec<f32>>
     where
         F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
     {
         let m = self.num_features;
         let n = self.inner.len();
+        self.last_failed.lock().unwrap().clear();
         if n == 1 || rows <= 1 {
             let t0 = Instant::now();
-            let out = f(self.inner[0].as_ref(), x, rows)?;
-            self.observe(0, rows, t0);
-            return Ok(out);
+            match f(self.inner[0].as_ref(), x, rows) {
+                Ok(out) => {
+                    self.observe(0, rows, t0);
+                    return Ok(out);
+                }
+                Err(e) => {
+                    self.last_failed.lock().unwrap().push(0);
+                    return Err(e);
+                }
+            }
         }
-        let chunks = row_chunks(rows, n * CHUNKS_PER_SHARD);
-        let cursor = AtomicUsize::new(0);
+        let queues: Vec<Mutex<VecDeque<(usize, usize)>>> =
+            weighted_chunks(rows, &self.shard_weights(), CHUNKS_PER_SHARD)
+                .into_iter()
+                .map(|chunks| Mutex::new(chunks.into_iter().collect()))
+                .collect();
         let abort = AtomicBool::new(false);
         let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
         let mut out = vec![0.0f32; rows * stride];
@@ -159,19 +318,19 @@ impl ShardedBackend {
         let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
         std::thread::scope(|scope| {
             for (si, b) in self.inner.iter().enumerate() {
-                let (cursor, abort, errs) = (&cursor, &abort, &errs);
-                let (chunks, f, this) = (&chunks, &f, &*self);
+                let (abort, errs) = (&abort, &errs);
+                let (queues, f, this) = (&queues, &f, &*self);
                 let b = b.as_ref();
                 let tx = tx.clone();
                 scope.spawn(move || loop {
                     if abort.load(Ordering::Relaxed) {
                         return;
                     }
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(r0, rc)) = chunks.get(i) else { return };
+                    let Some((r0, rc)) = pop_chunk(queues, si) else { return };
                     let t0 = Instant::now();
                     match f(b, &x[r0 * m..(r0 + rc) * m], rc) {
                         Ok(vals) if vals.len() == rc * stride => {
+                            this.learn(si, rc, t0);
                             this.observe(si, rc, t0);
                             // the receiver lives until every sender is
                             // dropped; a failed send means the call is
@@ -187,11 +346,13 @@ impl ShardedBackend {
                                 rc * stride,
                                 vals.len()
                             ));
+                            this.last_failed.lock().unwrap().push(si);
                             return;
                         }
                         Err(e) => {
                             abort.store(true, Ordering::Relaxed);
                             errs.lock().unwrap().push(e.context(format!("shard {si}")));
+                            this.last_failed.lock().unwrap().push(si);
                             return;
                         }
                     }
@@ -229,11 +390,19 @@ impl ShardedBackend {
     {
         let stride = task.stride(self.num_groups, self.num_features);
         let n = self.inner.len();
+        self.last_failed.lock().unwrap().clear();
         if n == 1 {
             let t0 = Instant::now();
-            let out = f(self.inner[0].as_ref(), x, rows)?;
-            self.observe(0, rows, t0);
-            return Ok(out);
+            match f(self.inner[0].as_ref(), x, rows) {
+                Ok(out) => {
+                    self.observe(0, rows, t0);
+                    return Ok(out);
+                }
+                Err(e) => {
+                    self.last_failed.lock().unwrap().push(0);
+                    return Err(e);
+                }
+            }
         }
         let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
         let partials = Mutex::new(vec![None::<Vec<f32>>; n]);
@@ -255,9 +424,11 @@ impl ShardedBackend {
                                 rows * stride,
                                 vals.len()
                             ));
+                            this.last_failed.lock().unwrap().push(si);
                         }
                         Err(e) => {
                             errs.lock().unwrap().push(e.context(format!("shard {si}")));
+                            this.last_failed.lock().unwrap().push(si);
                         }
                     }
                 });
@@ -296,6 +467,49 @@ impl ShardedBackend {
             }
             ShardAxis::Trees => self.run_trees(x, rows, task, f),
         }
+    }
+}
+
+/// Take the next chunk for shard `si`: its own queue front first, then
+/// steal from the back of the first non-empty other queue. Queues only
+/// shrink, so one full sweep finding nothing means the work is gone.
+fn pop_chunk(
+    queues: &[Mutex<VecDeque<(usize, usize)>>],
+    si: usize,
+) -> Option<(usize, usize)> {
+    if let Some(c) = queues[si].lock().unwrap().pop_front() {
+        return Some(c);
+    }
+    for (j, q) in queues.iter().enumerate() {
+        if j == si {
+            continue;
+        }
+        if let Some(c) = q.lock().unwrap().pop_back() {
+            return Some(c);
+        }
+    }
+    None
+}
+
+/// Aggregate capability/cost metadata over the shard set.
+fn caps_over(inner: &[Box<dyn ShapBackend>], axis: ShardAxis) -> BackendCaps {
+    let supports_interactions = inner.iter().all(|b| b.caps().supports_interactions);
+    let setup = inner.iter().map(|b| b.caps().setup_cost_s).fold(0.0, f64::max);
+    let overhead = inner.iter().map(|b| b.caps().batch_overhead_s).fold(0.0, f64::max);
+    // rows: devices run disjoint rows concurrently (rates add);
+    // trees: every device runs every row (slowest slice gates)
+    let rows_per_s = match axis {
+        ShardAxis::Rows => inner.iter().map(|b| b.caps().rows_per_s).sum(),
+        ShardAxis::Trees => inner
+            .iter()
+            .map(|b| b.caps().rows_per_s)
+            .fold(f64::INFINITY, f64::min),
+    };
+    BackendCaps {
+        supports_interactions,
+        setup_cost_s: setup,
+        batch_overhead_s: overhead,
+        rows_per_s,
     }
 }
 
@@ -373,12 +587,48 @@ impl ShapBackend for ShardedBackend {
         self.observer = Some(obs);
     }
 
+    fn shard_count(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn failed_shards(&self) -> Vec<usize> {
+        let mut v = self.last_failed.lock().unwrap().clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    fn quarantine(&mut self, failed: &[usize]) -> Result<usize> {
+        self.quarantine_shards(failed)
+    }
+
+    fn hot_add(&mut self, target: usize) -> Result<usize> {
+        self.grow_to(target)
+    }
+
+    fn set_shard_throughputs(&self, rows_per_s: &[(usize, f64)]) {
+        let mut t = self.tput.lock().unwrap();
+        for &(s, rate) in rows_per_s {
+            if rate.is_finite() && rate > 0.0 {
+                if let Some(slot) = t.get_mut(s) {
+                    *slot = Some(rate);
+                }
+            }
+        }
+    }
+
     fn describe(&self) -> String {
+        let quarantined = if self.quarantined > 0 {
+            format!(", {} quarantined", self.quarantined)
+        } else {
+            String::new()
+        };
         format!(
-            "sharded[{}×{} axis, {}]",
+            "sharded[{}×{} axis, {}{}]",
             self.inner.len(),
             self.axis.name(),
-            self.inner[0].describe()
+            self.inner[0].describe(),
+            quarantined
         )
     }
 }

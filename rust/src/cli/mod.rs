@@ -50,16 +50,44 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Like [`Args::get_or`], but a valueless `--name` is an error
+    /// instead of silently falling back to the default.
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => {
+                self.check_valueless(name)?;
+                Ok(default)
+            }
+        }
+    }
+
+    /// Errs when `--name` was given with no value (a trailing flag, or
+    /// one directly followed by another `--option`): silently falling
+    /// back to the default would hide the user's intent.
+    fn check_valueless(&self, name: &str) -> Result<()> {
+        if self.has_flag(name) {
+            return Err(anyhow!("--{name} expects a value, but none was given"));
+        }
+        Ok(())
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
-            None => Ok(default),
+            None => {
+                self.check_valueless(name)?;
+                Ok(default)
+            }
             Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
         }
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
-            None => Ok(default),
+            None => {
+                self.check_valueless(name)?;
+                Ok(default)
+            }
             Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
         }
     }
@@ -103,5 +131,30 @@ mod tests {
         let a = parse("serve --quiet");
         assert!(a.has_flag("quiet"));
         assert_eq!(a.get("quiet"), None);
+    }
+
+    #[test]
+    fn trailing_valueless_option_is_an_error_not_a_silent_default() {
+        // regression: `shap --rows` used to fall through to the default
+        // (256) as if the flag had not been typed at all
+        for cmdline in ["shap --rows", "shap --rows --devices 2"] {
+            let a = parse(cmdline);
+            let err = a.get_usize("rows", 256).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("--rows"),
+                "{cmdline}: error must name the flag: {err:#}"
+            );
+        }
+        let a = parse("train --lr");
+        assert!(format!("{:#}", a.get_f64("lr", 0.01).unwrap_err()).contains("--lr"));
+        // string options get the same treatment through get_str
+        let a = parse("serve --backend");
+        assert!(format!("{:#}", a.get_str("backend", "auto").unwrap_err()).contains("--backend"));
+        assert_eq!(parse("serve").get_str("backend", "auto").unwrap(), "auto");
+        assert_eq!(parse("serve --backend host").get_str("backend", "auto").unwrap(), "host");
+        // boolean flags that no code queries as values are unaffected,
+        // and absent options still default cleanly
+        let a = parse("serve --quiet");
+        assert_eq!(a.get_usize("rows", 256).unwrap(), 256);
     }
 }

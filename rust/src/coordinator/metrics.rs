@@ -4,37 +4,76 @@
 //! service stats output, and per-shard counters (fed by the sharded
 //! backend's observer) so multi-device deployments can see how work and
 //! tail latency distribute across devices.
+//!
+//! Every retained sample set — the global latency/batch-size histograms
+//! and the per-backend/per-shard windows — lives in a fixed-capacity
+//! ring ([`SAMPLE_WINDOW`]), so a long-running service holds O(1)
+//! memory no matter how many batches it serves. The per-backend and
+//! per-shard windows also retain paired `(rows, latency)` samples;
+//! [`Metrics::observations`] exports them as a
+//! [`calibrate::Observations`], the input to the planner's measured
+//! cost calibration and the executor's heterogeneous chunk sizing.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::backend::calibrate::Observations;
 use crate::util::{Json, Stats};
 
-/// Cap on retained per-backend latency samples: a sliding window keeps
-/// p50/p99 meaningful at O(1) memory on long-running services.
-const LATENCY_WINDOW: usize = 4096;
+/// Cap on every retained sample window: keeps p50/p99 (and calibration
+/// fits) meaningful at O(1) memory on long-running services.
+pub const SAMPLE_WINDOW: usize = 4096;
+
+/// A fixed-capacity sliding window: pushes overwrite the oldest sample
+/// once `SAMPLE_WINDOW` is reached.
+#[derive(Clone, Debug, Default)]
+struct Ring<T> {
+    buf: Vec<T>,
+    /// overwrite cursor once `buf` is full
+    next: usize,
+}
+
+impl<T: Copy> Ring<T> {
+    fn push(&mut self, v: T) {
+        if self.buf.len() < SAMPLE_WINDOW {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % SAMPLE_WINDOW;
+        }
+    }
+
+    fn as_slice(&self) -> &[T] {
+        &self.buf
+    }
+}
 
 /// Per-backend execution tallies (batch-granular).
 #[derive(Clone, Debug, Default)]
 pub struct BackendCounters {
     pub rows: u64,
     pub batches: u64,
-    /// per-batch execution latencies, seconds (last `LATENCY_WINDOW`)
-    pub latencies: Vec<f64>,
-    /// ring cursor once `latencies` is full
-    next: usize,
+    /// windowed per-batch `(rows, latency_s)` samples — the latency
+    /// percentiles and the calibration fits both read from this
+    samples: Ring<(f64, f64)>,
 }
 
 impl BackendCounters {
-    fn push_latency(&mut self, v: f64) {
-        if self.latencies.len() < LATENCY_WINDOW {
-            self.latencies.push(v);
-        } else {
-            self.latencies[self.next] = v;
-            self.next = (self.next + 1) % LATENCY_WINDOW;
-        }
+    fn push_sample(&mut self, rows: usize, latency_s: f64) {
+        self.samples.push((rows as f64, latency_s));
+    }
+
+    /// The windowed `(rows, latency_s)` batch samples, oldest-first
+    /// order not guaranteed once the window wraps.
+    pub fn samples(&self) -> &[(f64, f64)] {
+        self.samples.as_slice()
+    }
+
+    /// The windowed per-batch latencies, seconds.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.samples.as_slice().iter().map(|s| s.1).collect()
     }
 }
 
@@ -45,10 +84,16 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
-    latencies: Mutex<Vec<f64>>,
-    batch_sizes: Mutex<Vec<f64>>,
+    /// device shards quarantined by the executor after batch failures
+    pub quarantines: AtomicU64,
+    /// executor backend rebuilds triggered by recalibrated plans
+    pub replans: AtomicU64,
+    latencies: Mutex<Ring<f64>>,
+    batch_sizes: Mutex<Ring<f64>>,
     per_backend: Mutex<BTreeMap<String, BackendCounters>>,
     per_shard: Mutex<BTreeMap<usize, BackendCounters>>,
+    /// the executor's current plan + calibration state, for `snapshot`
+    plan_info: Mutex<Option<Json>>,
 }
 
 impl Metrics {
@@ -78,13 +123,27 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_quarantine(&self, shards: usize) {
+        self.quarantines.fetch_add(shards as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_replan(&self) {
+        self.replans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the executor's current plan/calibration state; surfaces
+    /// under `"planner"` in [`Metrics::snapshot`].
+    pub fn set_plan_info(&self, info: Json) {
+        *self.plan_info.lock().unwrap() = Some(info);
+    }
+
     /// One executed batch on the named backend.
     pub fn record_backend_batch(&self, backend: &str, rows: usize, d: Duration) {
         let mut map = self.per_backend.lock().unwrap();
         let c = map.entry(backend.to_string()).or_default();
         c.rows += rows as u64;
         c.batches += 1;
-        c.push_latency(d.as_secs_f64());
+        c.push_sample(rows, d.as_secs_f64());
     }
 
     /// One executed chunk on device shard `shard` (sharded-backend
@@ -94,15 +153,15 @@ impl Metrics {
         let c = map.entry(shard).or_default();
         c.rows += rows as u64;
         c.batches += 1;
-        c.push_latency(d.as_secs_f64());
+        c.push_sample(rows, d.as_secs_f64());
     }
 
     pub fn latency_stats(&self) -> Stats {
-        Stats::from_samples(&self.latencies.lock().unwrap())
+        Stats::from_samples(self.latencies.lock().unwrap().as_slice())
     }
 
     pub fn batch_stats(&self) -> Stats {
-        Stats::from_samples(&self.batch_sizes.lock().unwrap())
+        Stats::from_samples(self.batch_sizes.lock().unwrap().as_slice())
     }
 
     /// Per-backend counters, cloned out of the lock.
@@ -116,13 +175,48 @@ impl Metrics {
         self.per_shard.lock().unwrap().clone()
     }
 
+    /// Drop all per-shard counters. Called by the executor whenever the
+    /// shard topology changes (quarantine, hot-add, replan rebuild):
+    /// shard indices shift, so retained samples would attribute one
+    /// device's history to another — both in the stats snapshot and in
+    /// the throughput seeding derived from it.
+    pub fn reset_shard_window(&self) {
+        self.per_shard.lock().unwrap().clear();
+    }
+
+    /// Drop every backend's windowed `(rows, latency)` samples, keeping
+    /// the cumulative rows/batches tallies. Called alongside
+    /// [`Metrics::reset_shard_window`] on topology changes: whole-batch
+    /// latencies measured under the old shard layout fit a different
+    /// line than the new layout's, so carrying them into the next
+    /// calibration would mis-price it.
+    pub fn reset_backend_samples(&self) {
+        for c in self.per_backend.lock().unwrap().values_mut() {
+            c.samples = Ring::default();
+        }
+    }
+
+    /// Export the windowed per-backend and per-shard `(rows, latency)`
+    /// samples as calibration observations — the measure half of the
+    /// measure→calibrate→plan loop.
+    pub fn observations(&self) -> Observations {
+        let mut obs = Observations::new();
+        for (name, c) in self.per_backend.lock().unwrap().iter() {
+            obs.per_backend.insert(name.clone(), c.samples().to_vec());
+        }
+        for (&shard, c) in self.per_shard.lock().unwrap().iter() {
+            obs.per_shard.insert(shard, c.samples().to_vec());
+        }
+        obs
+    }
+
     /// Per-shard stats as JSON: "shardN" → {rows, batches, p50_s, p99_s}.
     pub fn shard_snapshot(&self) -> Json {
         let map = self.shard_counters();
         Json::Obj(
             map.into_iter()
                 .map(|(shard, c)| {
-                    let lat = Stats::from_samples(&c.latencies);
+                    let lat = Stats::from_samples(&c.latencies());
                     (
                         format!("shard{shard}"),
                         Json::obj(vec![
@@ -143,7 +237,7 @@ impl Metrics {
         Json::Obj(
             map.into_iter()
                 .map(|(name, c)| {
-                    let lat = Stats::from_samples(&c.latencies);
+                    let lat = Stats::from_samples(&c.latencies());
                     (
                         name,
                         Json::obj(vec![
@@ -161,17 +255,21 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         let lat = self.latency_stats();
         let bat = self.batch_stats();
+        let planner = self.plan_info.lock().unwrap().clone().unwrap_or(Json::Null);
         Json::obj(vec![
             ("requests", Json::from(self.requests.load(Ordering::Relaxed) as usize)),
             ("rows", Json::from(self.rows.load(Ordering::Relaxed) as usize)),
             ("batches", Json::from(self.batches.load(Ordering::Relaxed) as usize)),
             ("rejected", Json::from(self.rejected.load(Ordering::Relaxed) as usize)),
             ("errors", Json::from(self.errors.load(Ordering::Relaxed) as usize)),
+            ("quarantines", Json::from(self.quarantines.load(Ordering::Relaxed) as usize)),
+            ("replans", Json::from(self.replans.load(Ordering::Relaxed) as usize)),
             ("latency_p50_s", Json::from(lat.p50)),
             ("latency_p95_s", Json::from(lat.p95)),
             ("latency_p99_s", Json::from(lat.p99)),
             ("latency_mean_s", Json::from(lat.mean)),
             ("mean_batch_rows", Json::from(bat.mean)),
+            ("planner", planner),
             ("backends", self.backend_snapshot()),
             ("shards", self.shard_snapshot()),
         ])
@@ -195,6 +293,36 @@ mod tests {
         assert_eq!(snap.get("rows").unwrap().as_usize().unwrap(), 15);
         let p50 = snap.get("latency_p50_s").unwrap().as_f64().unwrap();
         assert!(p50 >= 0.01 && p50 <= 0.03);
+        // no plan published yet → null placeholder, present in the snapshot
+        assert_eq!(snap.get("planner").unwrap(), &Json::Null);
+        m.set_plan_info(Json::obj(vec![("backend", Json::from("host"))]));
+        let snap = m.snapshot();
+        assert_eq!(
+            snap.get("planner").unwrap().get("backend").unwrap().as_str().unwrap(),
+            "host"
+        );
+    }
+
+    #[test]
+    fn global_sample_windows_are_bounded() {
+        // regression: the global latency/batch-size vecs grew forever on
+        // a long-running service; they get the same ring treatment as
+        // the per-backend windows
+        let m = Metrics::new();
+        for i in 0..(SAMPLE_WINDOW + 500) {
+            m.record_batch(1 + i % 7);
+            m.record_latency(Duration::from_micros(10 + (i as u64 % 50)));
+        }
+        assert_eq!(m.latencies.lock().unwrap().as_slice().len(), SAMPLE_WINDOW);
+        assert_eq!(m.batch_sizes.lock().unwrap().as_slice().len(), SAMPLE_WINDOW);
+        // counters keep exact totals even though samples are windowed
+        assert_eq!(
+            m.batches.load(Ordering::Relaxed) as usize,
+            SAMPLE_WINDOW + 500
+        );
+        // stats still computable off the window
+        assert!(m.latency_stats().p50 > 0.0);
+        assert!(m.batch_stats().mean >= 1.0);
     }
 
     #[test]
@@ -233,15 +361,51 @@ mod tests {
         assert_eq!(counters["host"].batches, 2);
         assert_eq!(counters["xla"].rows, 256);
         // the latency window is bounded
-        for _ in 0..(LATENCY_WINDOW + 100) {
+        for _ in 0..(SAMPLE_WINDOW + 100) {
             m.record_backend_batch("host", 1, Duration::from_micros(5));
         }
-        assert_eq!(m.backend_counters()["host"].latencies.len(), LATENCY_WINDOW);
+        assert_eq!(m.backend_counters()["host"].latencies().len(), SAMPLE_WINDOW);
         let snap = m.snapshot();
         let be = snap.get("backends").unwrap();
         assert_eq!(be.get("host").unwrap().get("rows").unwrap().as_usize().unwrap(), 48);
         assert_eq!(be.get("xla").unwrap().get("batches").unwrap().as_usize().unwrap(), 1);
         let p99 = be.get("host").unwrap().get("batch_p99_s").unwrap().as_f64().unwrap();
         assert!(p99 >= 0.004);
+    }
+
+    #[test]
+    fn topology_resets_drop_windows_but_keep_tallies() {
+        let m = Metrics::new();
+        m.record_backend_batch("host", 32, Duration::from_millis(4));
+        m.record_shard_batch(0, 16, Duration::from_millis(2));
+        m.reset_shard_window();
+        m.reset_backend_samples();
+        assert!(m.shard_counters().is_empty(), "shard counters drop entirely");
+        let host = &m.backend_counters()["host"];
+        assert!(host.samples().is_empty(), "backend sample window drops");
+        assert_eq!(host.rows, 32, "cumulative tallies survive");
+        assert_eq!(host.batches, 1);
+        assert!(m.observations().per_backend["host"].is_empty());
+    }
+
+    #[test]
+    fn observations_export_paired_samples() {
+        let m = Metrics::new();
+        m.record_backend_batch("host", 64, Duration::from_millis(8));
+        m.record_backend_batch("host", 128, Duration::from_millis(16));
+        m.record_shard_batch(1, 32, Duration::from_millis(4));
+        let obs = m.observations();
+        let host = &obs.per_backend["host"];
+        assert_eq!(host.len(), 2);
+        assert_eq!(host[0].0, 64.0);
+        assert!((host[0].1 - 0.008).abs() < 1e-9);
+        assert_eq!(host[1].0, 128.0);
+        let shard = &obs.per_shard[&1];
+        assert_eq!(shard.len(), 1);
+        assert_eq!(shard[0].0, 32.0);
+        // and throughput derivation reads straight off the samples
+        let tputs = obs.shard_throughputs();
+        assert_eq!(tputs.len(), 1);
+        assert!((tputs[0].1 - 32.0 / 0.004).abs() < 1.0);
     }
 }

@@ -10,18 +10,35 @@
 //!                  worker threads (one ShapBackend each) --responses-->
 //! ```
 //!
-//! The executor is backend-agnostic: it builds one backend instance
-//! from a [`BackendFactory`] on its own thread (device clients and
-//! buffers are constructed on the thread that uses them) and dispatches
-//! through the trait, so the recursive CPU path, the host packed DP and
-//! the XLA engines are all served by the same coordinator. With
-//! `devices > 1` that single instance is a `ShardedBackend` spanning
-//! the device topology — each batch fans out across every device at
-//! once (row- or tree-axis, see `backend::shard`) instead of the old
-//! per-worker model duplication, and per-shard rows/p50/p99 surface in
-//! [`Metrics`]. Contributions *and* interactions flow through the same
-//! ingress → batcher → executor pipeline; batches are kept
-//! task-homogeneous by batching per [`Task`].
+//! The executor is backend-agnostic: it builds one backend instance on
+//! its own thread (device clients and buffers are constructed on the
+//! thread that uses them) and dispatches through the trait, so the
+//! recursive CPU path, the host packed DP and the XLA engines are all
+//! served by the same coordinator. With `devices > 1` that single
+//! instance is a `ShardedBackend` spanning the device topology — each
+//! batch fans out across every device at once (row- or tree-axis, see
+//! `backend::shard`) and per-shard rows/p50/p99 surface in [`Metrics`].
+//! Contributions *and* interactions flow through the same ingress →
+//! batcher → executor pipeline; batches are kept task-homogeneous by
+//! batching per [`Task`].
+//!
+//! **Adaptive planning** closes the measure→calibrate→plan loop: every
+//! [`ServiceConfig::recalibrate_every`] batches the executor exports the
+//! windowed `(rows, latency)` samples its metrics recorded, re-fits the
+//! planner's cost lines against them ([`Planner::recalibrate`]), seeds
+//! the sharded backend's per-shard throughput estimates (heterogeneous
+//! chunk sizing), and — when the calibrated model says a different
+//! backend/shard layout now wins — rebuilds the executor's backend to
+//! the new plan without dropping the service. The current plan and its
+//! prior-vs-measured constants surface under `"planner"` in the metrics
+//! snapshot.
+//!
+//! **Elastic topology**: when a batch fails and the backend names the
+//! failed shards, the executor quarantines them (the sharded backend
+//! keeps serving from the survivors) and the recalibration cadence
+//! hot-adds shards back toward the planned topology once builds succeed
+//! again — device loss degrades capacity instead of killing the
+//! service.
 //!
 //! Backpressure: the ingress channel is bounded; `submit` fails fast when
 //! the queue is full (callers see `Rejected`). The batcher coalesces
@@ -33,11 +50,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::anyhow;
-use crate::backend::{self, BackendConfig, BackendKind, ShapBackend, ShardAxis};
+use crate::backend::{
+    self, BackendConfig, BackendKind, CostEstimate, Plan, Planner, ShapBackend, ShardAxis,
+    ShardedBackend,
+};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::gbdt::Model;
 use crate::util::error::Result;
+use crate::util::Json;
 
 /// Which computation a request wants; batches are task-homogeneous.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,6 +93,10 @@ pub struct ServiceConfig {
     pub max_wait: Duration,
     /// ingress queue capacity (requests) — the backpressure bound
     pub queue_cap: usize,
+    /// executed-batch cadence of the measure→calibrate→plan loop
+    /// (recalibrate planner, seed shard throughputs, rebuild on plan
+    /// change, hot-add quarantined shards); 0 disables adaptation
+    pub recalibrate_every: usize,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +107,7 @@ impl Default for ServiceConfig {
             max_batch_rows: 256,
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
+            recalibrate_every: 64,
         }
     }
 }
@@ -106,6 +132,23 @@ enum Ingress {
     Shutdown,
 }
 
+/// Everything the executor thread needs to (re)build its backend and
+/// keep the plan calibrated while serving.
+struct AdaptiveCtx {
+    model: Arc<Model>,
+    bcfg: BackendConfig,
+    /// `Some` pins the backend kind (the caller chose); `None` lets the
+    /// (re)calibrated planner choose
+    pinned_kind: Option<BackendKind>,
+    /// `Some` pins the shard axis; `None` lets the planner choose
+    pinned_axis: Option<ShardAxis>,
+    devices: usize,
+    /// batch size plans are priced at (the batcher's flush threshold)
+    plan_rows: usize,
+    /// recalibration cadence in executed batches (0 = static)
+    every: usize,
+}
+
 /// Handle to a running SHAP service.
 pub struct ShapService {
     ingress: SyncSender<Ingress>,
@@ -117,15 +160,20 @@ pub struct ShapService {
 impl ShapService {
     /// Start the executor over the backend built by `factory` (a
     /// `ShardedBackend` when the factory shards; its per-shard
-    /// executions are recorded into the service metrics).
-    pub fn start_with_factory(factory: Arc<BackendFactory>, cfg: ServiceConfig) -> Result<ShapService> {
+    /// executions are recorded into the service metrics). The factory
+    /// path serves statically — no planner, no recalibration — but the
+    /// executor still quarantines failed shards after batch errors and
+    /// probes them back on the `recalibrate_every` cadence (recovery
+    /// needs a self-built sharded backend; `from_backends` topologies
+    /// carry no rebuild recipe and stay at reduced width).
+    pub fn start_with_factory(
+        factory: Arc<BackendFactory>,
+        cfg: ServiceConfig,
+    ) -> Result<ShapService> {
         let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
         let (job_tx, job_rx) = sync_channel::<Batch>(2);
 
-        // the executor thread: builds the (possibly sharded) backend on
-        // the thread that uses it, then drains batches through it — each
-        // batch fans out across every device shard inside the backend
         let ready = Arc::new(std::sync::Barrier::new(2));
         let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let mut worker_handles = Vec::new();
@@ -133,6 +181,7 @@ impl ShapService {
             let metrics = metrics.clone();
             let ready = ready.clone();
             let init_err = init_err.clone();
+            let every = cfg.recalibrate_every;
             worker_handles.push(std::thread::spawn(move || {
                 let mut backend = match factory() {
                     Ok(b) => {
@@ -145,12 +194,28 @@ impl ShapService {
                         return;
                     }
                 };
-                let shard_metrics = metrics.clone();
-                backend.set_shard_observer(Arc::new(move |shard, rows, dt| {
-                    shard_metrics.record_shard_batch(shard, rows, dt);
-                }));
+                install_shard_observer(backend.as_mut(), &metrics);
+                let full_width = backend.shard_count();
+                let mut since = 0usize;
+                let mut backoff = ProbeBackoff::new();
                 while let Ok(batch) = job_rx.recv() {
-                    process_batch(backend.as_ref(), batch, &metrics);
+                    let ok = process_batch(backend.as_ref(), batch, &metrics);
+                    if !ok && try_quarantine(backend.as_mut(), &metrics) {
+                        backoff.on_quarantine();
+                    }
+                    since += 1;
+                    if every > 0 && since >= every {
+                        since = 0;
+                        if backoff.may_probe() {
+                            if let Ok(added) = backend.hot_add(full_width) {
+                                if added > 0 {
+                                    backoff.on_probe();
+                                    install_shard_observer(backend.as_mut(), &metrics);
+                                    reset_measurement_windows(&metrics);
+                                }
+                            }
+                        }
+                    }
                 }
             }));
         }
@@ -164,14 +229,8 @@ impl ShapService {
             return Err(anyhow!("worker init failed: {e}"));
         }
 
-        // batcher thread
-        let batcher_metrics = metrics.clone();
-        let max_wait = cfg.max_wait;
-        let max_rows = cfg.max_batch_rows;
-        let batcher_handle = std::thread::spawn(move || {
-            run_batcher(ingress_rx, job_tx, max_rows, max_wait, batcher_metrics);
-        });
-
+        let batcher_handle =
+            spawn_batcher(ingress_rx, job_tx, cfg.max_batch_rows, cfg.max_wait, metrics.clone());
         Ok(ShapService {
             ingress: ingress_tx,
             batcher_handle: Some(batcher_handle),
@@ -183,51 +242,140 @@ impl ShapService {
     /// Start with one concrete backend kind over `model`. The service
     /// topology (`cfg.devices`, `cfg.shard_axis`) is forwarded into the
     /// backend build, so `devices > 1` serves through one sharded
-    /// backend spanning every device.
+    /// backend spanning every device. The kind stays pinned, but the
+    /// recalibration cadence still self-tunes shard chunk sizing and
+    /// shard count, and quarantines failing shards.
     pub fn start(
         model: Arc<Model>,
         kind: BackendKind,
         bcfg: BackendConfig,
         cfg: ServiceConfig,
     ) -> Result<ShapService> {
-        let mut bcfg = bcfg;
-        bcfg.devices = cfg.devices.max(1);
-        if bcfg.shard_axis.is_none() {
-            bcfg.shard_axis = cfg.shard_axis;
-        }
-        bcfg.rows_hint = bcfg.rows_hint.max(1);
-        let factory: Arc<BackendFactory> =
-            Arc::new(move || backend::build(&model, kind, &bcfg));
-        Self::start_with_factory(factory, cfg)
+        let (_plan, svc) = Self::start_adaptive(model, Some(kind), bcfg, cfg)?;
+        Ok(svc)
     }
 
     /// Planner-driven start: rank backend kinds by estimated latency for
-    /// `max_batch_rows`-row batches over the service's device topology
-    /// and probe-build through `backend::build_auto` (so capability
-    /// gaps, e.g. a model with no interaction artifact bucket,
-    /// disqualify a kind up front), then start the executor on the
-    /// winning kind — with the plan's shard axis pinned so the executor
-    /// builds the same layout. Returns the chosen kind alongside the
-    /// service.
+    /// `max_batch_rows`-row batches over the service's device topology,
+    /// build the best constructible one (capability gaps, e.g. a model
+    /// with no interaction artifact bucket, disqualify a kind), and keep
+    /// the choice calibrated while serving: measured batch samples feed
+    /// back into the planner on the `recalibrate_every` cadence and the
+    /// executor rebuilds onto whatever backend/shard layout the
+    /// calibrated crossover now picks. Returns the initially chosen
+    /// kind alongside the service.
     pub fn start_planned(
         model: Arc<Model>,
         bcfg: BackendConfig,
         cfg: ServiceConfig,
     ) -> Result<(BackendKind, ShapService)> {
-        let mut probe_cfg = bcfg;
-        probe_cfg.rows_hint = cfg.max_batch_rows.clamp(1, 1 << 24);
-        probe_cfg.devices = cfg.devices.max(1);
-        let (plan, probe) = backend::build_auto(&model, &probe_cfg)?;
-        drop(probe); // the executor builds its own instance on its thread
-        // serve exactly the layout the plan priced: shard count AND axis
-        // (the planner may have chosen fewer shards than devices, or 1)
-        let mut cfg = cfg;
-        cfg.devices = plan.shards.max(1);
-        if plan.shards > 1 {
-            cfg.shard_axis = Some(plan.axis);
-        }
-        let svc = Self::start(model, plan.kind, probe_cfg, cfg)?;
+        let (plan, svc) = Self::start_adaptive(model, None, bcfg, cfg)?;
         Ok((plan.kind, svc))
+    }
+
+    /// The shared executor start: builds the initial backend from the
+    /// planner (pinned kind or auto) on the executor thread, then serves
+    /// with the adaptive loop.
+    fn start_adaptive(
+        model: Arc<Model>,
+        pinned_kind: Option<BackendKind>,
+        bcfg: BackendConfig,
+        cfg: ServiceConfig,
+    ) -> Result<(Plan, ShapService)> {
+        let mut bcfg = bcfg;
+        bcfg.devices = cfg.devices.max(1);
+        if bcfg.shard_axis.is_none() {
+            bcfg.shard_axis = cfg.shard_axis;
+        }
+        if pinned_kind.is_none() {
+            // auto mode prices and buckets for the batcher's flush size
+            bcfg.rows_hint = cfg.max_batch_rows.clamp(1, 1 << 24);
+        }
+        bcfg.rows_hint = bcfg.rows_hint.max(1);
+        let ctx = AdaptiveCtx {
+            pinned_axis: bcfg.shard_axis,
+            devices: cfg.devices.max(1),
+            plan_rows: cfg.max_batch_rows.clamp(1, 1 << 24),
+            every: cfg.recalibrate_every,
+            model,
+            bcfg,
+            pinned_kind,
+        };
+
+        let metrics = Arc::new(Metrics::new());
+        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
+        let (job_tx, job_rx) = sync_channel::<Batch>(2);
+
+        let ready = Arc::new(std::sync::Barrier::new(2));
+        let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let chosen: Arc<Mutex<Option<Plan>>> = Arc::new(Mutex::new(None));
+        let mut worker_handles = Vec::new();
+        {
+            let metrics = metrics.clone();
+            let ready = ready.clone();
+            let init_err = init_err.clone();
+            let chosen = chosen.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                let mut planner = Planner::for_model(&ctx.model).with_devices(ctx.devices);
+                let (mut plan, mut backend) = match build_adaptive(&planner, &ctx) {
+                    Ok((plan, b)) => {
+                        *chosen.lock().unwrap() = Some(plan);
+                        ready.wait();
+                        (plan, b)
+                    }
+                    Err(e) => {
+                        *init_err.lock().unwrap() = Some(format!("{e:#}"));
+                        ready.wait();
+                        return;
+                    }
+                };
+                install_shard_observer(backend.as_mut(), &metrics);
+                metrics.set_plan_info(plan_info(&planner, &plan, &*backend));
+                let mut since = 0usize;
+                let mut backoff = ProbeBackoff::new();
+                while let Ok(batch) = job_rx.recv() {
+                    let ok = process_batch(backend.as_ref(), batch, &metrics);
+                    if !ok && try_quarantine(backend.as_mut(), &metrics) {
+                        backoff.on_quarantine();
+                        metrics.set_plan_info(plan_info(&planner, &plan, &*backend));
+                    }
+                    since += 1;
+                    if ctx.every > 0 && since >= ctx.every {
+                        since = 0;
+                        recalibrate_step(
+                            &mut planner,
+                            &mut plan,
+                            &mut backend,
+                            &ctx,
+                            &metrics,
+                            &mut backoff,
+                        );
+                    }
+                }
+            }));
+        }
+        ready.wait();
+        if let Some(e) = init_err.lock().unwrap().take() {
+            drop(job_tx);
+            drop(ingress_tx);
+            for h in worker_handles {
+                let _ = h.join();
+            }
+            return Err(anyhow!("worker init failed: {e}"));
+        }
+        let plan = chosen.lock().unwrap().take().expect("executor published its plan");
+
+        let batcher_handle =
+            spawn_batcher(ingress_rx, job_tx, cfg.max_batch_rows, cfg.max_wait, metrics.clone());
+        Ok((
+            plan,
+            ShapService {
+                ingress: ingress_tx,
+                batcher_handle: Some(batcher_handle),
+                worker_handles,
+                metrics,
+            },
+        ))
     }
 
     /// Submit rows for a task; returns the response channel.
@@ -291,6 +439,302 @@ impl ShapService {
     }
 }
 
+/// The plans the executor should try, best first, honoring pinned kind
+/// and axis. A pinned kind spans the full device topology (matching the
+/// static `backend::build` semantics); auto mode ranks every candidate
+/// at its own best layout.
+fn desired_plans(planner: &Planner, ctx: &AdaptiveCtx) -> Vec<Plan> {
+    let mut plans = match (ctx.pinned_kind, ctx.pinned_axis) {
+        (Some(kind), Some(axis)) => {
+            planner.plan_pinned(kind, ctx.plan_rows, axis, ctx.devices).into_iter().collect()
+        }
+        (Some(kind), None) => {
+            if ctx.devices > 1 {
+                let axis = planner
+                    .plan_for(kind, ctx.plan_rows)
+                    .map(|p| p.axis)
+                    .unwrap_or(ShardAxis::Rows);
+                planner.plan_pinned(kind, ctx.plan_rows, axis, ctx.devices).into_iter().collect()
+            } else {
+                planner.plan_for(kind, ctx.plan_rows).into_iter().collect()
+            }
+        }
+        (None, Some(axis)) => planner.ranked_pinned(ctx.plan_rows, axis, ctx.devices),
+        (None, None) => planner.ranked(ctx.plan_rows),
+    };
+    if plans.is_empty() {
+        if let Some(kind) = ctx.pinned_kind {
+            // the pinned kind is not a planner candidate (e.g. compiled
+            // out): try the build anyway so the caller sees the real
+            // construction error instead of "no backend available"
+            plans.push(Plan {
+                kind,
+                shards: ctx.devices,
+                axis: ctx.pinned_axis.unwrap_or(ShardAxis::Rows),
+                est_latency_s: f64::INFINITY,
+            });
+        }
+    }
+    plans
+}
+
+/// Build the backend for one concrete plan.
+fn build_plan(
+    model: &Arc<Model>,
+    bcfg: &BackendConfig,
+    plan: &Plan,
+) -> Result<Box<dyn ShapBackend>> {
+    if plan.shards > 1 {
+        Ok(Box::new(ShardedBackend::build(model, plan.kind, bcfg, plan.shards, plan.axis)?))
+    } else {
+        let mut one = bcfg.clone();
+        one.devices = 1;
+        one.shard_axis = None;
+        backend::build(model, plan.kind, &one)
+    }
+}
+
+/// Build the best constructible plan, filtering auto-mode candidates
+/// that cannot serve the configured interaction pipeline.
+fn build_adaptive(
+    planner: &Planner,
+    ctx: &AdaptiveCtx,
+) -> Result<(Plan, Box<dyn ShapBackend>)> {
+    let mut last_err = None;
+    for plan in desired_plans(planner, ctx) {
+        match build_plan(&ctx.model, &ctx.bcfg, &plan) {
+            Ok(b) => {
+                if ctx.pinned_kind.is_none()
+                    && ctx.bcfg.with_interactions
+                    && !b.caps().supports_interactions
+                {
+                    continue;
+                }
+                return Ok((plan, b));
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow!("no backend available")))
+}
+
+/// Wire the sharded backend's per-chunk executions into the metrics.
+fn install_shard_observer(backend: &mut dyn ShapBackend, metrics: &Arc<Metrics>) {
+    let shard_metrics = metrics.clone();
+    backend.set_shard_observer(Arc::new(move |shard, rows, dt| {
+        shard_metrics.record_shard_batch(shard, rows, dt);
+    }));
+}
+
+/// After a failed batch: if the backend names failed shards, quarantine
+/// them so the survivors keep serving. Returns whether the topology
+/// changed.
+fn try_quarantine(backend: &mut dyn ShapBackend, metrics: &Metrics) -> bool {
+    let failed = backend.failed_shards();
+    if failed.is_empty() {
+        return false;
+    }
+    match backend.quarantine(&failed) {
+        Ok(removed) if removed > 0 => {
+            metrics.record_quarantine(removed);
+            reset_measurement_windows(metrics);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Drop the measurement windows after any topology change: shard
+/// indices shift (per-shard samples would attribute one device's
+/// history to another) and whole-batch latencies measured under the old
+/// layout fit a different cost line than the new one.
+fn reset_measurement_windows(metrics: &Metrics) {
+    metrics.reset_shard_window();
+    metrics.reset_backend_samples();
+}
+
+/// Exponential backoff for hot-add recovery probes: re-adding a shard
+/// whose device still fails costs one live batch per attempt, so each
+/// failed probe doubles (up to 16 ticks) the wait before the next one;
+/// a probe that survives a full cadence without a quarantine resets the
+/// backoff.
+struct ProbeBackoff {
+    /// ticks left before the next hot-add attempt
+    cooldown: usize,
+    /// cooldown to apply after the next failed probe
+    next: usize,
+    /// a quarantine happened since the last tick
+    tripped: bool,
+    /// a hot-add probe went live on the last tick
+    probing: bool,
+}
+
+impl ProbeBackoff {
+    fn new() -> ProbeBackoff {
+        ProbeBackoff { cooldown: 0, next: 1, tripped: false, probing: false }
+    }
+
+    fn on_quarantine(&mut self) {
+        self.cooldown = self.next;
+        if self.probing {
+            // the re-added shard failed again: back off harder
+            self.next = (self.next * 2).min(16);
+            self.probing = false;
+        }
+        self.tripped = true;
+    }
+
+    /// Mark that a hot-add probe actually added shards this tick.
+    fn on_probe(&mut self) {
+        self.probing = true;
+    }
+
+    /// Called once per recalibration tick; returns whether hot-add may
+    /// probe this tick.
+    fn may_probe(&mut self) -> bool {
+        if self.probing && !self.tripped {
+            // the last probe survived a full cadence: trust again
+            self.next = 1;
+            self.probing = false;
+        }
+        self.tripped = false;
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return false;
+        }
+        true
+    }
+}
+
+/// The planner's cost lines are per backend *instance*, but a sharded
+/// executor's whole-batch samples measure the sharded line — feeding
+/// them to `recalibrate` would divide the parallelism out twice (once
+/// in the measurement, once in `sharded_cost`). Remap: unsharded
+/// batches calibrate directly; row-axis shard chunks are per-instance
+/// executions of the full model, so they pool under the backend's
+/// name; tree-axis samples measure sub-ensemble slices, which fit no
+/// per-instance line and are dropped.
+fn calibration_observations(
+    obs: &crate::backend::Observations,
+    plan: &Plan,
+) -> crate::backend::Observations {
+    let mut out = crate::backend::Observations::new();
+    let name = plan.kind.name();
+    if plan.shards <= 1 {
+        if let Some(samples) = obs.per_backend.get(name) {
+            out.per_backend.insert(name.to_string(), samples.clone());
+        }
+    } else if plan.axis == ShardAxis::Rows {
+        let pooled: Vec<(f64, f64)> =
+            obs.per_shard.values().flat_map(|v| v.iter().copied()).collect();
+        if !pooled.is_empty() {
+            out.per_backend.insert(name.to_string(), pooled);
+        }
+    }
+    out
+}
+
+/// One tick of the measure→calibrate→plan loop.
+fn recalibrate_step(
+    planner: &mut Planner,
+    plan: &mut Plan,
+    backend: &mut Box<dyn ShapBackend>,
+    ctx: &AdaptiveCtx,
+    metrics: &Arc<Metrics>,
+    backoff: &mut ProbeBackoff,
+) {
+    let obs = metrics.observations();
+    let changed = planner.recalibrate(&calibration_observations(&obs, plan));
+    // heterogeneous chunk sizing: seed the executor's per-shard
+    // throughput estimates from the recorded per-shard samples
+    backend.set_shard_throughputs(&obs.shard_throughputs());
+    // hot-add recovery: grow a quarantined topology back toward the
+    // planned shard count (no-op when already there or unsharded),
+    // backing off exponentially while re-added shards keep failing
+    if backoff.may_probe() {
+        if let Ok(added) = backend.hot_add(plan.shards) {
+            if added > 0 {
+                backoff.on_probe();
+                install_shard_observer(backend.as_mut(), metrics);
+                reset_measurement_windows(metrics);
+            }
+        }
+    }
+    if changed {
+        // walk the (re-priced) ranked plans like the initial build: stop
+        // at the current plan (nothing better is constructible), adopt
+        // the first candidate that builds and can serve the pipeline
+        for want in desired_plans(planner, ctx) {
+            let differs =
+                want.kind != plan.kind || want.shards != plan.shards || want.axis != plan.axis;
+            if !differs {
+                break;
+            }
+            match build_plan(&ctx.model, &ctx.bcfg, &want) {
+                Ok(mut b) => {
+                    if ctx.pinned_kind.is_none()
+                        && ctx.bcfg.with_interactions
+                        && !b.caps().supports_interactions
+                    {
+                        continue;
+                    }
+                    install_shard_observer(b.as_mut(), metrics);
+                    *backend = b;
+                    *plan = want;
+                    metrics.record_replan();
+                    reset_measurement_windows(metrics);
+                    break;
+                }
+                // unbuildable candidate: try the next ranked plan now,
+                // and again next cadence
+                Err(_) => continue,
+            }
+        }
+    }
+    metrics.set_plan_info(plan_info(planner, plan, &**backend));
+}
+
+fn cost_json(c: &CostEstimate) -> Json {
+    Json::obj(vec![
+        ("batch_overhead_s", Json::from(c.batch_overhead_s)),
+        ("rows_per_s", Json::from(c.rows_per_s)),
+    ])
+}
+
+/// The executor's current plan + prior-vs-measured planner constants.
+fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json {
+    let mut fields = vec![
+        ("backend", Json::from(plan.kind.name())),
+        ("shards", Json::from(plan.shards)),
+        ("axis", Json::from(plan.axis.name())),
+        ("est_latency_s", Json::from(plan.est_latency_s)),
+        ("describe", Json::from(backend.describe())),
+        (
+            "calibration_samples",
+            Json::from(planner.calibration_samples(plan.kind)),
+        ),
+    ];
+    if let Some(prior) = planner.prior(plan.kind) {
+        fields.push(("prior", cost_json(&prior)));
+    }
+    if let Some(cost) = planner.cost(plan.kind) {
+        fields.push(("measured", cost_json(&cost)));
+    }
+    Json::obj(fields)
+}
+
+fn spawn_batcher(
+    ingress_rx: Receiver<Ingress>,
+    job_tx: SyncSender<Batch>,
+    max_rows: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        run_batcher(ingress_rx, job_tx, max_rows, max_wait, metrics);
+    })
+}
+
 fn run_batcher(
     ingress: Receiver<Ingress>,
     job_tx: SyncSender<Batch>,
@@ -347,7 +791,9 @@ fn dispatch(
     let _ = job_tx.send(batch);
 }
 
-fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) {
+/// Execute one batch and fan responses back out; returns whether the
+/// batch succeeded.
+fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) -> bool {
     let m = backend.num_features();
     let groups = backend.num_groups();
     // concatenate request rows into one backend batch
@@ -374,6 +820,7 @@ fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) {
                 metrics.record_latency(req.submitted.elapsed());
                 let _ = req.resp.send(Ok(vals));
             }
+            true
         }
         Err(e) => {
             metrics.record_error();
@@ -381,6 +828,7 @@ fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) {
             for req in batch.requests {
                 let _ = req.resp.send(Err(anyhow!("{msg}")));
             }
+            false
         }
     }
 }

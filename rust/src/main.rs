@@ -4,13 +4,14 @@
 //! gputreeshap train    --dataset cal_housing --scale 0.05 --rounds 50 --depth 8 --out model.gtsm
 //! gputreeshap info     --model model.gtsm
 //! gputreeshap pack     --model model.gtsm
-//! gputreeshap backends --model model.gtsm --devices 4
+//! gputreeshap backends --model model.gtsm --devices 4 --calibrated
 //! gputreeshap explain  --model model.gtsm --dataset cal_housing --rows 256 \
 //!                      --backend auto|cpu|host|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
 //! gputreeshap shap     …  (alias of explain)
 //! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto --devices 2
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
-//! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --shard-axis rows --clients 4 --requests 32
+//! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --shard-axis rows \
+//!                      --clients 4 --requests 32 --recalibrate-every 64
 //! gputreeshap zoo      --scale 0.02
 //! ```
 //!
@@ -18,6 +19,13 @@
 //! `--backend auto` lets the crossover-aware planner pick, and
 //! `--devices N` shards any backend across N device instances (row- or
 //! tree-axis, `--shard-axis auto` lets the planner choose the axis).
+//!
+//! The planner starts from a-priori cost constants and self-tunes:
+//! `backends --calibrated` micro-measures every constructible backend
+//! and prints the measured constants, plans and crossovers next to the
+//! priors; `serve --recalibrate-every N` sets the serving executor's
+//! measure→calibrate→plan cadence (0 disables adaptation), whose state
+//! surfaces under `"planner"` in the final metrics snapshot.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -60,11 +68,12 @@ fn main() {
 
 const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo> [options]
 multi-device: --devices N shards execution; --shard-axis auto|rows|trees picks the split
+calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
 see rust/src/main.rs header for examples";
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
     let scale = args.get_f64("scale", 0.01)?;
-    match args.get_or("dataset", "cal_housing") {
+    match args.get_str("dataset", "cal_housing")? {
         "covtype" => Ok(SynthSpec::covtype(scale).generate()),
         "cal_housing" => Ok(SynthSpec::cal_housing(scale).generate()),
         "fashion_mnist" => Ok(SynthSpec::fashion_mnist(scale).generate()),
@@ -96,16 +105,16 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 }
 
 fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
-    match args.get("shard-axis") {
-        None | Some("auto") => Ok(None),
-        Some(s) => ShardAxis::parse(s)
+    match args.get_str("shard-axis", "auto")? {
+        "auto" => Ok(None),
+        s => ShardAxis::parse(s)
             .map(Some)
             .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|rows|trees)")),
     }
 }
 
 fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
-    let packing = args.get_or("packing", "bfd");
+    let packing = args.get_str("packing", "bfd")?;
     Ok(BackendConfig {
         threads: args.get_usize("threads", gputreeshap::parallel::default_threads())?,
         packing: Packing::parse(packing)
@@ -126,7 +135,7 @@ fn build_backend(
     cfg: &BackendConfig,
     default: &str,
 ) -> Result<(String, Box<dyn ShapBackend>)> {
-    match args.get_or("backend", default) {
+    match args.get_str("backend", default)? {
         "auto" => {
             let (plan, b) = backend::build_auto(model, cfg)?;
             let layout = if plan.shards > 1 {
@@ -165,7 +174,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("training on {} ({} rows × {} cols)…", data.name, data.rows, data.cols);
     let (model, dt) = time_it(|| train(&data, &params));
     println!("trained in {dt:.2}s: {}", model.summary());
-    let out = args.get_or("out", "model.gtsm");
+    let out = args.get_str("out", "model.gtsm")?;
     model_io::save(&model, Path::new(out))?;
     println!("saved to {out}");
     Ok(())
@@ -206,8 +215,37 @@ fn cmd_pack(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_plan_table(planner: &Planner) {
+    let mut t = gputreeshap::bench::Table::new(&[
+        "batch rows",
+        "planner choice",
+        "shards",
+        "axis",
+        "est latency(s)",
+    ]);
+    for rows in [1usize, 16, 64, 256, 1024, 4096, 16384] {
+        let plan = planner.choose(rows);
+        t.row(vec![
+            rows.to_string(),
+            plan.kind.name().into(),
+            plan.shards.to_string(),
+            plan.axis.name().into(),
+            format!("{:.5}", plan.est_latency_s),
+        ]);
+    }
+    t.print();
+}
+
+fn print_crossovers(planner: &Planner, label: &str) {
+    for fast in [BackendKind::XlaPadded, BackendKind::XlaWarp, BackendKind::Host] {
+        if let Some(cross) = planner.crossover_rows(BackendKind::Recursive, fast) {
+            println!("\n{label} cpu→{} crossover: ~{cross} rows", fast.name());
+        }
+    }
+}
+
 fn cmd_backends(args: &Args) -> Result<()> {
-    let model = load_model(args)?;
+    let model = Arc::new(load_model(args)?);
     let devices = args.get_usize("devices", 1)?.max(1);
     let planner = Planner::for_model(&model).with_devices(devices);
     println!("{}\n", model.summary());
@@ -224,29 +262,59 @@ fn cmd_backends(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
-    println!("\nplanner decisions over {devices} device(s):");
-    let mut t2 = gputreeshap::bench::Table::new(&[
-        "batch rows",
-        "planner choice",
-        "shards",
-        "axis",
-        "est latency(s)",
-    ]);
-    for rows in [1usize, 16, 64, 256, 1024, 4096, 16384] {
-        let plan = planner.choose(rows);
-        t2.row(vec![
-            rows.to_string(),
-            plan.kind.name().into(),
-            plan.shards.to_string(),
-            plan.axis.name().into(),
-            format!("{:.5}", plan.est_latency_s),
-        ]);
-    }
-    t2.print();
-    for fast in [BackendKind::XlaPadded, BackendKind::XlaWarp, BackendKind::Host] {
-        if let Some(cross) = planner.crossover_rows(BackendKind::Recursive, fast) {
-            println!("\npredicted cpu→{} crossover: ~{cross} rows", fast.name());
+    println!("\nplanner decisions over {devices} device(s), a-priori:");
+    print_plan_table(&planner);
+    print_crossovers(&planner, "predicted");
+
+    if args.has_flag("calibrated") {
+        // micro-measure every backend that constructs here, feed the
+        // samples through the calibration fit, and show what actually
+        // changed: constants, plans, crossovers
+        let mut planner = planner;
+        let mut cfg = backend_config(args, 256)?;
+        cfg.devices = 1; // the cost lines are per-instance; sharding math is the planner's
+        let m = model.num_features;
+        let sizes = [1usize, 16, 128, 512];
+        let reps = 3usize;
+        let max_rows = *sizes.iter().max().unwrap();
+        let mut rng = gputreeshap::util::Rng::new(17);
+        let x: Vec<f32> = (0..max_rows * m).map(|_| rng.f32()).collect();
+        println!(
+            "\nmeasuring each backend over {reps} reps × {sizes:?} synthetic batch rows…"
+        );
+        let mut obs = backend::Observations::new();
+        for (kind, b) in backend::available(&model, &cfg) {
+            for _ in 0..reps {
+                for &rows in &sizes {
+                    let t0 = std::time::Instant::now();
+                    if b.contributions(&x[..rows * m], rows).is_ok() {
+                        obs.record_backend(kind.name(), rows, t0.elapsed().as_secs_f64());
+                    }
+                }
+            }
         }
+        planner.recalibrate(&obs);
+        let mut t3 = gputreeshap::bench::Table::new(&[
+            "backend",
+            "overhead(s) prior→measured",
+            "rows/s prior→measured",
+            "samples",
+        ]);
+        for kind in BackendKind::ALL {
+            let (Some(prior), Some(cost)) = (planner.prior(kind), planner.cost(kind)) else {
+                continue;
+            };
+            t3.row(vec![
+                kind.name().into(),
+                format!("{:.5} → {:.5}", prior.batch_overhead_s, cost.batch_overhead_s),
+                format!("{:.0} → {:.0}", prior.rows_per_s, cost.rows_per_s),
+                planner.calibration_samples(kind).to_string(),
+            ]);
+        }
+        t3.print();
+        println!("\nplanner decisions over {devices} device(s), calibrated:");
+        print_plan_table(&planner);
+        print_crossovers(&planner, "calibrated");
     }
     Ok(())
 }
@@ -358,11 +426,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shard_axis: shard_axis(args)?,
         max_batch_rows: max_batch,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
+        // measure→calibrate→plan cadence in executed batches (0 = static)
+        recalibrate_every: args.get_usize("recalibrate-every", 64)?,
         ..Default::default()
     };
     let bcfg = backend_config(args, max_batch)?;
     let model = Arc::new(model);
-    let (label, svc) = match args.get_or("backend", "auto") {
+    let (label, svc) = match args.get_str("backend", "auto")? {
         "auto" => {
             let (kind, svc) = ShapService::start_planned(model.clone(), bcfg, cfg)?;
             (format!("auto→{}", kind.name()), svc)

@@ -26,6 +26,12 @@ use crate::util::error::Result;
 /// SHAP values over `devices` row shards, each an independent instance
 /// of the planner's best backend for this batch size. Output layout
 /// matches `ShapBackend::contributions`.
+///
+/// Elastic: when the sharded execution fails and names the failed
+/// shards, they are quarantined (row-axis survivors hold the full
+/// model) and the batch is retried once over the survivors — a lost
+/// device degrades throughput instead of failing the call. Errors with
+/// no shard attribution (or with no survivors) propagate unchanged.
 pub fn shap_values_multi(
     model: &Arc<Model>,
     x: &[f32],
@@ -40,8 +46,18 @@ pub fn shap_values_multi(
         artifacts_dir: artifacts_dir.to_path_buf(),
         ..Default::default()
     };
-    let (_plan, b) = backend::build_auto(model, &cfg)?;
-    b.contributions(x, rows)
+    let (_plan, mut b) = backend::build_auto(model, &cfg)?;
+    match b.contributions(x, rows) {
+        Ok(out) => Ok(out),
+        Err(e) => {
+            let failed = b.failed_shards();
+            if failed.is_empty() || b.quarantine(&failed).is_err() {
+                return Err(e);
+            }
+            b.contributions(x, rows)
+                .map_err(|retry| retry.context("retry over surviving shards"))
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,503 @@
+//! Adaptive execution-layer tests: measured cost calibration flips
+//! plans, heterogeneous chunk sizing skews work toward faster shards
+//! without changing output, and the elastic topology paths (mid-stream
+//! shard failure → quarantine → recovery, tree-axis rebuild, service
+//! survival) degrade capacity instead of correctness.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use gputreeshap::backend::shard::weighted_chunks;
+use gputreeshap::backend::{
+    self, calibrate, BackendCaps, BackendConfig, BackendKind, CostEstimate, ModelShape,
+    Observations, Planner, RecursiveBackend, ShapBackend, ShardAxis, ShardedBackend,
+};
+use gputreeshap::bench::zoo;
+use gputreeshap::coordinator::{BackendFactory, ServiceConfig, ShapService};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::util::error::Result;
+use gputreeshap::util::Rng;
+
+// ---------------------------------------------------------------------------
+// calibration: recover known cost lines, flip plans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calibration_recovers_known_cost_lines() {
+    // property: samples synthesized from a known CostEstimate (with ±1%
+    // noise) recover batch_overhead_s and rows_per_s within tolerance,
+    // across magnitudes of both constants
+    let mut rng = Rng::new(2026);
+    for trial in 0..20 {
+        let overhead = 10f64.powf(rng.uniform(-4.0, -2.0));
+        let rate = 10f64.powf(rng.uniform(3.0, 6.0));
+        let mut samples = Vec::new();
+        for _ in 0..25 {
+            for rows in [1usize, 4, 16, 64, 256, 1024] {
+                let exact = overhead + rows as f64 / rate;
+                samples.push((rows as f64, exact * (1.0 + 0.02 * (rng.f64() - 0.5))));
+            }
+        }
+        // a prior wrong by 50× in both directions must not stop the
+        // measurement from dominating at 150 samples
+        let prior = CostEstimate {
+            setup_s: 0.0,
+            batch_overhead_s: overhead * 50.0,
+            rows_per_s: rate / 50.0,
+        };
+        let cal = calibrate::calibrate(&prior, &samples).expect("enough samples to fit");
+        assert!(
+            (cal.batch_overhead_s - overhead).abs() <= 0.25 * overhead + 1e-6,
+            "trial {trial}: overhead {} vs true {overhead}",
+            cal.batch_overhead_s
+        );
+        assert!(
+            (cal.rows_per_s - rate).abs() <= 0.15 * rate,
+            "trial {trial}: rate {} vs true {rate}",
+            cal.rows_per_s
+        );
+    }
+}
+
+#[test]
+fn recalibrate_flips_planner_choice_and_moves_the_crossover() {
+    // the acceptance scenario: measurements contradicting the prior
+    // must change the chosen backend at a fixed batch size
+    let shape = ModelShape {
+        features: 8,
+        groups: 1,
+        trees: 10,
+        leaves: 100,
+        max_depth: 6,
+        avg_path_len: 5.0,
+        max_path_len: 7,
+    };
+    let mut planner = Planner::with_candidates(
+        shape,
+        vec![
+            (
+                BackendKind::Recursive,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+            ),
+            (
+                BackendKind::Host,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.05, rows_per_s: 1e6 },
+            ),
+        ],
+    );
+    let prior_cross = planner
+        .crossover_rows(BackendKind::Recursive, BackendKind::Host)
+        .expect("prior crossover exists");
+    assert_eq!(
+        planner.choose(64).kind,
+        BackendKind::Recursive,
+        "64 rows sit below the a-priori crossover (~{prior_cross})"
+    );
+    // measured: host's batch overhead is actually 100µs, not 50ms
+    let mut obs = Observations::new();
+    for _ in 0..10 {
+        for rows in [1usize, 8, 64, 512] {
+            obs.record_backend("host", rows, 1e-4 + rows as f64 / 1e6);
+        }
+    }
+    assert!(planner.recalibrate(&obs), "the estimate must move");
+    assert_eq!(
+        planner.choose(64).kind,
+        BackendKind::Host,
+        "calibration must flip the 64-row choice"
+    );
+    let cal_cross = planner
+        .crossover_rows(BackendKind::Recursive, BackendKind::Host)
+        .expect("calibrated crossover exists");
+    assert!(
+        cal_cross < prior_cross / 10,
+        "the Fig 4 crossover must move: {prior_cross} → {cal_cross}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// mock backends
+// ---------------------------------------------------------------------------
+
+/// Delegates to an inner backend after a fixed sleep per call — the
+/// "slow device" in a heterogeneous topology.
+struct SlowBackend {
+    inner: Box<dyn ShapBackend>,
+    delay: Duration,
+}
+
+impl ShapBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.inner.caps()
+    }
+
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.inner.num_groups()
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.contributions(x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.interactions(x, rows)
+    }
+}
+
+/// Delegates until `dead` flips, then fails every call — the
+/// "mid-stream device loss" stand-in.
+struct FlakyBackend {
+    inner: Box<dyn ShapBackend>,
+    dead: Arc<AtomicBool>,
+}
+
+impl ShapBackend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.inner.caps()
+    }
+
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.inner.num_groups()
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(gputreeshap::anyhow!("device lost"));
+        }
+        self.inner.contributions(x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(gputreeshap::anyhow!("device lost"));
+        }
+        self.inner.interactions(x, rows)
+    }
+}
+
+type ChunkLog = Arc<Mutex<Vec<(usize, usize)>>>;
+
+fn observe_chunks(sharded: &mut ShardedBackend) -> ChunkLog {
+    let log: ChunkLog = Arc::new(Mutex::new(Vec::new()));
+    let sink = log.clone();
+    sharded.set_shard_observer(Arc::new(move |shard, rows, _dt| {
+        sink.lock().unwrap().push((shard, rows));
+    }));
+    log
+}
+
+fn small_zoo_model() -> (Arc<gputreeshap::gbdt::Model>, gputreeshap::data::Dataset) {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.size == ZooSize::Small)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    (Arc::new(model), data)
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous chunk sizing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_shard_gets_smaller_chunks_after_warmup() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 64.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).contributions(&x, rows).unwrap();
+
+    let fast: Box<dyn ShapBackend> = Box::new(RecursiveBackend::new(model.clone(), 1));
+    let slow: Box<dyn ShapBackend> = Box::new(SlowBackend {
+        inner: Box::new(RecursiveBackend::new(model.clone(), 1)),
+        delay: Duration::from_millis(3),
+    });
+    let mut sharded =
+        ShardedBackend::from_backends(vec![fast, slow], ShardAxis::Rows, model.base_score);
+    let log = observe_chunks(&mut sharded);
+
+    // cold start: no throughput estimates yet → even chunk split
+    assert!(sharded.shard_throughput_estimates().iter().all(Option::is_none));
+    for _ in 0..3 {
+        assert_eq!(sharded.contributions(&x, rows).unwrap(), oracle);
+    }
+    let tput = sharded.shard_throughput_estimates();
+    let fast_rate = tput[0].expect("fast shard measured");
+    let slow_rate = tput[1].expect("slow shard measured");
+    assert!(
+        fast_rate > 2.0 * slow_rate,
+        "warmup must rank the shards: fast {fast_rate} vs slow {slow_rate}"
+    );
+
+    // the weighted split assigns the slow shard a below-even share…
+    let assigned = weighted_chunks(rows, &[fast_rate, slow_rate], 4);
+    let slow_span: usize = assigned[1].iter().map(|c| c.1).sum();
+    assert!(
+        slow_span < rows / 2,
+        "slow shard must be assigned less than the even split: {slow_span}/{rows}"
+    );
+
+    // …and a warmed-up run routes most rows to the fast shard while the
+    // output stays bit-identical to the unsharded oracle
+    log.lock().unwrap().clear();
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), oracle);
+    let chunks = log.lock().unwrap().clone();
+    let slow_rows: usize = chunks.iter().filter(|c| c.0 == 1).map(|c| c.1).sum();
+    let fast_rows: usize = chunks.iter().filter(|c| c.0 == 0).map(|c| c.1).sum();
+    assert_eq!(fast_rows + slow_rows, rows, "every row executed exactly once");
+    assert!(
+        fast_rows > slow_rows,
+        "fast shard must execute the larger share: {fast_rows} vs {slow_rows}"
+    );
+}
+
+#[test]
+fn skewed_throughputs_change_the_chunk_split_but_not_the_output() {
+    // the acceptance scenario: feeding skewed observations changes the
+    // row-axis chunk split while the sharded output stays bit-identical
+    // to the unsharded oracle on every zoo model
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue; // the small grid covers every dataset shape cheaply
+        }
+        let (model, data) = zoo::build(&entry);
+        let m = model.num_features;
+        let rows = 24.min(data.rows);
+        let x = data.features[..rows * m].to_vec();
+        let model = Arc::new(model);
+        let cfg = BackendConfig { threads: 1, rows_hint: rows, ..Default::default() };
+        let oracle = {
+            let mut one = cfg.clone();
+            one.devices = 1;
+            backend::build(&model, BackendKind::Host, &one)
+                .unwrap()
+                .contributions(&x, rows)
+                .unwrap()
+        };
+        let mut sharded =
+            ShardedBackend::build(&model, BackendKind::Host, &cfg, 3, ShardAxis::Rows)
+                .unwrap_or_else(|e| panic!("{}: build: {e:#}", entry.name));
+        let log = observe_chunks(&mut sharded);
+
+        // even (cold-start) split
+        let even = sharded.contributions(&x, rows).unwrap();
+        assert_eq!(even, oracle, "{}: even split must match the oracle", entry.name);
+        let even_max = log.lock().unwrap().iter().map(|c| c.1).max().unwrap_or(0);
+
+        // feed skewed observations: shard 0 measures 50× faster
+        sharded.set_shard_throughputs(&[(0, 5000.0), (1, 100.0), (2, 100.0)]);
+        log.lock().unwrap().clear();
+        let skewed = sharded.contributions(&x, rows).unwrap();
+        assert_eq!(skewed, oracle, "{}: skewed split must match the oracle", entry.name);
+        let skew_max = log.lock().unwrap().iter().map(|c| c.1).max().unwrap_or(0);
+        assert!(
+            skew_max > even_max,
+            "{}: the chunk split must change: max even chunk {even_max}, max skewed {skew_max}",
+            entry.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elastic topology
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killing_a_shard_mid_stream_quarantines_and_recovers() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 32.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).contributions(&x, rows).unwrap();
+
+    let dead = Arc::new(AtomicBool::new(false));
+    let healthy: Box<dyn ShapBackend> = Box::new(RecursiveBackend::new(model.clone(), 1));
+    let flaky: Box<dyn ShapBackend> = Box::new(FlakyBackend {
+        inner: Box::new(RecursiveBackend::new(model.clone(), 1)),
+        dead: dead.clone(),
+    });
+    let mut sharded =
+        ShardedBackend::from_backends(vec![healthy, flaky], ShardAxis::Rows, model.base_score);
+
+    // alive: both shards serve, output matches
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), oracle);
+    assert!(sharded.failed_shards().is_empty());
+
+    // kill shard 1 mid-stream: the next call where it takes a chunk must
+    // fail as a whole — no partial output escapes (a call is either the
+    // full correct result or an error). The healthy shard may steal the
+    // whole queue on a lucky run, so drive until the failure lands.
+    dead.store(true, Ordering::Relaxed);
+    let mut failure = None;
+    for _ in 0..50 {
+        match sharded.contributions(&x, rows) {
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+            Ok(v) => assert_eq!(v, oracle, "a successful call must be complete and correct"),
+        }
+    }
+    let err = failure.expect("the dead shard must eventually take a chunk and fail the call");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("device lost") && msg.contains("shard 1"), "{msg}");
+    assert_eq!(sharded.failed_shards(), vec![1]);
+
+    // quarantine the named shard: the survivor keeps serving correctly
+    let removed = sharded.quarantine(&sharded.failed_shards()).unwrap();
+    assert_eq!(removed, 1);
+    assert_eq!(sharded.shards(), 1);
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), oracle);
+    assert!(sharded.describe().contains("quarantined"), "{}", sharded.describe());
+    assert_eq!(sharded.quarantined_shards(), 1);
+
+    // quarantining the last survivor is refused
+    assert!(sharded.quarantine(&[0]).is_err());
+}
+
+#[test]
+fn tree_axis_quarantine_rebuilds_over_survivors_on_every_zoo_model() {
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue;
+        }
+        let (model, data) = zoo::build(&entry);
+        if model.trees.len() < 3 {
+            continue; // need ≥3 tree shards to quarantine and still have ≥2
+        }
+        let m = model.num_features;
+        let rows = 8.min(data.rows);
+        let x = data.features[..rows * m].to_vec();
+        let model = Arc::new(model);
+        let cfg = BackendConfig { threads: 1, rows_hint: rows, ..Default::default() };
+        let oracle = {
+            let mut one = cfg.clone();
+            one.devices = 1;
+            backend::build(&model, BackendKind::Host, &one)
+                .unwrap()
+                .contributions(&x, rows)
+                .unwrap()
+        };
+        let close = |got: &[f32], what: &str| {
+            assert_eq!(got.len(), oracle.len(), "{what}");
+            for (i, (a, b)) in oracle.iter().zip(got).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                    "{what}: idx {i}: {a} vs {b}"
+                );
+            }
+        };
+        let mut sharded =
+            ShardedBackend::build(&model, BackendKind::Host, &cfg, 3, ShardAxis::Trees)
+                .unwrap_or_else(|e| panic!("{}: build: {e:#}", entry.name));
+        let before = sharded.shards();
+        assert!(before >= 2);
+        close(
+            &sharded.contributions(&x, rows).unwrap(),
+            &format!("{}: full topology", entry.name),
+        );
+        // tree-axis quarantine rebuilds the survivors over a fresh
+        // leaf-balanced split of the *full* ensemble — correctness is
+        // preserved at reduced width
+        let removed = sharded.quarantine(&[0]).unwrap();
+        assert_eq!(removed, 1);
+        assert_eq!(sharded.shards(), before - 1);
+        close(
+            &sharded.contributions(&x, rows).unwrap(),
+            &format!("{}: after quarantine", entry.name),
+        );
+        // hot-add restores the planned width, still correct
+        let added = sharded.hot_add(before).unwrap();
+        assert_eq!(added, 1);
+        assert_eq!(sharded.shards(), before);
+        close(
+            &sharded.contributions(&x, rows).unwrap(),
+            &format!("{}: after hot-add", entry.name),
+        );
+    }
+}
+
+#[test]
+fn service_quarantines_a_failed_shard_and_keeps_serving() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 16.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).contributions(&x, rows).unwrap();
+
+    let dead = Arc::new(AtomicBool::new(false));
+    let factory: Arc<BackendFactory> = {
+        let model = model.clone();
+        let dead = dead.clone();
+        Arc::new(move || {
+            let healthy: Box<dyn ShapBackend> =
+                Box::new(RecursiveBackend::new(model.clone(), 1));
+            let flaky: Box<dyn ShapBackend> = Box::new(FlakyBackend {
+                inner: Box::new(RecursiveBackend::new(model.clone(), 1)),
+                dead: dead.clone(),
+            });
+            Ok(Box::new(ShardedBackend::from_backends(
+                vec![healthy, flaky],
+                ShardAxis::Rows,
+                model.base_score,
+            )) as Box<dyn ShapBackend>)
+        })
+    };
+    let svc = ShapService::start_with_factory(
+        factory,
+        ServiceConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // healthy topology serves correctly
+    assert_eq!(svc.explain(x.clone(), rows).unwrap(), oracle);
+
+    // kill shard 1: requests may fail until the executor quarantines it,
+    // then the service recovers without restarting — and every
+    // successful response is complete and correct (no partial output)
+    dead.store(true, Ordering::Relaxed);
+    let mut saw_error = false;
+    let mut recovered = false;
+    for _ in 0..100 {
+        match svc.explain(x.clone(), rows) {
+            Err(_) => saw_error = true,
+            Ok(v) => {
+                assert_eq!(v, oracle, "a served response must be complete and correct");
+                if saw_error {
+                    recovered = true;
+                    break;
+                }
+            }
+        }
+    }
+    assert!(saw_error, "the dead shard must surface at least one request error");
+    assert!(recovered, "the service must keep serving after quarantine");
+    assert!(
+        svc.metrics.quarantines.load(Ordering::Relaxed) >= 1,
+        "the quarantine must be counted in the metrics"
+    );
+    svc.shutdown();
+}
