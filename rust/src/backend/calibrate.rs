@@ -36,9 +36,16 @@ pub const BLEND_TAU: f64 = 8.0;
 /// Observed `(rows, latency_s)` batch samples, keyed by backend name and
 /// by device-shard index. Filled by `Metrics::observations()`; consumed
 /// by `Planner::recalibrate` and `ShapBackend::set_shard_throughputs`.
+///
+/// Steady-state and first-batch samples are kept on separate lines:
+/// the first batch after a backend (re)build pays warmup/prep that the
+/// per-batch cost model must not absorb into its slope, and conversely
+/// is exactly the signal that calibrates the one-time `setup_s` term.
 #[derive(Clone, Debug, Default)]
 pub struct Observations {
     pub per_backend: BTreeMap<String, Vec<(f64, f64)>>,
+    /// first-batch (prep-inclusive) samples, one per backend (re)build
+    pub per_backend_first: BTreeMap<String, Vec<(f64, f64)>>,
     pub per_shard: BTreeMap<usize, Vec<(f64, f64)>>,
 }
 
@@ -49,6 +56,14 @@ impl Observations {
 
     pub fn record_backend(&mut self, name: &str, rows: usize, latency_s: f64) {
         self.per_backend
+            .entry(name.to_string())
+            .or_default()
+            .push((rows as f64, latency_s));
+    }
+
+    /// Record a first-batch (prep-inclusive) sample for `name`.
+    pub fn record_backend_first(&mut self, name: &str, rows: usize, latency_s: f64) {
+        self.per_backend_first
             .entry(name.to_string())
             .or_default()
             .push((rows as f64, latency_s));
@@ -142,6 +157,109 @@ pub fn calibrate(prior: &CostEstimate, samples: &[(f64, f64)]) -> Option<CostEst
     fit_line(samples).map(|fit| blend(prior, &fit))
 }
 
+/// Calibrate the one-time `setup_s` term from first-batch samples: each
+/// first batch's excess over the steady-state line is an observation of
+/// the prep cost, averaged and blended against the prior's `setup_s`
+/// with the same exponential weight as the line fit. First batches are
+/// rare (one per rebuild), so a single sample already counts — warmup
+/// is observed directly, not inferred from a spread of batch sizes.
+pub fn calibrate_setup(
+    prior: &CostEstimate,
+    steady: &CostEstimate,
+    first: &[(f64, f64)],
+) -> Option<f64> {
+    if first.is_empty() {
+        return None;
+    }
+    let mut excess = 0.0f64;
+    for &(rows, latency) in first {
+        let predicted = steady.batch_overhead_s + rows / steady.rows_per_s.max(1e-12);
+        excess += (latency - predicted).max(0.0);
+    }
+    let fitted = excess / first.len() as f64;
+    let alpha = 1.0 - (-(first.len() as f64) / BLEND_TAU).exp();
+    Some((1.0 - alpha) * prior.setup_s + alpha * fitted)
+}
+
+// ---------------------------------------------------------------------------
+// persistence: calibrated estimates survive process restarts
+// ---------------------------------------------------------------------------
+
+/// File format version for persisted calibration state.
+const CALIBRATION_VERSION: usize = 1;
+
+/// Serialize calibrated estimates (`backend name → cost line + sample
+/// count`) as JSON next to the model artifact, so a restarted service
+/// can plan from measurements immediately (`Planner::seed_calibration`).
+/// The write is tmp+rename, so a crash mid-save can never leave a torn
+/// file where a good one stood (the executor saves while serving).
+pub fn save_calibration(
+    path: &std::path::Path,
+    entries: &[(String, CostEstimate, usize)],
+) -> crate::util::error::Result<()> {
+    use crate::util::Json;
+    let backends = Json::Obj(
+        entries
+            .iter()
+            .map(|(name, est, samples)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("setup_s", Json::from(est.setup_s)),
+                        ("batch_overhead_s", Json::from(est.batch_overhead_s)),
+                        ("rows_per_s", Json::from(est.rows_per_s)),
+                        ("samples", Json::from(*samples)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("version", Json::from(CALIBRATION_VERSION)),
+        ("backends", backends),
+    ]);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, doc.to_string_pretty())
+        .map_err(|e| crate::anyhow!("writing calibration {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| crate::anyhow!("publishing calibration {}: {e}", path.display()))
+}
+
+/// Load persisted calibration state written by [`save_calibration`].
+pub fn load_calibration(
+    path: &std::path::Path,
+) -> crate::util::error::Result<Vec<(String, CostEstimate, usize)>> {
+    use crate::util::error::Context;
+    use crate::util::Json;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::anyhow!("reading calibration {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let version = doc.get("version")?.as_usize()?;
+    if version != CALIBRATION_VERSION {
+        crate::bail!("unsupported calibration version {version}");
+    }
+    let Json::Obj(backends) = doc.get("backends")? else {
+        crate::bail!("calibration 'backends' must be an object");
+    };
+    let mut out = Vec::with_capacity(backends.len());
+    for (name, entry) in backends {
+        let est = CostEstimate {
+            setup_s: entry.get("setup_s")?.as_f64()?,
+            batch_overhead_s: entry.get("batch_overhead_s")?.as_f64()?,
+            rows_per_s: entry.get("rows_per_s")?.as_f64()?,
+        };
+        if !est.setup_s.is_finite()
+            || !est.batch_overhead_s.is_finite()
+            || !est.rows_per_s.is_finite()
+            || est.rows_per_s <= 0.0
+        {
+            crate::bail!("calibration entry '{name}' has non-finite constants");
+        }
+        out.push((name.clone(), est, entry.get("samples")?.as_usize()?));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +329,62 @@ mod tests {
         assert!(many.batch_overhead_s < 2e-4, "{}", many.batch_overhead_s);
         assert!(many.rows_per_s > 0.9e6, "{}", many.rows_per_s);
         assert!(few.rows_per_s < many.rows_per_s);
+    }
+
+    #[test]
+    fn setup_calibration_measures_first_batch_excess() {
+        let prior = CostEstimate { setup_s: 0.5, batch_overhead_s: 1e-3, rows_per_s: 1e5 };
+        let steady = CostEstimate { setup_s: 0.5, batch_overhead_s: 1e-3, rows_per_s: 1e5 };
+        // no first batches → nothing to say
+        assert!(calibrate_setup(&prior, &steady, &[]).is_none());
+        // one first batch 20ms over the steady line: blended toward it
+        let rows = 100.0;
+        let base = steady.batch_overhead_s + rows / steady.rows_per_s;
+        let one = calibrate_setup(&prior, &steady, &[(rows, base + 0.02)]).unwrap();
+        assert!(one < prior.setup_s && one > 0.02, "one sample nudges: {one}");
+        // many consistent first batches: the measurement dominates
+        let many: Vec<(f64, f64)> = (0..32).map(|_| (rows, base + 0.02)).collect();
+        let dominated = calibrate_setup(&prior, &steady, &many).unwrap();
+        assert!((dominated - 0.02).abs() < 0.02, "{dominated}");
+        // first batch *faster* than steady (noise): clamps at zero excess
+        let fast = calibrate_setup(&prior, &steady, &[(rows, base / 2.0); 32]).unwrap();
+        assert!(fast < 0.05, "{fast}");
+    }
+
+    #[test]
+    fn calibration_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("gts_calib_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.calib.json");
+        let entries = vec![
+            (
+                "host".to_string(),
+                CostEstimate { setup_s: 0.01, batch_overhead_s: 2e-5, rows_per_s: 123456.0 },
+                40,
+            ),
+            (
+                "cpu".to_string(),
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 9999.5 },
+                0,
+            ),
+        ];
+        save_calibration(&path, &entries).unwrap();
+        let back = load_calibration(&path).unwrap();
+        assert_eq!(back.len(), entries.len());
+        for (name, est, n) in &entries {
+            let (_, got, gn) =
+                back.iter().find(|(b, _, _)| b == name).expect("entry survives");
+            assert_eq!(gn, n);
+            assert!((got.setup_s - est.setup_s).abs() < 1e-12);
+            assert!((got.batch_overhead_s - est.batch_overhead_s).abs() < 1e-12);
+            assert!((got.rows_per_s - est.rows_per_s).abs() < 1e-6);
+        }
+        // corrupt files are rejected, not half-loaded
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_calibration(&path).is_err());
+        std::fs::write(&path, r#"{"version": 99, "backends": {}}"#).unwrap();
+        assert!(load_calibration(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,29 +1,50 @@
 //! The host-native packed-DP [`ShapBackend`]: the GPU algorithm's
 //! prepare→pack→execute pipeline run on CPU over `PackedGroup` tensors.
 //! Both contributions and interactions flow through the packed
-//! representation (§3.4 inputs; §3.5 per-feature-pair DP) — the setup
-//! cost it reports is the *measured* packing time.
+//! representation (§3.4 inputs; §3.5 per-feature-pair DP).
+//!
+//! Construction goes through the prepared-model cache: the packed
+//! layout is built once per (model, packing algorithm) and shared by
+//! every instance — the setup cost it reports is the *measured* time to
+//! obtain the layout, which collapses to the cache-lookup cost on a
+//! warm rebuild.
 
-use crate::backend::{planner, BackendCaps, BackendConfig, BackendKind, ModelShape, ShapBackend};
+use std::sync::Arc;
+
+use crate::backend::{
+    planner, prepared, BackendCaps, BackendConfig, BackendKind, PreparedModel, ShapBackend,
+};
 use crate::gbdt::Model;
-use crate::shap::{host_kernel, pack_model, PackedModel, Packing};
+use crate::shap::{host_kernel, PackedModel, Packing};
 use crate::util::error::Result;
 use crate::util::time_it;
 
 pub struct HostPackedBackend {
-    pm: PackedModel,
+    pm: Arc<PackedModel>,
+    prep: Arc<PreparedModel>,
     packing: Packing,
     threads: usize,
     caps: BackendCaps,
 }
 
 impl HostPackedBackend {
-    pub fn new(model: &Model, packing: Packing, threads: usize) -> HostPackedBackend {
-        let shape = ModelShape::of(model);
-        let (pm, setup_s) = time_it(|| pack_model(model, packing));
+    pub fn new(model: &Arc<Model>, packing: Packing, threads: usize) -> HostPackedBackend {
+        HostPackedBackend::with_prepared(prepared::prepare(model), packing, threads)
+    }
+
+    /// Construct over an existing prepared-model cache entry (the path
+    /// every `backend::build` takes; `new` is the one-model shorthand).
+    pub fn with_prepared(
+        prep: Arc<PreparedModel>,
+        packing: Packing,
+        threads: usize,
+    ) -> HostPackedBackend {
+        let shape = prep.shape();
+        let (pm, setup_s) = time_it(|| prep.packed(packing));
         let est = planner::estimate(BackendKind::Host, &shape);
         HostPackedBackend {
             pm,
+            prep,
             packing,
             threads,
             caps: BackendCaps {
@@ -36,7 +57,7 @@ impl HostPackedBackend {
     }
 
     /// Construct from a [`BackendConfig`] (factory convenience).
-    pub fn from_config(model: &Model, cfg: &BackendConfig) -> HostPackedBackend {
+    pub fn from_config(model: &Arc<Model>, cfg: &BackendConfig) -> HostPackedBackend {
         HostPackedBackend::new(model, cfg.packing, cfg.threads)
     }
 
@@ -71,13 +92,18 @@ impl ShapBackend for HostPackedBackend {
         Ok(host_kernel::interaction_values(&self.pm, x, rows, self.threads))
     }
 
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prep)
+    }
+
     fn describe(&self) -> String {
         let bins: usize = self.pm.groups.iter().map(|g| g.num_bins).sum();
         format!(
-            "host[packed-dp, {} packing, {} bins, depth {}]",
+            "host[packed-dp, {} packing, {} bins, depth {}, {} dead paths skipped]",
             self.packing.name(),
             bins,
-            self.pm.max_depth
+            self.pm.max_depth,
+            self.prep.dead_paths()
         )
     }
 }

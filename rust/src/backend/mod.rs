@@ -13,6 +13,7 @@
 pub mod calibrate;
 pub mod host;
 pub mod planner;
+pub mod prepared;
 pub mod recursive;
 pub mod shard;
 pub mod sharded;
@@ -29,6 +30,7 @@ use crate::util::error::Result;
 pub use calibrate::Observations;
 pub use host::HostPackedBackend;
 pub use planner::{CostEstimate, ModelShape, Plan, Planner};
+pub use prepared::{prepare, PrepStats, PreparedModel};
 pub use recursive::RecursiveBackend;
 pub use shard::ShardAxis;
 pub use sharded::ShardedBackend;
@@ -106,6 +108,14 @@ pub trait ShapBackend: Send + Sync {
     /// [`ShardedBackend`]. The coordinator feeds the throughputs its
     /// metrics derive from per-shard batch samples.
     fn set_shard_throughputs(&self, _rows_per_s: &[(usize, f64)]) {}
+    /// The prepared-model cache entry this backend executes from, when
+    /// it runs over one ([`ShardedBackend`] surfaces its first shard's;
+    /// mock/test backends have none). Lets callers inspect prep
+    /// build/reuse stats without downcasts.
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        None
+    }
+
     /// Human-readable detail (artifact bucket, packing, …) for logs.
     fn describe(&self) -> String {
         self.name().to_string()
@@ -197,18 +207,22 @@ impl Default for BackendConfig {
     }
 }
 
-/// Build one backend of the given kind over `model`. With
-/// `cfg.devices > 1` the result is a [`ShardedBackend`] over that many
-/// inner instances, on `cfg.shard_axis` (or the planner's pick for
-/// `cfg.rows_hint`-row batches when unset).
+/// Build one backend of the given kind over `model`, through the
+/// prepared-model cache: path extraction, shape statistics and packed
+/// layouts are computed once per model and shared by every build over
+/// the same `Arc<Model>` (repeat builds, row shards, executor
+/// rebuilds). With `cfg.devices > 1` the result is a [`ShardedBackend`]
+/// over that many inner instances, on `cfg.shard_axis` (or the
+/// planner's pick for `cfg.rows_hint`-row batches when unset).
 pub fn build(
     model: &Arc<Model>,
     kind: BackendKind,
     cfg: &BackendConfig,
 ) -> Result<Box<dyn ShapBackend>> {
+    let prep = prepared::prepare(model);
     if cfg.devices > 1 {
         let axis = cfg.shard_axis.unwrap_or_else(|| {
-            Planner::for_model(model)
+            Planner::for_prepared(&prep)
                 .with_devices(cfg.devices)
                 .plan_for(kind, cfg.rows_hint.max(1))
                 .map(|p| p.axis)
@@ -218,13 +232,15 @@ pub fn build(
     }
     match kind {
         BackendKind::Recursive => {
-            Ok(Box::new(RecursiveBackend::new(Arc::clone(model), cfg.threads)))
+            Ok(Box::new(RecursiveBackend::with_prepared(prep, cfg.threads)))
         }
-        BackendKind::Host => Ok(Box::new(HostPackedBackend::new(model, cfg.packing, cfg.threads))),
+        BackendKind::Host => {
+            Ok(Box::new(HostPackedBackend::with_prepared(prep, cfg.packing, cfg.threads)))
+        }
         #[cfg(feature = "xla")]
-        BackendKind::XlaWarp => Ok(Box::new(XlaWarpBackend::new(model, cfg)?)),
+        BackendKind::XlaWarp => Ok(Box::new(XlaWarpBackend::with_prepared(&prep, cfg)?)),
         #[cfg(feature = "xla")]
-        BackendKind::XlaPadded => Ok(Box::new(XlaPaddedBackend::new(model, cfg)?)),
+        BackendKind::XlaPadded => Ok(Box::new(XlaPaddedBackend::with_prepared(&prep, cfg)?)),
         #[cfg(not(feature = "xla"))]
         BackendKind::XlaWarp | BackendKind::XlaPadded => Err(crate::anyhow!(
             "backend '{}' requires building with `--features xla`",
@@ -256,7 +272,8 @@ pub fn build_auto(
     model: &Arc<Model>,
     cfg: &BackendConfig,
 ) -> Result<(Plan, Box<dyn ShapBackend>)> {
-    let planner = Planner::for_model(model).with_devices(cfg.devices.max(1));
+    let prep = prepared::prepare(model);
+    let planner = Planner::for_prepared(&prep).with_devices(cfg.devices.max(1));
     let rows = cfg.rows_hint.clamp(1, 1 << 24);
     // an explicit axis pins the layout for every candidate, and the
     // ranking prices that pinned layout (not each kind's best)

@@ -42,7 +42,13 @@ pub struct ModelShape {
 
 impl ModelShape {
     pub fn of(model: &Model) -> ModelShape {
-        let paths = model_paths(model);
+        ModelShape::from_paths(model, &model_paths(model))
+    }
+
+    /// As [`ModelShape::of`], over already-extracted tagged paths — the
+    /// prepared-model cache derives the shape from its cached extraction
+    /// instead of walking the ensemble again.
+    pub fn from_paths(model: &Model, paths: &[(usize, crate::shap::Path)]) -> ModelShape {
         let total: usize = paths.iter().map(|(_, p)| p.len()).sum();
         let max_path_len = paths.iter().map(|(_, p)| p.len()).max().unwrap_or(1);
         ModelShape {
@@ -122,24 +128,39 @@ pub struct Planner {
     /// the a-priori estimates the candidates started from; calibration
     /// always re-blends against these, never against its own output
     priors: Vec<(BackendKind, CostEstimate)>,
-    /// measured samples behind each candidate's current estimate
-    samples: Vec<(BackendKind, usize)>,
+    /// measured samples behind each candidate's current estimate:
+    /// `(kind, steady-state samples, first-batch samples)`
+    samples: Vec<(BackendKind, usize, usize)>,
     /// device topology: how many shards a plan may spread over
     devices: usize,
+    /// batches the one-time prep cost amortizes over when pricing plans:
+    /// a long-lived service spreads `setup_s` across its whole cadence
+    /// (the default, `INFINITY`, prices prep at zero — pure steady
+    /// state); a one-shot caller sets 1 and pays it in full
+    expected_batches: f64,
 }
 
 impl Planner {
     /// Planner over every backend kind compiled into this binary,
     /// single-device. Chain [`Planner::with_devices`] for a topology.
     pub fn for_model(model: &Model) -> Planner {
-        let shape = ModelShape::of(model);
+        Planner::from_shape(ModelShape::of(model))
+    }
+
+    /// Planner over a prepared model: the shape comes from the cache's
+    /// one-time path extraction instead of a fresh ensemble walk.
+    pub fn for_prepared(prepared: &crate::backend::PreparedModel) -> Planner {
+        Planner::from_shape(prepared.shape())
+    }
+
+    fn from_shape(shape: ModelShape) -> Planner {
         let candidates: Vec<(BackendKind, CostEstimate)> = BackendKind::ALL
             .iter()
             .copied()
             .filter(|k| k.compiled_in())
             .map(|k| (k, estimate(k, &shape)))
             .collect();
-        Planner { shape, priors: candidates.clone(), samples: Vec::new(), candidates, devices: 1 }
+        Planner::with_candidates(shape, candidates)
     }
 
     /// Planner with explicit candidates (tests, measured calibrations).
@@ -147,12 +168,29 @@ impl Planner {
         shape: ModelShape,
         candidates: Vec<(BackendKind, CostEstimate)>,
     ) -> Planner {
-        Planner { shape, priors: candidates.clone(), samples: Vec::new(), candidates, devices: 1 }
+        Planner {
+            shape,
+            priors: candidates.clone(),
+            samples: Vec::new(),
+            candidates,
+            devices: 1,
+            expected_batches: f64::INFINITY,
+        }
     }
 
     /// Set the device topology plans may shard across.
     pub fn with_devices(mut self, devices: usize) -> Planner {
         self.devices = devices.max(1);
+        self
+    }
+
+    /// Amortize each candidate's one-time prep cost (`setup_s`) over
+    /// `batches` expected executions when pricing plans. A serving
+    /// executor passes its recalibration cadence; one-shot callers pass
+    /// 1 so a heavy-setup backend must win by enough to pay for its own
+    /// preparation. The default (no call) prices prep at zero.
+    pub fn with_expected_batches(mut self, batches: usize) -> Planner {
+        self.expected_batches = batches.max(1) as f64;
         self
     }
 
@@ -193,7 +231,11 @@ impl Planner {
                     * 2e-9
             }
         };
-        c.batch_overhead_s + (rows as f64 / eff) / c.rows_per_s + merge
+        // prep amortization: the one-time setup (packing, upload,
+        // compilation — or ~0 on a prepared-model cache hit) spread over
+        // the expected batch count; zero under the default (∞) horizon
+        let prep = c.setup_s / self.expected_batches;
+        c.batch_overhead_s + (rows as f64 / eff) / c.rows_per_s + merge + prep
     }
 
     /// Best shard layout for one backend kind at this batch size, or
@@ -290,33 +332,121 @@ impl Planner {
     /// Re-fit every candidate's cost line from measured batch samples
     /// (keyed by backend *name* — how the metrics record them), blending
     /// against the a-priori estimate so thin evidence nudges rather than
-    /// replaces. Returns `true` when any candidate's estimate moved, so
-    /// callers know a cached plan may be stale. Idempotent for a fixed
+    /// replaces. Steady-state samples fit the two-term per-batch line;
+    /// first-batch (prep-inclusive) samples, kept separate by the
+    /// metrics, re-fit the one-time `setup_s` term against that line —
+    /// so warmup cost never contaminates the steady slope and the
+    /// amortized-prep pricing reflects what prep actually costs here.
+    /// Returns `true` when any candidate's estimate moved, so callers
+    /// know a cached plan may be stale. Idempotent for a fixed
     /// observation set: the blend always starts from the stored prior.
     pub fn recalibrate(&mut self, obs: &Observations) -> bool {
         let mut changed = false;
         for (kind, cost) in &mut self.candidates {
-            let Some(samples) = obs.per_backend.get(kind.name()) else { continue };
+            let steady = obs.per_backend.get(kind.name());
+            let first = obs.per_backend_first.get(kind.name());
+            if steady.is_none() && first.is_none() {
+                continue;
+            }
             let prior = self
                 .priors
                 .iter()
                 .find(|(k, _)| k == kind)
                 .map(|(_, c)| *c)
                 .unwrap_or(*cost);
-            let Some(new) = calibrate::calibrate(&prior, samples) else { continue };
+            let mut new = *cost;
+            let mut n_steady = 0usize;
+            if let Some(samples) = steady {
+                if let Some(cal) = calibrate::calibrate(&prior, samples) {
+                    new = cal;
+                    n_steady = samples.len();
+                }
+            }
+            let mut n_first = 0usize;
+            if let Some(firsts) = first {
+                if let Some(setup) = calibrate::calibrate_setup(&prior, &new, firsts) {
+                    new.setup_s = setup;
+                    n_first = firsts.len();
+                }
+            }
+            if n_steady == 0 && n_first == 0 {
+                continue;
+            }
             let moved = (new.batch_overhead_s - cost.batch_overhead_s).abs()
                 > 1e-12 + 1e-6 * cost.batch_overhead_s.abs()
-                || (new.rows_per_s - cost.rows_per_s).abs() > 1e-6 * cost.rows_per_s.abs();
+                || (new.rows_per_s - cost.rows_per_s).abs() > 1e-6 * cost.rows_per_s.abs()
+                || (new.setup_s - cost.setup_s).abs() > 1e-12 + 1e-6 * cost.setup_s.abs();
             if moved {
                 *cost = new;
                 changed = true;
             }
-            match self.samples.iter_mut().find(|(k, _)| k == kind) {
-                Some(entry) => entry.1 = samples.len(),
-                None => self.samples.push((*kind, samples.len())),
+            match self.samples.iter_mut().find(|(k, _, _)| k == kind) {
+                Some(entry) => {
+                    entry.1 = n_steady;
+                    entry.2 = n_first;
+                }
+                None => self.samples.push((*kind, n_steady, n_first)),
             }
         }
         changed
+    }
+
+    /// Feed a directly measured construction cost (a built backend's
+    /// `caps().setup_cost_s` — which the prepared-model cache drives
+    /// toward zero on rebuilds) into the candidate's estimate.
+    /// Construction time is observed exactly rather than inferred, so
+    /// the measurement replaces the estimate outright. Returns whether
+    /// the estimate moved.
+    pub fn observe_setup(&mut self, kind: BackendKind, setup_s: f64) -> bool {
+        if !setup_s.is_finite() || setup_s < 0.0 {
+            return false;
+        }
+        match self.candidates.iter_mut().find(|(k, _)| *k == kind) {
+            Some((_, c)) => {
+                let moved = (c.setup_s - setup_s).abs() > 1e-12 + 1e-6 * c.setup_s.abs();
+                c.setup_s = setup_s;
+                moved
+            }
+            None => false,
+        }
+    }
+
+    /// Export the current (possibly calibrated) estimates with their
+    /// steady-state sample counts, for persistence next to the model
+    /// artifact (`calibrate::save_calibration`).
+    pub fn calibration_snapshot(&self) -> Vec<(String, CostEstimate, usize)> {
+        self.candidates
+            .iter()
+            .map(|(k, c)| (k.name().to_string(), *c, self.calibration_samples(*k)))
+            .collect()
+    }
+
+    /// Seed candidates from persisted calibration (`name → estimate,
+    /// sample count`): a restarted service plans from its previous
+    /// measurements immediately instead of re-learning from the prior.
+    /// The persisted estimate becomes the new blend *anchor* too —
+    /// otherwise the first in-process recalibration (thin fresh window,
+    /// low blend weight) would snap most of the way back to the shipped
+    /// constants and forget what the previous run learned. Unknown
+    /// names are skipped. Returns how many candidates were seeded.
+    pub fn seed_calibration(&mut self, entries: &[(String, CostEstimate, usize)]) -> usize {
+        let mut applied = 0usize;
+        for (name, est, n) in entries {
+            let Some(kind) = BackendKind::parse(name) else { continue };
+            let Some((_, c)) = self.candidates.iter_mut().find(|(k, _)| *k == kind) else {
+                continue;
+            };
+            *c = *est;
+            if let Some((_, p)) = self.priors.iter_mut().find(|(k, _)| *k == kind) {
+                *p = *est;
+            }
+            match self.samples.iter_mut().find(|(k, _, _)| *k == kind) {
+                Some(entry) => entry.1 = entry.1.max(*n),
+                None => self.samples.push((kind, *n, 0)),
+            }
+            applied += 1;
+        }
+        applied
     }
 
     /// The candidate's *current* estimate (calibrated when observations
@@ -330,10 +460,16 @@ impl Planner {
         self.priors.iter().find(|(k, _)| *k == kind).map(|(_, c)| *c)
     }
 
-    /// Measured samples behind the candidate's current estimate (0 ⇒
-    /// still running on the prior).
+    /// Measured steady-state samples behind the candidate's current
+    /// estimate (0 ⇒ still running on the prior).
     pub fn calibration_samples(&self, kind: BackendKind) -> usize {
-        self.samples.iter().find(|(k, _)| *k == kind).map_or(0, |(_, n)| *n)
+        self.samples.iter().find(|(k, _, _)| *k == kind).map_or(0, |(_, n, _)| *n)
+    }
+
+    /// Measured first-batch (prep-inclusive) samples behind the
+    /// candidate's current `setup_s`.
+    pub fn calibration_first_samples(&self, kind: BackendKind) -> usize {
+        self.samples.iter().find(|(k, _, _)| *k == kind).map_or(0, |(_, _, n)| *n)
     }
 }
 
@@ -467,6 +603,45 @@ mod tests {
         // cpu backend untouched: no samples for it
         let cpu = p.cost(BackendKind::Recursive).unwrap();
         assert_eq!(cpu.rows_per_s, 1e4);
+    }
+
+    #[test]
+    fn seeded_calibration_survives_recalibration() {
+        let mut p = synthetic_planner();
+        let persisted = CostEstimate { setup_s: 0.1, batch_overhead_s: 5e-4, rows_per_s: 1e6 };
+        let applied = p.seed_calibration(&[
+            ("xla".to_string(), persisted, 40),
+            ("bogus".to_string(), persisted, 9),
+        ]);
+        assert_eq!(applied, 1, "unknown names are skipped");
+        assert_eq!(p.calibration_samples(BackendKind::XlaWarp), 40);
+        let cost = p.cost(BackendKind::XlaWarp).unwrap();
+        assert_eq!(cost.rows_per_s, 1e6);
+        assert_eq!(cost.setup_s, 0.1);
+        // a thin fresh window must blend against the seeded anchor, not
+        // the shipped constants: the estimate stays on the measured line
+        // instead of snapping back toward the 0.05s-overhead prior
+        let mut obs = Observations::new();
+        for rows in [1usize, 16, 256, 1024] {
+            obs.record_backend("xla", rows, 5e-4 + rows as f64 / 1e6);
+        }
+        p.recalibrate(&obs);
+        let cal = p.cost(BackendKind::XlaWarp).unwrap();
+        assert!((cal.rows_per_s - 1e6).abs() < 0.2e6, "{}", cal.rows_per_s);
+        assert!(cal.batch_overhead_s < 1e-3, "{}", cal.batch_overhead_s);
+    }
+
+    #[test]
+    fn expected_batches_amortizes_setup_into_plans() {
+        // an accelerator with 0.5s setup cannot win a 2-batch horizon,
+        // but dominates once prep amortizes over many batches
+        let p_short = synthetic_planner().with_expected_batches(2);
+        let p_long = synthetic_planner().with_expected_batches(100_000);
+        let rows = 1000; // above the steady-state crossover (~506)
+        assert_eq!(p_short.choose(rows).kind, BackendKind::Recursive);
+        assert_eq!(p_long.choose(rows).kind, BackendKind::XlaWarp);
+        // the default horizon prices prep at zero (pure steady state)
+        assert_eq!(synthetic_planner().choose(rows).kind, BackendKind::XlaWarp);
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! The Fast-TreeSHAP-style prepared-model cache: every row-independent
+//! preprocessing product — merged root→leaf paths (§3.1–3.2), shape
+//! statistics, φ base values, Fast-TreeSHAP-v1-flavoured per-path
+//! contribution bounds, and the packed / padded device layouts (§3.3–3.4) — is
+//! computed **once per model** and reused across every backend build and
+//! every subsequent batch.
+//!
+//! Before this cache, each backend construction re-extracted paths (the
+//! planner's `ModelShape`, `pack_model` and `expected_values` each
+//! walked the ensemble independently), every row shard of a
+//! `ShardedBackend` re-packed the full model, and every executor rebuild
+//! on the serving recalibration cadence repeated all of it. Now:
+//!
+//! - [`prepare`] returns the process-wide [`PreparedModel`] for an
+//!   `Arc<Model>`, keyed by pointer identity in a registry of weak
+//!   entries — the same model prepared twice is the same cache entry.
+//! - Row-axis shards share one entry (the full model packs once, not
+//!   once per device); tree-axis shards hold one entry per sub-ensemble,
+//!   invalidated naturally when `quarantine`/`hot_add` rebuild the split
+//!   (the old sub-models drop, their entries are reclaimed).
+//! - The serving executor's rebuilds (`recalibrate_every` cadence,
+//!   replans, hot-adds) hit the cache because the service holds the same
+//!   `Arc<Model>` for its whole life — steady-state rebuild cost is the
+//!   cache lookup, not the packing.
+//!
+//! Cached layouts are built **lazily** under a per-entry lock, so
+//! concurrent shard builds requesting the same packing wait for one
+//! build instead of duplicating it. Every cached product is produced by
+//! the same code path as the uncached one (`pack_model` ≡
+//! `pack_model_from_paths` over freshly extracted paths), so φ/Φ from a
+//! cached backend are **bit-identical** to an uncached build — pinned by
+//! `rust/tests/prepared.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::backend::planner::ModelShape;
+use crate::gbdt::Model;
+use crate::shap::{
+    expected_values_from_paths, model_paths, pack_model_from_paths, pad_model_from_paths,
+    PackedModel, PaddedModel, Packing, Path,
+};
+use crate::util::time_it;
+
+/// Counters for one prepared model: how often each cached product was
+/// rebuilt vs reused, and the wall time spent building.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrepStats {
+    /// seconds spent extracting + merging paths (paid once)
+    pub paths_s: f64,
+    /// packed-layout builds (cache misses) and reuses (hits)
+    pub packed_builds: u64,
+    pub packed_hits: u64,
+    /// padded-layout builds and reuses
+    pub padded_builds: u64,
+    pub padded_hits: u64,
+    /// total seconds spent building packed/padded layouts
+    pub layout_s: f64,
+}
+
+impl PrepStats {
+    /// Total one-time preparation seconds accumulated so far.
+    pub fn total_s(&self) -> f64 {
+        self.paths_s + self.layout_s
+    }
+
+    /// Fold another entry's counters into this one (registry totals).
+    pub fn merge(&mut self, other: &PrepStats) {
+        self.paths_s += other.paths_s;
+        self.packed_builds += other.packed_builds;
+        self.packed_hits += other.packed_hits;
+        self.padded_builds += other.padded_builds;
+        self.padded_hits += other.padded_hits;
+        self.layout_s += other.layout_s;
+    }
+}
+
+/// All row-independent preprocessing products of one model, computed
+/// once and shared (`Arc`) by every backend instance built over it.
+pub struct PreparedModel {
+    model: Arc<Model>,
+    /// merged root→leaf paths tagged with output group — the §3.1–3.2
+    /// extraction every representation below derives from
+    paths: Vec<(usize, Path)>,
+    shape: ModelShape,
+    /// φ base values per group (E[f] + base_score)
+    expected: Vec<f64>,
+    /// Fast-TreeSHAP-v1-flavoured per-path contribution bound: every
+    /// EXTEND weight is a probability-weighted Shapley coefficient in
+    /// `[0, 1]` (zero_fractions are cover ratios ≤ 1), so no row can
+    /// draw more than `|leaf value|` from a path. Exactly-zero bounds
+    /// mark dead leaves (leaf value 0), skippable without changing a
+    /// single output bit; anything sharper would break bit-identity
+    /// with the uncached kernel, so the bounds otherwise inform stats
+    /// and cost modelling only.
+    max_weights: Vec<f64>,
+    /// lazily built packed layouts, one per packing algorithm
+    packed: Mutex<BTreeMap<&'static str, Arc<PackedModel>>>,
+    /// lazily built padded layouts, one per element width
+    padded: Mutex<BTreeMap<usize, Arc<PaddedModel>>>,
+    stats: Mutex<PrepStats>,
+}
+
+impl std::fmt::Debug for PreparedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedModel")
+            .field("trees", &self.shape.trees)
+            .field("leaves", &self.shape.leaves)
+            .field("paths", &self.paths.len())
+            .field("stats", &self.stats.lock().unwrap())
+            .finish()
+    }
+}
+
+impl PreparedModel {
+    /// Extract and summarize the model's paths (the eager half of the
+    /// prepare step; layouts build lazily on first request).
+    fn build(model: &Arc<Model>) -> PreparedModel {
+        let (paths, paths_s) = time_it(|| model_paths(model));
+        let shape = ModelShape::from_paths(model, &paths);
+        let expected = expected_values_from_paths(model.base_score, model.num_groups, &paths);
+        let max_weights =
+            paths.iter().map(|(_, p)| f64::from(p.leaf_value()).abs()).collect();
+        PreparedModel {
+            model: Arc::clone(model),
+            paths,
+            shape,
+            expected,
+            max_weights,
+            packed: Mutex::new(BTreeMap::new()),
+            padded: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(PrepStats { paths_s, ..PrepStats::default() }),
+        }
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    /// The merged, group-tagged paths (shared by all layouts).
+    pub fn paths(&self) -> &[(usize, Path)] {
+        &self.paths
+    }
+
+    /// Shape statistics for the planner's cost model — derived from the
+    /// cached paths, not a fresh extraction.
+    pub fn shape(&self) -> ModelShape {
+        self.shape
+    }
+
+    /// φ base values per group (E[f] + base_score).
+    pub fn expected_values(&self) -> &[f64] {
+        &self.expected
+    }
+
+    /// Per-path contribution bounds (see the field docs).
+    pub fn max_weights(&self) -> &[f64] {
+        &self.max_weights
+    }
+
+    /// Paths whose contribution bound is exactly zero — contributing
+    /// nothing to any row, skippable without changing a single bit.
+    pub fn dead_paths(&self) -> usize {
+        self.max_weights.iter().filter(|&&w| w == 0.0).count()
+    }
+
+    /// The packed 32-lane layout under `algorithm`, built on first
+    /// request and shared afterwards. Concurrent first requests for the
+    /// same algorithm serialize on the entry lock, so the layout is
+    /// built exactly once.
+    pub fn packed(&self, algorithm: Packing) -> Arc<PackedModel> {
+        let mut map = self.packed.lock().unwrap();
+        if let Some(pm) = map.get(algorithm.name()) {
+            self.stats.lock().unwrap().packed_hits += 1;
+            return Arc::clone(pm);
+        }
+        let (pm, dt) = time_it(|| {
+            let model = self.model.as_ref();
+            Arc::new(pack_model_from_paths(model, &self.paths, &self.expected, algorithm))
+        });
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.packed_builds += 1;
+            s.layout_s += dt;
+        }
+        map.insert(algorithm.name(), Arc::clone(&pm));
+        pm
+    }
+
+    /// The padded-path layout with element axis `width`, built on first
+    /// request and shared afterwards.
+    pub fn padded(&self, width: usize) -> Arc<PaddedModel> {
+        let mut map = self.padded.lock().unwrap();
+        if let Some(pm) = map.get(&width) {
+            self.stats.lock().unwrap().padded_hits += 1;
+            return Arc::clone(pm);
+        }
+        let (pm, dt) = time_it(|| {
+            let model = self.model.as_ref();
+            Arc::new(pad_model_from_paths(model, &self.paths, &self.expected, width))
+        });
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.padded_builds += 1;
+            s.layout_s += dt;
+        }
+        map.insert(width, Arc::clone(&pm));
+        pm
+    }
+
+    /// This entry's build/reuse counters.
+    pub fn stats(&self) -> PrepStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Registry entry liveness: a `PreparedModel` holds one strong model
+/// reference itself, so an entry is dead once nothing *outside* the
+/// cache keeps the model alive (`strong_count() <= 1`).
+type Registry = Vec<(Weak<Model>, Arc<PreparedModel>)>;
+
+static REGISTRY: Mutex<Registry> = Mutex::new(Vec::new());
+static REGISTRY_HITS: AtomicU64 = AtomicU64::new(0);
+static REGISTRY_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// The prepared-model cache entry for `model`, creating it on first
+/// request. Keyed by `Arc` pointer identity: every caller holding a
+/// clone of the same `Arc<Model>` — row shards, executor rebuilds,
+/// repeated pool calls — shares one entry. Entries are reclaimed once
+/// the model's last external reference drops.
+///
+/// The heavy path extraction runs *outside* the registry lock
+/// (double-checked), so preparing one model never blocks lookups of
+/// another; the rare concurrent first-prepare builds twice and adopts
+/// the winner.
+pub fn prepare(model: &Arc<Model>) -> Arc<PreparedModel> {
+    let key = Arc::as_ptr(model);
+    {
+        let mut reg = REGISTRY.lock().unwrap();
+        reg.retain(|(w, _)| w.strong_count() > 1);
+        if let Some((_, p)) = reg.iter().find(|(w, _)| w.as_ptr() == key) {
+            REGISTRY_HITS.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+    }
+    let built = Arc::new(PreparedModel::build(model));
+    let mut reg = REGISTRY.lock().unwrap();
+    if let Some((_, p)) = reg.iter().find(|(w, _)| w.as_ptr() == key && w.strong_count() > 1) {
+        // someone else prepared the same model while we were building
+        REGISTRY_HITS.fetch_add(1, Ordering::Relaxed);
+        return Arc::clone(p);
+    }
+    REGISTRY_MISSES.fetch_add(1, Ordering::Relaxed);
+    reg.push((Arc::downgrade(model), Arc::clone(&built)));
+    built
+}
+
+/// Live registry entries (models still externally referenced).
+pub fn registry_len() -> usize {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.retain(|(w, _)| w.strong_count() > 1);
+    reg.len()
+}
+
+/// Process-wide cache counters: `(lookup hits, lookup misses)`.
+pub fn registry_counters() -> (u64, u64) {
+    (REGISTRY_HITS.load(Ordering::Relaxed), REGISTRY_MISSES.load(Ordering::Relaxed))
+}
+
+/// Aggregate build/reuse stats over all live registry entries.
+pub fn registry_stats() -> PrepStats {
+    let reg = REGISTRY.lock().unwrap();
+    let mut total = PrepStats::default();
+    for (w, p) in reg.iter() {
+        if w.strong_count() > 1 {
+            total.merge(&p.stats());
+        }
+    }
+    total
+}
+
+/// The registry state as JSON, for service metrics snapshots.
+pub fn registry_snapshot() -> crate::util::Json {
+    use crate::util::Json;
+    let (hits, misses) = registry_counters();
+    let s = registry_stats();
+    Json::obj(vec![
+        ("entries", Json::from(registry_len())),
+        ("lookup_hits", Json::from(hits as usize)),
+        ("lookup_misses", Json::from(misses as usize)),
+        ("packed_builds", Json::from(s.packed_builds as usize)),
+        ("packed_hits", Json::from(s.packed_hits as usize)),
+        ("padded_builds", Json::from(s.padded_builds as usize)),
+        ("padded_hits", Json::from(s.padded_hits as usize)),
+        ("prep_s", Json::from(s.total_s())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn tiny_model() -> Arc<Model> {
+        let d = SynthSpec::cal_housing(0.004).generate();
+        Arc::new(train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() }))
+    }
+
+    #[test]
+    fn prepare_is_identity_cached_per_arc() {
+        let model = tiny_model();
+        let a = prepare(&model);
+        let b = prepare(&model);
+        assert!(Arc::ptr_eq(&a, &b), "same Arc<Model> must share one entry");
+        // a clone of the Arc is the same pointer → same entry
+        let c = prepare(&Arc::clone(&model));
+        assert!(Arc::ptr_eq(&a, &c));
+        // a different model (even if equal in content) is a new entry
+        let other = tiny_model();
+        let d = prepare(&other);
+        assert!(!Arc::ptr_eq(&a, &d));
+    }
+
+    #[test]
+    fn layouts_build_once_and_hit_afterwards() {
+        let model = tiny_model();
+        let prep = prepare(&model);
+        let before = prep.stats();
+        let p1 = prep.packed(Packing::BestFitDecreasing);
+        let p2 = prep.packed(Packing::BestFitDecreasing);
+        assert!(Arc::ptr_eq(&p1, &p2), "same packing must share the layout");
+        let after = prep.stats();
+        assert_eq!(after.packed_builds, before.packed_builds + 1);
+        assert!(after.packed_hits >= before.packed_hits + 1);
+        // a different algorithm is a separate build
+        let p3 = prep.packed(Packing::None);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        // padded layouts key on width
+        let w = prep.shape().max_path_len.max(2);
+        let q1 = prep.padded(w);
+        let q2 = prep.padded(w);
+        assert!(Arc::ptr_eq(&q1, &q2));
+        assert!(!Arc::ptr_eq(&q1, &prep.padded(w + 3)));
+    }
+
+    #[test]
+    fn cached_products_match_uncached_builders_exactly() {
+        let model = tiny_model();
+        let prep = prepare(&model);
+        // shape identical to a fresh extraction
+        let fresh = ModelShape::of(&model);
+        let cached = prep.shape();
+        assert_eq!(cached.leaves, fresh.leaves);
+        assert_eq!(cached.max_path_len, fresh.max_path_len);
+        assert_eq!(cached.avg_path_len, fresh.avg_path_len);
+        // packed layout identical to pack_model
+        let a = prep.packed(Packing::BestFitDecreasing);
+        let b = crate::shap::pack_model(&model, Packing::BestFitDecreasing);
+        assert_eq!(a.expected_values, b.expected_values);
+        assert_eq!(a.max_depth, b.max_depth);
+        for (ga, gb) in a.groups.iter().zip(&b.groups) {
+            assert_eq!(ga.fidx, gb.fidx);
+            assert_eq!(ga.v, gb.v);
+            assert_eq!(ga.zfrac, gb.zfrac);
+        }
+        // contribution bounds: one per path, all finite and ≥ 0
+        assert_eq!(prep.max_weights().len(), prep.paths().len());
+        assert!(prep.max_weights().iter().all(|w| w.is_finite() && *w >= 0.0));
+        assert!(prep.dead_paths() <= prep.paths().len());
+    }
+
+    #[test]
+    fn registry_reclaims_dropped_models() {
+        let model = tiny_model();
+        let prep = prepare(&model);
+        let weak = Arc::downgrade(&prep);
+        drop(prep);
+        drop(model);
+        // pruning happens on the next registry access: with the model's
+        // last external reference gone, the cache drops its entry (and
+        // with it the last strong PreparedModel reference)
+        let _ = registry_len();
+        assert_eq!(weak.strong_count(), 0, "entry must be reclaimed");
+    }
+}

@@ -2,26 +2,38 @@
 //! zero batch overhead, per-row cost quadratic in path depth. The
 //! planner's pick for small, latency-sensitive batches, and the parity
 //! oracle every other backend is checked against.
+//!
+//! Even this "no-prep" backend goes through the prepared-model cache:
+//! its cost metadata needs the model's shape statistics, whose path
+//! extraction is the same walk the packed layouts start from — cached,
+//! it is paid once per model instead of once per construction.
 
 use std::sync::Arc;
 
-use crate::backend::{planner, BackendCaps, BackendKind, ModelShape, ShapBackend};
+use crate::backend::{planner, prepared, BackendCaps, BackendKind, PreparedModel, ShapBackend};
 use crate::gbdt::Model;
 use crate::shap::{interactions, treeshap};
 use crate::util::error::Result;
 
 pub struct RecursiveBackend {
     model: Arc<Model>,
+    prep: Arc<PreparedModel>,
     threads: usize,
     caps: BackendCaps,
 }
 
 impl RecursiveBackend {
     pub fn new(model: Arc<Model>, threads: usize) -> RecursiveBackend {
-        let shape = ModelShape::of(&model);
+        RecursiveBackend::with_prepared(prepared::prepare(&model), threads)
+    }
+
+    /// Construct over an existing prepared-model cache entry.
+    pub fn with_prepared(prep: Arc<PreparedModel>, threads: usize) -> RecursiveBackend {
+        let shape = prep.shape();
         let est = planner::estimate(BackendKind::Recursive, &shape);
         RecursiveBackend {
-            model,
+            model: Arc::clone(prep.model()),
+            prep,
             threads,
             caps: BackendCaps {
                 supports_interactions: true,
@@ -66,6 +78,10 @@ impl ShapBackend for RecursiveBackend {
             out.extend(self.model.predict_row_raw(&x[r * m..(r + 1) * m]));
         }
         Ok(out)
+    }
+
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prep)
     }
 
     fn describe(&self) -> String {

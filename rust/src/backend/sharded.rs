@@ -104,6 +104,15 @@ impl ShardedBackend {
             inner_cfg.rows_hint = (cfg.rows_hint.max(1) + per_chunk - 1) / per_chunk;
         }
         // one (sub-)model per shard; Rows shards all hold the full model
+        // and therefore share ONE prepared-model cache entry — warm it
+        // here so the N concurrent inner builds below all hit (the model
+        // packs once, not once per device). Tree shards hold disjoint
+        // sub-ensembles with their own entries, built per shard and
+        // invalidated naturally when quarantine/hot-add re-split the
+        // ensemble (the old sub-models drop, their entries with them).
+        if let ShardAxis::Rows = axis {
+            backend::prepare(model);
+        }
         let sub_models: Vec<Arc<Model>> = match axis {
             ShardAxis::Rows => (0..shards).map(|_| Arc::clone(model)).collect(),
             ShardAxis::Trees => split_trees(model, shards).into_iter().map(Arc::new).collect(),
@@ -604,6 +613,13 @@ impl ShapBackend for ShardedBackend {
 
     fn hot_add(&mut self, target: usize) -> Result<usize> {
         self.grow_to(target)
+    }
+
+    fn prepared(&self) -> Option<&Arc<crate::backend::PreparedModel>> {
+        // rows axis: every shard shares one entry, so the first speaks
+        // for all; trees axis: the first sub-ensemble's entry (stats
+        // inspection — per-shard entries stay reachable via the shards)
+        self.inner[0].prepared()
     }
 
     fn set_shard_throughputs(&self, rows_per_s: &[(usize, f64)]) {

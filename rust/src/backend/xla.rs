@@ -5,18 +5,22 @@
 //! the reported setup cost is measured, so the planner's a-priori
 //! estimate can be compared against reality.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::backend::{planner, BackendCaps, BackendConfig, BackendKind, ModelShape, ShapBackend};
+use crate::backend::{
+    planner, prepared, BackendCaps, BackendConfig, BackendKind, PreparedModel, ShapBackend,
+};
 use crate::gbdt::Model;
 use crate::runtime::engine::{Prepared, PreparedPadded, ShapEngine};
 use crate::runtime::manifest::ArtifactKind;
-use crate::shap::{pack_model, pad_model, PackedModel, PaddedModel};
+use crate::shap::{PackedModel, PaddedModel};
 use crate::util::error::Result;
 
 /// Warp-packed layout: 32-lane bins, the paper's §3.3 representation.
 pub struct XlaWarpBackend {
-    pm: PackedModel,
+    pm: Arc<PackedModel>,
+    prepared_model: Arc<PreparedModel>,
     engine: ShapEngine,
     prep: Prepared,
     prep_int: Option<Prepared>,
@@ -27,10 +31,20 @@ pub struct XlaWarpBackend {
 }
 
 impl XlaWarpBackend {
-    pub fn new(model: &Model, cfg: &BackendConfig) -> Result<XlaWarpBackend> {
-        let shape = ModelShape::of(model);
+    pub fn new(model: &Arc<Model>, cfg: &BackendConfig) -> Result<XlaWarpBackend> {
+        XlaWarpBackend::with_prepared(&prepared::prepare(model), cfg)
+    }
+
+    /// Construct over an existing prepared-model cache entry: the
+    /// packed host tensors come from the cache; only the device work
+    /// (artifact selection, upload, compilation) is per-instance.
+    pub fn with_prepared(
+        prep_model: &Arc<PreparedModel>,
+        cfg: &BackendConfig,
+    ) -> Result<XlaWarpBackend> {
+        let shape = prep_model.shape();
         let t0 = Instant::now();
-        let pm = pack_model(model, cfg.packing);
+        let pm = prep_model.packed(cfg.packing);
         let mut engine = ShapEngine::new(&cfg.artifacts_dir)?;
         let prep = engine.prepare(&pm, ArtifactKind::Shap, cfg.rows_hint)?;
         // a missing/broken interactions artifact must not take the
@@ -56,7 +70,16 @@ impl XlaWarpBackend {
             batch_overhead_s: est.batch_overhead_s,
             rows_per_s: est.rows_per_s,
         };
-        Ok(XlaWarpBackend { pm, engine, prep, prep_int, int_err, prep_pred, caps })
+        Ok(XlaWarpBackend {
+            pm,
+            prepared_model: Arc::clone(prep_model),
+            engine,
+            prep,
+            prep_int,
+            int_err,
+            prep_pred,
+            caps,
+        })
     }
 
     /// The artifact bucket serving contributions.
@@ -105,6 +128,10 @@ impl ShapBackend for XlaWarpBackend {
         }
     }
 
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prepared_model)
+    }
+
     fn describe(&self) -> String {
         format!("xla[warp, artifact {}]", self.prep.artifact)
     }
@@ -113,20 +140,31 @@ impl ShapBackend for XlaWarpBackend {
 /// Padded-path layout: one row per path, element axis padded to the
 /// artifact depth bucket (gather-free DP, the optimized default).
 pub struct XlaPaddedBackend {
-    pm: PaddedModel,
+    pm: Arc<PaddedModel>,
+    prepared_model: Arc<PreparedModel>,
     engine: ShapEngine,
     prep: PreparedPadded,
     /// interactions may need a different element width — own model+prep
-    pad_int: Option<(PaddedModel, PreparedPadded)>,
+    pad_int: Option<(Arc<PaddedModel>, PreparedPadded)>,
     /// why the interactions pipeline is unavailable, when it is
     int_err: Option<String>,
     caps: BackendCaps,
 }
 
 impl XlaPaddedBackend {
-    pub fn new(model: &Model, cfg: &BackendConfig) -> Result<XlaPaddedBackend> {
-        let shape = ModelShape::of(model);
-        let m = model.num_features;
+    pub fn new(model: &Arc<Model>, cfg: &BackendConfig) -> Result<XlaPaddedBackend> {
+        XlaPaddedBackend::with_prepared(&prepared::prepare(model), cfg)
+    }
+
+    /// Construct over an existing prepared-model cache entry: padded
+    /// host tensors (keyed by element width) come from the cache; only
+    /// the device work is per-instance.
+    pub fn with_prepared(
+        prep_model: &Arc<PreparedModel>,
+        cfg: &BackendConfig,
+    ) -> Result<XlaPaddedBackend> {
+        let shape = prep_model.shape();
+        let m = shape.features;
         let depth = shape.max_path_len.saturating_sub(1).max(1);
         let t0 = Instant::now();
         let mut engine = ShapEngine::new(&cfg.artifacts_dir)?;
@@ -135,7 +173,7 @@ impl XlaPaddedBackend {
             .select(ArtifactKind::ShapPadded, m, depth, cfg.rows_hint)?
             .depth
             + 1;
-        let pm = pad_model(model, width);
+        let pm = prep_model.padded(width);
         let prep = engine.prepare_padded(&pm, cfg.rows_hint)?;
         // a missing/broken interactions artifact must not take the
         // contributions path down with it: degrade to
@@ -147,7 +185,7 @@ impl XlaPaddedBackend {
                 .map(|s| s.depth + 1);
             match picked {
                 Ok(w) => {
-                    let pmi = pad_model(model, w);
+                    let pmi = prep_model.padded(w);
                     match engine.prepare_padded_kind(
                         &pmi,
                         ArtifactKind::InteractionsPadded,
@@ -169,7 +207,15 @@ impl XlaPaddedBackend {
             batch_overhead_s: est.batch_overhead_s,
             rows_per_s: est.rows_per_s,
         };
-        Ok(XlaPaddedBackend { pm, engine, prep, pad_int, int_err, caps })
+        Ok(XlaPaddedBackend {
+            pm,
+            prepared_model: Arc::clone(prep_model),
+            engine,
+            prep,
+            pad_int,
+            int_err,
+            caps,
+        })
     }
 
     /// The artifact bucket serving contributions.
@@ -207,6 +253,10 @@ impl ShapBackend for XlaPaddedBackend {
                 self.int_err.as_deref().unwrap_or("no interactions artifact")
             )),
         }
+    }
+
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prepared_model)
     }
 
     fn describe(&self) -> String {

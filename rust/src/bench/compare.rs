@@ -1,0 +1,166 @@
+//! Benchmark report comparison — the decision logic behind CI's
+//! perf-tracking job. Two JSON reports (as written by
+//! [`super::write_json_report`]) are walked in parallel; every shared
+//! **throughput** metric (a numeric leaf whose key contains
+//! `rows_per_s`, higher is better) is compared, and a metric counts as
+//! a regression when the current value falls more than `tolerance`
+//! below the baseline.
+//!
+//! Only throughput leaves are compared: absolute latencies vary with
+//! machine load far more than sustained rows/s, and throughput is the
+//! quantity the prepared-model cache is supposed to protect. Metrics
+//! present on one side only are ignored (benches evolve; the baseline
+//! refresh on main catches the report shape up).
+
+use crate::util::Json;
+
+/// One metric whose current value regressed past the tolerance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Regression {
+    /// dotted path to the metric inside the report
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl Regression {
+    /// Fractional drop vs the baseline (0.25 = 25% slower).
+    pub fn drop_fraction(&self) -> f64 {
+        if self.baseline <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.current / self.baseline
+    }
+}
+
+/// Outcome of a report comparison.
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    /// throughput metrics present in both reports
+    pub compared: usize,
+    pub regressions: Vec<Regression>,
+}
+
+impl Comparison {
+    pub fn is_pass(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` with the given fractional
+/// `tolerance` (0.2 ⇒ fail on >20% throughput drop).
+pub fn compare_reports(baseline: &Json, current: &Json, tolerance: f64) -> Comparison {
+    let mut out = Comparison::default();
+    walk(baseline, current, "", tolerance, &mut out);
+    out.regressions.sort_by(|a, b| b.drop_fraction().total_cmp(&a.drop_fraction()));
+    out
+}
+
+fn is_throughput_key(path: &str) -> bool {
+    // a `rows_per_s` anywhere on the path marks the subtree as
+    // throughput (covers both `accel_rows_per_s` leaves and
+    // `steady_rows_per_s: {cpu, accel}` groupings)
+    path.contains("rows_per_s")
+}
+
+fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Comparison) {
+    match (base, cur) {
+        (Json::Obj(b), Json::Obj(c)) => {
+            for (k, bv) in b {
+                if let Some(cv) = c.get(k) {
+                    let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    walk(bv, cv, &sub, tolerance, out);
+                }
+            }
+        }
+        (Json::Arr(b), Json::Arr(c)) => {
+            // compare by index up to the shorter side; reports written
+            // at different sweep lengths overlap on their common prefix
+            for (i, (bv, cv)) in b.iter().zip(c).enumerate() {
+                walk(bv, cv, &format!("{path}[{i}]"), tolerance, out);
+            }
+        }
+        (Json::Num(b), Json::Num(c)) if is_throughput_key(path) => {
+            if b.is_finite() && c.is_finite() && *b > 0.0 {
+                out.compared += 1;
+                if *c < *b * (1.0 - tolerance) {
+                    out.regressions.push(Regression {
+                        metric: path.to_string(),
+                        baseline: *b,
+                        current: *c,
+                    });
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cpu: f64, accel: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"fig4": {{
+                "steady_rows_per_s": {{"cpu": {cpu}, "accel": {accel}}},
+                "prep": {{"accel_s": 0.01}},
+                "steady": [{{"rows": 16, "cpu_s": 0.001, "accel_rows_per_s": {accel}}}]
+            }}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn equal_reports_pass_and_count_metrics() {
+        let a = report(1000.0, 5000.0);
+        let cmp = compare_reports(&a, &a, 0.2);
+        assert!(cmp.is_pass());
+        // cpu + accel under steady_rows_per_s, plus the array entry
+        assert_eq!(cmp.compared, 3);
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = report(1000.0, 5000.0);
+        // accel throughput drops 40%, cpu improves
+        let cur = report(1200.0, 3000.0);
+        let cmp = compare_reports(&base, &cur, 0.2);
+        assert!(!cmp.is_pass());
+        assert_eq!(cmp.regressions.len(), 2, "both accel leaves regressed");
+        assert!(cmp.regressions[0].metric.contains("accel"));
+        assert!((cmp.regressions[0].drop_fraction() - 0.4).abs() < 1e-9);
+        // a 19% drop stays within the 20% tolerance
+        let cur = report(1000.0, 4050.0);
+        assert!(compare_reports(&base, &cur, 0.2).is_pass());
+    }
+
+    #[test]
+    fn disjoint_or_non_throughput_metrics_are_ignored() {
+        let base = Json::parse(r#"{"fig5": {"best_rows_per_s": 100.0, "time_s": 9.0}}"#).unwrap();
+        // different shape entirely: nothing shared → pass, 0 compared
+        let cur = Json::parse(r#"{"fig4": {"steady_rows_per_s": {"cpu": 1.0}}}"#).unwrap();
+        let cmp = compare_reports(&base, &cur, 0.2);
+        assert!(cmp.is_pass());
+        assert_eq!(cmp.compared, 0);
+        // latency-like keys never compare, even when they worsen
+        let slow = Json::parse(r#"{"fig5": {"best_rows_per_s": 100.0, "time_s": 90.0}}"#).unwrap();
+        let base2 = Json::parse(r#"{"fig5": {"best_rows_per_s": 100.0, "time_s": 9.0}}"#).unwrap();
+        let cmp = compare_reports(&base2, &slow, 0.2);
+        assert_eq!(cmp.compared, 1, "only the throughput leaf compares");
+        assert!(cmp.is_pass());
+    }
+
+    #[test]
+    fn arrays_compare_on_common_prefix() {
+        let base = Json::parse(
+            r#"{"s": [{"rows_per_s": 100.0}, {"rows_per_s": 200.0}, {"rows_per_s": 300.0}]}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(r#"{"s": [{"rows_per_s": 100.0}, {"rows_per_s": 50.0}]}"#).unwrap();
+        let cmp = compare_reports(&base, &cur, 0.2);
+        assert_eq!(cmp.compared, 2, "third entry has no counterpart");
+        assert_eq!(cmp.regressions.len(), 1);
+        assert_eq!(cmp.regressions[0].metric, "s[1].rows_per_s");
+    }
+}

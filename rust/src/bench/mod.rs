@@ -1,7 +1,11 @@
 //! Benchmark harness substrate (no `criterion` offline): warmup + timed
 //! iterations with summary stats, aligned table printing matching the
-//! paper's table layouts, and JSON dumps for EXPERIMENTS.md.
+//! paper's table layouts, JSON dumps for EXPERIMENTS.md, and the
+//! machine-readable report + comparison machinery behind CI's
+//! perf-tracking job (`--json` on fig4/fig5, `bench-compare` in the
+//! CLI).
 
+pub mod compare;
 pub mod zoo;
 
 use crate::util::{Json, Stats};
@@ -74,6 +78,29 @@ pub fn dump_record(bench_name: &str, fields: Vec<(&str, Json)>) {
     {
         let _ = f.write_all(line.as_bytes());
     }
+}
+
+/// Merge `value` under `key` into the JSON report object at `path`,
+/// creating the file when absent. Several benches write into one report
+/// (fig4 + fig5 → `BENCH_pr.json` in CI), each under its own key; an
+/// unparseable existing file is replaced rather than appended to.
+pub fn write_json_report(
+    path: &std::path::Path,
+    key: &str,
+    value: Json,
+) -> crate::util::error::Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text).unwrap_or(Json::Obj(Default::default())),
+        Err(_) => Json::Obj(Default::default()),
+    };
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Default::default());
+    }
+    if let Json::Obj(map) = &mut root {
+        map.insert(key.to_string(), value);
+    }
+    std::fs::write(path, root.to_string_pretty())
+        .map_err(|e| crate::anyhow!("writing report {}: {e}", path.display()))
 }
 
 /// Format seconds with sensible precision.

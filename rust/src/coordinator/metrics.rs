@@ -51,27 +51,64 @@ impl<T: Copy> Ring<T> {
 }
 
 /// Per-backend execution tallies (batch-granular).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct BackendCounters {
     pub rows: u64,
     pub batches: u64,
-    /// windowed per-batch `(rows, latency_s)` samples — the latency
-    /// percentiles and the calibration fits both read from this
+    /// windowed steady-state `(rows, latency_s)` samples — the latency
+    /// percentiles and the per-batch calibration fits read from this
     samples: Ring<(f64, f64)>,
+    /// first-batch (prep-inclusive) samples, one per (re)build — kept
+    /// off the steady window so warmup never contaminates the fitted
+    /// per-batch slope, and exported separately to calibrate `setup_s`
+    first: Ring<(f64, f64)>,
+    /// the next recorded batch is the first since the last (re)build
+    awaiting_first: bool,
+}
+
+impl Default for BackendCounters {
+    fn default() -> BackendCounters {
+        BackendCounters {
+            rows: 0,
+            batches: 0,
+            samples: Ring::default(),
+            first: Ring::default(),
+            awaiting_first: true,
+        }
+    }
 }
 
 impl BackendCounters {
+    /// Record straight onto the steady window — shard chunks use this:
+    /// their prep is paid at backend build, so every chunk is steady
+    /// state and must feed throughput seeding from the first one.
     fn push_sample(&mut self, rows: usize, latency_s: f64) {
         self.samples.push((rows as f64, latency_s));
     }
 
-    /// The windowed `(rows, latency_s)` batch samples, oldest-first
-    /// order not guaranteed once the window wraps.
+    /// Record a whole-backend batch, routing the first one since the
+    /// last (re)build onto the first-batch (prep-inclusive) line.
+    fn push_batch_sample(&mut self, rows: usize, latency_s: f64) {
+        if self.awaiting_first {
+            self.awaiting_first = false;
+            self.first.push((rows as f64, latency_s));
+        } else {
+            self.push_sample(rows, latency_s);
+        }
+    }
+
+    /// The windowed steady-state `(rows, latency_s)` batch samples,
+    /// oldest-first order not guaranteed once the window wraps.
     pub fn samples(&self) -> &[(f64, f64)] {
         self.samples.as_slice()
     }
 
-    /// The windowed per-batch latencies, seconds.
+    /// The windowed first-batch (prep-inclusive) samples.
+    pub fn first_batch_samples(&self) -> &[(f64, f64)] {
+        self.first.as_slice()
+    }
+
+    /// The windowed steady-state per-batch latencies, seconds.
     pub fn latencies(&self) -> Vec<f64> {
         self.samples.as_slice().iter().map(|s| s.1).collect()
     }
@@ -143,7 +180,7 @@ impl Metrics {
         let c = map.entry(backend.to_string()).or_default();
         c.rows += rows as u64;
         c.batches += 1;
-        c.push_sample(rows, d.as_secs_f64());
+        c.push_batch_sample(rows, d.as_secs_f64());
     }
 
     /// One executed chunk on device shard `shard` (sharded-backend
@@ -193,6 +230,9 @@ impl Metrics {
     pub fn reset_backend_samples(&self) {
         for c in self.per_backend.lock().unwrap().values_mut() {
             c.samples = Ring::default();
+            // the next batch runs on a freshly (re)built backend: it is
+            // a first batch again (prep-inclusive, off the steady line)
+            c.awaiting_first = true;
         }
     }
 
@@ -203,6 +243,10 @@ impl Metrics {
         let mut obs = Observations::new();
         for (name, c) in self.per_backend.lock().unwrap().iter() {
             obs.per_backend.insert(name.clone(), c.samples().to_vec());
+            let firsts = c.first_batch_samples();
+            if !firsts.is_empty() {
+                obs.per_backend_first.insert(name.clone(), firsts.to_vec());
+            }
         }
         for (&shard, c) in self.per_shard.lock().unwrap().iter() {
             obs.per_shard.insert(shard, c.samples().to_vec());
@@ -360,46 +404,68 @@ mod tests {
         assert_eq!(counters["host"].rows, 48);
         assert_eq!(counters["host"].batches, 2);
         assert_eq!(counters["xla"].rows, 256);
-        // the latency window is bounded
+        // each backend's first batch lands on the first-batch line, the
+        // rest on the steady window
+        assert_eq!(counters["host"].first_batch_samples(), &[(32.0, 0.004)]);
+        assert_eq!(counters["host"].samples(), &[(16.0, 0.008)]);
+        assert_eq!(counters["xla"].first_batch_samples().len(), 1);
+        assert!(counters["xla"].samples().is_empty());
+        // the steady latency window is bounded
         for _ in 0..(SAMPLE_WINDOW + 100) {
             m.record_backend_batch("host", 1, Duration::from_micros(5));
         }
         assert_eq!(m.backend_counters()["host"].latencies().len(), SAMPLE_WINDOW);
         let snap = m.snapshot();
         let be = snap.get("backends").unwrap();
-        assert_eq!(be.get("host").unwrap().get("rows").unwrap().as_usize().unwrap(), 48);
+        let total_rows = 48 + SAMPLE_WINDOW + 100;
+        assert_eq!(be.get("host").unwrap().get("rows").unwrap().as_usize().unwrap(), total_rows);
         assert_eq!(be.get("xla").unwrap().get("batches").unwrap().as_usize().unwrap(), 1);
+        // the flooded steady window holds only 5µs samples: the 4ms
+        // first batch lives on the first-batch line, and the 8ms steady
+        // sample was overwritten by the ring wrap — p99 must reflect
+        // the window, not the excluded/expired outliers
         let p99 = be.get("host").unwrap().get("batch_p99_s").unwrap().as_f64().unwrap();
-        assert!(p99 >= 0.004);
+        assert!(p99 >= 4e-6 && p99 < 0.004, "{p99}");
     }
 
     #[test]
     fn topology_resets_drop_windows_but_keep_tallies() {
         let m = Metrics::new();
-        m.record_backend_batch("host", 32, Duration::from_millis(4));
+        m.record_backend_batch("host", 32, Duration::from_millis(4)); // first batch
+        m.record_backend_batch("host", 16, Duration::from_millis(2)); // steady
         m.record_shard_batch(0, 16, Duration::from_millis(2));
         m.reset_shard_window();
         m.reset_backend_samples();
         assert!(m.shard_counters().is_empty(), "shard counters drop entirely");
         let host = &m.backend_counters()["host"];
         assert!(host.samples().is_empty(), "backend sample window drops");
-        assert_eq!(host.rows, 32, "cumulative tallies survive");
-        assert_eq!(host.batches, 1);
+        assert_eq!(host.rows, 48, "cumulative tallies survive");
+        assert_eq!(host.batches, 2);
         assert!(m.observations().per_backend["host"].is_empty());
+        // the reset marks the next batch as a first batch again — a
+        // rebuilt backend's warmup goes back onto the first-batch line
+        m.record_backend_batch("host", 8, Duration::from_millis(6));
+        let host = &m.backend_counters()["host"];
+        assert!(host.samples().is_empty(), "post-reset batch is a first batch");
+        assert_eq!(host.first_batch_samples().len(), 2, "first-batch window is retained");
     }
 
     #[test]
     fn observations_export_paired_samples() {
         let m = Metrics::new();
-        m.record_backend_batch("host", 64, Duration::from_millis(8));
+        m.record_backend_batch("host", 64, Duration::from_millis(8)); // first batch
         m.record_backend_batch("host", 128, Duration::from_millis(16));
+        m.record_backend_batch("host", 32, Duration::from_millis(4));
         m.record_shard_batch(1, 32, Duration::from_millis(4));
         let obs = m.observations();
+        // steady and first-batch samples export on separate lines
         let host = &obs.per_backend["host"];
         assert_eq!(host.len(), 2);
-        assert_eq!(host[0].0, 64.0);
-        assert!((host[0].1 - 0.008).abs() < 1e-9);
-        assert_eq!(host[1].0, 128.0);
+        assert_eq!(host[0].0, 128.0);
+        assert!((host[0].1 - 0.016).abs() < 1e-9);
+        assert_eq!(host[1].0, 32.0);
+        let first = &obs.per_backend_first["host"];
+        assert_eq!(first.as_slice(), &[(64.0, 0.008)]);
         let shard = &obs.per_shard[&1];
         assert_eq!(shard.len(), 1);
         assert_eq!(shard[0].0, 32.0);

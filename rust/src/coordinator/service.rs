@@ -97,6 +97,11 @@ pub struct ServiceConfig {
     /// (recalibrate planner, seed shard throughputs, rebuild on plan
     /// change, hot-add quarantined shards); 0 disables adaptation
     pub recalibrate_every: usize,
+    /// persist calibrated cost estimates here (typically next to the
+    /// model artifact): loaded at startup so a restarted service plans
+    /// from measurements immediately, saved whenever recalibration
+    /// moves an estimate and again at shutdown; `None` disables
+    pub calibration_path: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +113,7 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
             recalibrate_every: 64,
+            calibration_path: None,
         }
     }
 }
@@ -147,6 +153,8 @@ struct AdaptiveCtx {
     plan_rows: usize,
     /// recalibration cadence in executed batches (0 = static)
     every: usize,
+    /// where calibrated estimates persist across restarts (None = off)
+    calibration_path: Option<std::path::PathBuf>,
 }
 
 /// Handle to a running SHAP service.
@@ -297,6 +305,7 @@ impl ShapService {
             devices: cfg.devices.max(1),
             plan_rows: cfg.max_batch_rows.clamp(1, 1 << 24),
             every: cfg.recalibrate_every,
+            calibration_path: cfg.calibration_path.clone(),
             model,
             bcfg,
             pinned_kind,
@@ -316,7 +325,31 @@ impl ShapService {
             let init_err = init_err.clone();
             let chosen = chosen.clone();
             worker_handles.push(std::thread::spawn(move || {
-                let mut planner = Planner::for_model(&ctx.model).with_devices(ctx.devices);
+                // the planner shares the executor's prepared-model cache
+                // entry (shape statistics come from the cached paths),
+                // amortizes prep cost over the recalibration cadence,
+                // and — when a calibration file survives from a previous
+                // run — starts from measured constants, not priors
+                let prep = backend::prepare(&ctx.model);
+                let mut planner = Planner::for_prepared(&prep).with_devices(ctx.devices);
+                if ctx.every > 0 {
+                    planner = planner.with_expected_batches(ctx.every);
+                }
+                if let Some(path) = &ctx.calibration_path {
+                    if path.exists() {
+                        match backend::calibrate::load_calibration(path) {
+                            Ok(entries) => {
+                                planner.seed_calibration(&entries);
+                            }
+                            // a broken file must not be silently treated
+                            // as "planning from measurements"
+                            Err(e) => eprintln!(
+                                "calibration: ignoring {}: {e:#} (planning from priors)",
+                                path.display()
+                            ),
+                        }
+                    }
+                }
                 let (mut plan, mut backend) = match build_adaptive(&planner, &ctx) {
                     Ok((plan, b)) => {
                         *chosen.lock().unwrap() = Some(plan);
@@ -351,6 +384,14 @@ impl ShapService {
                             &mut backoff,
                         );
                     }
+                }
+                // shutdown: persist whatever the service learned so the
+                // next process plans from measurements immediately
+                if let Some(path) = &ctx.calibration_path {
+                    let _ = backend::calibrate::save_calibration(
+                        path,
+                        &planner.calibration_snapshot(),
+                    );
                 }
             }));
         }
@@ -624,12 +665,18 @@ fn calibration_observations(
         if let Some(samples) = obs.per_backend.get(name) {
             out.per_backend.insert(name.to_string(), samples.clone());
         }
+        // first-batch (prep-inclusive) samples calibrate the setup term
+        if let Some(firsts) = obs.per_backend_first.get(name) {
+            out.per_backend_first.insert(name.to_string(), firsts.clone());
+        }
     } else if plan.axis == ShardAxis::Rows {
         let pooled: Vec<(f64, f64)> =
             obs.per_shard.values().flat_map(|v| v.iter().copied()).collect();
         if !pooled.is_empty() {
             out.per_backend.insert(name.to_string(), pooled);
         }
+        // sharded first-batch samples measure the sharded line, and
+        // shard chunks carry no prep (it is paid at build): drop them
     }
     out
 }
@@ -644,10 +691,28 @@ fn recalibrate_step(
     backoff: &mut ProbeBackoff,
 ) {
     let obs = metrics.observations();
-    let changed = planner.recalibrate(&calibration_observations(&obs, plan));
+    let mut changed = planner.recalibrate(&calibration_observations(&obs, plan));
+    // when no first-batch (in-band) evidence exists yet, fall back to
+    // the construction cost measured at build time so the amortized
+    // prep term starts from a real number instead of the a-priori
+    // guess. First-batch samples take precedence once they arrive —
+    // they observe warmup on the serving path itself, and must not be
+    // clobbered by a cache-warm rebuild's near-zero construction time
+    if planner.calibration_first_samples(plan.kind) == 0 {
+        changed |= planner.observe_setup(plan.kind, backend.caps().setup_cost_s);
+    }
     // heterogeneous chunk sizing: seed the executor's per-shard
     // throughput estimates from the recorded per-shard samples
     backend.set_shard_throughputs(&obs.shard_throughputs());
+    // persist what the loop learned so a restart plans from it
+    if changed {
+        if let Some(path) = &ctx.calibration_path {
+            let _ = crate::backend::calibrate::save_calibration(
+                path,
+                &planner.calibration_snapshot(),
+            );
+        }
+    }
     // hot-add recovery: grow a quarantined topology back toward the
     // planned shard count (no-op when already there or unsharded),
     // backing off exponentially while re-added shards keep failing
@@ -696,12 +761,14 @@ fn recalibrate_step(
 
 fn cost_json(c: &CostEstimate) -> Json {
     Json::obj(vec![
+        ("setup_s", Json::from(c.setup_s)),
         ("batch_overhead_s", Json::from(c.batch_overhead_s)),
         ("rows_per_s", Json::from(c.rows_per_s)),
     ])
 }
 
-/// The executor's current plan + prior-vs-measured planner constants.
+/// The executor's current plan + prior-vs-measured planner constants +
+/// prepared-model cache state.
 fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json {
     let mut fields = vec![
         ("backend", Json::from(plan.kind.name())),
@@ -713,6 +780,10 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
             "calibration_samples",
             Json::from(planner.calibration_samples(plan.kind)),
         ),
+        (
+            "first_batch_samples",
+            Json::from(planner.calibration_first_samples(plan.kind)),
+        ),
     ];
     if let Some(prior) = planner.prior(plan.kind) {
         fields.push(("prior", cost_json(&prior)));
@@ -720,6 +791,7 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
     if let Some(cost) = planner.cost(plan.kind) {
         fields.push(("measured", cost_json(&cost)));
     }
+    fields.push(("prepared", crate::backend::prepared::registry_snapshot()));
     Json::obj(fields)
 }
 

@@ -55,6 +55,7 @@ fn main() {
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
         Some("zoo") => cmd_zoo(&args),
+        Some("bench-compare") => cmd_bench_compare(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -66,9 +67,11 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo> [options]
+const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo|bench-compare> [options]
 multi-device: --devices N shards execution; --shard-axis auto|rows|trees picks the split
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
+  and persists learned constants next to the model (--calibration <path|none>)
+perf CI: bench-compare --baseline a.json --current b.json [--tolerance 0.2] gates throughput
 see rust/src/main.rs header for examples";
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
@@ -316,6 +319,11 @@ fn cmd_backends(args: &Args) -> Result<()> {
         print_plan_table(&planner);
         print_crossovers(&planner, "calibrated");
     }
+    let (hits, misses) = gputreeshap::backend::prepared::registry_counters();
+    println!(
+        "\nprepared-model cache: {} live entr(y/ies), {hits} lookup hit(s), {misses} miss(es)",
+        gputreeshap::backend::prepared::registry_len()
+    );
     Ok(())
 }
 
@@ -346,6 +354,10 @@ fn cmd_shap(args: &Args) -> Result<()> {
         rows as f64 / dt,
         label,
         b.describe()
+    );
+    println!(
+        "prep {:.2}ms (measured at build; ~0 on a prepared-model cache hit)",
+        b.caps().setup_cost_s * 1e3
     );
     let mut imp: Vec<(usize, f64)> = (0..m)
         .map(|f| {
@@ -421,6 +433,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let req_rows = args.get_usize("req-rows", 16)?;
     let max_batch = args.get_usize("max-batch", 256)?;
 
+    // calibrated cost constants persist next to the model artifact by
+    // default (<model>.calib.json), so a restarted service plans from
+    // measurements immediately; `--calibration none` disables, an
+    // explicit path overrides
+    let calibration_path = match args.get_str("calibration", "")? {
+        "none" => None,
+        "" => args.get("model").map(|mp| PathBuf::from(format!("{mp}.calib.json"))),
+        explicit => Some(PathBuf::from(explicit)),
+    };
+    if let Some(p) = &calibration_path {
+        if p.exists() {
+            println!("calibration: reloading measured constants from {}", p.display());
+        } else {
+            println!("calibration: will persist measured constants to {}", p.display());
+        }
+    }
+
     let cfg = ServiceConfig {
         devices,
         shard_axis: shard_axis(args)?,
@@ -428,6 +457,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
         // measure→calibrate→plan cadence in executed batches (0 = static)
         recalibrate_every: args.get_usize("recalibrate-every", 64)?,
+        calibration_path,
         ..Default::default()
     };
     let bcfg = backend_config(args, max_batch)?;
@@ -479,6 +509,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("metrics: {}", svc.metrics.snapshot().to_string_pretty());
     svc.shutdown();
     Ok(())
+}
+
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    use gputreeshap::bench::compare::compare_reports;
+    use gputreeshap::util::Json;
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow!("--baseline <path> required"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow!("--current <path> required"))?;
+    let tolerance = args.get_f64("tolerance", 0.2)?;
+    // a missing baseline is a warning-pass, not a failure: the first
+    // run on a fresh branch has nothing to compare against, and the
+    // refresh step on main writes the real one
+    let baseline_text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("bench-compare: no baseline at {baseline_path} — skipping (pass)");
+            return Ok(());
+        }
+    };
+    let baseline = Json::parse(&baseline_text)
+        .map_err(|e| anyhow!("parsing baseline {baseline_path}: {e:#}"))?;
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| anyhow!("reading current report {current_path}: {e}"))?;
+    let current =
+        Json::parse(&current_text).map_err(|e| anyhow!("parsing {current_path}: {e:#}"))?;
+
+    let cmp = compare_reports(&baseline, &current, tolerance);
+    if cmp.compared == 0 {
+        println!(
+            "bench-compare: no shared throughput metrics between {baseline_path} and \
+             {current_path} — nothing to gate (pass)"
+        );
+        return Ok(());
+    }
+    let mut table = gputreeshap::bench::Table::new(&["metric", "baseline", "current", "drop"]);
+    for r in &cmp.regressions {
+        table.row(vec![
+            r.metric.clone(),
+            format!("{:.0}", r.baseline),
+            format!("{:.0}", r.current),
+            format!("{:.0}%", r.drop_fraction() * 100.0),
+        ]);
+    }
+    if cmp.is_pass() {
+        println!(
+            "bench-compare: {} throughput metric(s) within {:.0}% of baseline (pass)",
+            cmp.compared,
+            tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        table.print();
+        bail!(
+            "bench-compare: {}/{} throughput metric(s) regressed more than {:.0}% vs baseline",
+            cmp.regressions.len(),
+            cmp.compared,
+            tolerance * 100.0
+        )
+    }
 }
 
 fn cmd_zoo(args: &Args) -> Result<()> {

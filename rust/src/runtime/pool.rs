@@ -27,6 +27,11 @@ use crate::util::error::Result;
 /// of the planner's best backend for this batch size. Output layout
 /// matches `ShapBackend::contributions`.
 ///
+/// Repeated calls with the same `Arc<Model>` hit the prepared-model
+/// cache (`backend::prepare`): path extraction and packing are paid on
+/// the first call only, so the per-call build here costs a cache lookup
+/// in steady state.
+///
 /// Elastic: when the sharded execution fails and names the failed
 /// shards, they are quarantined (row-axis survivors hold the full
 /// model) and the batch is retried once over the survivors — a lost

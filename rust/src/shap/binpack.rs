@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 /// SIMT lane width — maximum path length, and bin capacity.
 pub const LANES: usize = 32;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Packing {
     None,
     NextFit,

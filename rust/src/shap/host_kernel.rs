@@ -92,8 +92,15 @@ pub fn shap_row(g: &PackedGroup, x: &[f32], phis: &mut [f64]) {
                 break;
             }
             let start = i0;
-            path_weights(g, start, len, x, &mut w, usize::MAX);
             let v = g.v[start] as f64;
+            // dead-leaf skip (the prepared-model contribution bound at
+            // exactly zero): every term this path could add is ±0, so
+            // skipping is value-identical and saves the whole DP
+            if v == 0.0 {
+                lane += len;
+                continue;
+            }
+            path_weights(g, start, len, x, &mut w, usize::MAX);
             for k in 1..len {
                 let e = start + k;
                 let s = unwound_sum(g, start, len, x, &w, k, usize::MAX);
@@ -120,6 +127,12 @@ pub fn interactions_row(g: &PackedGroup, x: &[f32], m: usize, mat: &mut [f64]) {
             }
             let start = i0;
             let v = g.v[start] as f64;
+            // dead-leaf skip: as in `shap_row`, exactly-zero leaves
+            // contribute ±0 to every pair — skipping is value-identical
+            if v == 0.0 {
+                lane += len;
+                continue;
+            }
             for k in 1..len {
                 let ek = start + k;
                 let ok = one_fraction(g, ek, x);

@@ -21,5 +21,10 @@ pub mod summary;
 pub mod treeshap;
 
 pub use binpack::{pack, PackResult, Packing, LANES};
-pub use packed::{pack_model, pad_model, PackedGroup, PackedModel, PaddedGroup, PaddedModel};
-pub use path::{expected_values, extract_paths, model_paths, Path, PathElement};
+pub use packed::{
+    pack_model, pack_model_from_paths, pad_model, pad_model_from_paths, PackedGroup,
+    PackedModel, PaddedGroup, PaddedModel,
+};
+pub use path::{
+    expected_values, expected_values_from_paths, extract_paths, model_paths, Path, PathElement,
+};

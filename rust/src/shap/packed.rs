@@ -129,6 +129,21 @@ pub fn pack_paths(paths: &[&Path], algorithm: Packing) -> PackedGroup {
 /// Pack a full model, segregating paths by output group.
 pub fn pack_model(model: &Model, algorithm: Packing) -> PackedModel {
     let tagged = model_paths(model);
+    let expected = expected_values(model);
+    pack_model_from_paths(model, &tagged, &expected, algorithm)
+}
+
+/// As [`pack_model`], over already-extracted tagged paths and base
+/// values — the prepared-model cache's entry point. Runs the identical
+/// packing code over the identical path data, so the resulting layout
+/// (and every φ/Φ computed from it) is bit-identical to an uncached
+/// [`pack_model`] call.
+pub fn pack_model_from_paths(
+    model: &Model,
+    tagged: &[(usize, Path)],
+    expected: &[f64],
+    algorithm: Packing,
+) -> PackedModel {
     let mut groups = Vec::with_capacity(model.num_groups);
     for g in 0..model.num_groups {
         let paths: Vec<&Path> =
@@ -139,7 +154,7 @@ pub fn pack_model(model: &Model, algorithm: Packing) -> PackedModel {
     PackedModel {
         num_features: model.num_features,
         num_groups: model.num_groups,
-        expected_values: expected_values(model),
+        expected_values: expected.to_vec(),
         base_score: model.base_score,
         groups,
         max_depth,
@@ -211,6 +226,18 @@ pub struct PaddedModel {
 /// Build the padded layout with element axis `width ≥ max path length`.
 pub fn pad_model(model: &Model, width: usize) -> PaddedModel {
     let tagged = model_paths(model);
+    let expected = expected_values(model);
+    pad_model_from_paths(model, &tagged, &expected, width)
+}
+
+/// As [`pad_model`], over already-extracted tagged paths and base
+/// values (prepared-model cache entry point; bit-identical layouts).
+pub fn pad_model_from_paths(
+    model: &Model,
+    tagged: &[(usize, Path)],
+    expected: &[f64],
+    width: usize,
+) -> PaddedModel {
     let max_len = tagged.iter().map(|(_, p)| p.len()).max().unwrap_or(1);
     assert!(width >= max_len, "width {width} < deepest path {max_len}");
     let mut groups = Vec::with_capacity(model.num_groups);
@@ -237,7 +264,7 @@ pub fn pad_model(model: &Model, width: usize) -> PaddedModel {
     PaddedModel {
         num_features: model.num_features,
         num_groups: model.num_groups,
-        expected_values: expected_values(model),
+        expected_values: expected.to_vec(),
         base_score: model.base_score,
         max_depth: max_len - 1,
         groups,

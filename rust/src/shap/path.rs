@@ -132,9 +132,21 @@ pub fn model_paths(model: &Model) -> Vec<(usize, Path)> {
 /// E[f] per output group under cover weighting (the φ base values),
 /// including the model's base_score.
 pub fn expected_values(model: &Model) -> Vec<f64> {
-    let mut ev = vec![model.base_score as f64; model.num_groups];
-    for (g, p) in model_paths(model) {
-        ev[g] += p.reach_probability() * p.leaf_value() as f64;
+    expected_values_from_paths(model.base_score, model.num_groups, &model_paths(model))
+}
+
+/// As [`expected_values`], over already-extracted tagged paths — the
+/// prepared-model cache's entry point, so one extraction serves the
+/// base values, the shape statistics and every packed layout. Summation
+/// order matches [`expected_values`] exactly (bit-identical results).
+pub fn expected_values_from_paths(
+    base_score: f32,
+    num_groups: usize,
+    paths: &[(usize, Path)],
+) -> Vec<f64> {
+    let mut ev = vec![base_score as f64; num_groups];
+    for (g, p) in paths {
+        ev[*g] += p.reach_probability() * p.leaf_value() as f64;
     }
     ev
 }

@@ -1,0 +1,202 @@
+//! Prepared-model cache correctness: φ/Φ served through the cache must
+//! be **bit-identical** to the uncached pipeline on the zoo models —
+//! including across repeat builds (cache hits) and across the elastic
+//! quarantine → hot-add invalidation cycle, where tree-axis shards drop
+//! their prepared sub-ensembles and rebuild fresh ones. Also covers the
+//! service-level persistent-calibration round trip: a restarted service
+//! plans from the measurements its predecessor saved.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gputreeshap::backend::{
+    self, BackendConfig, BackendKind, ShapBackend, ShardAxis, ShardedBackend,
+};
+use gputreeshap::bench::zoo;
+use gputreeshap::coordinator::{ServiceConfig, ShapService};
+use gputreeshap::gbdt::ZooSize;
+use gputreeshap::shap::{host_kernel, pack_model, Packing};
+
+fn cfg() -> BackendConfig {
+    BackendConfig { threads: 1, rows_hint: 16, ..Default::default() }
+}
+
+#[test]
+fn cached_phi_and_interactions_are_bit_identical_to_uncached_on_zoo() {
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue; // the small grid covers every dataset shape cheaply
+        }
+        let (model, data) = zoo::build(&entry);
+        let m = model.num_features;
+        let rows = 6.min(data.rows);
+        let x = data.features[..rows * m].to_vec();
+        // uncached pipeline: fresh path extraction + packing + kernel,
+        // no Arc, no registry
+        let uncached_pm = pack_model(&model, Packing::BestFitDecreasing);
+        let want_phi = host_kernel::shap_values(&uncached_pm, &x, rows, 1);
+
+        let model = Arc::new(model);
+        let first = backend::build(&model, BackendKind::Host, &cfg()).unwrap();
+        let second = backend::build(&model, BackendKind::Host, &cfg()).unwrap();
+        let phi1 = first.contributions(&x, rows).unwrap();
+        let phi2 = second.contributions(&x, rows).unwrap();
+        assert_eq!(phi1, want_phi, "{}: cached φ must equal uncached bit-for-bit", entry.name);
+        assert_eq!(phi1, phi2, "{}: repeat builds must agree bit-for-bit", entry.name);
+
+        // the two builds share one cache entry and one packed layout
+        let p1 = first.prepared().expect("host backend exposes its cache entry");
+        let p2 = second.prepared().unwrap();
+        assert!(Arc::ptr_eq(p1, p2), "{}: same model ⇒ same entry", entry.name);
+        let stats = p1.stats();
+        assert_eq!(stats.packed_builds, 1, "{}: the layout packs once", entry.name);
+        assert!(stats.packed_hits >= 1, "{}: the second build hits", entry.name);
+
+        // interactions ride the same cached layout (skip the pixel sets
+        // — (M+1)² output is quadratic in features)
+        if m <= 64 {
+            let want_inter = host_kernel::interaction_values(&uncached_pm, &x, rows, 1);
+            let got_inter = first.interactions(&x, rows).unwrap();
+            assert_eq!(got_inter, want_inter, "{}: cached Φ bit-identical", entry.name);
+        }
+    }
+}
+
+#[test]
+fn recursive_backend_is_untouched_by_the_cache() {
+    // the cache feeds the recursive backend only shape metadata; its φ
+    // must stay bit-identical to the direct treeshap call
+    let entry = zoo::zoo_entries().into_iter().find(|e| e.size == ZooSize::Small).unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let want = gputreeshap::shap::treeshap::shap_values(&model, &x, rows, 1);
+    let model = Arc::new(model);
+    let b = backend::build(&model, BackendKind::Recursive, &cfg()).unwrap();
+    assert_eq!(b.contributions(&x, rows).unwrap(), want);
+    assert!(b.prepared().is_some(), "shape metadata flows from the cache");
+}
+
+#[test]
+fn quarantine_hot_add_cycle_preserves_phi_bitwise_on_the_tree_axis() {
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue;
+        }
+        let (model, data) = zoo::build(&entry);
+        if model.trees.len() < 3 {
+            continue; // need ≥3 tree shards to quarantine and still have ≥2
+        }
+        let m = model.num_features;
+        let rows = 6.min(data.rows);
+        let x = data.features[..rows * m].to_vec();
+        let model = Arc::new(model);
+        let mut sharded =
+            ShardedBackend::build(&model, BackendKind::Host, &cfg(), 3, ShardAxis::Trees)
+                .unwrap_or_else(|e| panic!("{}: build: {e:#}", entry.name));
+        let before = sharded.shards();
+        let out0 = sharded.contributions(&x, rows).unwrap();
+
+        // quarantine drops a shard: prepared sub-ensembles invalidate
+        // (fresh split over the survivors) — correctness within fp
+        // tolerance at the different summation width
+        sharded.quarantine(&[0]).unwrap();
+        assert_eq!(sharded.shards(), before - 1);
+        let out1 = sharded.contributions(&x, rows).unwrap();
+        assert_eq!(out1.len(), out0.len());
+        for (i, (a, b)) in out0.iter().zip(&out1).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                "{}: after quarantine idx {i}: {a} vs {b}",
+                entry.name
+            );
+        }
+
+        // hot-add restores the original width: the leaf-balanced split
+        // is deterministic, so the rebuilt (freshly re-prepared) shards
+        // must reproduce the original output bit-for-bit
+        sharded.hot_add(before).unwrap();
+        assert_eq!(sharded.shards(), before);
+        let out2 = sharded.contributions(&x, rows).unwrap();
+        assert_eq!(
+            out2, out0,
+            "{}: rebuilt topology must be bit-identical to the original",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn row_shards_share_one_prepared_entry() {
+    let entry = zoo::zoo_entries().into_iter().find(|e| e.size == ZooSize::Small).unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+    let solo = backend::build(&model, BackendKind::Host, &cfg()).unwrap();
+    let want = solo.contributions(&x, rows).unwrap();
+    let sharded =
+        ShardedBackend::build(&model, BackendKind::Host, &cfg(), 3, ShardAxis::Rows).unwrap();
+    // all row shards resolve to the same cache entry as the solo build
+    let entry_ptr = solo.prepared().unwrap();
+    assert!(Arc::ptr_eq(entry_ptr, sharded.prepared().unwrap()));
+    assert_eq!(
+        entry_ptr.stats().packed_builds,
+        1,
+        "three shards + one solo backend must pack the model exactly once"
+    );
+    // and the sharded output is that same layout's output
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), want);
+}
+
+#[test]
+fn restarted_service_plans_from_persisted_calibration() {
+    let entry = zoo::zoo_entries().into_iter().find(|e| e.size == ZooSize::Small).unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let model = Arc::new(model);
+    let dir = std::env::temp_dir().join(format!("gts_prep_calib_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let calib = dir.join("model.calib.json");
+
+    let svc_cfg = || ServiceConfig {
+        max_batch_rows: 32,
+        max_wait: Duration::from_millis(1),
+        recalibrate_every: 2,
+        calibration_path: Some(calib.clone()),
+        ..Default::default()
+    };
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let bcfg = BackendConfig { threads: 1, ..Default::default() };
+
+    // first service life: serve enough batches for the calibration loop
+    // to fit measured constants, then shut down (which persists them)
+    let svc = ShapService::start(model.clone(), BackendKind::Host, bcfg.clone(), svc_cfg())
+        .unwrap();
+    for _ in 0..10 {
+        svc.explain(x.clone(), rows).unwrap();
+    }
+    svc.shutdown();
+    assert!(calib.exists(), "shutdown must persist the calibration file");
+    let entries = backend::calibrate::load_calibration(&calib).unwrap();
+    let host = entries.iter().find(|(n, _, _)| n == "host").expect("host entry persisted");
+    assert!(host.2 > 0, "persisted host entry must carry measured samples");
+
+    // second life: the planner seeds from disk before building its
+    // backend, so the plan snapshot shows measured samples before any
+    // recalibration tick could have produced them in-process (serve one
+    // request first — the executor publishes its plan info before the
+    // job loop, so a served batch guarantees it is visible)
+    let svc = ShapService::start(model.clone(), BackendKind::Host, bcfg, svc_cfg()).unwrap();
+    let phis = svc.explain(x.clone(), rows).unwrap();
+    assert_eq!(phis.len(), rows * model.num_groups * (m + 1));
+    let snap = svc.metrics.snapshot();
+    let planner = snap.get("planner").unwrap();
+    let seeded = planner.get("calibration_samples").unwrap().as_usize().unwrap();
+    assert!(seeded > 0, "restart must plan from persisted measurements, got {seeded}");
+    svc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
