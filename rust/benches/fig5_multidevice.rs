@@ -1,21 +1,28 @@
 //! Fig 5 reproduction: throughput scaling across device shards
 //! (paper: 1–8 V100s reach 1.2 M rows/s on cal_housing-med), extended
 //! with the tree axis the backend layer adds on top of the paper's
-//! row-axis scheme.
+//! row-axis scheme, and with rows × trees **grid** topologies (nested
+//! sharding) for the configurations where one axis saturates.
 //!
 //! Runs entirely through the `ShapBackend` trait: each "device" is an
-//! independent backend instance inside a `ShardedBackend` (on a DGX,
-//! 8 PJRT GPU clients; on this testbed, CPU instances that time-share
-//! the cores, so the curve flattens once physical cores saturate — the
-//! bench records rows/s per (axis, devices) either way, DESIGN.md §5
-//! scale substitutions). Result parity against the unsharded oracle is
-//! asserted in `rust/tests/backends.rs`, not here.
+//! independent backend instance inside a `ShardedBackend` (or a
+//! `GridBackend` cell; on a DGX, 8 PJRT GPU clients; on this testbed,
+//! CPU instances that time-share the cores, so the curve flattens once
+//! physical cores saturate — the bench records rows/s per
+//! (axis, devices) either way, DESIGN.md §5 scale substitutions).
+//! Result parity against the unsharded oracle is asserted in
+//! `rust/tests/backends.rs`, not here.
 //!
 //! Build time is reported per configuration, **outside** the timed
-//! batch region: row-axis shards share one prepared-model cache entry,
-//! so after the first configuration packs the model, every later
-//! row-axis build costs a cache lookup — the `build(s)` column makes
-//! the cache visible (compare the first row-axis line to the rest).
+//! batch region: row-axis shards share one prepared-model cache entry
+//! and a grid's row replicas share one entry per tree slice, so after
+//! the first configuration packs a (sub-)model, later builds over it
+//! cost a cache lookup — the `build(s)` column makes the cache visible.
+//!
+//! The timed region runs [`RUNS`] times per configuration and reports a
+//! `{min, median}` rows/s variance band (`bench::band_json`), which
+//! `bench-compare` gates as current-median vs baseline-min — the
+//! ROADMAP's "perf baseline variance bands".
 //!
 //! Args (after `--`): `--rows N` (default 512), `--devices N` max shard
 //! count (default 4), `--backend cpu|host|…` (default host),
@@ -24,11 +31,17 @@
 
 use std::sync::Arc;
 
-use gputreeshap::backend::{BackendConfig, BackendKind, ShapBackend, ShardAxis, ShardedBackend};
-use gputreeshap::bench::{dump_record, write_json_report, zoo, Table};
+use gputreeshap::backend::{
+    BackendConfig, BackendKind, GridBackend, Planner, ShapBackend, ShardAxis, ShardGrid,
+    ShardedBackend,
+};
+use gputreeshap::bench::{band_json, dump_record, write_json_report, zoo, Table};
 use gputreeshap::cli::Args;
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::util::{time_it, Json};
+
+/// Timed repetitions per configuration (min/median variance band).
+const RUNS: usize = 3;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -56,21 +69,81 @@ fn main() {
     let x = &data.features[..rows * m];
     let model = Arc::new(model);
     println!(
-        "fig5: {} — {} rows, backend {}, up to {} device(s)\n",
+        "fig5: {} — {} rows, backend {}, up to {} device(s), {} timed runs/config\n",
         entry.name,
         rows,
         kind.name(),
-        max_devices
+        max_devices,
+        RUNS
     );
 
     let device_counts: Vec<usize> =
         [1usize, 2, 4, 8].into_iter().filter(|&d| d <= max_devices).collect();
-    let mut table = Table::new(&["axis", "devices", "build(s)", "time(s)", "rows/s", "scaling"]);
+    let mut table =
+        Table::new(&["axis", "devices", "build(s)", "time(s)", "rows/s", "scaling"]);
     let mut configs: Vec<Json> = Vec::new();
     let mut best_rps = 0.0f64;
+
+    // measure one built configuration RUNS times; returns median rows/s
+    let mut measure = |axis_name: &str,
+                       devices_label: String,
+                       shards: usize,
+                       build_s: f64,
+                       backend: &dyn ShapBackend,
+                       table: &mut Table,
+                       configs: &mut Vec<Json>,
+                       base: &mut Option<f64>| {
+        let mut times = Vec::with_capacity(RUNS);
+        for _ in 0..RUNS {
+            let t = std::time::Instant::now();
+            backend.contributions(x, rows).expect("contributions");
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        let median_t = times[times.len() / 2];
+        let rps_samples: Vec<f64> = times.iter().map(|t| rows as f64 / t).collect();
+        let median_rps = rows as f64 / median_t;
+        best_rps = best_rps.max(median_rps);
+        let scaling = base.map_or(1.0, |b| median_rps / b);
+        if base.is_none() {
+            *base = Some(median_rps);
+        }
+        table.row(vec![
+            axis_name.into(),
+            devices_label.clone(),
+            format!("{build_s:.3}"),
+            format!("{median_t:.3}"),
+            format!("{median_rps:.0}"),
+            format!("{scaling:.2}x"),
+        ]);
+        configs.push(Json::obj(vec![
+            ("axis", Json::from(axis_name)),
+            ("devices", Json::from(shards)),
+            ("layout", Json::from(devices_label.as_str())),
+            ("build_s", Json::from(build_s)),
+            ("time_s", Json::from(median_t)),
+            ("rows_per_s", band_json(&rps_samples)),
+        ]));
+        dump_record(
+            "fig5",
+            vec![
+                ("axis", Json::from(axis_name)),
+                ("devices", Json::from(shards)),
+                ("layout", Json::from(devices_label.as_str())),
+                ("build_s", Json::from(build_s)),
+                ("time_s", Json::from(median_t)),
+                ("rows_per_s", Json::from(median_rps)),
+            ],
+        );
+    };
+
+    // the 1-device rows-axis median anchors every section's scaling
+    // column (the grid section has no 1-cell config of its own, and
+    // normalizing it to itself would always print 1.00x)
+    let mut single_base: Option<f64> = None;
     for axis in ShardAxis::ALL {
-        let mut base: Option<f64> = None;
-        let mut measured: Vec<usize> = Vec::new();
+        let mut base: Option<f64> = single_base;
+        let mut seen: Vec<usize> = Vec::new();
         for &devices in &device_counts {
             let cfg = BackendConfig { rows_hint: rows.max(1), ..Default::default() };
             let (sharded, build_s) = time_it(|| {
@@ -79,45 +152,60 @@ fn main() {
             });
             // the tree axis clamps shards to the tree count: don't
             // re-measure (and re-record) an identical configuration
-            if measured.contains(&sharded.shards()) {
+            if seen.contains(&sharded.shards()) {
                 continue;
             }
-            measured.push(sharded.shards());
-            let t = std::time::Instant::now();
-            sharded.contributions(x, rows).expect("contributions");
-            let dt = t.elapsed().as_secs_f64();
-            let rps = rows as f64 / dt;
-            best_rps = best_rps.max(rps);
-            let scaling = base.map_or(1.0, |b| rps / b);
-            if base.is_none() {
-                base = Some(rps);
-            }
-            table.row(vec![
-                axis.name().into(),
+            seen.push(sharded.shards());
+            measure(
+                axis.name(),
                 sharded.shards().to_string(),
-                format!("{build_s:.3}"),
-                format!("{dt:.3}"),
-                format!("{rps:.0}"),
-                format!("{scaling:.2}x"),
-            ]);
-            configs.push(Json::obj(vec![
-                ("axis", Json::from(axis.name())),
-                ("devices", Json::from(sharded.shards())),
-                ("build_s", Json::from(build_s)),
-                ("time_s", Json::from(dt)),
-            ]));
-            dump_record(
-                "fig5",
-                vec![
-                    ("axis", Json::from(axis.name())),
-                    ("devices", Json::from(sharded.shards())),
-                    ("build_s", Json::from(build_s)),
-                    ("time_s", Json::from(dt)),
-                    ("rows_per_s", Json::from(rps)),
-                ],
+                sharded.shards(),
+                build_s,
+                &sharded as &dyn ShapBackend,
+                &mut table,
+                &mut configs,
+                &mut base,
+            );
+            if single_base.is_none() {
+                single_base = base; // first measured config = 1 device
+            }
+        }
+    }
+
+    // grid configurations: for each device budget, the planner's best
+    // genuinely 2-D factorization (skipped where none exists, e.g. 1–2
+    // devices) — the nested-sharding topologies neither axis covers
+    {
+        let planner = Planner::for_model(&model).with_devices(max_devices);
+        let mut base: Option<f64> = single_base;
+        let mut seen: Vec<ShardGrid> = Vec::new();
+        for &devices in &device_counts {
+            let Some(plan) = planner.plan_pinned(kind, rows.max(1), ShardAxis::Grid, devices)
+            else {
+                continue;
+            };
+            let Some(g) = plan.grid else { continue };
+            if seen.contains(&g) {
+                continue;
+            }
+            seen.push(g);
+            let cfg = BackendConfig { rows_hint: rows.max(1), ..Default::default() };
+            let (grid_backend, build_s) = time_it(|| {
+                GridBackend::build(&model, kind, &cfg, g).expect("grid backend")
+            });
+            measure(
+                "grid",
+                g.to_string(),
+                g.total(),
+                build_s,
+                &grid_backend as &dyn ShapBackend,
+                &mut table,
+                &mut configs,
+                &mut base,
             );
         }
     }
+
     table.print();
     println!(
         "\n(paper: near-linear row-axis scaling to 8 GPUs; flat here = shared cores, see EXPERIMENTS.md)"
@@ -128,6 +216,7 @@ fn main() {
             ("model", Json::from(entry.name.as_str())),
             ("backend", Json::from(kind.name())),
             ("rows", Json::from(rows)),
+            ("runs", Json::from(RUNS)),
             ("configs", Json::Arr(configs)),
             ("best_rows_per_s", Json::from(best_rps)),
         ]);

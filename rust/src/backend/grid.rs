@@ -1,0 +1,599 @@
+//! The rows × trees grid [`ShapBackend`]: an outer tree-axis split
+//! whose shards are inner row-axis replica groups — the nested sharding
+//! the ROADMAP calls for when one axis saturates (8 devices over a
+//! 4-tree model → e.g. 2 row-shards × 4 tree-shards).
+//!
+//! Layout: the ensemble is cut into `tree_shards` leaf-balanced slices
+//! ([`shard::split_trees`]); each slice is served by a row-axis
+//! [`ShardedBackend`] of `row_shards` replicas that split the batch via
+//! the usual throughput-weighted chunk queues. A batch fans out to
+//! every slice concurrently, each slice fans its rows across its
+//! replicas, the per-slice φ/Φ are summed and the
+//! `(slices − 1) · base_score` surplus removed — so a grid's output is
+//! bit-identical to a tree-axis `ShardedBackend` at the same slice
+//! count (the per-row values come from the same sub-ensembles, and the
+//! slice sums associate in the same order).
+//!
+//! **Cache-aware**: all `row_shards` replicas of one slice are built
+//! from ONE shared sub-model `Arc`, so the prepared-model registry
+//! ([`backend::prepare`]) holds exactly `tree_shards` entries — each
+//! sub-ensemble packs once, not once per replica. An r×t grid pays the
+//! preparation of a t-way tree split, not of r·t models.
+//!
+//! **Elastic**, cell-granular: a failed cell (slice `t`, replica `r`)
+//! is quarantined by dropping that one replica — the slice's surviving
+//! replicas hold the same sub-model, so only their chunk shares shift
+//! (and their throughput EWMAs are kept, remapped). Only when a slice
+//! loses its *last* replica does the grid fall back to the tree-axis
+//! rebuild: the survivors re-split the full ensemble at reduced slice
+//! count. Hot-add refills replica gaps in place (the slice's prepared
+//! entry is still live, so new replicas hit the cache) and only
+//! re-splits when a whole slice has to come back.
+
+use std::sync::{Arc, Mutex};
+
+use crate::backend::shard::{split_trees, ShardAxis, ShardGrid, ShardTask, CHUNKS_PER_SHARD};
+use crate::backend::sharded::{build_concurrently, run_additive};
+use crate::backend::{
+    self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardObserver, ShardedBackend,
+};
+use crate::gbdt::Model;
+use crate::util::error::Result;
+
+/// Everything needed to re-split the ensemble at a different slice
+/// count or refill replicas — present when the grid was built through
+/// [`GridBackend::build`].
+struct Recipe {
+    model: Arc<Model>,
+    kind: BackendKind,
+    cfg: BackendConfig,
+    /// the shared sub-model behind each slice, in slice order — replica
+    /// hot-add rebuilds from these so the prepared entries are reused
+    slices: Vec<Arc<Model>>,
+}
+
+pub struct GridBackend {
+    /// one row-axis replica group per tree slice, in slice order
+    groups: Vec<ShardedBackend>,
+    /// the planned grid shape — quarantine shrinks the live topology,
+    /// hot-add grows it back toward this
+    planned: ShardGrid,
+    kind_name: &'static str,
+    num_features: usize,
+    num_groups: usize,
+    base_score: f32,
+    caps: BackendCaps,
+    observer: Option<ShardObserver>,
+    rebuild: Option<Recipe>,
+    /// slices that failed in the most recent execution — the groups name
+    /// their own failed cells; this catches slice-level failures with no
+    /// cell attribution (e.g. a malformed output length), which must
+    /// still be quarantinable
+    failed_slices: Mutex<Vec<usize>>,
+    /// cells removed by quarantine since construction
+    quarantined: usize,
+    /// whether the most recent quarantine only dropped replicas (cells
+    /// kept their identity) as opposed to re-splitting the ensemble
+    last_quarantine_remapped: bool,
+}
+
+impl GridBackend {
+    /// Build a `grid.row_shards × grid.tree_shards` topology of `kind`
+    /// over `model`. The tree side clamps to the tree count. Each
+    /// slice's replicas share one sub-model `Arc`, so the prepared-model
+    /// registry ends up with one entry per slice.
+    pub fn build(
+        model: &Arc<Model>,
+        kind: BackendKind,
+        cfg: &BackendConfig,
+        grid: ShardGrid,
+    ) -> Result<GridBackend> {
+        let grid = ShardGrid::new(
+            grid.row_shards,
+            grid.tree_shards.min(model.trees.len().max(1)),
+        );
+        let widths = vec![grid.row_shards; grid.tree_shards];
+        GridBackend::build_with_widths(model, kind, cfg, grid, &widths)
+    }
+
+    /// As [`GridBackend::build`], but with an explicit replica width per
+    /// slice (each clamped to ≥ 1; `widths.len()` must be the clamped
+    /// tree side). The recovery paths use this to build
+    /// partially-degraded topologies directly — constructing full
+    /// slices only to discard replicas would pay device setup for cells
+    /// that are quarantined on arrival. The replica chunk bucket is
+    /// still sized for `grid.row_shards`, so later hot-adds refill with
+    /// cache-compatible replicas.
+    fn build_with_widths(
+        model: &Arc<Model>,
+        kind: BackendKind,
+        cfg: &BackendConfig,
+        grid: ShardGrid,
+        widths: &[usize],
+    ) -> Result<GridBackend> {
+        let slices: Vec<Arc<Model>> =
+            split_trees(model, grid.tree_shards).into_iter().map(Arc::new).collect();
+        debug_assert_eq!(slices.len(), widths.len());
+        let groups = build_groups(&slices, widths, grid.row_shards, kind, cfg)?;
+        let mut built = GridBackend::from_parts(groups, grid, model.base_score);
+        built.rebuild = Some(Recipe {
+            model: Arc::clone(model),
+            kind,
+            cfg: cfg.clone(),
+            slices,
+        });
+        Ok(built)
+    }
+
+    /// Wrap pre-built row-replica groups as a grid (tests, embedders).
+    /// The caller is responsible for the groups' sub-ensembles being
+    /// disjoint tree slices whose union is the full model, in slice
+    /// order. Carries no rebuild recipe: replica-drop quarantine works
+    /// (survivor replicas hold their slice), but slice-death rebuild and
+    /// hot-add need a self-built grid.
+    pub fn from_groups(groups: Vec<ShardedBackend>, base_score: f32) -> GridBackend {
+        let planned = ShardGrid::new(
+            groups.iter().map(|g| g.shard_count()).max().unwrap_or(1),
+            groups.len(),
+        );
+        GridBackend::from_parts(groups, planned, base_score)
+    }
+
+    fn from_parts(groups: Vec<ShardedBackend>, planned: ShardGrid, base_score: f32) -> GridBackend {
+        assert!(!groups.is_empty(), "grid backend needs ≥1 tree slice");
+        GridBackend {
+            kind_name: groups[0].name(),
+            num_features: groups[0].num_features(),
+            num_groups: groups[0].num_groups(),
+            base_score,
+            caps: grid_caps(&groups),
+            observer: None,
+            rebuild: None,
+            failed_slices: Mutex::new(Vec::new()),
+            quarantined: 0,
+            last_quarantine_remapped: false,
+            planned,
+            groups,
+        }
+    }
+
+    /// The planned grid shape (hot-add's recovery target).
+    pub fn grid(&self) -> ShardGrid {
+        self.planned
+    }
+
+    /// Live tree slices (shrinks when a slice loses its last replica).
+    pub fn tree_slices(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The live row-replica groups, in slice order (tests, stats).
+    pub fn groups(&self) -> &[ShardedBackend] {
+        &self.groups
+    }
+
+    /// Cells removed by quarantine since construction.
+    pub fn quarantined_cells(&self) -> usize {
+        self.quarantined
+    }
+
+    /// Flat cell index boundaries per group: cell `(g, r)` has flat
+    /// index `offsets[g] + r`; `offsets[groups.len()]` is the total.
+    fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.groups.len() + 1);
+        let mut acc = 0usize;
+        for g in &self.groups {
+            out.push(acc);
+            acc += g.shard_count();
+        }
+        out.push(acc);
+        out
+    }
+
+    /// Remove failed cells. Replica failures drop the one instance from
+    /// their slice's group (survivor EWMAs kept, indices shifted); a
+    /// slice whose every replica failed triggers the tree-axis rebuild
+    /// over the surviving slice count (needs the rebuild recipe). At
+    /// least one cell must survive.
+    pub fn quarantine_cells(&mut self, failed: &[usize]) -> Result<usize> {
+        let offs = self.offsets();
+        let total = *offs.last().unwrap();
+        let mut valid: Vec<usize> = failed.iter().copied().filter(|&c| c < total).collect();
+        valid.sort_unstable();
+        valid.dedup();
+        if valid.is_empty() {
+            return Ok(0);
+        }
+        if valid.len() >= total {
+            return Err(crate::anyhow!(
+                "cannot quarantine all {total} grid cell(s): no survivors to serve from"
+            ));
+        }
+        let mut per_group: Vec<Vec<usize>> = vec![Vec::new(); self.groups.len()];
+        for &c in &valid {
+            let gi = offs.partition_point(|&o| o <= c) - 1;
+            per_group[gi].push(c - offs[gi]);
+        }
+        let dead_slice = per_group
+            .iter()
+            .enumerate()
+            .any(|(gi, locals)| locals.len() >= self.groups[gi].shard_count());
+        if dead_slice {
+            // a slice lost its last replica: the survivors cannot cover
+            // the ensemble at this split — re-split over the slices that
+            // still have a live replica (≥1, by the all-cells guard).
+            // Record each survivor's (pre-rebuild live width, this-call
+            // failures): the rebuild must not hand back more replicas
+            // than the slice had live going in, minus what just failed.
+            let survivors: Vec<(usize, Vec<usize>)> = per_group
+                .iter()
+                .enumerate()
+                .filter(|(gi, locals)| locals.len() < self.groups[*gi].shard_count())
+                .map(|(gi, locals)| (self.groups[gi].shard_count(), locals.clone()))
+                .collect();
+            let recipe = self.rebuild.as_ref().ok_or_else(|| {
+                crate::anyhow!(
+                    "grid slice rebuild needs a rebuild recipe (self-built backend)"
+                )
+            })?;
+            let planned = self.planned;
+            // each surviving slice rebuilds at its pre-rebuild live
+            // width minus this call's failures (≥ 1 by the survivor
+            // definition) — building full slices and discarding
+            // replicas would pay device setup for cells quarantined on
+            // arrival, and neither the cells that just died nor cells
+            // quarantined in EARLIER calls may re-enter service here;
+            // like every other quarantined cell they come back only
+            // through the hot-add probe cycle
+            let widths: Vec<usize> =
+                survivors.iter().map(|(w, locals)| w - locals.len()).collect();
+            let rebuilt = GridBackend::build_with_widths(
+                &recipe.model,
+                recipe.kind,
+                &recipe.cfg,
+                ShardGrid::new(planned.row_shards, widths.len()),
+                &widths,
+            )?;
+            let quarantined = self.quarantined + valid.len();
+            let observer = self.observer.take();
+            *self = rebuilt;
+            self.planned = planned; // hot-add still targets the full grid
+            self.quarantined = quarantined;
+            self.last_quarantine_remapped = false;
+            if let Some(obs) = observer {
+                self.install_observer(obs);
+            }
+            return Ok(valid.len());
+        }
+        // replica-only failures: drop each failed cell from its group —
+        // the row-axis quarantine keeps the surviving replicas' measured
+        // throughput estimates, remapped to their shifted indices
+        let mut removed = 0usize;
+        for (gi, locals) in per_group.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            removed += self.groups[gi].quarantine_shards(locals)?;
+        }
+        self.quarantined += removed;
+        self.last_quarantine_remapped = true;
+        self.failed_slices.lock().unwrap().clear();
+        self.caps = grid_caps(&self.groups);
+        self.reinstall_observer(); // flat offsets shifted
+        Ok(removed)
+    }
+
+    /// Grow the topology back toward the planned grid, adding at most
+    /// `target − shard_count()` cells (recovery after quarantine; the
+    /// serving executor passes the planned total, incremental probes may
+    /// pass less). When every slice is still alive, the gaps are
+    /// refilled in place: new replicas are built over each slice's
+    /// existing sub-model `Arc`, so they hit the slice's live
+    /// prepared-model entry instead of re-packing, and the surviving
+    /// replicas keep their indices and throughput estimates. A missing
+    /// slice forces the full re-split — and because a slice can only
+    /// return whole (the ensemble must stay covered at one replica per
+    /// slice minimum), that path may overshoot a `target` below the
+    /// slice count. Needs the rebuild recipe.
+    pub fn grow_to(&mut self, target: usize) -> Result<usize> {
+        let before = self.shard_count();
+        if target <= before {
+            return Ok(0);
+        }
+        let recipe = self.rebuild.as_ref().ok_or_else(|| {
+            crate::anyhow!("grid hot-add needs a rebuild recipe (self-built backend)")
+        })?;
+        if self.groups.len() < self.planned.tree_shards {
+            // a whole slice is gone: the live groups serve a coarser
+            // split, so recovery is a fresh re-split — at `target` cells
+            // spread near-equally over the planned slices (the slowest
+            // slice gates throughput, so a lopsided refill would waste
+            // the even cells), never below one replica per slice
+            let planned = self.planned;
+            let widths = balanced_widths(planned.tree_shards, target.min(planned.total()));
+            let rebuilt = GridBackend::build_with_widths(
+                &recipe.model,
+                recipe.kind,
+                &recipe.cfg,
+                planned,
+                &widths,
+            )?;
+            let quarantined = self.quarantined;
+            let observer = self.observer.take();
+            *self = rebuilt;
+            self.quarantined = quarantined;
+            if let Some(obs) = observer {
+                self.install_observer(obs);
+            }
+            return Ok(self.shard_count().saturating_sub(before));
+        }
+        // all slices alive: refill replica gaps from the shared
+        // sub-model Arcs (prepared-cache hits, survivors untouched).
+        // The refill MUST use the same per-replica config as the
+        // original build — a different rows_hint bucket would size a
+        // device backend's executable differently and miss the cache
+        let kind = recipe.kind;
+        let inner_cfg = replica_cfg(&recipe.cfg, self.planned.row_shards);
+        let slices = recipe.slices.clone();
+        let row_shards = self.planned.row_shards;
+        let budget = target - before;
+        let mut added = 0usize;
+        'refill: for (gi, group) in self.groups.iter_mut().enumerate() {
+            while group.shard_count() < row_shards {
+                if added >= budget {
+                    break 'refill;
+                }
+                let b = backend::build(&slices[gi], kind, &inner_cfg)
+                    .map_err(|e| e.context(format!("tree slice {gi} replica hot-add")))?;
+                group.push_backend(b);
+                added += 1;
+            }
+        }
+        if added > 0 {
+            self.caps = grid_caps(&self.groups);
+            self.reinstall_observer();
+        }
+        Ok(added)
+    }
+
+    fn install_observer(&mut self, obs: ShardObserver) {
+        self.observer = Some(obs);
+        self.reinstall_observer();
+    }
+
+    /// (Re)wire each group's observer to report flat cell indices —
+    /// called whenever the topology (and therefore the offsets) changes.
+    fn reinstall_observer(&mut self) {
+        let Some(obs) = self.observer.clone() else { return };
+        let offs = self.offsets();
+        for (gi, g) in self.groups.iter_mut().enumerate() {
+            let obs = Arc::clone(&obs);
+            let off = offs[gi];
+            g.set_shard_observer(Arc::new(move |s, rows, dt| {
+                (obs.as_ref())(off + s, rows, dt)
+            }));
+        }
+    }
+
+    /// Fan one task out: every slice runs the full batch over its own
+    /// row-replica group; per-slice φ/Φ are summed and the base surplus
+    /// removed — the tree-axis additive merge ([`run_additive`], shared
+    /// with `ShardedBackend::run_trees` so the summation order and base
+    /// correction cannot drift between the two executors).
+    fn run<F>(&self, x: &[f32], rows: usize, task: ShardTask, f: F) -> Result<Vec<f32>>
+    where
+        F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
+    {
+        self.failed_slices.lock().unwrap().clear();
+        let n = self.groups.len();
+        if n == 1 {
+            // one slice = the full ensemble: its row group's output is
+            // already complete (no surplus to correct)
+            return f(&self.groups[0] as &dyn ShapBackend, x, rows);
+        }
+        let units: Vec<&dyn ShapBackend> =
+            self.groups.iter().map(|g| g as &dyn ShapBackend).collect();
+        run_additive(
+            &units,
+            x,
+            rows,
+            task,
+            self.num_groups,
+            self.num_features,
+            self.base_score,
+            "tree slice",
+            // groups observe their own cells (flat-indexed observers are
+            // installed per group), so slice-level timing is a no-op
+            &|_si, _t0| {},
+            &|si| self.failed_slices.lock().unwrap().push(si),
+            &f,
+        )
+    }
+}
+
+/// The per-replica construction config: no re-sharding, and the batch
+/// bucket sized to the row chunk a cell actually executes
+/// (`~rows/(r·CHUNKS_PER_SHARD)`, mirroring `ShardedBackend::build`).
+/// One definition shared by the initial build and replica hot-add, so a
+/// refilled replica is built exactly like the originals (same device
+/// executable bucket → same prepared-cache entry).
+fn replica_cfg(cfg: &BackendConfig, row_shards: usize) -> BackendConfig {
+    let mut inner_cfg = cfg.clone();
+    inner_cfg.devices = 1; // inner builds must not re-shard
+    inner_cfg.shard_axis = None;
+    let per_chunk = row_shards.max(1) * CHUNKS_PER_SHARD;
+    inner_cfg.rows_hint = (cfg.rows_hint.max(1) + per_chunk - 1) / per_chunk;
+    inner_cfg
+}
+
+/// One row-axis replica group per slice (`widths[i]` replicas of slice
+/// `i`, each clamped to ≥ 1). Every replica of a slice is built over
+/// the SAME sub-model `Arc`, so `backend::prepare`'s registry dedupes
+/// the preparation: an r×t grid prepares `t` sub-ensembles, not `r·t`.
+/// All cells of all slices build in ONE concurrent wave — setup
+/// (packing, device clients, compilation) dominates at high cell
+/// counts, and a per-slice sequence would pay it `t` times over.
+fn build_groups(
+    slices: &[Arc<Model>],
+    widths: &[usize],
+    bucket_replicas: usize,
+    kind: BackendKind,
+    cfg: &BackendConfig,
+) -> Result<Vec<ShardedBackend>> {
+    let inner_cfg = replica_cfg(cfg, bucket_replicas);
+    let mut flat: Vec<Arc<Model>> = Vec::new();
+    for (sub, &w) in slices.iter().zip(widths) {
+        // warm the slice's one shared entry so the concurrent replica
+        // builds below all hit (the sub-ensemble packs once)
+        backend::prepare(sub);
+        for _ in 0..w.max(1) {
+            flat.push(Arc::clone(sub));
+        }
+    }
+    let mut inner = build_concurrently(&flat, kind, &inner_cfg)
+        .map_err(|e| e.context("grid replica build"))?;
+    let mut groups = Vec::with_capacity(slices.len());
+    for (sub, &w) in slices.iter().zip(widths) {
+        let tail = inner.split_off(w.max(1));
+        let replicas = std::mem::replace(&mut inner, tail);
+        groups.push(ShardedBackend::from_backends(replicas, ShardAxis::Rows, sub.base_score));
+    }
+    Ok(groups)
+}
+
+/// Near-equal replica widths for `cells` total over `slices` groups,
+/// each at least 1 (every slice must keep a replica or the ensemble is
+/// uncovered). Used by hot-add's missing-slice rebuild so a `target`
+/// below the planned total lands on a balanced grid — the slowest
+/// slice gates throughput, so `[1, 3]` serves half as fast as `[2, 2]`.
+fn balanced_widths(slices: usize, cells: usize) -> Vec<usize> {
+    let slices = slices.max(1);
+    let cells = cells.max(slices);
+    (0..slices).map(|i| cells * (i + 1) / slices - cells * i / slices).collect()
+}
+
+/// Aggregate capability/cost metadata over the slice groups: every
+/// slice runs every row, so the slowest slice gates throughput (a
+/// group's own rate is already the sum of its replicas).
+fn grid_caps(groups: &[ShardedBackend]) -> BackendCaps {
+    BackendCaps {
+        supports_interactions: groups.iter().all(|g| g.caps().supports_interactions),
+        setup_cost_s: groups.iter().map(|g| g.caps().setup_cost_s).fold(0.0, f64::max),
+        batch_overhead_s: groups
+            .iter()
+            .map(|g| g.caps().batch_overhead_s)
+            .fold(0.0, f64::max),
+        rows_per_s: groups
+            .iter()
+            .map(|g| g.caps().rows_per_s)
+            .fold(f64::INFINITY, f64::min),
+    }
+}
+
+impl ShapBackend for GridBackend {
+    fn name(&self) -> &'static str {
+        self.kind_name
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Contributions, |b, x, r| b.contributions(x, r))
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Interactions, |b, x, r| b.interactions(x, r))
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run(x, rows, ShardTask::Predictions, |b, x, r| b.predictions(x, r))
+    }
+
+    fn set_shard_observer(&mut self, obs: ShardObserver) {
+        self.install_observer(obs);
+    }
+
+    fn shard_count(&self) -> usize {
+        self.groups.iter().map(|g| g.shard_count()).sum()
+    }
+
+    fn failed_shards(&self) -> Vec<usize> {
+        let offs = self.offsets();
+        let failed_slices = self.failed_slices.lock().unwrap().clone();
+        let mut out = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            let cells = g.failed_shards();
+            if cells.is_empty() && failed_slices.contains(&gi) {
+                // the slice failed as a unit without naming a cell
+                // (e.g. a malformed output length): attribute every
+                // cell so the executor can still quarantine the slice
+                out.extend((0..g.shard_count()).map(|s| offs[gi] + s));
+            } else {
+                out.extend(cells.into_iter().map(|s| offs[gi] + s));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn quarantine(&mut self, failed: &[usize]) -> Result<usize> {
+        self.quarantine_cells(failed)
+    }
+
+    fn quarantine_remaps_survivors(&self) -> bool {
+        self.last_quarantine_remapped
+    }
+
+    fn hot_add(&mut self, target: usize) -> Result<usize> {
+        self.grow_to(target)
+    }
+
+    fn prepared(&self) -> Option<&Arc<crate::backend::PreparedModel>> {
+        // the first slice's entry (stats inspection — every slice's
+        // entry stays reachable through `groups()`)
+        self.groups[0].prepared()
+    }
+
+    fn set_shard_throughputs(&self, rows_per_s: &[(usize, f64)]) {
+        let offs = self.offsets();
+        for (gi, g) in self.groups.iter().enumerate() {
+            let (lo, hi) = (offs[gi], offs[gi + 1]);
+            let local: Vec<(usize, f64)> = rows_per_s
+                .iter()
+                .filter(|(s, _)| *s >= lo && *s < hi)
+                .map(|(s, r)| (s - lo, *r))
+                .collect();
+            if !local.is_empty() {
+                g.set_shard_throughputs(&local);
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        let widths: Vec<String> =
+            self.groups.iter().map(|g| g.shard_count().to_string()).collect();
+        let quarantined = if self.quarantined > 0 {
+            format!(", {} quarantined", self.quarantined)
+        } else {
+            String::new()
+        };
+        format!(
+            "grid[{}×trees × {}×rows ({} replicas/slice), {}{}]",
+            self.groups.len(),
+            self.planned.row_shards,
+            widths.join("/"),
+            self.groups[0].describe(),
+            quarantined
+        )
+    }
+}

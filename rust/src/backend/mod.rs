@@ -11,6 +11,7 @@
 //! [`BackendKind`]s with their own [`BackendCaps`].
 
 pub mod calibrate;
+pub mod grid;
 pub mod host;
 pub mod planner;
 pub mod prepared;
@@ -28,11 +29,12 @@ use crate::shap::Packing;
 use crate::util::error::Result;
 
 pub use calibrate::Observations;
+pub use grid::GridBackend;
 pub use host::HostPackedBackend;
 pub use planner::{CostEstimate, ModelShape, Plan, Planner};
 pub use prepared::{prepare, PrepStats, PreparedModel};
 pub use recursive::RecursiveBackend;
-pub use shard::ShardAxis;
+pub use shard::{ShardAxis, ShardGrid};
 pub use sharded::ShardedBackend;
 #[cfg(feature = "xla")]
 pub use xla::{XlaPaddedBackend, XlaWarpBackend};
@@ -96,6 +98,16 @@ pub trait ShapBackend: Send + Sync {
     /// many shards were removed.
     fn quarantine(&mut self, _failed: &[usize]) -> Result<usize> {
         Err(crate::anyhow!("backend '{}' has no shards to quarantine", self.name()))
+    }
+    /// Whether the most recent [`ShapBackend::quarantine`] only removed
+    /// instances — every survivor is the same device, shifted down in
+    /// index — so callers may *remap* per-shard history (metrics,
+    /// throughput seeds) instead of dropping it. `false` when the
+    /// quarantine rebuilt the topology (tree-axis / grid-slice
+    /// re-splits), where retained samples would describe shards that no
+    /// longer exist.
+    fn quarantine_remaps_survivors(&self) -> bool {
+        false
     }
     /// Grow the shard topology back out to `target` shards (hot-add
     /// recovery after quarantine). Errs on unsharded backends; returns
@@ -207,13 +219,37 @@ impl Default for BackendConfig {
     }
 }
 
+/// Build the backend realizing one concrete [`Plan`] — the routing
+/// shared by [`build`], [`build_auto`] and the serving executor's
+/// rebuilds: grids go to [`GridBackend`], multi-shard simple axes to
+/// [`ShardedBackend`], single-shard plans to the plain construction.
+pub fn build_for_plan(
+    model: &Arc<Model>,
+    cfg: &BackendConfig,
+    plan: &Plan,
+) -> Result<Box<dyn ShapBackend>> {
+    if let (ShardAxis::Grid, Some(grid)) = (plan.axis, plan.grid) {
+        return Ok(Box::new(GridBackend::build(model, plan.kind, cfg, grid)?));
+    }
+    if plan.shards > 1 {
+        return Ok(Box::new(ShardedBackend::build(
+            model, plan.kind, cfg, plan.shards, plan.axis,
+        )?));
+    }
+    let mut one = cfg.clone();
+    one.devices = 1;
+    one.shard_axis = None;
+    build(model, plan.kind, &one)
+}
+
 /// Build one backend of the given kind over `model`, through the
 /// prepared-model cache: path extraction, shape statistics and packed
 /// layouts are computed once per model and shared by every build over
 /// the same `Arc<Model>` (repeat builds, row shards, executor
-/// rebuilds). With `cfg.devices > 1` the result is a [`ShardedBackend`]
-/// over that many inner instances, on `cfg.shard_axis` (or the
-/// planner's pick for `cfg.rows_hint`-row batches when unset).
+/// rebuilds). With `cfg.devices > 1` the result spans that device
+/// topology: a [`ShardedBackend`] on a simple axis, or a
+/// [`GridBackend`] when `cfg.shard_axis` is `Some(Grid)` (or the
+/// planner picks a grid for `cfg.rows_hint`-row batches when unset).
 pub fn build(
     model: &Arc<Model>,
     kind: BackendKind,
@@ -221,14 +257,18 @@ pub fn build(
 ) -> Result<Box<dyn ShapBackend>> {
     let prep = prepared::prepare(model);
     if cfg.devices > 1 {
-        let axis = cfg.shard_axis.unwrap_or_else(|| {
-            Planner::for_prepared(&prep)
-                .with_devices(cfg.devices)
-                .plan_for(kind, cfg.rows_hint.max(1))
-                .map(|p| p.axis)
-                .unwrap_or(ShardAxis::Rows)
-        });
-        return Ok(Box::new(ShardedBackend::build(model, kind, cfg, cfg.devices, axis)?));
+        let planner = Planner::for_prepared(&prep).with_devices(cfg.devices);
+        let rows = cfg.rows_hint.max(1);
+        // an explicit axis pins the layout at the full device count; auto
+        // mode takes the best layout's axis, then sizes it to the devices
+        let plan = match cfg.shard_axis {
+            Some(axis) => planner.plan_pinned(kind, rows, axis, cfg.devices),
+            None => planner
+                .plan_for(kind, rows)
+                .and_then(|p| planner.plan_pinned(kind, rows, p.axis, cfg.devices)),
+        }
+        .unwrap_or_else(|| Plan::fallback(kind, cfg.devices, cfg.shard_axis));
+        return build_for_plan(model, cfg, &plan);
     }
     match kind {
         BackendKind::Recursive => {
@@ -283,14 +323,7 @@ pub fn build_auto(
     };
     let mut last_err = None;
     for plan in plans {
-        let built = if plan.shards > 1 {
-            ShardedBackend::build(model, plan.kind, cfg, plan.shards, plan.axis)
-                .map(|b| Box::new(b) as Box<dyn ShapBackend>)
-        } else {
-            let mut one = cfg.clone();
-            one.devices = 1;
-            build(model, plan.kind, &one)
-        };
+        let built = build_for_plan(model, cfg, &plan);
         match built {
             Ok(b) => {
                 if cfg.with_interactions && !b.caps().supports_interactions {

@@ -12,15 +12,18 @@
 //!
 //! With a device topology (`with_devices`) the heuristic generalizes to
 //! N devices: every candidate is additionally scored across shard
-//! counts `1..=devices` on both shard axes. Row sharding divides the
-//! per-row term by `min(shards, rows)` (each device pays its own batch
-//! overhead concurrently); tree sharding divides it by
-//! `min(shards, trees)` and adds a merge pass per extra shard — which
-//! is why small batches over wide ensembles plan onto the tree axis
-//! while large batches keep the paper's row axis.
+//! counts `1..=devices`, on both simple shard axes **and** on every
+//! rows × trees grid factorization of the device count. Row sharding
+//! divides the per-row term by `min(r, rows)` (each device pays its own
+//! batch overhead, and each row shard pays it once per dispatched chunk
+//! — `CHUNKS_PER_SHARD` serial dispatches, not one); tree sharding
+//! divides it by `min(t, trees)` and adds a merge pass per extra slice.
+//! A grid multiplies both divisors, which is why 8 devices over a
+//! 4-tree model plan onto a 2×4 grid for batches too small to fill the
+//! row axis — the regime where both simple axes saturate.
 
 use crate::backend::calibrate::{self, Observations};
-use crate::backend::shard::ShardAxis;
+use crate::backend::shard::{ShardAxis, ShardGrid, CHUNKS_PER_SHARD};
 use crate::backend::BackendKind;
 use crate::gbdt::Model;
 use crate::shap::model_paths;
@@ -114,10 +117,35 @@ pub fn estimate(kind: BackendKind, s: &ModelShape) -> CostEstimate {
 #[derive(Clone, Copy, Debug)]
 pub struct Plan {
     pub kind: BackendKind,
-    /// device shards (1 = unsharded)
+    /// device shards (1 = unsharded; for a grid, `row·tree` cells)
     pub shards: usize,
     pub axis: ShardAxis,
+    /// the rows × trees shape when `axis` is [`ShardAxis::Grid`]
+    /// (`None` on the simple axes)
+    pub grid: Option<ShardGrid>,
     pub est_latency_s: f64,
+}
+
+impl Plan {
+    /// The build-anyway fallback for a kind that is not a planner
+    /// candidate (e.g. compiled out): span the full device count on the
+    /// pinned simple axis so the caller sees the real construction
+    /// error instead of "no backend available". A pinned grid degrades
+    /// to rows — without a cost model there is nothing to pick a
+    /// factorization with. Shared by `backend::build` and the serving
+    /// executor so the two paths cannot drift.
+    pub fn fallback(kind: BackendKind, devices: usize, pinned_axis: Option<ShardAxis>) -> Plan {
+        Plan {
+            kind,
+            shards: devices.max(1),
+            axis: match pinned_axis {
+                Some(ShardAxis::Grid) | None => ShardAxis::Rows,
+                Some(axis) => axis,
+            },
+            grid: None,
+            est_latency_s: f64::INFINITY,
+        }
+    }
 }
 
 /// Picks backend + representation + shard layout from model shape,
@@ -206,57 +234,99 @@ impl Planner {
             .map(|(_, c)| c.batch_overhead_s + rows as f64 / c.rows_per_s)
     }
 
-    /// Estimated latency for `rows` rows over `shards` devices on the
-    /// given axis. Each shard pays the backend's batch overhead
-    /// concurrently; the per-row term divides across the *effective*
-    /// shards (rows can't split below one row per device, trees below
-    /// one tree); tree shards pay one output-merge pass per extra shard.
-    fn sharded_cost(
-        &self,
-        c: &CostEstimate,
-        rows: usize,
-        axis: ShardAxis,
-        shards: usize,
-    ) -> f64 {
-        let eff = match axis {
-            ShardAxis::Rows => shards.min(rows.max(1)),
-            ShardAxis::Trees => shards.min(self.shape.trees.max(1)),
-        } as f64;
-        let merge = match axis {
-            ShardAxis::Rows => 0.0,
-            ShardAxis::Trees => {
-                (shards as f64 - 1.0)
-                    * rows as f64
-                    * (self.shape.features as f64 + 1.0)
-                    * 2e-9
-            }
+    /// Estimated latency for `rows` rows over an `r × t` layout
+    /// (`r` row shards per tree slice, `t` slices; `r = 1` or `t = 1`
+    /// recover the simple axes, `1 × 1` the unsharded line).
+    ///
+    /// - The per-row term divides across the *effective* parallelism
+    ///   `min(r, rows) · min(t, trees)` — rows can't split below one row
+    ///   per replica, trees below one tree per slice.
+    /// - Row shards drain their chunk queues serially: each pays the
+    ///   backend's batch overhead once per dispatched chunk — up to
+    ///   [`CHUNKS_PER_SHARD`] dispatches, not one. (On device backends
+    ///   this is a 4× term; pricing it at 1× underpriced row sharding
+    ///   and skewed every rows-vs-trees-vs-grid decision.)
+    /// - Tree slices pay one output-merge pass per extra slice.
+    fn layout_cost(&self, c: &CostEstimate, rows: usize, r: usize, t: usize) -> f64 {
+        let r = r.max(1);
+        let t = t.clamp(1, self.shape.trees.max(1));
+        let r_eff = r.min(rows.max(1)) as f64;
+        let t_eff = t as f64;
+        let merge = if t > 1 {
+            (t as f64 - 1.0) * rows as f64 * (self.shape.features as f64 + 1.0) * 2e-9
+        } else {
+            0.0
+        };
+        let dispatches = if r > 1 {
+            let per_shard = (rows as f64 / r as f64).ceil().max(1.0);
+            per_shard.min(CHUNKS_PER_SHARD as f64)
+        } else {
+            1.0
         };
         // prep amortization: the one-time setup (packing, upload,
         // compilation — or ~0 on a prepared-model cache hit) spread over
         // the expected batch count; zero under the default (∞) horizon
         let prep = c.setup_s / self.expected_batches;
-        c.batch_overhead_s + (rows as f64 / eff) / c.rows_per_s + merge + prep
+        dispatches * c.batch_overhead_s + (rows as f64 / (r_eff * t_eff)) / c.rows_per_s
+            + merge
+            + prep
+    }
+
+    /// A concrete plan for one `r × t` layout, labelled by shape:
+    /// `t = 1` is the row axis, `r = 1` the tree axis, both > 1 a grid.
+    fn layout_plan(
+        &self,
+        kind: BackendKind,
+        c: &CostEstimate,
+        rows: usize,
+        r: usize,
+        t: usize,
+    ) -> Plan {
+        let r = r.max(1);
+        let t = t.clamp(1, self.shape.trees.max(1));
+        let (axis, grid) = if t == 1 {
+            (ShardAxis::Rows, None)
+        } else if r == 1 {
+            (ShardAxis::Trees, None)
+        } else {
+            (ShardAxis::Grid, Some(ShardGrid::new(r, t)))
+        };
+        Plan {
+            kind,
+            shards: r * t,
+            axis,
+            grid,
+            est_latency_s: self.layout_cost(c, rows, r, t),
+        }
     }
 
     /// Best shard layout for one backend kind at this batch size, or
-    /// `None` when the kind is not a candidate. Ties prefer fewer
-    /// shards, and the row axis over the tree axis (the paper's scheme).
+    /// `None` when the kind is not a candidate. Scores every device
+    /// count on the row axis, the tree axis, and every rows × trees
+    /// factorization. Ties prefer fewer shards, then the row axis (the
+    /// paper's scheme), then trees, then grids.
     pub fn plan_for(&self, kind: BackendKind, rows: usize) -> Option<Plan> {
         let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
+        let trees = self.shape.trees.max(1);
         let mut best: Option<Plan> = None;
         for shards in 1..=self.devices {
-            for axis in ShardAxis::ALL {
-                let shards = match axis {
-                    ShardAxis::Rows => shards,
-                    ShardAxis::Trees => shards.min(self.shape.trees.max(1)),
-                };
-                let est = self.sharded_cost(&c, rows, axis, shards);
+            // simple axes first (tie-breaks keep the earliest candidate),
+            // then the genuinely 2-D factorizations of this device count
+            let mut layouts: Vec<(usize, usize)> = vec![(shards, 1), (1, shards.min(trees))];
+            layouts.extend(
+                ShardGrid::factorizations(shards, trees)
+                    .into_iter()
+                    .filter(|g| !g.is_trivial())
+                    .map(|g| (g.row_shards, g.tree_shards)),
+            );
+            for (r, t) in layouts {
+                let plan = self.layout_plan(kind, &c, rows, r, t);
                 let better = match &best {
                     None => true,
-                    Some(b) => est < b.est_latency_s - 1e-15,
+                    Some(b) => plan.est_latency_s < b.est_latency_s - 1e-15,
                 };
                 if better {
-                    best = Some(Plan { kind, shards, axis, est_latency_s: est });
+                    best = Some(plan);
                 }
             }
         }
@@ -266,6 +336,10 @@ impl Planner {
     /// The plan for one backend kind with the shard layout pinned by the
     /// caller (`--shard-axis`): the tree axis clamps to the tree count,
     /// and the estimate prices the pinned layout, not the kind's best.
+    /// A pinned grid picks the cheapest genuinely 2-D factorization of
+    /// at most `shards` cells; when none exists (prime device counts,
+    /// `devices < 4`, single-tree models) it degrades to the best simple
+    /// layout within the budget.
     pub fn plan_pinned(
         &self,
         kind: BackendKind,
@@ -274,11 +348,35 @@ impl Planner {
         shards: usize,
     ) -> Option<Plan> {
         let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
-        let shards = match axis {
-            ShardAxis::Rows => shards.max(1),
-            ShardAxis::Trees => shards.clamp(1, self.shape.trees.max(1)),
-        };
-        Some(Plan { kind, shards, axis, est_latency_s: self.sharded_cost(&c, rows, axis, shards) })
+        let shards = shards.max(1);
+        match axis {
+            ShardAxis::Rows => Some(self.layout_plan(kind, &c, rows, shards, 1)),
+            ShardAxis::Trees => Some(self.layout_plan(kind, &c, rows, 1, shards)),
+            ShardAxis::Grid => {
+                let trees = self.shape.trees.max(1);
+                let pick = |require_2d: bool| -> Option<Plan> {
+                    let mut best: Option<Plan> = None;
+                    for total in 1..=shards {
+                        for g in ShardGrid::factorizations(total, trees) {
+                            if require_2d && g.is_trivial() {
+                                continue;
+                            }
+                            let plan =
+                                self.layout_plan(kind, &c, rows, g.row_shards, g.tree_shards);
+                            let better = match &best {
+                                None => true,
+                                Some(b) => plan.est_latency_s < b.est_latency_s - 1e-15,
+                            };
+                            if better {
+                                best = Some(plan);
+                            }
+                        }
+                    }
+                    best
+                };
+                pick(true).or_else(|| pick(false))
+            }
+        }
     }
 
     /// All candidates (each with its best shard layout) ordered by
@@ -556,6 +654,117 @@ mod tests {
             (single.est_latency_s - p.batch_cost(BackendKind::Recursive, 100_000).unwrap())
                 .abs()
                 < 1e-12
+        );
+    }
+
+    #[test]
+    fn grid_plans_engage_when_both_axes_saturate() {
+        // the ISSUE scenario: 8 devices over a 4-tree model. The tree
+        // axis caps at 4 shards; a 4-row batch starves the row axis at
+        // 4 effective shards; a 2×4 grid reaches 8-way parallelism.
+        let mut shape = synthetic_planner().shape;
+        shape.trees = 4;
+        let p = Planner::with_candidates(
+            shape,
+            vec![(
+                BackendKind::Recursive,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+            )],
+        )
+        .with_devices(8);
+        let mid = p.plan_for(BackendKind::Recursive, 4).unwrap();
+        assert_eq!(mid.axis, ShardAxis::Grid, "{mid:?}");
+        let g = mid.grid.expect("grid plans carry their shape");
+        assert!(g.row_shards > 1 && g.tree_shards > 1, "{g:?}");
+        assert_eq!(g.total(), mid.shards);
+        assert!(g.total() <= 8);
+        assert!(g.tree_shards <= 4, "tree side clamps to the ensemble");
+        // the grid beats both simple axes at this batch size
+        let rows4 = p.plan_pinned(BackendKind::Recursive, 4, ShardAxis::Rows, 8).unwrap();
+        let trees4 = p.plan_pinned(BackendKind::Recursive, 4, ShardAxis::Trees, 8).unwrap();
+        assert!(mid.est_latency_s < rows4.est_latency_s);
+        assert!(mid.est_latency_s < trees4.est_latency_s);
+        // outside the regime the simple axes keep winning: huge batches
+        // fill the row axis, 1-row batches leave rows nothing to split
+        let big = p.plan_for(BackendKind::Recursive, 100_000).unwrap();
+        assert_eq!((big.axis, big.grid), (ShardAxis::Rows, None));
+        let one = p.plan_for(BackendKind::Recursive, 1).unwrap();
+        assert_eq!((one.axis, one.grid), (ShardAxis::Trees, None));
+    }
+
+    #[test]
+    fn pinned_grid_picks_a_factorization_or_degrades() {
+        let mut shape = synthetic_planner().shape;
+        shape.trees = 4;
+        let p = Planner::with_candidates(
+            shape,
+            vec![(
+                BackendKind::Recursive,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+            )],
+        )
+        .with_devices(8);
+        let pinned = p.plan_pinned(BackendKind::Recursive, 64, ShardAxis::Grid, 8).unwrap();
+        let g = pinned.grid.expect("a 2-D factorization of 8 exists");
+        assert_eq!(pinned.axis, ShardAxis::Grid);
+        assert!(g.row_shards > 1 && g.tree_shards > 1);
+        assert!(g.total() <= 8);
+        // two devices admit no 2-D grid: degrade to a simple layout
+        let p2 = Planner::with_candidates(
+            p.shape,
+            vec![(
+                BackendKind::Recursive,
+                CostEstimate { setup_s: 0.0, batch_overhead_s: 0.0, rows_per_s: 1e4 },
+            )],
+        )
+        .with_devices(2);
+        let degraded = p2.plan_pinned(BackendKind::Recursive, 64, ShardAxis::Grid, 2).unwrap();
+        assert!(degraded.grid.is_none());
+        assert_ne!(degraded.axis, ShardAxis::Grid);
+    }
+
+    #[test]
+    fn row_axis_overhead_is_priced_per_dispatched_chunk() {
+        // regression: `run_rows` dispatches CHUNKS_PER_SHARD chunks per
+        // shard, each paying the backend's batch overhead — pricing one
+        // overhead per shard underpriced row sharding 4× on
+        // overhead-heavy backends and skewed the layout decision
+        let shape = ModelShape {
+            features: 8,
+            groups: 1,
+            trees: 1, // no tree axis to hide behind
+            leaves: 100,
+            max_depth: 6,
+            avg_path_len: 5.0,
+            max_path_len: 7,
+        };
+        let heavy = CostEstimate { setup_s: 0.0, batch_overhead_s: 1.0, rows_per_s: 1e3 };
+        let p = Planner::with_candidates(shape, vec![(BackendKind::XlaWarp, heavy)])
+            .with_devices(4);
+        // 1000 rows: unsharded = 1.0 + 1.0 = 2.0s. Four row shards save
+        // 0.75s of per-row time but pay 4 serial chunk dispatches
+        // (4×1.0s overhead) — sharding must NOT win here
+        let plan = p.plan_for(BackendKind::XlaWarp, 1000).unwrap();
+        assert_eq!(plan.shards, 1, "{plan:?}");
+        let pinned = p.plan_pinned(BackendKind::XlaWarp, 1000, ShardAxis::Rows, 4).unwrap();
+        assert!(
+            (pinned.est_latency_s - (4.0 + 250.0 / 1e3)).abs() < 1e-9,
+            "4 chunk dispatches × 1s overhead + 250 rows/shard: {}",
+            pinned.est_latency_s
+        );
+        // a low-overhead backend still shards by rows
+        let light = CostEstimate { setup_s: 0.0, batch_overhead_s: 1e-6, rows_per_s: 1e3 };
+        let p = Planner::with_candidates(p.shape, vec![(BackendKind::Host, light)])
+            .with_devices(4);
+        let plan = p.plan_for(BackendKind::Host, 1000).unwrap();
+        assert_eq!((plan.shards, plan.axis), (4, ShardAxis::Rows), "{plan:?}");
+        // shards that see fewer rows than CHUNKS_PER_SHARD dispatch one
+        // chunk per row, not four
+        let few = p.plan_pinned(BackendKind::Host, 8, ShardAxis::Rows, 4).unwrap();
+        assert!(
+            (few.est_latency_s - (2.0 * 1e-6 + 2.0 / 1e3)).abs() < 1e-12,
+            "2 rows/shard ⇒ 2 dispatches: {}",
+            few.est_latency_s
         );
     }
 

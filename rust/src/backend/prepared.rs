@@ -18,6 +18,12 @@
 //!   once per device); tree-axis shards hold one entry per sub-ensemble,
 //!   invalidated naturally when `quarantine`/`hot_add` rebuild the split
 //!   (the old sub-models drop, their entries are reclaimed).
+//! - Grid topologies (`backend::grid`) are cache-aware by construction:
+//!   all row replicas of a tree slice are built from one shared
+//!   sub-model `Arc`, so an r×t grid holds exactly `t` entries (each
+//!   sub-ensemble packs once, not once per replica), and replica
+//!   hot-adds rebuild against the slice's still-live entry instead of
+//!   re-packing — pinned by `rust/tests/prepared.rs`.
 //! - The serving executor's rebuilds (`recalibrate_every` cadence,
 //!   replans, hot-adds) hit the cache because the service holds the same
 //!   `Arc<Model>` for its whole life — steady-state rebuild cost is the

@@ -1,7 +1,7 @@
 //! Shard-plan vocabulary: how a SHAP workload is split across devices.
 //!
-//! Two axes, both exact (φ and Φ are additive over trees, and rows are
-//! independent):
+//! Two simple axes, both exact (φ and Φ are additive over trees, and
+//! rows are independent), plus their 2-D composition:
 //!
 //! - [`ShardAxis::Rows`] — split the batch, run every shard over the
 //!   full ensemble, concatenate outputs. The paper's Fig 5 scheme;
@@ -11,30 +11,51 @@
 //!   correction (each shard's output carries `base_score` once, so the
 //!   sum over-counts it `shards − 1` times). Helps wide-ensemble /
 //!   small-batch workloads where there are no rows left to split.
+//! - [`ShardAxis::Grid`] — a [`ShardGrid`] of `tree_shards` ensemble
+//!   slices, each replicated over `row_shards` row workers. Engages the
+//!   topologies neither simple axis can fill: with 8 devices over a
+//!   4-tree model the tree axis caps at 4 and a 4-row batch starves the
+//!   row axis, but a 2×4 grid uses all 8.
 //!
 //! This module holds the pure planning math — axis parsing, row
-//! chunking, leaf-balanced tree splitting, and the base correction —
-//! with no threads or devices; [`super::sharded::ShardedBackend`] is
-//! the executor built on top of it.
+//! chunking, leaf-balanced tree splitting, grid factorizations, and the
+//! base correction — with no threads or devices;
+//! [`super::sharded::ShardedBackend`] (simple axes) and
+//! [`super::grid::GridBackend`] (grids) are the executors built on top.
 
 use crate::gbdt::Model;
 
-/// The axis a [`super::ShardedBackend`] splits work along.
+/// How many row chunks per shard the rows-axis queues are cut into:
+/// finer chunks mean prompter abort on failure and better balance when
+/// devices run at different speeds, at a small per-chunk dispatch cost.
+/// Lives here (not in the executor) because the planner prices the
+/// per-chunk dispatch overhead with the same constant.
+pub const CHUNKS_PER_SHARD: usize = 4;
+
+/// The axis a sharded backend splits work along.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ShardAxis {
     /// split the batch across devices (Fig 5)
     Rows,
     /// split the ensemble across devices (additivity over trees)
     Trees,
+    /// both: tree slices × row replicas (see [`ShardGrid`]); executed by
+    /// [`super::grid::GridBackend`], never by `ShardedBackend`
+    Grid,
 }
 
 impl ShardAxis {
+    /// The simple (1-D) axes — the iteration set for executors and
+    /// benches that sweep `ShardedBackend` layouts. `Grid` is not here:
+    /// it is a composition with its own executor and its own `(r, t)`
+    /// shape, enumerated via [`ShardGrid::factorizations`].
     pub const ALL: [ShardAxis; 2] = [ShardAxis::Rows, ShardAxis::Trees];
 
     pub fn name(&self) -> &'static str {
         match self {
             ShardAxis::Rows => "rows",
             ShardAxis::Trees => "trees",
+            ShardAxis::Grid => "grid",
         }
     }
 
@@ -42,8 +63,60 @@ impl ShardAxis {
         match s {
             "rows" | "row" => Some(ShardAxis::Rows),
             "trees" | "tree" => Some(ShardAxis::Trees),
+            "grid" => Some(ShardAxis::Grid),
             _ => None,
         }
+    }
+}
+
+/// A rows × trees device grid: `tree_shards` disjoint ensemble slices,
+/// each served by `row_shards` replicas that split the batch among
+/// themselves. `1×t` and `r×1` grids are the simple axes; the planner
+/// only labels a layout `Grid` when both sides exceed 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShardGrid {
+    /// row replicas per tree slice (the inner, batch-splitting side)
+    pub row_shards: usize,
+    /// ensemble slices (the outer, additive side)
+    pub tree_shards: usize,
+}
+
+impl ShardGrid {
+    pub fn new(row_shards: usize, tree_shards: usize) -> ShardGrid {
+        ShardGrid { row_shards: row_shards.max(1), tree_shards: tree_shards.max(1) }
+    }
+
+    /// Total device cells in the grid.
+    pub fn total(&self) -> usize {
+        self.row_shards * self.tree_shards
+    }
+
+    /// A grid with one side of length 1 is really a simple axis.
+    pub fn is_trivial(&self) -> bool {
+        self.row_shards == 1 || self.tree_shards == 1
+    }
+
+    /// Every `(row_shards, tree_shards)` factorization of exactly
+    /// `total` cells whose tree side fits the ensemble (`t ≤ trees`),
+    /// trivial shapes included, ordered by ascending tree side. The
+    /// planner scores these next to the simple axes when a device
+    /// topology is in play.
+    pub fn factorizations(total: usize, trees: usize) -> Vec<ShardGrid> {
+        let total = total.max(1);
+        let trees = trees.max(1);
+        let mut out = Vec::new();
+        for t in 1..=total.min(trees) {
+            if total % t == 0 {
+                out.push(ShardGrid { row_shards: total / t, tree_shards: t });
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for ShardGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}r×{}t", self.row_shards, self.tree_shards)
     }
 }
 
@@ -223,7 +296,37 @@ mod tests {
             assert_eq!(ShardAxis::parse(a.name()), Some(a));
         }
         assert_eq!(ShardAxis::parse("tree"), Some(ShardAxis::Trees));
+        assert_eq!(ShardAxis::parse("grid"), Some(ShardAxis::Grid));
+        assert_eq!(ShardAxis::parse(ShardAxis::Grid.name()), Some(ShardAxis::Grid));
         assert_eq!(ShardAxis::parse("nope"), None);
+        // Grid is deliberately not in the 1-D sweep set
+        assert!(!ShardAxis::ALL.contains(&ShardAxis::Grid));
+    }
+
+    #[test]
+    fn grid_factorizations_cover_and_clamp() {
+        // 8 cells over ≥8 trees: 1×8, 2×4, 4×2, 8×1
+        let grids = ShardGrid::factorizations(8, 10);
+        assert_eq!(grids.len(), 4);
+        for g in &grids {
+            assert_eq!(g.total(), 8);
+        }
+        assert!(grids.contains(&ShardGrid::new(2, 4)));
+        assert!(grids.contains(&ShardGrid::new(8, 1)));
+        // the tree side clamps to the ensemble: 8 cells over 4 trees
+        // loses the 1×8 shape but keeps the 2×4 the ISSUE example wants
+        let clamped = ShardGrid::factorizations(8, 4);
+        assert!(clamped.iter().all(|g| g.tree_shards <= 4));
+        assert!(clamped.contains(&ShardGrid::new(2, 4)));
+        assert!(!clamped.contains(&ShardGrid::new(1, 8)));
+        // primes only factor trivially
+        let prime = ShardGrid::factorizations(7, 16);
+        assert!(prime.iter().all(|g| g.is_trivial()));
+        // degenerate inputs
+        assert_eq!(ShardGrid::factorizations(1, 1), vec![ShardGrid::new(1, 1)]);
+        assert!(ShardGrid::new(1, 1).is_trivial());
+        assert!(!ShardGrid::new(2, 2).is_trivial());
+        assert_eq!(ShardGrid::new(2, 4).to_string(), "2r×4t");
     }
 
     #[test]

@@ -32,15 +32,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::backend::shard::{self, split_trees, weighted_chunks, ShardAxis, ShardTask};
+use crate::backend::shard::{
+    self, split_trees, weighted_chunks, ShardAxis, ShardTask, CHUNKS_PER_SHARD,
+};
 use crate::backend::{self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardObserver};
 use crate::gbdt::Model;
 use crate::util::error::{Error, Result};
-
-/// How many row chunks per shard the rows-axis queues are cut into:
-/// finer chunks mean prompter abort on failure and better balance when
-/// devices run at different speeds, at a small per-chunk dispatch cost.
-const CHUNKS_PER_SHARD: usize = 4;
 
 /// Weight of the newest per-chunk throughput sample in the per-shard
 /// EWMA (the rest stays on the running estimate).
@@ -93,6 +90,11 @@ impl ShardedBackend {
         let shards = match axis {
             ShardAxis::Rows => shards.max(1),
             ShardAxis::Trees => shards.clamp(1, model.trees.len().max(1)),
+            ShardAxis::Grid => {
+                return Err(crate::anyhow!(
+                    "grid topologies are executed by GridBackend, not ShardedBackend"
+                ))
+            }
         };
         if let ShardAxis::Rows = axis {
             // row shards execute rows/(shards·CHUNKS_PER_SHARD)-row
@@ -116,6 +118,7 @@ impl ShardedBackend {
         let sub_models: Vec<Arc<Model>> = match axis {
             ShardAxis::Rows => (0..shards).map(|_| Arc::clone(model)).collect(),
             ShardAxis::Trees => split_trees(model, shards).into_iter().map(Arc::new).collect(),
+            ShardAxis::Grid => unreachable!("rejected above"),
         };
         // build the inner instances concurrently, one per thread — setup
         // (packing, device client + executable compilation) is the
@@ -140,6 +143,10 @@ impl ShardedBackend {
         base_score: f32,
     ) -> ShardedBackend {
         assert!(!inner.is_empty(), "sharded backend needs ≥1 shard");
+        assert!(
+            !matches!(axis, ShardAxis::Grid),
+            "grid topologies are executed by GridBackend, not ShardedBackend"
+        );
         ShardedBackend {
             kind_name: inner[0].name(),
             num_features: inner[0].num_features(),
@@ -201,8 +208,21 @@ impl ShardedBackend {
                     idx += 1;
                     keep
                 });
-                // indices shifted: measured throughputs no longer line up
-                *self.tput.lock().unwrap() = vec![None; self.inner.len()];
+                // survivors keep their measured EWMAs, remapped to their
+                // shifted indices — the devices behind them are unchanged,
+                // and wiping the estimates here sent chunk sizing back to
+                // the cold-start equal split on every quarantine
+                {
+                    let mut t = self.tput.lock().unwrap();
+                    let old = std::mem::take(&mut *t);
+                    *t = old
+                        .into_iter()
+                        .enumerate()
+                        .filter(|(i, _)| !targets.contains(i))
+                        .map(|(_, v)| v)
+                        .collect();
+                    debug_assert_eq!(t.len(), self.inner.len());
+                }
                 self.last_failed.lock().unwrap().clear();
                 self.caps = caps_over(&self.inner, self.axis);
                 self.quarantined += targets.len();
@@ -229,6 +249,7 @@ impl ShardedBackend {
                 self.observer = observer;
                 Ok(targets.len())
             }
+            ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
         }
     }
 
@@ -252,10 +273,45 @@ impl ShardedBackend {
         )?;
         let quarantined = self.quarantined;
         let observer = self.observer.take();
+        // row-axis survivors keep their identity across the rebuild (the
+        // first n instances replace the first n, all over the full
+        // model), so their measured throughput estimates carry over —
+        // only the freshly added shards start cold. Tree-axis estimates
+        // describe sub-ensembles the re-split just dissolved, and the
+        // tree axis never consumes them, so they are left behind.
+        let old_tput = if matches!(self.axis, ShardAxis::Rows) {
+            Some(self.tput.lock().unwrap().clone())
+        } else {
+            None
+        };
         *self = rebuilt;
         self.quarantined = quarantined;
         self.observer = observer;
+        if let Some(old) = old_tput {
+            let mut t = self.tput.lock().unwrap();
+            for (slot, prev) in t.iter_mut().zip(old) {
+                if prev.is_some() {
+                    *slot = prev;
+                }
+            }
+        }
         Ok(self.inner.len().saturating_sub(n))
+    }
+
+    /// Append one pre-built shard instance — the grid executor's
+    /// cache-friendly hot-add path, restoring a tree slice's row
+    /// replicas without rebuilding the survivors. Existing shards keep
+    /// their indices and throughput estimates; the new shard starts
+    /// cold. Row-axis only (tree-axis widths come from the ensemble
+    /// split and must go through the rebuild recipe).
+    pub fn push_backend(&mut self, b: Box<dyn ShapBackend>) {
+        assert!(
+            matches!(self.axis, ShardAxis::Rows),
+            "push_backend is a row-axis operation"
+        );
+        self.inner.push(b);
+        self.tput.lock().unwrap().push(None);
+        self.caps = caps_over(&self.inner, self.axis);
     }
 
     fn observe(&self, shard: usize, rows: usize, started: Instant) {
@@ -306,6 +362,11 @@ impl ShardedBackend {
             let t0 = Instant::now();
             match f(self.inner[0].as_ref(), x, rows) {
                 Ok(out) => {
+                    // the fast path must feed the EWMA too: a service
+                    // dominated by 1-row explains otherwise never
+                    // calibrates shard 0's throughput estimate and the
+                    // weighted split stays at cold-start equal shares
+                    self.learn(0, rows, t0);
                     self.observe(0, rows, t0);
                     return Ok(out);
                 }
@@ -397,7 +458,6 @@ impl ShardedBackend {
     where
         F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
     {
-        let stride = task.stride(self.num_groups, self.num_features);
         let n = self.inner.len();
         self.last_failed.lock().unwrap().clear();
         if n == 1 {
@@ -413,57 +473,20 @@ impl ShardedBackend {
                 }
             }
         }
-        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
-        let partials = Mutex::new(vec![None::<Vec<f32>>; n]);
-        std::thread::scope(|scope| {
-            for (si, b) in self.inner.iter().enumerate() {
-                let (errs, partials) = (&errs, &partials);
-                let (f, this) = (&f, &*self);
-                let b = b.as_ref();
-                scope.spawn(move || {
-                    let t0 = Instant::now();
-                    match f(b, x, rows) {
-                        Ok(vals) if vals.len() == rows * stride => {
-                            this.observe(si, rows, t0);
-                            partials.lock().unwrap()[si] = Some(vals);
-                        }
-                        Ok(vals) => {
-                            errs.lock().unwrap().push(crate::anyhow!(
-                                "shard {si}: expected {} output floats, got {}",
-                                rows * stride,
-                                vals.len()
-                            ));
-                            this.last_failed.lock().unwrap().push(si);
-                        }
-                        Err(e) => {
-                            errs.lock().unwrap().push(e.context(format!("shard {si}")));
-                            this.last_failed.lock().unwrap().push(si);
-                        }
-                    }
-                });
-            }
-        });
-        let errs = errs.into_inner().unwrap();
-        if !errs.is_empty() {
-            return Err(aggregate(errs));
-        }
-        let mut acc = vec![0.0f32; rows * stride];
-        for partial in partials.into_inner().unwrap() {
-            let partial = partial.expect("no error ⇒ every shard produced output");
-            for (a, v) in acc.iter_mut().zip(&partial) {
-                *a += v;
-            }
-        }
-        shard::correct_base(
-            &mut acc,
-            task,
-            n,
-            self.base_score,
+        let units: Vec<&dyn ShapBackend> = self.inner.iter().map(|b| b.as_ref()).collect();
+        run_additive(
+            &units,
+            x,
             rows,
+            task,
             self.num_groups,
             self.num_features,
-        );
-        Ok(acc)
+            self.base_score,
+            "shard",
+            &|si, t0| self.observe(si, rows, t0),
+            &|si| self.last_failed.lock().unwrap().push(si),
+            &f,
+        )
     }
 
     fn run<F>(&self, x: &[f32], rows: usize, task: ShardTask, f: F) -> Result<Vec<f32>>
@@ -475,6 +498,7 @@ impl ShardedBackend {
                 self.run_rows(x, rows, task.stride(self.num_groups, self.num_features), f)
             }
             ShardAxis::Trees => self.run_trees(x, rows, task, f),
+            ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
         }
     }
 }
@@ -513,6 +537,7 @@ fn caps_over(inner: &[Box<dyn ShapBackend>], axis: ShardAxis) -> BackendCaps {
             .iter()
             .map(|b| b.caps().rows_per_s)
             .fold(f64::INFINITY, f64::min),
+        ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
     };
     BackendCaps {
         supports_interactions,
@@ -523,7 +548,9 @@ fn caps_over(inner: &[Box<dyn ShapBackend>], axis: ShardAxis) -> BackendCaps {
 }
 
 /// Build one backend instance per (sub-)model, each on its own thread.
-fn build_concurrently(
+/// Shared with the grid executor, whose row-replica groups are built the
+/// same way (several instances over one `Arc<Model>`).
+pub(crate) fn build_concurrently(
     sub_models: &[Arc<Model>],
     kind: BackendKind,
     cfg: &BackendConfig,
@@ -554,8 +581,80 @@ fn build_concurrently(
         .collect()
 }
 
+/// The additive fan-out shared by the tree axis and the grid's slice
+/// merge: every unit runs the full batch concurrently, outputs are
+/// length-validated, summed in index order (bit-identical association
+/// for both callers — pinned by the grid parity tests) and the
+/// `(n − 1) · base_score` surplus removed. `label` names a failing unit
+/// in errors ("shard" / "tree slice"); `on_ok` observes each successful
+/// unit's wall time; `on_fail` records failure attribution for the
+/// quarantine path — including units that returned a malformed output
+/// length, which must still be quarantinable.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_additive<F>(
+    units: &[&dyn ShapBackend],
+    x: &[f32],
+    rows: usize,
+    task: ShardTask,
+    num_groups: usize,
+    num_features: usize,
+    base_score: f32,
+    label: &str,
+    on_ok: &(dyn Fn(usize, Instant) + Sync),
+    on_fail: &(dyn Fn(usize) + Sync),
+    f: &F,
+) -> Result<Vec<f32>>
+where
+    F: Fn(&dyn ShapBackend, &[f32], usize) -> Result<Vec<f32>> + Sync,
+{
+    let stride = task.stride(num_groups, num_features);
+    let n = units.len();
+    let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+    let partials = Mutex::new(vec![None::<Vec<f32>>; n]);
+    std::thread::scope(|scope| {
+        for (si, unit) in units.iter().enumerate() {
+            let (errs, partials) = (&errs, &partials);
+            let b: &dyn ShapBackend = *unit;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                match f(b, x, rows) {
+                    Ok(vals) if vals.len() == rows * stride => {
+                        on_ok(si, t0);
+                        partials.lock().unwrap()[si] = Some(vals);
+                    }
+                    Ok(vals) => {
+                        errs.lock().unwrap().push(crate::anyhow!(
+                            "{label} {si}: expected {} output floats, got {}",
+                            rows * stride,
+                            vals.len()
+                        ));
+                        on_fail(si);
+                    }
+                    Err(e) => {
+                        errs.lock().unwrap().push(e.context(format!("{label} {si}")));
+                        on_fail(si);
+                    }
+                }
+            });
+        }
+    });
+    let errs = errs.into_inner().unwrap();
+    if !errs.is_empty() {
+        return Err(aggregate(errs));
+    }
+    let mut acc = vec![0.0f32; rows * stride];
+    for partial in partials.into_inner().unwrap() {
+        let partial = partial.expect("no error ⇒ every unit produced output");
+        for (a, v) in acc.iter_mut().zip(&partial) {
+            *a += v;
+        }
+    }
+    shard::correct_base(&mut acc, task, n, base_score, rows, num_groups, num_features);
+    Ok(acc)
+}
+
 /// One error per failed shard, folded into a single aggregate.
-fn aggregate(mut errs: Vec<Error>) -> Error {
+pub(crate) fn aggregate(mut errs: Vec<Error>) -> Error {
     if errs.len() == 1 {
         return errs.pop().unwrap();
     }
@@ -609,6 +708,14 @@ impl ShapBackend for ShardedBackend {
 
     fn quarantine(&mut self, failed: &[usize]) -> Result<usize> {
         self.quarantine_shards(failed)
+    }
+
+    fn quarantine_remaps_survivors(&self) -> bool {
+        // row-axis quarantine only drops instances: each survivor is the
+        // same device shifted down in index. The tree axis rebuilds the
+        // survivors over a fresh ensemble split, so old per-shard
+        // history describes slices that no longer exist.
+        matches!(self.axis, ShardAxis::Rows)
     }
 
     fn hot_add(&mut self, target: usize) -> Result<usize> {

@@ -11,8 +11,40 @@
 //! quantity the prepared-model cache is supposed to protect. Metrics
 //! present on one side only are ignored (benches evolve; the baseline
 //! refresh on main catches the report shape up).
+//!
+//! A throughput metric may be a plain number or a `{min, median}`
+//! **variance band** over repeated runs (`bench::band_json`, ROADMAP
+//! "perf baseline variance bands"). Bands gate the current *median*
+//! against the baseline *min* — the most forgiving reading of the
+//! baseline's own noise — so the tolerance can tighten without flaking
+//! on runner variance. Plain numbers are one-sample bands, and the two
+//! forms compare against each other, so a baseline written before a
+//! bench grew bands keeps gating.
 
 use crate::util::Json;
+
+/// A throughput reading: `min == median` for plain numeric leaves.
+#[derive(Clone, Copy, Debug)]
+struct Band {
+    min: f64,
+    median: f64,
+}
+
+/// Read a throughput leaf as a band: a number, or an object carrying
+/// numeric `min` and `median`. Anything else is not a leaf (e.g. a
+/// `steady_rows_per_s: {cpu, accel}` grouping) and keeps recursing.
+fn band_of(j: &Json) -> Option<Band> {
+    match j {
+        Json::Num(v) => Some(Band { min: *v, median: *v }),
+        Json::Obj(map) => match (map.get("min"), map.get("median")) {
+            (Some(Json::Num(min)), Some(Json::Num(median))) => {
+                Some(Band { min: *min, median: *median })
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
 
 /// One metric whose current value regressed past the tolerance.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,6 +96,24 @@ fn is_throughput_key(path: &str) -> bool {
 }
 
 fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Comparison) {
+    if is_throughput_key(path) {
+        // leaf comparison first (numbers and {min, median} bands, in
+        // any combination) — band objects must not recurse, or their
+        // min/median members would be compared as two separate metrics
+        if let (Some(b), Some(c)) = (band_of(base), band_of(cur)) {
+            if b.min.is_finite() && c.median.is_finite() && b.min > 0.0 {
+                out.compared += 1;
+                if c.median < b.min * (1.0 - tolerance) {
+                    out.regressions.push(Regression {
+                        metric: path.to_string(),
+                        baseline: b.min,
+                        current: c.median,
+                    });
+                }
+            }
+            return;
+        }
+    }
     match (base, cur) {
         (Json::Obj(b), Json::Obj(c)) => {
             for (k, bv) in b {
@@ -78,18 +128,6 @@ fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Compariso
             // at different sweep lengths overlap on their common prefix
             for (i, (bv, cv)) in b.iter().zip(c).enumerate() {
                 walk(bv, cv, &format!("{path}[{i}]"), tolerance, out);
-            }
-        }
-        (Json::Num(b), Json::Num(c)) if is_throughput_key(path) => {
-            if b.is_finite() && c.is_finite() && *b > 0.0 {
-                out.compared += 1;
-                if *c < *b * (1.0 - tolerance) {
-                    out.regressions.push(Regression {
-                        metric: path.to_string(),
-                        baseline: *b,
-                        current: *c,
-                    });
-                }
             }
         }
         _ => {}
@@ -149,6 +187,33 @@ mod tests {
         let cmp = compare_reports(&base2, &slow, 0.2);
         assert_eq!(cmp.compared, 1, "only the throughput leaf compares");
         assert!(cmp.is_pass());
+    }
+
+    #[test]
+    fn variance_bands_gate_current_median_against_baseline_min() {
+        // band vs band: the gate reads baseline.min and current.median
+        let base = Json::parse(r#"{"s": {"rows_per_s": {"min": 800.0, "median": 1000.0}}}"#)
+            .unwrap();
+        let ok = Json::parse(r#"{"s": {"rows_per_s": {"min": 100.0, "median": 700.0}}}"#)
+            .unwrap();
+        let cmp = compare_reports(&base, &ok, 0.2);
+        assert_eq!(cmp.compared, 1, "a band is ONE metric, not two");
+        assert!(cmp.is_pass(), "median 700 ≥ min 800 × 0.8 = 640");
+        let bad = Json::parse(r#"{"s": {"rows_per_s": {"min": 100.0, "median": 600.0}}}"#)
+            .unwrap();
+        let cmp = compare_reports(&base, &bad, 0.2);
+        assert!(!cmp.is_pass(), "median 600 < 640");
+        assert_eq!(cmp.regressions[0].baseline, 800.0);
+        assert_eq!(cmp.regressions[0].current, 600.0);
+        // mixed forms stay comparable: a pre-band scalar baseline gates
+        // a banded current report, and vice versa
+        let scalar_base = Json::parse(r#"{"s": {"rows_per_s": 1000.0}}"#).unwrap();
+        let cmp = compare_reports(&scalar_base, &ok, 0.2);
+        assert_eq!(cmp.compared, 1);
+        assert!(!cmp.is_pass(), "median 700 < scalar 1000 × 0.8");
+        let cmp = compare_reports(&base, &scalar_base, 0.2);
+        assert_eq!(cmp.compared, 1);
+        assert!(cmp.is_pass(), "scalar 1000 ≥ min 800 × 0.8");
     }
 
     #[test]

@@ -103,6 +103,21 @@ pub fn write_json_report(
         .map_err(|e| crate::anyhow!("writing report {}: {e}", path.display()))
 }
 
+/// A `{min, median}` variance band over repeated measurements of one
+/// metric (ROADMAP "perf baseline variance bands"). Reports written
+/// with bands let `bench-compare` gate the current *median* against the
+/// baseline *min* — runner noise widens the band instead of flaking the
+/// gate, so the tolerance can stay tight. Non-finite samples are
+/// dropped; an empty sample set collapses to zeros (ignored by the
+/// comparison, which skips non-positive baselines).
+pub fn band_json(samples: &[f64]) -> Json {
+    let mut v: Vec<f64> = samples.iter().copied().filter(|s| s.is_finite()).collect();
+    v.sort_by(f64::total_cmp);
+    let min = v.first().copied().unwrap_or(0.0);
+    let median = if v.is_empty() { 0.0 } else { v[v.len() / 2] };
+    Json::obj(vec![("min", Json::from(min)), ("median", Json::from(median))])
+}
+
 /// Format seconds with sensible precision.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -130,6 +145,18 @@ mod tests {
         let mut t = Table::new(&["model", "time"]);
         t.row(vec!["covtype-small".into(), "0.1s".into()]);
         t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn band_json_orders_and_guards() {
+        let b = band_json(&[300.0, 100.0, 200.0]);
+        assert_eq!(b.get("min").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(b.get("median").unwrap().as_f64().unwrap(), 200.0);
+        // non-finite samples are dropped, empties collapse to zero
+        let b = band_json(&[f64::NAN, 50.0]);
+        assert_eq!(b.get("min").unwrap().as_f64().unwrap(), 50.0);
+        let b = band_json(&[]);
+        assert_eq!(b.get("median").unwrap().as_f64().unwrap(), 0.0);
     }
 
     #[test]

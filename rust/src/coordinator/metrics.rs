@@ -213,12 +213,34 @@ impl Metrics {
     }
 
     /// Drop all per-shard counters. Called by the executor whenever the
-    /// shard topology changes (quarantine, hot-add, replan rebuild):
-    /// shard indices shift, so retained samples would attribute one
-    /// device's history to another — both in the stats snapshot and in
-    /// the throughput seeding derived from it.
+    /// shard topology is *rebuilt* (tree-axis quarantine, hot-add,
+    /// replan rebuild): shard indices change meaning, so retained
+    /// samples would attribute one device's history to another — both
+    /// in the stats snapshot and in the throughput seeding derived from
+    /// it.
     pub fn reset_shard_window(&self) {
         self.per_shard.lock().unwrap().clear();
+    }
+
+    /// Remap the per-shard counters after a quarantine that removed the
+    /// given shard indices but kept every survivor's identity (row-axis
+    /// and grid-replica quarantines): survivor `i` becomes
+    /// `i − |{removed < i}|`, the removed shards' samples are dropped.
+    /// Without the remap, throughput seeding read per-shard samples at
+    /// their pre-quarantine keys and attributed a dead device's
+    /// latencies to whichever survivor inherited its index; keeping the
+    /// (shifted) survivor history also means seeding does not
+    /// cold-start after every quarantine.
+    pub fn remap_shards(&self, removed: &[usize]) {
+        let mut map = self.per_shard.lock().unwrap();
+        let old = std::mem::take(&mut *map);
+        for (idx, c) in old {
+            if removed.contains(&idx) {
+                continue;
+            }
+            let shift = removed.iter().filter(|&&r| r < idx).count();
+            map.insert(idx - shift, c);
+        }
     }
 
     /// Drop every backend's windowed `(rows, latency)` samples, keeping
@@ -448,6 +470,42 @@ mod tests {
         let host = &m.backend_counters()["host"];
         assert!(host.samples().is_empty(), "post-reset batch is a first batch");
         assert_eq!(host.first_batch_samples().len(), 2, "first-batch window is retained");
+    }
+
+    #[test]
+    fn remap_shards_shifts_survivors_and_drops_the_dead() {
+        // regression (index-aligned seeding): shards 0/1/2 record
+        // distinct throughputs; quarantining shard 1 must shift shard
+        // 2's history to index 1 — NOT leave it keyed at 2, where the
+        // seeding would attribute it to a shard that no longer exists —
+        // and must drop the dead shard's samples entirely
+        let m = Metrics::new();
+        m.record_shard_batch(0, 100, Duration::from_millis(100)); // 1000 rows/s
+        m.record_shard_batch(1, 100, Duration::from_millis(10)); // dead: 10000 rows/s
+        m.record_shard_batch(2, 100, Duration::from_millis(200)); // 500 rows/s
+        m.remap_shards(&[1]);
+        let counters = m.shard_counters();
+        assert_eq!(counters.len(), 2);
+        assert!(counters.contains_key(&0) && counters.contains_key(&1));
+        let tputs = m.observations().shard_throughputs();
+        assert_eq!(tputs.len(), 2);
+        assert!((tputs[0].1 - 1000.0).abs() < 1.0, "shard 0 untouched");
+        assert!(
+            (tputs[1].1 - 500.0).abs() < 1.0,
+            "old shard 2's history now seeds index 1, got {}",
+            tputs[1].1
+        );
+        // removing multiple indices shifts by the count below each key
+        let m = Metrics::new();
+        for s in 0..5 {
+            m.record_shard_batch(s, 10 * (s + 1), Duration::from_millis(10));
+        }
+        m.remap_shards(&[0, 3]);
+        let counters = m.shard_counters();
+        assert_eq!(counters.len(), 3);
+        assert_eq!(counters[&0].rows, 20, "old 1 → 0");
+        assert_eq!(counters[&1].rows, 30, "old 2 → 1");
+        assert_eq!(counters[&2].rows, 50, "old 4 → 2");
     }
 
     #[test]

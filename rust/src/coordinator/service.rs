@@ -52,7 +52,6 @@ use std::time::{Duration, Instant};
 use crate::anyhow;
 use crate::backend::{
     self, BackendConfig, BackendKind, CostEstimate, Plan, Planner, ShapBackend, ShardAxis,
-    ShardedBackend,
 };
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
@@ -508,31 +507,20 @@ fn desired_plans(planner: &Planner, ctx: &AdaptiveCtx) -> Vec<Plan> {
             // the pinned kind is not a planner candidate (e.g. compiled
             // out): try the build anyway so the caller sees the real
             // construction error instead of "no backend available"
-            plans.push(Plan {
-                kind,
-                shards: ctx.devices,
-                axis: ctx.pinned_axis.unwrap_or(ShardAxis::Rows),
-                est_latency_s: f64::INFINITY,
-            });
+            plans.push(Plan::fallback(kind, ctx.devices, ctx.pinned_axis));
         }
     }
     plans
 }
 
-/// Build the backend for one concrete plan.
+/// Build the backend for one concrete plan (grids route to the grid
+/// executor, simple multi-shard plans to `ShardedBackend`).
 fn build_plan(
     model: &Arc<Model>,
     bcfg: &BackendConfig,
     plan: &Plan,
 ) -> Result<Box<dyn ShapBackend>> {
-    if plan.shards > 1 {
-        Ok(Box::new(ShardedBackend::build(model, plan.kind, bcfg, plan.shards, plan.axis)?))
-    } else {
-        let mut one = bcfg.clone();
-        one.devices = 1;
-        one.shard_axis = None;
-        backend::build(model, plan.kind, &one)
-    }
+    backend::build_for_plan(model, bcfg, plan)
 }
 
 /// Build the best constructible plan, filtering auto-mode candidates
@@ -578,7 +566,19 @@ fn try_quarantine(backend: &mut dyn ShapBackend, metrics: &Metrics) -> bool {
     match backend.quarantine(&failed) {
         Ok(removed) if removed > 0 => {
             metrics.record_quarantine(removed);
-            reset_measurement_windows(metrics);
+            if backend.quarantine_remaps_survivors() {
+                // survivors kept their identity, only their indices
+                // shifted: remap the per-shard windows to the new
+                // indices so throughput seeding stays aligned with its
+                // devices (clearing them cold-started chunk sizing, and
+                // seeding from unshifted keys attributed a dead device's
+                // latencies to a survivor). The whole-batch line still
+                // changes with the topology, so it is dropped.
+                metrics.remap_shards(&failed);
+                metrics.reset_backend_samples();
+            } else {
+                reset_measurement_windows(metrics);
+            }
             true
         }
         _ => false,
@@ -650,11 +650,11 @@ impl ProbeBackoff {
 /// The planner's cost lines are per backend *instance*, but a sharded
 /// executor's whole-batch samples measure the sharded line — feeding
 /// them to `recalibrate` would divide the parallelism out twice (once
-/// in the measurement, once in `sharded_cost`). Remap: unsharded
-/// batches calibrate directly; row-axis shard chunks are per-instance
-/// executions of the full model, so they pool under the backend's
-/// name; tree-axis samples measure sub-ensemble slices, which fit no
-/// per-instance line and are dropped.
+/// in the measurement, once in the planner's layout cost). Remap:
+/// unsharded batches calibrate directly; row-axis shard chunks are
+/// per-instance executions of the full model, so they pool under the
+/// backend's name; tree-axis and grid samples measure sub-ensemble
+/// slices, which fit no per-instance line and are dropped.
 fn calibration_observations(
     obs: &crate::backend::Observations,
     plan: &Plan,
@@ -730,8 +730,13 @@ fn recalibrate_step(
         // at the current plan (nothing better is constructible), adopt
         // the first candidate that builds and can serve the pipeline
         for want in desired_plans(planner, ctx) {
-            let differs =
-                want.kind != plan.kind || want.shards != plan.shards || want.axis != plan.axis;
+            // grid dims count as plan identity too: an 8-cell grid can
+            // re-factorize (4r×2t → 2r×4t) without changing kind,
+            // shard count or axis, and must still be adoptable
+            let differs = want.kind != plan.kind
+                || want.shards != plan.shards
+                || want.axis != plan.axis
+                || want.grid != plan.grid;
             if !differs {
                 break;
             }
@@ -775,6 +780,12 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
         ("shards", Json::from(plan.shards)),
         ("axis", Json::from(plan.axis.name())),
         ("est_latency_s", Json::from(plan.est_latency_s)),
+    ];
+    if let Some(g) = plan.grid {
+        fields.push(("row_shards", Json::from(g.row_shards)));
+        fields.push(("tree_shards", Json::from(g.tree_shards)));
+    }
+    fields.extend(vec![
         ("describe", Json::from(backend.describe())),
         (
             "calibration_samples",
@@ -784,7 +795,7 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
             "first_batch_samples",
             Json::from(planner.calibration_first_samples(plan.kind)),
         ),
-    ];
+    ]);
     if let Some(prior) = planner.prior(plan.kind) {
         fields.push(("prior", cost_json(&prior)));
     }

@@ -17,8 +17,10 @@
 //!
 //! Every SHAP execution goes through the `backend::ShapBackend` trait;
 //! `--backend auto` lets the crossover-aware planner pick, and
-//! `--devices N` shards any backend across N device instances (row- or
-//! tree-axis, `--shard-axis auto` lets the planner choose the axis).
+//! `--devices N` shards any backend across N device instances
+//! (`--shard-axis rows|trees|grid`; `auto` lets the planner choose —
+//! including rows×trees grids like 2×4 when 8 devices meet a 4-tree
+//! model and neither simple axis can use them all).
 //!
 //! The planner starts from a-priori cost constants and self-tunes:
 //! `backends --calibrated` micro-measures every constructible backend
@@ -68,7 +70,8 @@ fn main() {
 }
 
 const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo|bench-compare> [options]
-multi-device: --devices N shards execution; --shard-axis auto|rows|trees picks the split
+multi-device: --devices N shards execution; --shard-axis auto|rows|trees|grid picks the split
+  (grid = tree slices × row replicas, for topologies where one axis saturates)
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
   and persists learned constants next to the model (--calibration <path|none>)
 perf CI: bench-compare --baseline a.json --current b.json [--tolerance 0.2] gates throughput
@@ -112,7 +115,7 @@ fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
         "auto" => Ok(None),
         s => ShardAxis::parse(s)
             .map(Some)
-            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|rows|trees)")),
+            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|rows|trees|grid)")),
     }
 }
 
@@ -141,7 +144,9 @@ fn build_backend(
     match args.get_str("backend", default)? {
         "auto" => {
             let (plan, b) = backend::build_auto(model, cfg)?;
-            let layout = if plan.shards > 1 {
+            let layout = if let Some(g) = plan.grid {
+                format!(", {g}-grid")
+            } else if plan.shards > 1 {
                 format!(", {}×{}-sharded", plan.shards, plan.axis.name())
             } else {
                 String::new()
@@ -226,12 +231,19 @@ fn print_plan_table(planner: &Planner) {
         "axis",
         "est latency(s)",
     ]);
-    for rows in [1usize, 16, 64, 256, 1024, 4096, 16384] {
+    // 4 sits in the grid regime (1 < rows < devices) where neither
+    // simple axis can use a wide topology — keep it in the sweep so
+    // `backends --devices 8` shows the nested plan when it wins
+    for rows in [1usize, 4, 16, 64, 256, 1024, 4096, 16384] {
         let plan = planner.choose(rows);
+        let shards = match plan.grid {
+            Some(g) => g.to_string(),
+            None => plan.shards.to_string(),
+        };
         t.row(vec![
             rows.to_string(),
             plan.kind.name().into(),
-            plan.shards.to_string(),
+            shards,
             plan.axis.name().into(),
             format!("{:.5}", plan.est_latency_s),
         ]);

@@ -8,10 +8,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use gputreeshap::backend::shard::weighted_chunks;
+use gputreeshap::backend::shard::{split_trees, weighted_chunks};
 use gputreeshap::backend::{
-    self, calibrate, BackendCaps, BackendConfig, BackendKind, CostEstimate, ModelShape,
-    Observations, Planner, RecursiveBackend, ShapBackend, ShardAxis, ShardedBackend,
+    self, calibrate, BackendCaps, BackendConfig, BackendKind, CostEstimate, GridBackend,
+    ModelShape, Observations, Planner, RecursiveBackend, ShapBackend, ShardAxis, ShardGrid,
+    ShardedBackend,
 };
 use gputreeshap::bench::zoo;
 use gputreeshap::coordinator::{BackendFactory, ServiceConfig, ShapService};
@@ -434,6 +435,213 @@ fn tree_axis_quarantine_rebuilds_over_survivors_on_every_zoo_model() {
             &format!("{}: after hot-add", entry.name),
         );
     }
+}
+
+#[test]
+fn quarantine_preserves_surviving_shards_throughput_estimates() {
+    // regression: row-axis quarantine wiped ALL measured throughput
+    // EWMAs (and grow_to's full rebuild discarded them too), sending
+    // chunk sizing back to cold-start equal splits after every
+    // quarantine — survivors must keep their measurements, remapped to
+    // their shifted indices
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 24.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let cfg = BackendConfig { threads: 1, rows_hint: rows, ..Default::default() };
+    let oracle = RecursiveBackend::new(model.clone(), 1).contributions(&x, rows).unwrap();
+
+    let mut sharded =
+        ShardedBackend::build(&model, BackendKind::Recursive, &cfg, 3, ShardAxis::Rows)
+            .unwrap();
+    sharded.set_shard_throughputs(&[(0, 111.0), (1, 2222.0), (2, 333.0)]);
+    assert_eq!(sharded.quarantine_shards(&[0]).unwrap(), 1);
+    assert_eq!(sharded.shards(), 2);
+    assert!(sharded.quarantine_remaps_survivors(), "row axis keeps survivor identity");
+    let tput = sharded.shard_throughput_estimates();
+    assert_eq!(
+        tput,
+        vec![Some(2222.0), Some(333.0)],
+        "survivor EWMAs must shift down with their shards, not reset"
+    );
+    // hot-add back to 4: the two survivors keep their estimates, the
+    // freshly added shards start cold
+    assert_eq!(sharded.grow_to(4).unwrap(), 2);
+    let tput = sharded.shard_throughput_estimates();
+    assert_eq!(tput.len(), 4);
+    assert_eq!(tput[0], Some(2222.0), "grow_to must not discard survivor estimates");
+    assert_eq!(tput[1], Some(333.0));
+    assert_eq!((tput[2], tput[3]), (None, None), "new shards start cold");
+    // and output stays correct through the whole cycle
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), oracle);
+}
+
+#[test]
+fn single_shard_fast_path_feeds_the_throughput_ewma() {
+    // regression: the `n == 1 || rows <= 1` fast path never called
+    // learn(), so a service dominated by 1-row explains never updated
+    // shard 0's EWMA and the weighted split stayed uncalibrated forever
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let cfg = BackendConfig { threads: 1, rows_hint: rows, ..Default::default() };
+
+    // n == 1: a whole batch through the single shard must measure it
+    let one = ShardedBackend::build(&model, BackendKind::Recursive, &cfg, 1, ShardAxis::Rows)
+        .unwrap();
+    assert!(one.shard_throughput_estimates()[0].is_none());
+    one.contributions(&x, rows).unwrap();
+    assert!(
+        one.shard_throughput_estimates()[0].is_some(),
+        "the single-shard fast path must feed the EWMA"
+    );
+
+    // rows == 1 on a multi-shard topology: shard 0 serves it and learns
+    let two = ShardedBackend::build(&model, BackendKind::Recursive, &cfg, 2, ShardAxis::Rows)
+        .unwrap();
+    two.contributions(&x[..m], 1).unwrap();
+    let tput = two.shard_throughput_estimates();
+    assert!(tput[0].is_some(), "the 1-row fast path must feed shard 0's EWMA");
+}
+
+// ---------------------------------------------------------------------------
+// grid topology: replica quarantine, slice death, cache-aware hot-add
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grid_replica_kill_mid_stream_quarantines_the_cell() {
+    // a live mid-stream failure in one grid cell: the call fails naming
+    // the flat cell index, quarantine drops just that replica (the
+    // slice's survivor keeps serving), and the topology stays correct
+    let (model, data) = small_zoo_model();
+    if model.trees.len() < 2 {
+        return;
+    }
+    let m = model.num_features;
+    let rows = 32.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).contributions(&x, rows).unwrap();
+    let close = |got: &[f32], what: &str| {
+        assert_eq!(got.len(), oracle.len(), "{what}");
+        for (i, (a, b)) in oracle.iter().zip(got).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                "{what}: idx {i}: {a} vs {b}"
+            );
+        }
+    };
+
+    let subs: Vec<Arc<gputreeshap::gbdt::Model>> =
+        split_trees(&model, 2).into_iter().map(Arc::new).collect();
+    let dead = Arc::new(AtomicBool::new(false));
+    let group = |sub: &Arc<gputreeshap::gbdt::Model>, flaky: bool| {
+        let a: Box<dyn ShapBackend> = Box::new(RecursiveBackend::new(sub.clone(), 1));
+        let b: Box<dyn ShapBackend> = if flaky {
+            Box::new(FlakyBackend {
+                inner: Box::new(RecursiveBackend::new(sub.clone(), 1)),
+                dead: dead.clone(),
+            })
+        } else {
+            Box::new(RecursiveBackend::new(sub.clone(), 1))
+        };
+        ShardedBackend::from_backends(vec![a, b], ShardAxis::Rows, sub.base_score)
+    };
+    // 2 slices × 2 replicas; the flaky cell is slice 1, replica 1 →
+    // flat index 3
+    let mut grid = GridBackend::from_groups(
+        vec![group(&subs[0], false), group(&subs[1], true)],
+        model.base_score,
+    );
+    assert_eq!(grid.shard_count(), 4);
+    close(&grid.contributions(&x, rows).unwrap(), "healthy grid");
+
+    dead.store(true, Ordering::Relaxed);
+    let mut failure = None;
+    for _ in 0..50 {
+        match grid.contributions(&x, rows) {
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+            Ok(v) => close(&v, "a successful call must be complete and correct"),
+        }
+    }
+    let err = failure.expect("the dead cell must eventually take a chunk and fail the call");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("device lost") && msg.contains("tree slice 1"), "{msg}");
+    assert_eq!(grid.failed_shards(), vec![3], "flat cell index = slice offset + replica");
+
+    let removed = grid.quarantine(&[3]).unwrap();
+    assert_eq!(removed, 1);
+    assert_eq!(grid.shard_count(), 3);
+    assert_eq!(grid.tree_slices(), 2, "the slice survives on its remaining replica");
+    assert!(grid.quarantine_remaps_survivors(), "replica drop keeps cell identity");
+    close(&grid.contributions(&x, rows).unwrap(), "after cell quarantine");
+    assert!(grid.describe().contains("quarantined"), "{}", grid.describe());
+
+    // the last replica of a slice cannot be dropped without a rebuild
+    // recipe (from_groups topologies have none)
+    let err = grid.quarantine(&[2]).unwrap_err();
+    assert!(format!("{err:#}").contains("recipe"), "{err:#}");
+}
+
+#[test]
+fn grid_slice_death_rebuilds_and_hot_add_restores_from_the_cache() {
+    let (model, data) = small_zoo_model();
+    if model.trees.len() < 2 {
+        return;
+    }
+    let m = model.num_features;
+    let rows = 16.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let cfg = BackendConfig { threads: 1, rows_hint: rows, ..Default::default() };
+
+    let mut grid =
+        GridBackend::build(&model, BackendKind::Host, &cfg, ShardGrid::new(2, 2)).unwrap();
+    assert_eq!(grid.shard_count(), 4);
+    let out0 = grid.contributions(&x, rows).unwrap();
+
+    // replica drop: slice sums are unchanged (the surviving replica
+    // computes identical per-row values), so the output is bit-identical
+    assert_eq!(grid.quarantine(&[1]).unwrap(), 1);
+    assert_eq!((grid.shard_count(), grid.tree_slices()), (3, 2));
+    assert_eq!(grid.contributions(&x, rows).unwrap(), out0);
+
+    // cache-aware hot-add: the refilled replica is built over the
+    // slice's existing sub-model Arc, so the slice's prepared entry is
+    // reused — it still shows exactly ONE packed build
+    let entry = Arc::clone(grid.groups()[0].prepared().expect("host exposes its entry"));
+    assert_eq!(grid.hot_add(4).unwrap(), 1);
+    assert_eq!(grid.shard_count(), 4);
+    assert_eq!(
+        entry.stats().packed_builds,
+        1,
+        "replica hot-add must hit the slice's prepared entry, not re-pack"
+    );
+    assert_eq!(grid.contributions(&x, rows).unwrap(), out0);
+
+    // slice death: both replicas of slice 0 fail → the ensemble
+    // re-splits over the surviving slice (2 replicas × full model),
+    // still correct at the coarser width
+    assert_eq!(grid.quarantine(&[0, 1]).unwrap(), 2);
+    assert_eq!(grid.tree_slices(), 1);
+    assert!(!grid.quarantine_remaps_survivors(), "slice death rebuilds the topology");
+    let after = grid.contributions(&x, rows).unwrap();
+    assert_eq!(after.len(), out0.len());
+    for (i, (a, b)) in out0.iter().zip(&after).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+            "after slice death idx {i}: {a} vs {b}"
+        );
+    }
+
+    // hot-add re-splits back to the planned 2×2 grid; the leaf-balanced
+    // split is deterministic, so the rebuilt grid is bit-identical to
+    // the original topology's output
+    assert!(grid.hot_add(4).unwrap() >= 1);
+    assert_eq!((grid.shard_count(), grid.tree_slices()), (4, 2));
+    assert_eq!(grid.contributions(&x, rows).unwrap(), out0);
 }
 
 #[test]

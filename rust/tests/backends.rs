@@ -13,7 +13,8 @@
 use std::sync::Arc;
 
 use gputreeshap::backend::{
-    self, BackendCaps, BackendConfig, BackendKind, ShapBackend, ShardAxis, ShardedBackend,
+    self, BackendCaps, BackendConfig, BackendKind, GridBackend, ShapBackend, ShardAxis,
+    ShardGrid, ShardedBackend,
 };
 use gputreeshap::bench::zoo;
 use gputreeshap::gbdt::ZooSize;
@@ -174,6 +175,143 @@ fn sharded_backend_matches_unsharded_on_every_zoo_model() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn grid_backend_matches_tree_sharded_bitwise_and_the_oracle() {
+    // grid parity on every (small) zoo model: a grid's per-slice sums
+    // come from the same leaf-balanced sub-ensembles as a tree-axis
+    // ShardedBackend at the same slice count, and its row replicas only
+    // repartition rows — so grid φ/Φ must be BIT-identical to the
+    // tree-sharded output, and agree with the unsharded oracle to the
+    // same tolerance the tree axis is held to
+    let mut rng = Rng::new(4096);
+    for entry in zoo::zoo_entries() {
+        if entry.size != ZooSize::Small {
+            continue; // the small grid covers every dataset shape cheaply
+        }
+        let (model, data) = zoo::build(&entry);
+        if model.trees.len() < 2 {
+            continue; // a grid needs ≥2 tree slices to be a grid
+        }
+        let m = model.num_features;
+        let groups = model.num_groups;
+        let rows = 6.min(data.rows);
+        let span = data.rows.saturating_sub(rows).max(1);
+        let start = rng.below(span as u64) as usize;
+        let x = data.features[start * m..(start + rows) * m].to_vec();
+        let model = Arc::new(model);
+        let cfg = BackendConfig {
+            threads: 1,
+            rows_hint: rows,
+            with_interactions: true,
+            ..Default::default()
+        };
+        let check_interactions = m <= 64;
+
+        for kind in [BackendKind::Recursive, BackendKind::Host] {
+            let oracle = {
+                let mut one = cfg.clone();
+                one.devices = 1;
+                backend::build(&model, kind, &one).unwrap()
+            };
+            let want_phi = oracle.contributions(&x, rows).unwrap();
+            let want_inter =
+                check_interactions.then(|| oracle.interactions(&x, rows).unwrap());
+            for (r, t) in [(2usize, 2usize), (3, 2), (2, 3)] {
+                let t = t.min(model.trees.len());
+                if t < 2 {
+                    continue;
+                }
+                let what = format!("{} / {} / grid {r}r×{t}t", entry.name, kind.name());
+                let grid =
+                    GridBackend::build(&model, kind, &cfg, ShardGrid::new(r, t))
+                        .unwrap_or_else(|e| panic!("{what}: build: {e:#}"));
+                assert_eq!(grid.shard_count(), r * t, "{what}");
+                assert_eq!(grid.tree_slices(), t, "{what}");
+                assert!(grid.describe().starts_with("grid["), "{}", grid.describe());
+                // bit-identity with the tree axis at the same slice count
+                let trees_sharded =
+                    ShardedBackend::build(&model, kind, &cfg, t, ShardAxis::Trees)
+                        .unwrap_or_else(|e| panic!("{what}: tree build: {e:#}"));
+                let tree_phi = trees_sharded.contributions(&x, rows).unwrap();
+                let grid_phi = grid.contributions(&x, rows).unwrap();
+                assert_eq!(
+                    grid_phi, tree_phi,
+                    "{what}: grid φ must be bit-identical to the {t}-way tree axis"
+                );
+                // tolerance vs the unsharded oracle (fp association over
+                // slice sums, same bound the tree-axis tests use)
+                assert_eq!(grid_phi.len(), want_phi.len(), "{what}");
+                for (i, (a, b)) in want_phi.iter().zip(&grid_phi).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                        "{what}: φ idx {i}: {a} vs {b}"
+                    );
+                }
+                // local accuracy survives the grid: Σφ == f(x)
+                for row in 0..rows {
+                    let preds = model.predict_row_raw(&x[row * m..(row + 1) * m]);
+                    for g in 0..groups {
+                        let base = row * groups * (m + 1) + g * (m + 1);
+                        let total: f64 =
+                            grid_phi[base..base + m + 1].iter().map(|&v| v as f64).sum();
+                        assert!(
+                            (total - preds[g] as f64).abs() < 2e-3,
+                            "{what}: local accuracy row {row} group {g}"
+                        );
+                    }
+                }
+                if let Some(want) = &want_inter {
+                    let tree_inter = trees_sharded.interactions(&x, rows).unwrap();
+                    let grid_inter = grid.interactions(&x, rows).unwrap();
+                    assert_eq!(grid_inter, tree_inter, "{what}: Φ bit-identical to trees");
+                    for (i, (a, b)) in want.iter().zip(&grid_inter).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                            "{what}: Φ idx {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_predictions_match_the_oracle() {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.size == ZooSize::Small)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    if model.trees.len() < 2 {
+        return;
+    }
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+    let cfg = BackendConfig {
+        threads: 1,
+        rows_hint: rows,
+        with_predict: true,
+        ..Default::default()
+    };
+    let want = backend::build(&model, BackendKind::Recursive, &cfg)
+        .unwrap()
+        .predictions(&x, rows)
+        .unwrap();
+    let grid = GridBackend::build(&model, BackendKind::Recursive, &cfg, ShardGrid::new(2, 2))
+        .unwrap();
+    let got = grid.predictions(&x, rows).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 + 1e-4 * a.abs().max(b.abs()),
+            "prediction idx {i}: {a} vs {b}"
+        );
     }
 }
 

@@ -10,7 +10,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use gputreeshap::backend::{
-    self, BackendConfig, BackendKind, ShapBackend, ShardAxis, ShardedBackend,
+    self, BackendConfig, BackendKind, GridBackend, ShapBackend, ShardAxis, ShardGrid,
+    ShardedBackend,
 };
 use gputreeshap::bench::zoo;
 use gputreeshap::coordinator::{ServiceConfig, ShapService};
@@ -149,6 +150,76 @@ fn row_shards_share_one_prepared_entry() {
     );
     // and the sharded output is that same layout's output
     assert_eq!(sharded.contributions(&x, rows).unwrap(), want);
+}
+
+#[test]
+fn grid_holds_one_prepared_entry_per_tree_slice() {
+    // cache-aware nested sharding: an r×t grid must prepare exactly t
+    // sub-ensembles — all r row replicas of a slice are built from ONE
+    // shared sub-model Arc, so the registry dedupes the pack (t entries,
+    // not r·t packs)
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.size == ZooSize::Small && {
+            let (model, _) = zoo::build(e);
+            model.trees.len() >= 2
+        })
+        .expect("a small zoo model with ≥2 trees");
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+    let (r, t) = (3usize, 2usize);
+    let grid =
+        GridBackend::build(&model, BackendKind::Host, &cfg(), ShardGrid::new(r, t)).unwrap();
+    assert_eq!(grid.tree_slices(), t);
+    assert_eq!(grid.shard_count(), r * t);
+
+    // one distinct prepared entry per slice…
+    let entries: Vec<_> = grid
+        .groups()
+        .iter()
+        .map(|g| Arc::clone(g.prepared().expect("host backends expose their entry")))
+        .collect();
+    assert_eq!(entries.len(), t);
+    for i in 0..entries.len() {
+        for j in (i + 1)..entries.len() {
+            assert!(
+                !Arc::ptr_eq(&entries[i], &entries[j]),
+                "slices {i} and {j} must hold distinct sub-ensemble entries"
+            );
+        }
+    }
+    // …and each slice's entry packed exactly once despite r replicas
+    for (i, e) in entries.iter().enumerate() {
+        let stats = e.stats();
+        assert_eq!(
+            stats.packed_builds, 1,
+            "slice {i}: {r} replicas must share one pack, got {} builds",
+            stats.packed_builds
+        );
+        assert!(
+            stats.packed_hits >= (r - 1) as u64,
+            "slice {i}: the other {} replicas must hit the shared layout",
+            r - 1
+        );
+    }
+    // the shared entries serve correct output: grid φ within tolerance
+    // of the unsharded oracle (bit-identity vs the tree axis is pinned
+    // in rust/tests/backends.rs)
+    let want = backend::build(&model, BackendKind::Host, &cfg())
+        .unwrap()
+        .contributions(&x, rows)
+        .unwrap();
+    let got = grid.contributions(&x, rows).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+            "idx {i}: {a} vs {b}"
+        );
+    }
 }
 
 #[test]

@@ -173,9 +173,60 @@ fn sharded_service_serves_correct_values_and_shard_metrics() {
                 let js = snap.get("shards").unwrap();
                 assert!(js.get("shard0").is_some() && js.get("shard1").is_some());
             }
+            gputreeshap::backend::ShardAxis::Grid => unreachable!("not in this sweep"),
         }
         svc.shutdown();
     }
+}
+
+#[test]
+fn grid_sharded_service_serves_correct_values() {
+    // `serve --devices 4 --shard-axis grid`: the executor builds a
+    // GridBackend (2 tree slices × 2 row replicas over this 4-tree
+    // model), serves correct φ through it, and reports the grid shape
+    // under "planner" in the metrics snapshot
+    let (model, d) = setup();
+    assert!(model.trees.len() >= 2, "setup model must admit ≥2 tree slices");
+    let m = model.num_features;
+    let svc = ShapService::start(
+        model.clone(),
+        BackendKind::Host,
+        bcfg(),
+        ServiceConfig {
+            devices: 4,
+            shard_axis: Some(gputreeshap::backend::ShardAxis::Grid),
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rows = 10;
+    let x = d.features[..rows * m].to_vec();
+    let phis = svc.explain(x.clone(), rows).unwrap();
+    let oracle = RecursiveBackend::new(model.clone(), 1);
+    let want = oracle.contributions(&x, rows).unwrap();
+    assert_eq!(phis.len(), want.len());
+    for (a, b) in phis.iter().zip(&want) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+    let snap = svc.metrics.snapshot();
+    let planner = snap.get("planner").unwrap();
+    assert_eq!(planner.get("axis").unwrap().as_str().unwrap(), "grid");
+    let r = planner.get("row_shards").unwrap().as_usize().unwrap();
+    let t = planner.get("tree_shards").unwrap().as_usize().unwrap();
+    assert!(r > 1 && t > 1, "a pinned grid must be genuinely 2-D: {r}×{t}");
+    assert!(r * t <= 4);
+    assert!(
+        planner.get("describe").unwrap().as_str().unwrap().starts_with("grid["),
+        "{planner:?}"
+    );
+    // every cell executed: per-shard metrics cover r·t flat indices and
+    // each slice ran the full batch across its replicas
+    let shards = svc.metrics.shard_counters();
+    let shard_rows: u64 = shards.values().map(|c| c.rows).sum();
+    assert_eq!(shard_rows as usize, rows * t, "each slice runs the batch once");
+    svc.shutdown();
 }
 
 #[test]
