@@ -1,8 +1,16 @@
 //! Fig 4 reproduction: time-to-explain vs number of test rows for the
 //! cal_housing model, recursive CPU backend vs the best accelerated
-//! backend, locating the crossover where batch amortisation beats
-//! per-row recursion — and checking the planner's crossover-aware choice
-//! at batch sizes straddling its own predicted crossover.
+//! backend vs the Linear TreeShap kernel, locating the crossovers where
+//! batch amortisation (and the O(tree-size) per-row reformulation)
+//! beat per-row recursion — and checking the planner's crossover-aware
+//! choice at batch sizes straddling its own predicted crossover.
+//!
+//! **Third curve**: `BackendKind::Linear` is measured alongside the
+//! recursive baseline and the packed backend. Its per-row cost scales
+//! with path length instead of depth², so a depth sweep (fixed rows,
+//! growing tree depth) records where the linear kernel overtakes the
+//! packed host DP — the deep-ensemble win the Linear TreeShap paper
+//! claims.
 //!
 //! **Prep vs per-batch separation**: construction (path extraction +
 //! packing, through the prepared-model cache) is timed apart from
@@ -40,6 +48,7 @@ use std::sync::Arc;
 use gputreeshap::backend::{self, BackendConfig, BackendKind, Observations, Planner, ShapBackend};
 use gputreeshap::bench::{dump_record, fmt_secs, write_json_report, zoo, Table};
 use gputreeshap::cli::Args;
+use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::ZooSize;
 use gputreeshap::parallel::default_threads;
 use gputreeshap::util::{time_it, Json};
@@ -92,7 +101,12 @@ fn main() {
     }
     let (akind, accel) = accel.expect("no accelerated backend available");
     let accel_prep_s = accel.caps().setup_cost_s;
-    // head-to-head planner over exactly the two measured backends
+    // third curve: the Linear TreeShap kernel — built through the same
+    // prepared-model cache, so its summary-table prep is timed here too
+    let (linear, linear_build_s) =
+        time_it(|| backend::build(&model, BackendKind::Linear, &cfg).expect("linear backend"));
+    let linear_prep_s = linear.caps().setup_cost_s;
+    // head-to-head planners over exactly the measured backend pairs
     let mut duel = Planner::with_candidates(
         planner.shape,
         vec![
@@ -104,15 +118,35 @@ fn main() {
         ],
     );
     let predicted = duel.crossover_rows(BackendKind::Recursive, akind);
+    let mut lduel = Planner::with_candidates(
+        planner.shape,
+        vec![
+            (
+                BackendKind::Recursive,
+                backend::planner::estimate(BackendKind::Recursive, &planner.shape),
+            ),
+            (
+                BackendKind::Linear,
+                backend::planner::estimate(BackendKind::Linear, &planner.shape),
+            ),
+        ],
+    );
+    let predicted_linear = lduel.crossover_rows(BackendKind::Recursive, BackendKind::Linear);
     println!("accel backend: {}", accel.describe());
+    println!("linear backend: {}", linear.describe());
     println!(
-        "prep: cpu build {} | {} build {} (measured layout prep {})",
+        "prep: cpu build {} | {} build {} (measured layout prep {}) | linear build {} (summary prep {})",
         fmt_secs(cpu_build_s),
         akind.name(),
         fmt_secs(accel_build_s),
-        fmt_secs(accel_prep_s)
+        fmt_secs(accel_prep_s),
+        fmt_secs(linear_build_s),
+        fmt_secs(linear_prep_s)
     );
-    println!("prior predicted crossover: {predicted:?} rows\n");
+    println!(
+        "prior predicted crossover: cpu→{} {predicted:?} rows, cpu→linear {predicted_linear:?} rows\n",
+        akind.name()
+    );
 
     // first (prep-inclusive) batch vs steady state at the largest batch:
     // the cached-pipeline claim is that every batch after the first
@@ -162,11 +196,59 @@ fn main() {
          ({first_batch_s}s) on the packed backend"
     );
 
-    let mut table = Table::new(&["rows", "cpu", "accel", "cpu rows/s", "accel rows/s", "planner"]);
+    // same gate for the linear kernel: its summary tables are built once
+    // in the prepared-model cache, so every batch after the first costs
+    // only the O(tree-size) sweep.
+    let (_, linear_first_exec_s) =
+        time_it(|| std::hint::black_box(linear.contributions(xp, probe_rows).expect("linear")));
+    let linear_first_s = linear_prep_s + linear_first_exec_s;
+    obs.record_backend_first(BackendKind::Linear.name(), probe_rows, linear_first_s);
+    let mut linear_steady_min_s = f64::INFINITY;
+    let mut linear_steady_med_s = f64::INFINITY;
+    for attempt in 0..3 {
+        let mut steady_samples = [0.0f64; 3];
+        for s in steady_samples.iter_mut() {
+            let (_, dt) = time_it(|| {
+                std::hint::black_box(linear.contributions(xp, probe_rows).expect("linear"))
+            });
+            *s = dt;
+        }
+        steady_samples.sort_by(|a, b| a.total_cmp(b));
+        linear_steady_min_s = linear_steady_min_s.min(steady_samples[0]);
+        linear_steady_med_s = linear_steady_med_s.min(steady_samples[1]);
+        if linear_steady_min_s < linear_first_s {
+            break;
+        }
+        eprintln!("  [linear steady ≥ first batch on attempt {attempt} — re-measuring]");
+    }
+    println!(
+        "linear @ {probe_rows} rows: first batch (prep-inclusive) {} → steady {} ({:.2}x)",
+        fmt_secs(linear_first_s),
+        fmt_secs(linear_steady_med_s),
+        linear_first_s / linear_steady_med_s.max(1e-12)
+    );
+    assert!(
+        linear_steady_min_s < linear_first_s,
+        "steady-state ({linear_steady_min_s}s) must beat the prep-inclusive first batch \
+         ({linear_first_s}s) on the linear backend"
+    );
+
+    let mut table = Table::new(&[
+        "rows",
+        "cpu",
+        "accel",
+        "linear",
+        "cpu rows/s",
+        "accel rows/s",
+        "linear rows/s",
+        "planner",
+    ]);
     let mut crossover = None;
+    let mut linear_crossover = None;
     let mut steady_points: Vec<Json> = Vec::new();
     let mut last_cpu_rps = 0.0f64;
     let mut last_accel_rps = 0.0f64;
+    let mut last_linear_rps = 0.0f64;
     for &rows in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
         if rows > max_rows {
             break;
@@ -187,23 +269,37 @@ fn main() {
             obs.record_backend(akind.name(), rows, dt);
             dt
         });
+        let linear_t = median3(|| {
+            let t = std::time::Instant::now();
+            std::hint::black_box(linear.contributions(x, rows).expect("linear"));
+            let dt = t.elapsed().as_secs_f64();
+            obs.record_backend(BackendKind::Linear.name(), rows, dt);
+            dt
+        });
         if accel_t < cpu_t && crossover.is_none() {
             crossover = Some(rows);
         }
+        if linear_t < cpu_t && linear_crossover.is_none() {
+            linear_crossover = Some(rows);
+        }
         last_cpu_rps = rows as f64 / cpu_t;
         last_accel_rps = rows as f64 / accel_t;
+        last_linear_rps = rows as f64 / linear_t;
         table.row(vec![
             rows.to_string(),
             fmt_secs(cpu_t),
             fmt_secs(accel_t),
+            fmt_secs(linear_t),
             format!("{:.0}", last_cpu_rps),
             format!("{:.0}", last_accel_rps),
+            format!("{:.0}", last_linear_rps),
             planner.choose(rows).kind.name().to_string(),
         ]);
         steady_points.push(Json::obj(vec![
             ("rows", Json::from(rows)),
             ("cpu_s", Json::from(cpu_t)),
             ("accel_s", Json::from(accel_t)),
+            ("linear_s", Json::from(linear_t)),
         ]));
         dump_record(
             "fig4",
@@ -211,6 +307,7 @@ fn main() {
                 ("rows", Json::from(rows)),
                 ("cpu_s", Json::from(cpu_t)),
                 ("accel_s", Json::from(accel_t)),
+                ("linear_s", Json::from(linear_t)),
                 ("accel_backend", Json::from(akind.name())),
                 ("planner_choice", Json::from(planner.choose(rows).kind.name())),
             ],
@@ -236,6 +333,10 @@ fn main() {
         Some(r) => println!("measured crossover at ~{r} rows (paper: ~200 rows, V100 vs 40 cores)"),
         None => println!("no measured crossover on this testbed (see EXPERIMENTS.md)"),
     }
+    match linear_crossover {
+        Some(r) => println!("measured cpu→linear crossover at ~{r} rows"),
+        None => println!("no measured cpu→linear crossover on this testbed"),
+    }
 
     // close the loop: feed the sweep's samples back into the duel
     // planner and report where the calibrated line model now puts the
@@ -255,15 +356,74 @@ fn main() {
         acc_cal.setup_s,
         duel.calibration_first_samples(akind)
     );
+    // the cpu-vs-linear duel closes the same loop on the third curve
+    lduel.recalibrate(&obs);
+    let linear_calibrated = lduel.crossover_rows(BackendKind::Recursive, BackendKind::Linear);
+    println!("calibrated predicted cpu→linear crossover: {linear_calibrated:?} rows");
     dump_record(
         "fig4_calibration",
         vec![
             ("prior_crossover", predicted.map(Json::from).unwrap_or(Json::Null)),
             ("measured_crossover", crossover.map(Json::from).unwrap_or(Json::Null)),
             ("calibrated_crossover", calibrated.map(Json::from).unwrap_or(Json::Null)),
+            ("linear_prior_crossover", predicted_linear.map(Json::from).unwrap_or(Json::Null)),
+            (
+                "linear_measured_crossover",
+                linear_crossover.map(Json::from).unwrap_or(Json::Null),
+            ),
+            (
+                "linear_calibrated_crossover",
+                linear_calibrated.map(Json::from).unwrap_or(Json::Null),
+            ),
             ("accel_backend", Json::from(akind.name())),
         ],
     );
+
+    // depth sweep: fixed batch, growing tree depth. The recursive and
+    // packed-DP kernels pay depth² per path (permutation weights / the
+    // quadratic DP), the linear kernel pays depth × quadrature points —
+    // the gap this sweep records is the Linear TreeShap deep-ensemble
+    // claim. Models are tiny (20 rounds) and disk-cached so the smoke
+    // configuration stays fast.
+    let sweep_rows = probe_rows.min(64).max(1);
+    let mut depth_points: Vec<Json> = Vec::new();
+    let mut dtable = Table::new(&["depth", "host rows/s", "linear rows/s", "linear/host"]);
+    for &depth in &[3usize, 6, 10, 14] {
+        let spec = SynthSpec::cal_housing(0.02);
+        let (dmodel, ddata) = zoo::build_custom(&format!("cal_housing-d{depth}"), &spec, 20, depth);
+        let dm = dmodel.num_features;
+        let rows = sweep_rows.min(ddata.rows);
+        let x = &ddata.features[..rows * dm];
+        let dmodel = Arc::new(dmodel);
+        let dcfg = BackendConfig { threads, rows_hint: rows, ..Default::default() };
+        let host = backend::build(&dmodel, BackendKind::Host, &dcfg).expect("host backend");
+        let lin = backend::build(&dmodel, BackendKind::Linear, &dcfg).expect("linear backend");
+        // warm both so layout prep stays out of the throughput numbers
+        std::hint::black_box(host.contributions(x, rows).expect("host"));
+        std::hint::black_box(lin.contributions(x, rows).expect("linear"));
+        let host_t = median3(|| {
+            time_it(|| std::hint::black_box(host.contributions(x, rows).expect("host"))).1
+        });
+        let lin_t = median3(|| {
+            time_it(|| std::hint::black_box(lin.contributions(x, rows).expect("linear"))).1
+        });
+        let host_rps = rows as f64 / host_t;
+        let lin_rps = rows as f64 / lin_t;
+        dtable.row(vec![
+            depth.to_string(),
+            format!("{host_rps:.0}"),
+            format!("{lin_rps:.0}"),
+            format!("{:.2}x", lin_rps / host_rps.max(1e-12)),
+        ]);
+        depth_points.push(Json::obj(vec![
+            ("depth", Json::from(depth)),
+            ("rows", Json::from(rows)),
+            ("host_rows_per_s", Json::from(host_rps)),
+            ("linear_rows_per_s", Json::from(lin_rps)),
+        ]));
+    }
+    println!("\ndepth sweep ({sweep_rows} rows max, host packed DP vs linear):");
+    dtable.print();
 
     if let Some(path) = json_path {
         let report = Json::obj(vec![
@@ -275,6 +435,8 @@ fn main() {
                     ("cpu_build_s", Json::from(cpu_build_s)),
                     ("accel_build_s", Json::from(accel_build_s)),
                     ("accel_layout_s", Json::from(accel_prep_s)),
+                    ("linear_build_s", Json::from(linear_build_s)),
+                    ("linear_layout_s", Json::from(linear_prep_s)),
                 ]),
             ),
             (
@@ -285,12 +447,21 @@ fn main() {
                     ("steady_s", Json::from(steady_med_s)),
                 ]),
             ),
+            (
+                "first_vs_steady_linear",
+                Json::obj(vec![
+                    ("rows", Json::from(probe_rows)),
+                    ("first_batch_s", Json::from(linear_first_s)),
+                    ("steady_s", Json::from(linear_steady_med_s)),
+                ]),
+            ),
             ("steady", Json::Arr(steady_points)),
             (
                 "steady_rows_per_s",
                 Json::obj(vec![
                     ("cpu", Json::from(last_cpu_rps)),
                     ("accel", Json::from(last_accel_rps)),
+                    ("linear", Json::from(last_linear_rps)),
                 ]),
             ),
             (
@@ -301,6 +472,18 @@ fn main() {
                     ("calibrated", calibrated.map(Json::from).unwrap_or(Json::Null)),
                 ]),
             ),
+            (
+                "crossover_linear",
+                Json::obj(vec![
+                    ("prior", predicted_linear.map(Json::from).unwrap_or(Json::Null)),
+                    ("measured", linear_crossover.map(Json::from).unwrap_or(Json::Null)),
+                    (
+                        "calibrated",
+                        linear_calibrated.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+            ("depth_sweep", Json::Arr(depth_points)),
         ]);
         write_json_report(&path, "fig4", report).expect("write --json report");
         println!("json report merged into {}", path.display());

@@ -1,0 +1,105 @@
+//! The Linear TreeShap [`ShapBackend`]: exact φ in time linear in tree
+//! size (`shap::linear`), built from per-tree polynomial summaries
+//! cached in the prepared model. φ-only — `supports_interactions` is
+//! `false`, so `build_auto` routes Φ requests past it to a capable
+//! backend; predictions are served by raw tree routing.
+//!
+//! Construction goes through the prepared-model cache: the summary
+//! tables (interpolation grid, per-node cover ratios and heights) are
+//! built once per model and shared by every instance — row shards, grid
+//! replicas, executor rebuilds. The setup cost reported is the
+//! *measured* time to obtain them, which collapses to the cache-lookup
+//! cost on a warm rebuild.
+
+use std::sync::Arc;
+
+use crate::backend::{planner, prepared, BackendCaps, BackendKind, PreparedModel, ShapBackend};
+use crate::gbdt::Model;
+use crate::shap::linear::{self, LinearModel};
+use crate::util::error::Result;
+use crate::util::time_it;
+
+pub struct LinearBackend {
+    lm: Arc<LinearModel>,
+    model: Arc<Model>,
+    prep: Arc<PreparedModel>,
+    threads: usize,
+    caps: BackendCaps,
+}
+
+impl LinearBackend {
+    pub fn new(model: &Arc<Model>, threads: usize) -> LinearBackend {
+        LinearBackend::with_prepared(prepared::prepare(model), threads)
+    }
+
+    /// Construct over an existing prepared-model cache entry (the path
+    /// every `backend::build` takes; `new` is the one-model shorthand).
+    pub fn with_prepared(prep: Arc<PreparedModel>, threads: usize) -> LinearBackend {
+        let shape = prep.shape();
+        let (lm, setup_s) = time_it(|| prep.linear());
+        let est = planner::estimate(BackendKind::Linear, &shape);
+        LinearBackend {
+            lm,
+            model: Arc::clone(prep.model()),
+            prep,
+            threads,
+            caps: BackendCaps {
+                supports_interactions: false,
+                setup_cost_s: setup_s,
+                batch_overhead_s: est.batch_overhead_s,
+                rows_per_s: est.rows_per_s,
+            },
+        }
+    }
+}
+
+impl ShapBackend for LinearBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Linear.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.lm.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.lm.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(linear::shap_values(&self.lm, x, rows, self.threads))
+    }
+
+    fn interactions(&self, _x: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        Err(crate::anyhow!(
+            "backend 'linear' computes φ only; request interactions via --backend auto \
+             so a Φ-capable backend serves them"
+        ))
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let m = self.model.num_features;
+        let g = self.model.num_groups;
+        let mut out = Vec::with_capacity(rows * g);
+        for r in 0..rows {
+            out.extend(self.model.predict_row_raw(&x[r * m..(r + 1) * m]));
+        }
+        Ok(out)
+    }
+
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prep)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "linear[tree-summaries, {} interpolation points, {} threads]",
+            self.lm.points(),
+            self.threads
+        )
+    }
+}

@@ -6,13 +6,15 @@
 //!
 //! The coordinator, CLI, benches and parity tests all dispatch through
 //! this trait; no caller outside this module touches `host_kernel` or
-//! `ShapEngine` directly. Future algorithm backends (Fast TreeSHAP's
-//! precomputation variants, Linear TreeShap) slot in as additional
-//! [`BackendKind`]s with their own [`BackendCaps`].
+//! `ShapEngine` directly. Linear TreeShap's O(tree-size) φ kernel ships
+//! as [`BackendKind::Linear`]; further algorithm backends (Fast
+//! TreeSHAP's precomputation variants) slot in the same way, as
+//! additional [`BackendKind`]s with their own [`BackendCaps`].
 
 pub mod calibrate;
 pub mod grid;
 pub mod host;
+pub mod linear;
 pub mod planner;
 pub mod prepared;
 pub mod recursive;
@@ -31,6 +33,7 @@ use crate::util::error::Result;
 pub use calibrate::Observations;
 pub use grid::GridBackend;
 pub use host::HostPackedBackend;
+pub use linear::LinearBackend;
 pub use planner::{CostEstimate, ModelShape, Plan, Planner};
 pub use prepared::{prepare, PrepStats, PreparedModel};
 pub use recursive::RecursiveBackend;
@@ -142,6 +145,13 @@ pub enum BackendKind {
     Recursive,
     /// packed-path DP executed rust-native (`shap::host_kernel`)
     Host,
+    /// Linear TreeShap (`shap::linear`): exact φ in O(tree-size) per
+    /// row via per-tree polynomial summaries. φ **only** — its
+    /// [`BackendCaps::supports_interactions`] is `false`, so
+    /// [`build_auto`] skips it for Φ requests and routes them to a
+    /// Φ-capable backend; an explicit `--backend linear` interactions
+    /// call errs with that guidance.
+    Linear,
     /// AOT HLO artifacts over the warp-packed layout (PJRT)
     XlaWarp,
     /// AOT HLO artifacts over the padded-path layout (PJRT)
@@ -149,9 +159,10 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 4] = [
+    pub const ALL: [BackendKind; 5] = [
         BackendKind::Recursive,
         BackendKind::Host,
+        BackendKind::Linear,
         BackendKind::XlaWarp,
         BackendKind::XlaPadded,
     ];
@@ -160,25 +171,35 @@ impl BackendKind {
         match self {
             BackendKind::Recursive => "cpu",
             BackendKind::Host => "host",
+            BackendKind::Linear => "linear",
             BackendKind::XlaWarp => "xla",
             BackendKind::XlaPadded => "xla-padded",
         }
     }
 
+    /// Parse a backend name (case-insensitive; accepts the aliases the
+    /// CLI documents). `None` for unknown names — callers list the
+    /// valid set via [`BackendKind::name_list`] in their errors.
     pub fn parse(s: &str) -> Option<BackendKind> {
-        Some(match s {
+        Some(match s.to_ascii_lowercase().as_str() {
             "cpu" | "recursive" => BackendKind::Recursive,
             "host" => BackendKind::Host,
+            "linear" => BackendKind::Linear,
             "xla" | "warp" | "xla-warp" => BackendKind::XlaWarp,
             "xla-padded" | "padded" => BackendKind::XlaPadded,
             _ => return None,
         })
     }
 
+    /// The registered backend names, `|`-joined for CLI error messages.
+    pub fn name_list() -> String {
+        BackendKind::ALL.map(|k| k.name()).join("|")
+    }
+
     /// Is this kind present in the current binary?
     pub fn compiled_in(&self) -> bool {
         match self {
-            BackendKind::Recursive | BackendKind::Host => true,
+            BackendKind::Recursive | BackendKind::Host | BackendKind::Linear => true,
             BackendKind::XlaWarp | BackendKind::XlaPadded => cfg!(feature = "xla"),
         }
     }
@@ -277,6 +298,7 @@ pub fn build(
         BackendKind::Host => {
             Ok(Box::new(HostPackedBackend::with_prepared(prep, cfg.packing, cfg.threads)))
         }
+        BackendKind::Linear => Ok(Box::new(LinearBackend::with_prepared(prep, cfg.threads))),
         #[cfg(feature = "xla")]
         BackendKind::XlaWarp => Ok(Box::new(XlaWarpBackend::with_prepared(&prep, cfg)?)),
         #[cfg(feature = "xla")]
@@ -352,10 +374,14 @@ mod tests {
     fn kind_parse_roundtrip() {
         for k in BackendKind::ALL {
             assert_eq!(BackendKind::parse(k.name()), Some(k));
+            // parsing is case-insensitive
+            assert_eq!(BackendKind::parse(&k.name().to_ascii_uppercase()), Some(k));
         }
         assert_eq!(BackendKind::parse("recursive"), Some(BackendKind::Recursive));
         assert_eq!(BackendKind::parse("padded"), Some(BackendKind::XlaPadded));
+        assert_eq!(BackendKind::parse("Linear"), Some(BackendKind::Linear));
         assert_eq!(BackendKind::parse("nope"), None);
+        assert!(BackendKind::name_list().contains("linear"));
     }
 
     #[test]
@@ -366,6 +392,7 @@ mod tests {
         let kinds: Vec<BackendKind> = avail.iter().map(|(k, _)| *k).collect();
         assert!(kinds.contains(&BackendKind::Recursive));
         assert!(kinds.contains(&BackendKind::Host));
+        assert!(kinds.contains(&BackendKind::Linear));
         for (_, b) in &avail {
             assert_eq!(b.num_features(), model.num_features);
             assert_eq!(b.num_groups(), model.num_groups);

@@ -95,6 +95,14 @@ pub fn estimate(kind: BackendKind, s: &ModelShape) -> CostEstimate {
             batch_overhead_s: 1e-5,
             rows_per_s: 1.0 / (l * a * a * 15e-9),
         },
+        // Linear TreeShap: summary-table setup, per-row cost linear in
+        // depth (w, not a²) — overtakes the quadratic CPU kernels as
+        // trees deepen; calibration pins the constant empirically
+        BackendKind::Linear => CostEstimate {
+            setup_s: l * 4e-7,
+            batch_overhead_s: 1e-5,
+            rows_per_s: 1.0 / (l * w * 35e-9),
+        },
         // warp-packed accelerator: compile+upload setup, launch overhead
         // per batch, vectorised per-row marginal (linear in path length)
         BackendKind::XlaWarp => CostEstimate {

@@ -43,6 +43,7 @@ use std::sync::{Arc, Mutex, Weak};
 
 use crate::backend::planner::ModelShape;
 use crate::gbdt::Model;
+use crate::shap::linear::{self, LinearModel};
 use crate::shap::{
     expected_values_from_paths, model_paths, pack_model_from_paths, pad_model_from_paths,
     PackedModel, PaddedModel, Packing, Path,
@@ -61,7 +62,10 @@ pub struct PrepStats {
     /// padded-layout builds and reuses
     pub padded_builds: u64,
     pub padded_hits: u64,
-    /// total seconds spent building packed/padded layouts
+    /// Linear TreeShap summary-table builds and reuses
+    pub linear_builds: u64,
+    pub linear_hits: u64,
+    /// total seconds spent building packed/padded/linear layouts
     pub layout_s: f64,
 }
 
@@ -78,6 +82,8 @@ impl PrepStats {
         self.packed_hits += other.packed_hits;
         self.padded_builds += other.padded_builds;
         self.padded_hits += other.padded_hits;
+        self.linear_builds += other.linear_builds;
+        self.linear_hits += other.linear_hits;
         self.layout_s += other.layout_s;
     }
 }
@@ -105,6 +111,8 @@ pub struct PreparedModel {
     packed: Mutex<BTreeMap<&'static str, Arc<PackedModel>>>,
     /// lazily built padded layouts, one per element width
     padded: Mutex<BTreeMap<usize, Arc<PaddedModel>>>,
+    /// lazily built Linear TreeShap summary tables (one per model)
+    linear: Mutex<Option<Arc<LinearModel>>>,
     stats: Mutex<PrepStats>,
 }
 
@@ -136,6 +144,7 @@ impl PreparedModel {
             max_weights,
             packed: Mutex::new(BTreeMap::new()),
             padded: Mutex::new(BTreeMap::new()),
+            linear: Mutex::new(None),
             stats: Mutex::new(PrepStats { paths_s, ..PrepStats::default() }),
         }
     }
@@ -213,6 +222,28 @@ impl PreparedModel {
         }
         map.insert(width, Arc::clone(&pm));
         pm
+    }
+
+    /// The Linear TreeShap summary tables (per-tree cover ratios,
+    /// heights, and the interpolation grid), built on first request and
+    /// shared afterwards — one per model, reused by every row shard,
+    /// grid replica and executor rebuild.
+    pub fn linear(&self) -> Arc<LinearModel> {
+        let mut slot = self.linear.lock().unwrap();
+        if let Some(lm) = slot.as_ref() {
+            self.stats.lock().unwrap().linear_hits += 1;
+            return Arc::clone(lm);
+        }
+        let (lm, dt) = time_it(|| {
+            Arc::new(linear::summarize_model_with_expected(self.model.as_ref(), &self.expected))
+        });
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.linear_builds += 1;
+            s.layout_s += dt;
+        }
+        *slot = Some(Arc::clone(&lm));
+        lm
     }
 
     /// This entry's build/reuse counters.
@@ -299,6 +330,8 @@ pub fn registry_snapshot() -> crate::util::Json {
         ("packed_hits", Json::from(s.packed_hits as usize)),
         ("padded_builds", Json::from(s.padded_builds as usize)),
         ("padded_hits", Json::from(s.padded_hits as usize)),
+        ("linear_builds", Json::from(s.linear_builds as usize)),
+        ("linear_hits", Json::from(s.linear_hits as usize)),
         ("prep_s", Json::from(s.total_s())),
     ])
 }
@@ -349,6 +382,13 @@ mod tests {
         let q2 = prep.padded(w);
         assert!(Arc::ptr_eq(&q1, &q2));
         assert!(!Arc::ptr_eq(&q1, &prep.padded(w + 3)));
+        // linear summaries build once per model
+        let l1 = prep.linear();
+        let l2 = prep.linear();
+        assert!(Arc::ptr_eq(&l1, &l2), "linear summaries must be shared");
+        let s = prep.stats();
+        assert_eq!(s.linear_builds, 1);
+        assert!(s.linear_hits >= 1);
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //!
 //! Only throughput leaves are compared: absolute latencies vary with
 //! machine load far more than sustained rows/s, and throughput is the
-//! quantity the prepared-model cache is supposed to protect. Metrics
-//! present on one side only are ignored (benches evolve; the baseline
-//! refresh on main catches the report shape up).
+//! quantity the prepared-model cache is supposed to protect. Throughput
+//! metrics present on one side only don't gate, but they are *reported*
+//! — `new_metrics` (current only: a bench grew a config, e.g. the
+//! linear-backend fig4 curves) and `dropped_metrics` (baseline only: a
+//! config disappeared) — so the perf job log shows coverage changes
+//! instead of silently ignoring them until the next baseline refresh.
 //!
 //! A throughput metric may be a plain number or a `{min, median}`
 //! **variance band** over repeated runs (`bench::band_json`, ROADMAP
@@ -71,6 +74,12 @@ pub struct Comparison {
     /// throughput metrics present in both reports
     pub compared: usize,
     pub regressions: Vec<Regression>,
+    /// throughput metrics present only in the current report (a bench
+    /// grew a config); visible but not gating
+    pub new_metrics: Vec<String>,
+    /// throughput metrics present only in the baseline (a config
+    /// disappeared); visible but not gating
+    pub dropped_metrics: Vec<String>,
 }
 
 impl Comparison {
@@ -85,6 +94,8 @@ pub fn compare_reports(baseline: &Json, current: &Json, tolerance: f64) -> Compa
     let mut out = Comparison::default();
     walk(baseline, current, "", tolerance, &mut out);
     out.regressions.sort_by(|a, b| b.drop_fraction().total_cmp(&a.drop_fraction()));
+    out.new_metrics.sort();
+    out.dropped_metrics.sort();
     out
 }
 
@@ -93,6 +104,31 @@ fn is_throughput_key(path: &str) -> bool {
     // throughput (covers both `accel_rows_per_s` leaves and
     // `steady_rows_per_s: {cpu, accel}` groupings)
     path.contains("rows_per_s")
+}
+
+/// Collect the dotted paths of every throughput leaf under `j` into
+/// `out` — used for subtrees present on only one side of the
+/// comparison, where there is nothing to compare against but the
+/// coverage change should still be visible.
+fn collect_throughput(j: &Json, path: &str, out: &mut Vec<String>) {
+    if is_throughput_key(path) && band_of(j).is_some() {
+        out.push(path.to_string());
+        return;
+    }
+    match j {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                collect_throughput(v, &sub, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                collect_throughput(v, &format!("{path}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
 }
 
 fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Comparison) {
@@ -117,9 +153,16 @@ fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Compariso
     match (base, cur) {
         (Json::Obj(b), Json::Obj(c)) => {
             for (k, bv) in b {
-                if let Some(cv) = c.get(k) {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match c.get(k) {
+                    Some(cv) => walk(bv, cv, &sub, tolerance, out),
+                    None => collect_throughput(bv, &sub, &mut out.dropped_metrics),
+                }
+            }
+            for (k, cv) in c {
+                if !b.contains_key(k) {
                     let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
-                    walk(bv, cv, &sub, tolerance, out);
+                    collect_throughput(cv, &sub, &mut out.new_metrics);
                 }
             }
         }
@@ -128,6 +171,13 @@ fn walk(base: &Json, cur: &Json, path: &str, tolerance: f64, out: &mut Compariso
             // at different sweep lengths overlap on their common prefix
             for (i, (bv, cv)) in b.iter().zip(c).enumerate() {
                 walk(bv, cv, &format!("{path}[{i}]"), tolerance, out);
+            }
+            // the longer side's tail is a coverage change, not a gate
+            for (i, bv) in b.iter().enumerate().skip(c.len()) {
+                collect_throughput(bv, &format!("{path}[{i}]"), &mut out.dropped_metrics);
+            }
+            for (i, cv) in c.iter().enumerate().skip(b.len()) {
+                collect_throughput(cv, &format!("{path}[{i}]"), &mut out.new_metrics);
             }
         }
         _ => {}
@@ -214,6 +264,59 @@ mod tests {
         let cmp = compare_reports(&base, &scalar_base, 0.2);
         assert_eq!(cmp.compared, 1);
         assert!(cmp.is_pass(), "scalar 1000 ≥ min 800 × 0.8");
+    }
+
+    #[test]
+    fn one_sided_configs_surface_as_new_and_dropped() {
+        // the linear backend lands: current grows configs the baseline
+        // doesn't know — they must be visible, not silently skipped
+        let base = Json::parse(
+            r#"{"fig4": {"steady_rows_per_s": {"cpu": 1000.0, "accel": 5000.0},
+                         "legacy_rows_per_s": 42.0}}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"fig4": {"steady_rows_per_s": {"cpu": 1000.0, "accel": 5000.0,
+                                               "linear": 8000.0},
+                         "depth_sweep": [{"depth": 6, "linear_rows_per_s": 9000.0}]}}"#,
+        )
+        .unwrap();
+        let cmp = compare_reports(&base, &cur, 0.2);
+        assert!(cmp.is_pass(), "new/dropped configs never gate");
+        assert_eq!(cmp.compared, 2, "only cpu+accel exist on both sides");
+        assert_eq!(
+            cmp.new_metrics,
+            vec![
+                "fig4.depth_sweep[0].linear_rows_per_s".to_string(),
+                "fig4.steady_rows_per_s.linear".to_string(),
+            ]
+        );
+        assert_eq!(cmp.dropped_metrics, vec!["fig4.legacy_rows_per_s".to_string()]);
+        // bands count as one leaf on the one-sided paths too
+        let banded = Json::parse(r#"{"g_rows_per_s": {"min": 1.0, "median": 2.0}}"#).unwrap();
+        let cmp = compare_reports(&Json::parse("{}").unwrap(), &banded, 0.2);
+        assert_eq!(cmp.new_metrics, vec!["g_rows_per_s".to_string()]);
+    }
+
+    #[test]
+    fn array_tails_surface_as_new_and_dropped() {
+        let base = Json::parse(
+            r#"{"s": [{"rows_per_s": 100.0}, {"rows_per_s": 200.0}, {"rows_per_s": 300.0}]}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(r#"{"s": [{"rows_per_s": 100.0}]}"#).unwrap();
+        let cmp = compare_reports(&base, &cur, 0.2);
+        assert_eq!(cmp.compared, 1);
+        assert_eq!(
+            cmp.dropped_metrics,
+            vec!["s[1].rows_per_s".to_string(), "s[2].rows_per_s".to_string()]
+        );
+        let cmp = compare_reports(&cur, &base, 0.2);
+        assert_eq!(
+            cmp.new_metrics,
+            vec!["s[1].rows_per_s".to_string(), "s[2].rows_per_s".to_string()]
+        );
+        assert!(cmp.dropped_metrics.is_empty());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 
 use crate::data::{Dataset, SynthSpec};
-use crate::gbdt::{io, train, Model, TrainParams, ZooSize};
+use crate::gbdt::{io, train, Model, Objective, TrainParams, Tree, ZooSize};
 
 /// One zoo entry: dataset spec + size variant.
 #[derive(Clone, Debug)]
@@ -40,6 +40,69 @@ pub fn zoo_entries() -> Vec<ZooEntry> {
         }
     }
     out
+}
+
+/// Hand-built ensemble where one feature appears **multiple times on a
+/// single root→leaf path** — the case the trained zoo rarely produces
+/// but every kernel must merge correctly (the recursive algorithm's
+/// duplicate-merge, the packed layouts' path merge, and Linear
+/// TreeShap's telescoping add/subtract terms). Tree 1 repeats `f0`
+/// twice on two different paths; tree 2 splits on `f0` three times down
+/// one spine. Covers are consistent (parent = Σ children) so the
+/// cover-ratio probabilities are well-formed.
+pub fn repeated_feature_model() -> Model {
+    // tree 1:        f0 < 0.0            (100)
+    //              /          \
+    //        f1 < 0.5 (60)   f0 < 2.0 (40)   ← f0 again, right path
+    //        /       \         /     \
+    //  f0 < -1.0(25) leaf(35) leaf(30) leaf(10)  ← f0 again, left path
+    //    /    \
+    // leaf(10) leaf(15)
+    let mut t1 = Tree::new();
+    for _ in 0..9 {
+        t1.add_node();
+    }
+    let set_split = |t: &mut Tree, i: usize, f: i32, thr: f32, l: usize, r: usize, cov: f32| {
+        t.feature[i] = f;
+        t.threshold[i] = thr;
+        t.left[i] = l as i32;
+        t.right[i] = r as i32;
+        t.cover[i] = cov;
+    };
+    let set_leaf = |t: &mut Tree, i: usize, v: f32, cov: f32| {
+        t.value[i] = v;
+        t.cover[i] = cov;
+    };
+    set_split(&mut t1, 0, 0, 0.0, 1, 2, 100.0);
+    set_split(&mut t1, 1, 1, 0.5, 3, 4, 60.0);
+    set_split(&mut t1, 2, 0, 2.0, 5, 6, 40.0);
+    set_split(&mut t1, 3, 0, -1.0, 7, 8, 25.0);
+    set_leaf(&mut t1, 4, -0.7, 35.0);
+    set_leaf(&mut t1, 5, 1.3, 30.0);
+    set_leaf(&mut t1, 6, 2.1, 10.0);
+    set_leaf(&mut t1, 7, -1.8, 10.0);
+    set_leaf(&mut t1, 8, 0.4, 15.0);
+    // tree 2: a spine of three f0 splits on one root→leaf path
+    //   f0 < 1.0 (80) → f0 < 0.0 (50) → f0 < -1.0 (30) → leaves
+    let mut t2 = Tree::new();
+    for _ in 0..7 {
+        t2.add_node();
+    }
+    set_split(&mut t2, 0, 0, 1.0, 1, 2, 80.0);
+    set_split(&mut t2, 1, 0, 0.0, 3, 4, 50.0);
+    set_split(&mut t2, 3, 0, -1.0, 5, 6, 30.0);
+    set_leaf(&mut t2, 2, 0.9, 30.0);
+    set_leaf(&mut t2, 4, -0.3, 20.0);
+    set_leaf(&mut t2, 5, -1.1, 12.0);
+    set_leaf(&mut t2, 6, 0.6, 18.0);
+    Model {
+        trees: vec![t1, t2],
+        tree_group: vec![0, 0],
+        num_groups: 1,
+        num_features: 2,
+        base_score: 0.5,
+        objective: Objective::SquaredError,
+    }
 }
 
 /// A reduced-feature fashion_mnist stand-in for interaction benches:

@@ -6,7 +6,7 @@
 //! gputreeshap pack     --model model.gtsm
 //! gputreeshap backends --model model.gtsm --devices 4 --calibrated
 //! gputreeshap explain  --model model.gtsm --dataset cal_housing --rows 256 \
-//!                      --backend auto|cpu|host|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
+//!                      --backend auto|cpu|host|linear|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
 //! gputreeshap shap     …  (alias of explain)
 //! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto --devices 2
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
@@ -134,6 +134,12 @@ fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
     })
 }
 
+/// The error for an unrecognized `--backend` value: names every valid
+/// kind (parse is case-insensitive, so any casing of these works).
+fn unknown_backend(s: &str) -> gputreeshap::util::error::Error {
+    anyhow!("unknown backend '{s}' (auto|{})", BackendKind::name_list())
+}
+
 /// Resolve `--backend` (with a per-command default) into a built backend.
 fn build_backend(
     model: &Arc<Model>,
@@ -162,8 +168,7 @@ fn build_backend(
             ))
         }
         s => {
-            let kind = BackendKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown backend '{s}' (auto|cpu|host|xla|xla-padded)"))?;
+            let kind = BackendKind::parse(s).ok_or_else(|| unknown_backend(s))?;
             Ok((kind.name().to_string(), backend::build(model, kind, cfg)?))
         }
     }
@@ -480,8 +485,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (format!("auto→{}", kind.name()), svc)
         }
         s => {
-            let kind = BackendKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown backend '{s}' (auto|cpu|host|xla|xla-padded)"))?;
+            let kind = BackendKind::parse(s).ok_or_else(|| unknown_backend(s))?;
             (
                 kind.name().to_string(),
                 ShapService::start(model.clone(), kind, bcfg, cfg)?,
@@ -551,6 +555,14 @@ fn cmd_bench_compare(args: &Args) -> Result<()> {
         Json::parse(&current_text).map_err(|e| anyhow!("parsing {current_path}: {e:#}"))?;
 
     let cmp = compare_reports(&baseline, &current, tolerance);
+    // coverage changes are visible but never gate: the baseline refresh
+    // on main catches the report shape up
+    for m in &cmp.new_metrics {
+        println!("bench-compare: new metric (not in baseline): {m}");
+    }
+    for m in &cmp.dropped_metrics {
+        println!("bench-compare: dropped metric (baseline only): {m}");
+    }
     if cmp.compared == 0 {
         println!(
             "bench-compare: no shared throughput metrics between {baseline_path} and \

@@ -1,0 +1,562 @@
+//! Linear TreeShap (Bi et al., arXiv 2209.08192): exact φ in time
+//! **linear in tree size** via per-tree polynomial summaries, instead of
+//! the recursive algorithm's O(L·D²) EXTEND/UNWIND or the packed DP's
+//! per-path quadratic unwind.
+//!
+//! ## The polynomial view
+//!
+//! For a leaf whose merged path (duplicates merged as in
+//! [`crate::shap::path`]) carries unique features `S` with activation
+//! indicators `õ_g ∈ {0,1}` and cover ratios `z̃_g`, the recursive
+//! algorithm's per-leaf contribution to feature `f` is
+//!
+//! ```text
+//! Δφ_f = (õ_f − z̃_f) · Ψ_{m−1}( v · Π_{g∈S∖f} (õ_g·y + z̃_g) ),  m = |S|
+//! ```
+//!
+//! where `Ψ_d(Σ_k c_k y^k) = Σ_k c_k · k!(d−k)!/(d+1)!` sums the
+//! Shapley weights. Since `k!(d−k)!/(d+1)! = ∫₀¹ u^k(1−u)^{d−k} du`,
+//! substituting `s = 1−u` gives the integral form
+//!
+//! ```text
+//! Ψ_d(p) = ∫₀¹ s^d · p((1−s)/s) ds
+//! ```
+//!
+//! whose integrand is a degree-`d` polynomial in `s` — evaluated
+//! **exactly** by an N-point Gauss–Legendre rule on (0,1) for every
+//! `d ≤ N−1`. Polynomials are therefore represented by their values at
+//! the interpolation points `y_j = (1−s_j)/s_j`, and `Ψ_d` becomes an
+//! inner product with the positive weights `ω_d[j] = λ_j·s_j^d`. (A
+//! monomial-basis Vandermonde solve at the same points would be
+//! catastrophically ill-conditioned by depth ~12; the quadrature form
+//! never inverts anything.)
+//!
+//! Per-leaf degrees differ, so subtree sums are normalized with the
+//! exact identity `Ψ_{d+1}((y+1)·p) = Ψ_d(p)` — pointwise,
+//! `y_j + 1 = 1/s_j`, so padding a summary by `(y+1)^Δ` just shifts the
+//! `ω` row in use.
+//!
+//! ## Per-row sweep
+//!
+//! One DFS per (row, tree): descending an edge multiplies the running
+//! path product `C` by the edge factor `(õ·y + z̃)` (replacing a
+//! repeated feature's previous merged factor); a leaf emits `v·C`;
+//! unwinding folds child summaries into the parent padded to a common
+//! degree (`height` below) and accumulates each edge feature's φ via
+//! one `ω` inner product. A feature repeated along a path adds its
+//! fully-merged term at each occurrence and subtracts the
+//! ancestor-merged term recorded at descent — the terms telescope so
+//! only the deepest occurrence's correct contribution survives.
+//! Everything is O(nodes · N) per row per tree.
+//!
+//! Activation/NaN semantics mirror `shap::treeshap` exactly (the parity
+//! oracle): the hot child is `left` iff `!x.is_nan() && x < threshold`.
+
+use crate::gbdt::{Model, Tree};
+use crate::parallel;
+use crate::shap::path::expected_values;
+
+/// Row-independent summary of one tree: the flattened node arrays the
+/// per-row sweep walks, per-edge cover ratios, and per-node `height` —
+/// the polynomial degree of the node's subtree summary.
+pub struct LinearTree {
+    feature: Vec<i32>,
+    threshold: Vec<f32>,
+    left: Vec<i32>,
+    right: Vec<i32>,
+    value: Vec<f32>,
+    /// cover ratio of this node vs its parent (root: 1.0)
+    zfrac: Vec<f64>,
+    /// max over leaves below of the unique-feature count of the full
+    /// root→leaf path; equals that count at leaves
+    height: Vec<u32>,
+}
+
+impl LinearTree {
+    fn is_leaf(&self, i: usize) -> bool {
+        self.left[i] < 0
+    }
+
+    /// Single-leaf trees carry no edges: they contribute only to the
+    /// expected value and are skipped by the sweep.
+    fn is_stump(&self) -> bool {
+        self.is_leaf(0)
+    }
+}
+
+/// The precomputed Linear TreeShap state of one model: per-tree
+/// summaries plus the shared interpolation grid (`N` Gauss–Legendre
+/// points sized to the deepest unique path in the ensemble).
+pub struct LinearModel {
+    trees: Vec<LinearTree>,
+    tree_group: Vec<usize>,
+    pub num_features: usize,
+    pub num_groups: usize,
+    /// interpolation points / quadrature size
+    n: usize,
+    /// deepest node depth across trees (scratch sizing)
+    max_node_depth: usize,
+    /// interpolation points y_j = (1−s_j)/s_j
+    y: Vec<f64>,
+    /// ω table, row-major: omega[d·n + j] = λ_j·s_j^d, d = 0..n
+    omega: Vec<f64>,
+    /// padding powers, row-major: pad[k·n + j] = (y_j+1)^k, k = 0..=n
+    pad: Vec<f64>,
+    /// φ base values per group (E[f] incl. base_score)
+    expected: Vec<f64>,
+}
+
+impl LinearModel {
+    /// Number of interpolation points (= deepest unique path length).
+    pub fn points(&self) -> usize {
+        self.n
+    }
+
+    pub fn expected_values(&self) -> &[f64] {
+        &self.expected
+    }
+}
+
+/// Evaluate the Legendre polynomial `P_n` and its derivative at `x`.
+fn legendre(n: usize, x: f64) -> (f64, f64) {
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    let (mut p0, mut p1) = (1.0, x);
+    for k in 2..=n {
+        let p2 = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+        p0 = p1;
+        p1 = p2;
+    }
+    // (x² − 1)·P'_n = n·(x·P_n − P_{n−1}); roots are interior so x ≠ ±1
+    let dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, dp)
+}
+
+/// N-point Gauss–Legendre nodes and weights on (0, 1), exact for
+/// polynomials of degree ≤ 2N−1. Newton iteration from the classic
+/// Chebyshev initial guess; no external dependencies.
+pub fn gauss_legendre_01(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut s = vec![0.0f64; n];
+    let mut w = vec![0.0f64; n];
+    for (i, (si, wi)) in s.iter_mut().zip(w.iter_mut()).enumerate() {
+        let mut t = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        for _ in 0..64 {
+            let (p, dp) = legendre(n, t);
+            let dt = p / dp;
+            t -= dt;
+            if dt.abs() < 1e-16 {
+                break;
+            }
+        }
+        let (_, dp) = legendre(n, t);
+        // map (−1,1) → (0,1): node (t+1)/2, weight 2/((1−t²)dp²) halved
+        *si = 0.5 * (t + 1.0);
+        *wi = 1.0 / ((1.0 - t * t) * dp * dp);
+    }
+    (s, w)
+}
+
+/// Per-node `height`: the unique-feature count of the deepest full
+/// root→leaf path through each node. `counts` tracks occurrences of
+/// each feature on the current path so repeats don't inflate the count.
+fn heights(t: &Tree, node: usize, q: u32, counts: &mut [u32], out: &mut [u32]) -> u32 {
+    if t.is_leaf(node) {
+        out[node] = q;
+        return q;
+    }
+    let f = t.feature[node] as usize;
+    let q2 = q + u32::from(counts[f] == 0);
+    counts[f] += 1;
+    let hl = heights(t, t.left[node] as usize, q2, counts, out);
+    let hr = heights(t, t.right[node] as usize, q2, counts, out);
+    counts[f] -= 1;
+    out[node] = hl.max(hr);
+    out[node]
+}
+
+fn summarize_tree(t: &Tree, num_features: usize) -> LinearTree {
+    let n = t.num_nodes();
+    let mut zfrac = vec![1.0f64; n];
+    for i in 0..n {
+        if !t.is_leaf(i) {
+            let c = f64::from(t.cover[i]);
+            let (l, r) = (t.left[i] as usize, t.right[i] as usize);
+            zfrac[l] = f64::from(t.cover[l]) / c;
+            zfrac[r] = f64::from(t.cover[r]) / c;
+        }
+    }
+    let mut height = vec![0u32; n];
+    let mut counts = vec![0u32; num_features];
+    heights(t, 0, 0, &mut counts, &mut height);
+    LinearTree {
+        feature: t.feature.clone(),
+        threshold: t.threshold.clone(),
+        left: t.left.clone(),
+        right: t.right.clone(),
+        value: t.value.clone(),
+        zfrac,
+        height,
+    }
+}
+
+/// Build the Linear TreeShap summary of `model` with the φ base values
+/// supplied by the caller (the prepared-model cache passes its cached
+/// expectation so cached and uncached builds agree bit-for-bit).
+pub fn summarize_model_with_expected(model: &Model, expected: &[f64]) -> LinearModel {
+    let trees: Vec<LinearTree> = model
+        .trees
+        .iter()
+        .map(|t| summarize_tree(t, model.num_features))
+        .collect();
+    let n = trees.iter().map(|t| t.height[0] as usize).max().unwrap_or(0).max(1);
+    let (s, lambda) = gauss_legendre_01(n);
+    let y: Vec<f64> = s.iter().map(|&sj| (1.0 - sj) / sj).collect();
+    // ω rows: omega[d][j] = λ_j·s_j^d — all positive, magnitudes ≤ λ_j
+    let mut omega = vec![0.0f64; n * n];
+    for j in 0..n {
+        let mut p = lambda[j];
+        for d in 0..n {
+            omega[d * n + j] = p;
+            p *= s[j];
+        }
+    }
+    // padding powers (y_j+1)^k for degree normalization up the tree
+    let mut pad = vec![0.0f64; (n + 1) * n];
+    for j in 0..n {
+        let mut p = 1.0f64;
+        for k in 0..=n {
+            pad[k * n + j] = p;
+            p *= y[j] + 1.0;
+        }
+    }
+    LinearModel {
+        max_node_depth: model.max_depth(),
+        trees,
+        tree_group: model.tree_group.clone(),
+        num_features: model.num_features,
+        num_groups: model.num_groups,
+        n,
+        y,
+        omega,
+        pad,
+        expected: expected.to_vec(),
+    }
+}
+
+/// As [`summarize_model_with_expected`], computing the base values from
+/// the model (standalone entry point for tests and one-off callers).
+pub fn summarize_model(model: &Model) -> LinearModel {
+    summarize_model_with_expected(model, &expected_values(model))
+}
+
+/// Per-thread scratch for the sweep: the running path product `C`, one
+/// subtree-summary buffer per tree depth, and the per-feature merged
+/// `(o, z)` state of the current path (undone on unwind, so it stays
+/// clean across trees and rows).
+struct Scratch {
+    c: Vec<f64>,
+    bufs: Vec<Vec<f64>>,
+    feat: Vec<(f64, f64, bool)>,
+}
+
+impl Scratch {
+    fn new(lm: &LinearModel) -> Scratch {
+        Scratch {
+            c: vec![1.0; lm.n],
+            bufs: vec![vec![0.0; lm.n]; lm.max_node_depth + 2],
+            feat: vec![(1.0, 1.0, false); lm.num_features],
+        }
+    }
+}
+
+/// One DFS node visit: fills `scratch.bufs[depth]` with the node's
+/// degree-`height[node]` subtree summary and accumulates φ for every
+/// edge feature unwound beneath it.
+fn walk(
+    lt: &LinearTree,
+    lm: &LinearModel,
+    x: &[f32],
+    node: usize,
+    depth: usize,
+    scratch: &mut Scratch,
+    phi: &mut [f64],
+) {
+    let n = lm.n;
+    if lt.is_leaf(node) {
+        let v = f64::from(lt.value[node]);
+        let buf = &mut scratch.bufs[depth];
+        for j in 0..n {
+            buf[j] = v * scratch.c[j];
+        }
+        return;
+    }
+    scratch.bufs[depth][..n].fill(0.0);
+    let f = lt.feature[node] as usize;
+    let xv = x[f];
+    let hot_left = !xv.is_nan() && xv < lt.threshold[node];
+    let hn = lt.height[node] as usize;
+    let kids = [(lt.left[node] as usize, hot_left), (lt.right[node] as usize, !hot_left)];
+    for (child, hot) in kids {
+        let oe = f64::from(u8::from(hot));
+        let ze = lt.zfrac[child];
+        let (ob, zb, present) = scratch.feat[f];
+        // merged values over every occurrence of f down to this edge
+        let (om, zm) = if present { (ob * oe, zb * ze) } else { (oe, ze) };
+        // descend: swap f's factor in the path product (covers are
+        // positive, so o·y + z > 0 and the division is safe)
+        if present {
+            for j in 0..n {
+                scratch.c[j] *= (om * lm.y[j] + zm) / (ob * lm.y[j] + zb);
+            }
+        } else {
+            for j in 0..n {
+                scratch.c[j] *= om * lm.y[j] + zm;
+            }
+        }
+        scratch.feat[f] = (om, zm, true);
+        walk(lt, lm, x, child, depth + 1, scratch, phi);
+        // unwind: the child summary (degree h_c) yields this edge's φ
+        // share via one ω inner product; a repeated feature also
+        // subtracts the ancestor-merged term so occurrences telescope
+        let hc = lt.height[child] as usize;
+        let (head, tail) = scratch.bufs.split_at_mut(depth + 1);
+        let acc = &mut head[depth];
+        let child_buf = &tail[0];
+        let w = &lm.omega[(hc - 1) * n..hc * n];
+        let mut add = 0.0f64;
+        for j in 0..n {
+            add += child_buf[j] / (om * lm.y[j] + zm) * w[j];
+        }
+        phi[f] += (om - zm) * add;
+        if present {
+            let mut sub = 0.0f64;
+            for j in 0..n {
+                sub += child_buf[j] / (ob * lm.y[j] + zb) * w[j];
+            }
+            phi[f] -= (ob - zb) * sub;
+        }
+        // fold the child into this node's summary at degree h_n
+        let padrow = &lm.pad[(hn - hc) * n..(hn - hc + 1) * n];
+        for j in 0..n {
+            acc[j] += child_buf[j] * padrow[j];
+        }
+        // restore path state for the sibling
+        scratch.feat[f] = (ob, zb, present);
+        if present {
+            for j in 0..n {
+                scratch.c[j] *= (ob * lm.y[j] + zb) / (om * lm.y[j] + zm);
+            }
+        } else {
+            for j in 0..n {
+                scratch.c[j] /= om * lm.y[j] + zm;
+            }
+        }
+    }
+}
+
+/// SHAP values for a batch through the linear kernel: output
+/// `[rows × groups × (M+1)]` row-major, base value E[f] in slot M —
+/// the same layout as `treeshap::shap_values`.
+pub fn shap_values(lm: &LinearModel, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+    let m = lm.num_features;
+    let groups = lm.num_groups;
+    let stride = groups * (m + 1);
+    let mut out = vec![0.0f32; rows * stride];
+    parallel::parallel_for_rows(threads, &mut out, stride, 8, |range, chunk| {
+        let mut scratch = Scratch::new(lm);
+        let mut phis = vec![0.0f64; stride];
+        for (k, r) in range.enumerate() {
+            phis.fill(0.0);
+            let xr = &x[r * m..(r + 1) * m];
+            for (lt, &g) in lm.trees.iter().zip(&lm.tree_group) {
+                if lt.is_stump() {
+                    continue;
+                }
+                scratch.c.fill(1.0);
+                walk(lt, lm, xr, 0, 0, &mut scratch, &mut phis[g * (m + 1)..(g + 1) * (m + 1)]);
+            }
+            for g in 0..groups {
+                phis[g * (m + 1) + m] += lm.expected[g];
+            }
+            let dst = &mut chunk[k * stride..(k + 1) * stride];
+            for (d, s) in dst.iter_mut().zip(&phis) {
+                *d = *s as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+    use crate::shap::treeshap;
+
+    #[test]
+    fn gauss_legendre_integrates_monomials_exactly() {
+        for n in 1..=20usize {
+            let (s, w) = gauss_legendre_01(n);
+            assert!(s.iter().all(|&v| v > 0.0 && v < 1.0));
+            assert!(w.iter().all(|&v| v > 0.0));
+            // ∫₀¹ s^k ds = 1/(k+1), exact for k ≤ 2n−1
+            for k in 0..2 * n {
+                let q: f64 = s.iter().zip(&w).map(|(&sj, &wj)| wj * sj.powi(k as i32)).sum();
+                assert!(
+                    (q - 1.0 / (k + 1) as f64).abs() < 1e-13,
+                    "n={n} k={k}: {q} vs {}",
+                    1.0 / (k + 1) as f64
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quadrature_psi_matches_closed_form() {
+        // Ψ_d(Σ c_k y^k) = Σ c_k·k!(d−k)!/(d+1)! — check the ω inner
+        // product against the factorial formula for random coefficients
+        let n = 12usize;
+        let (s, lambda) = gauss_legendre_01(n);
+        let y: Vec<f64> = s.iter().map(|&sj| (1.0 - sj) / sj).collect();
+        let fact = |k: usize| (1..=k).map(|v| v as f64).product::<f64>();
+        let mut rng = crate::util::Rng::new(9);
+        for d in 0..n {
+            let coeffs: Vec<f64> = (0..=d).map(|_| rng.normal()).collect();
+            let want: f64 = coeffs
+                .iter()
+                .enumerate()
+                .map(|(k, c)| c * fact(k) * fact(d - k) / fact(d + 1))
+                .sum();
+            let got: f64 = (0..n)
+                .map(|j| {
+                    let p: f64 = coeffs
+                        .iter()
+                        .enumerate()
+                        .map(|(k, c)| c * y[j].powi(k as i32))
+                        .sum();
+                    lambda[j] * s[j].powi(d as i32) * p
+                })
+                .sum();
+            assert!((got - want).abs() < 1e-12 * (1.0 + want.abs()), "d={d}: {got} vs {want}");
+        }
+    }
+
+    fn assert_matches_recursive(model: &Model, x: &[f32], rows: usize, what: &str) {
+        let m = model.num_features;
+        let a = treeshap::shap_values(model, x, rows, 1);
+        let lm = summarize_model(model);
+        let b = shap_values(&lm, x, rows, 1);
+        assert_eq!(a.len(), b.len());
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (p - q).abs() <= 1e-6 + 1e-5 * p.abs().max(q.abs()),
+                "{what}: idx {i} ({} per row-group): {p} vs {q}",
+                m + 1
+            );
+        }
+    }
+
+    #[test]
+    fn matches_recursive_on_trained_model() {
+        let d = SynthSpec::cal_housing(0.01).generate();
+        let model = train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() });
+        let rows = 48.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "cal");
+    }
+
+    #[test]
+    fn matches_recursive_on_deep_model() {
+        // deep trees stress the quadrature degree and the padding table
+        let d = SynthSpec::covtype(0.001).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 12, ..Default::default() });
+        let rows = 12.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "deep");
+    }
+
+    #[test]
+    fn matches_recursive_on_multiclass() {
+        let d = SynthSpec::covtype(0.001).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() });
+        let rows = 16.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "multi");
+    }
+
+    #[test]
+    fn nan_rows_follow_the_oracle_convention() {
+        // NaN routes to the cold-on-left convention of treeshap (not
+        // predict_row's majority direction): parity must still hold
+        let d = SynthSpec::adult(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 6.min(d.rows);
+        let mut x = d.features[..rows * m].to_vec();
+        for r in 0..rows {
+            x[r * m + (r % m)] = f32::NAN;
+        }
+        let a = treeshap::shap_values(&model, &x, rows, 1);
+        let lm = summarize_model(&model);
+        let b = shap_values(&lm, &x, rows, 1);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() <= 1e-6 + 1e-5 * p.abs().max(q.abs()), "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn repeated_feature_tree_parity_and_local_accuracy() {
+        let model = crate::bench::zoo::repeated_feature_model();
+        // probe values straddling every threshold, incl. a NaN row
+        let probes: &[[f32; 2]] = &[
+            [-2.0, 0.0],
+            [-0.5, 0.0],
+            [-0.5, 2.0],
+            [0.5, 1.5],
+            [3.0, -1.0],
+            [f32::NAN, 0.5],
+        ];
+        let mut x = Vec::new();
+        for p in probes {
+            x.extend_from_slice(p);
+        }
+        let rows = probes.len();
+        assert_matches_recursive(&model, &x, rows, "repeated-feature");
+        // local accuracy Σφ = f(x) on the non-NaN rows
+        let lm = summarize_model(&model);
+        let phis = shap_values(&lm, &x, rows, 1);
+        let m = model.num_features;
+        for (r, p) in probes.iter().enumerate().take(rows - 1) {
+            let pred = f64::from(model.predict_row_raw(p)[0]);
+            let total: f64 = phis[r * (m + 1)..(r + 1) * (m + 1)]
+                .iter()
+                .map(|&v| f64::from(v))
+                .sum();
+            assert!((total - pred).abs() < 1e-5, "row {r}: Σφ {total} vs f(x) {pred}");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 16.min(d.rows);
+        let lm = summarize_model(&model);
+        let a = shap_values(&lm, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&lm, &d.features[..rows * m], rows, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stump_trees_only_shift_the_base_value() {
+        let mut model = {
+            let d = SynthSpec::cal_housing(0.005).generate();
+            train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() })
+        };
+        model.trees.push(crate::gbdt::Tree::leaf(2.5, 10.0));
+        model.tree_group.push(0);
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let rows = 4.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "stump");
+    }
+}

@@ -15,6 +15,7 @@
 mod binpack;
 pub mod host_kernel;
 pub mod interactions;
+pub mod linear;
 pub mod packed;
 pub mod path;
 pub mod summary;

@@ -79,6 +79,121 @@ fn multiclass_host_parity() {
 }
 
 #[test]
+fn linear_backend_matches_recursive_oracle() {
+    let d = SynthSpec::cal_housing(0.01).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() }));
+    let rows = 100;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let linear = contributions(&model, BackendKind::Linear, x, rows);
+    close(&baseline, &linear, 1e-6, "recursive vs linear TreeShap");
+}
+
+#[test]
+fn multiclass_linear_parity() {
+    let d = SynthSpec::covtype(0.001).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() }));
+    let rows = 40;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let linear = contributions(&model, BackendKind::Linear, x, rows);
+    close(&baseline, &linear, 1e-6, "multiclass recursive vs linear");
+}
+
+#[test]
+fn deep_model_linear_parity() {
+    // depth 12: the regime Linear TreeShap exists for — long merged
+    // paths stress the quadrature degree and padding tables
+    let d = SynthSpec::covtype(0.002).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 1, max_depth: 12, ..Default::default() }));
+    let rows = 16;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let linear = contributions(&model, BackendKind::Linear, x, rows);
+    close(&baseline, &linear, 1e-6, "deep recursive vs linear");
+}
+
+#[test]
+fn linear_phi_matches_oracle_across_the_zoo() {
+    // the acceptance sweep: every zoo dataset shape (Small grid covers
+    // all four cheaply), the medium/large depth regimes on the cheap
+    // datasets, and the hand-built repeated-feature model — φ within
+    // 1e-6 of the recursive oracle plus local accuracy per row
+    use gputreeshap::bench::zoo;
+    use gputreeshap::gbdt::ZooSize;
+    let mut cases: Vec<(String, Arc<Model>, Vec<f32>, usize)> = Vec::new();
+    for e in zoo::zoo_entries() {
+        let cheap = e.spec.name == "cal_housing" || e.spec.name == "adult";
+        let keep = e.size == ZooSize::Small
+            || (cheap && e.size == ZooSize::Medium)
+            || (e.spec.name == "cal_housing" && e.size == ZooSize::Large);
+        if !keep {
+            continue;
+        }
+        let (model, data) = zoo::build(&e);
+        let rows = 16.min(data.rows);
+        let x = data.features[..rows * model.num_features].to_vec();
+        cases.push((e.name, Arc::new(model), x, rows));
+    }
+    {
+        let model = Arc::new(zoo::repeated_feature_model());
+        let x = vec![-2.0, 0.0, -0.5, 0.0, -0.5, 2.0, 0.5, 1.5, 3.0, -1.0];
+        cases.push(("repeated-feature".to_string(), model, x, 5));
+    }
+    for (name, model, x, rows) in &cases {
+        let m = model.num_features;
+        let g = model.num_groups;
+        let baseline = contributions(model, BackendKind::Recursive, x, *rows);
+        let linear = contributions(model, BackendKind::Linear, x, *rows);
+        close(&baseline, &linear, 1e-6, &format!("{name}: recursive vs linear"));
+        // local accuracy: Σφ + base == f(x) per row and group
+        for r in 0..*rows {
+            let preds = model.predict_row_raw(&x[r * m..(r + 1) * m]);
+            for k in 0..g {
+                let o = r * g * (m + 1) + k * (m + 1);
+                let s: f64 = linear[o..o + m + 1].iter().map(|&v| f64::from(v)).sum();
+                assert!(
+                    (s - f64::from(preds[k])).abs() < 2e-3,
+                    "{name} row {r} group {k}: Σφ {s} vs f(x) {}",
+                    preds[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn linear_backend_is_phi_only() {
+    let d = SynthSpec::cal_housing(0.004).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() }));
+    let rows = 4;
+    let b = backend::build(&model, BackendKind::Linear, &cfg(rows)).unwrap();
+    assert!(!b.caps().supports_interactions, "linear is φ-only");
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let err = b.interactions(x, rows).unwrap_err();
+    assert!(err.to_string().contains("auto"), "error should point at --backend auto: {err:#}");
+    // predictions ARE served (raw tree routing)
+    let preds = b.predictions(x, rows).unwrap();
+    for r in 0..rows {
+        let want = model.predict_row_raw(&x[r * m..(r + 1) * m])[0];
+        assert_eq!(preds[r], want);
+    }
+    // and the capability system routes Φ requests past linear: auto
+    // with interactions demanded never lands on a φ-only backend
+    let (_, auto) = backend::build_auto(&model, &cfg(rows)).unwrap();
+    assert!(auto.caps().supports_interactions);
+    auto.interactions(x, rows).unwrap();
+}
+
+#[test]
 fn packing_algorithm_is_invisible_to_results() {
     let d = SynthSpec::adult(0.004).generate();
     let model =
