@@ -12,6 +12,15 @@
 //! packed host DP — the deep-ensemble win the Linear TreeShap paper
 //! claims.
 //!
+//! **Fourth curve**: `BackendKind::FastV2` — the Fast TreeSHAP v2
+//! weight-table kernel, whose per-row cost loses a whole depth factor
+//! against the linear kernel at the price of O(leaves·2^D) precomputed
+//! tables. The depth sweep carries a fastv2 column too; at depths where
+//! the table memory blows the `--fastv2-max-mb` budget the backend
+//! *refuses to construct* (the guardrail), and the sweep prints the
+//! cut-off instead of a throughput — which is itself the figure: the
+//! regime boundary of the precompute trade.
+//!
 //! **Prep vs per-batch separation**: construction (path extraction +
 //! packing, through the prepared-model cache) is timed apart from
 //! execution, and the first (prep-inclusive) batch is reported apart
@@ -106,6 +115,12 @@ fn main() {
     let (linear, linear_build_s) =
         time_it(|| backend::build(&model, BackendKind::Linear, &cfg).expect("linear backend"));
     let linear_prep_s = linear.caps().setup_cost_s;
+    // fourth curve: the Fast TreeSHAP v2 weight-table kernel — its
+    // subset-table build is the setup the planner amortizes, measured
+    // here through the same prepared-model cache
+    let (fastv2, fastv2_build_s) =
+        time_it(|| backend::build(&model, BackendKind::FastV2, &cfg).expect("fastv2 backend"));
+    let fastv2_prep_s = fastv2.caps().setup_cost_s;
     // head-to-head planners over exactly the measured backend pairs
     let mut duel = Planner::with_candidates(
         planner.shape,
@@ -132,19 +147,36 @@ fn main() {
         ],
     );
     let predicted_linear = lduel.crossover_rows(BackendKind::Recursive, BackendKind::Linear);
+    let mut fduel = Planner::with_candidates(
+        planner.shape,
+        vec![
+            (
+                BackendKind::Recursive,
+                backend::planner::estimate(BackendKind::Recursive, &planner.shape),
+            ),
+            (
+                BackendKind::FastV2,
+                backend::planner::estimate(BackendKind::FastV2, &planner.shape),
+            ),
+        ],
+    );
+    let predicted_fastv2 = fduel.crossover_rows(BackendKind::Recursive, BackendKind::FastV2);
     println!("accel backend: {}", accel.describe());
     println!("linear backend: {}", linear.describe());
+    println!("fastv2 backend: {}", fastv2.describe());
     println!(
-        "prep: cpu build {} | {} build {} (measured layout prep {}) | linear build {} (summary prep {})",
+        "prep: cpu build {} | {} build {} (measured layout prep {}) | linear build {} (summary prep {}) | fastv2 build {} (table prep {})",
         fmt_secs(cpu_build_s),
         akind.name(),
         fmt_secs(accel_build_s),
         fmt_secs(accel_prep_s),
         fmt_secs(linear_build_s),
-        fmt_secs(linear_prep_s)
+        fmt_secs(linear_prep_s),
+        fmt_secs(fastv2_build_s),
+        fmt_secs(fastv2_prep_s)
     );
     println!(
-        "prior predicted crossover: cpu→{} {predicted:?} rows, cpu→linear {predicted_linear:?} rows\n",
+        "prior predicted crossover: cpu→{} {predicted:?} rows, cpu→linear {predicted_linear:?} rows, cpu→fastv2 {predicted_fastv2:?} rows\n",
         akind.name()
     );
 
@@ -233,22 +265,63 @@ fn main() {
          ({linear_first_s}s) on the linear backend"
     );
 
+    // same gate again for fastv2: the subset weight tables are the
+    // heaviest prep in the repo, built exactly once in the prepared
+    // cache — every later batch is the O(d)-per-leaf sweep only.
+    let (_, fastv2_first_exec_s) =
+        time_it(|| std::hint::black_box(fastv2.contributions(xp, probe_rows).expect("fastv2")));
+    let fastv2_first_s = fastv2_prep_s + fastv2_first_exec_s;
+    obs.record_backend_first(BackendKind::FastV2.name(), probe_rows, fastv2_first_s);
+    let mut fastv2_steady_min_s = f64::INFINITY;
+    let mut fastv2_steady_med_s = f64::INFINITY;
+    for attempt in 0..3 {
+        let mut steady_samples = [0.0f64; 3];
+        for s in steady_samples.iter_mut() {
+            let (_, dt) = time_it(|| {
+                std::hint::black_box(fastv2.contributions(xp, probe_rows).expect("fastv2"))
+            });
+            *s = dt;
+        }
+        steady_samples.sort_by(|a, b| a.total_cmp(b));
+        fastv2_steady_min_s = fastv2_steady_min_s.min(steady_samples[0]);
+        fastv2_steady_med_s = fastv2_steady_med_s.min(steady_samples[1]);
+        if fastv2_steady_min_s < fastv2_first_s {
+            break;
+        }
+        eprintln!("  [fastv2 steady ≥ first batch on attempt {attempt} — re-measuring]");
+    }
+    println!(
+        "fastv2 @ {probe_rows} rows: first batch (prep-inclusive) {} → steady {} ({:.2}x)",
+        fmt_secs(fastv2_first_s),
+        fmt_secs(fastv2_steady_med_s),
+        fastv2_first_s / fastv2_steady_med_s.max(1e-12)
+    );
+    assert!(
+        fastv2_steady_min_s < fastv2_first_s,
+        "steady-state ({fastv2_steady_min_s}s) must beat the prep-inclusive first batch \
+         ({fastv2_first_s}s) on the fastv2 backend"
+    );
+
     let mut table = Table::new(&[
         "rows",
         "cpu",
         "accel",
         "linear",
+        "fastv2",
         "cpu rows/s",
         "accel rows/s",
         "linear rows/s",
+        "fastv2 rows/s",
         "planner",
     ]);
     let mut crossover = None;
     let mut linear_crossover = None;
+    let mut fastv2_crossover = None;
     let mut steady_points: Vec<Json> = Vec::new();
     let mut last_cpu_rps = 0.0f64;
     let mut last_accel_rps = 0.0f64;
     let mut last_linear_rps = 0.0f64;
+    let mut last_fastv2_rps = 0.0f64;
     for &rows in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
         if rows > max_rows {
             break;
@@ -276,23 +349,36 @@ fn main() {
             obs.record_backend(BackendKind::Linear.name(), rows, dt);
             dt
         });
+        let fastv2_t = median3(|| {
+            let t = std::time::Instant::now();
+            std::hint::black_box(fastv2.contributions(x, rows).expect("fastv2"));
+            let dt = t.elapsed().as_secs_f64();
+            obs.record_backend(BackendKind::FastV2.name(), rows, dt);
+            dt
+        });
         if accel_t < cpu_t && crossover.is_none() {
             crossover = Some(rows);
         }
         if linear_t < cpu_t && linear_crossover.is_none() {
             linear_crossover = Some(rows);
         }
+        if fastv2_t < cpu_t && fastv2_crossover.is_none() {
+            fastv2_crossover = Some(rows);
+        }
         last_cpu_rps = rows as f64 / cpu_t;
         last_accel_rps = rows as f64 / accel_t;
         last_linear_rps = rows as f64 / linear_t;
+        last_fastv2_rps = rows as f64 / fastv2_t;
         table.row(vec![
             rows.to_string(),
             fmt_secs(cpu_t),
             fmt_secs(accel_t),
             fmt_secs(linear_t),
+            fmt_secs(fastv2_t),
             format!("{:.0}", last_cpu_rps),
             format!("{:.0}", last_accel_rps),
             format!("{:.0}", last_linear_rps),
+            format!("{:.0}", last_fastv2_rps),
             planner.choose(rows).kind.name().to_string(),
         ]);
         steady_points.push(Json::obj(vec![
@@ -300,6 +386,7 @@ fn main() {
             ("cpu_s", Json::from(cpu_t)),
             ("accel_s", Json::from(accel_t)),
             ("linear_s", Json::from(linear_t)),
+            ("fastv2_s", Json::from(fastv2_t)),
         ]));
         dump_record(
             "fig4",
@@ -308,6 +395,7 @@ fn main() {
                 ("cpu_s", Json::from(cpu_t)),
                 ("accel_s", Json::from(accel_t)),
                 ("linear_s", Json::from(linear_t)),
+                ("fastv2_s", Json::from(fastv2_t)),
                 ("accel_backend", Json::from(akind.name())),
                 ("planner_choice", Json::from(planner.choose(rows).kind.name())),
             ],
@@ -337,6 +425,10 @@ fn main() {
         Some(r) => println!("measured cpu→linear crossover at ~{r} rows"),
         None => println!("no measured cpu→linear crossover on this testbed"),
     }
+    match fastv2_crossover {
+        Some(r) => println!("measured cpu→fastv2 crossover at ~{r} rows"),
+        None => println!("no measured cpu→fastv2 crossover on this testbed"),
+    }
 
     // close the loop: feed the sweep's samples back into the duel
     // planner and report where the calibrated line model now puts the
@@ -360,6 +452,10 @@ fn main() {
     lduel.recalibrate(&obs);
     let linear_calibrated = lduel.crossover_rows(BackendKind::Recursive, BackendKind::Linear);
     println!("calibrated predicted cpu→linear crossover: {linear_calibrated:?} rows");
+    // …and once more on the fourth curve
+    fduel.recalibrate(&obs);
+    let fastv2_calibrated = fduel.crossover_rows(BackendKind::Recursive, BackendKind::FastV2);
+    println!("calibrated predicted cpu→fastv2 crossover: {fastv2_calibrated:?} rows");
     dump_record(
         "fig4_calibration",
         vec![
@@ -375,6 +471,15 @@ fn main() {
                 "linear_calibrated_crossover",
                 linear_calibrated.map(Json::from).unwrap_or(Json::Null),
             ),
+            ("fastv2_prior_crossover", predicted_fastv2.map(Json::from).unwrap_or(Json::Null)),
+            (
+                "fastv2_measured_crossover",
+                fastv2_crossover.map(Json::from).unwrap_or(Json::Null),
+            ),
+            (
+                "fastv2_calibrated_crossover",
+                fastv2_calibrated.map(Json::from).unwrap_or(Json::Null),
+            ),
             ("accel_backend", Json::from(akind.name())),
         ],
     );
@@ -387,7 +492,14 @@ fn main() {
     // configuration stays fast.
     let sweep_rows = probe_rows.min(64).max(1);
     let mut depth_points: Vec<Json> = Vec::new();
-    let mut dtable = Table::new(&["depth", "host rows/s", "linear rows/s", "linear/host"]);
+    let mut dtable = Table::new(&[
+        "depth",
+        "host rows/s",
+        "linear rows/s",
+        "fastv2 rows/s",
+        "linear/host",
+        "fastv2/host",
+    ]);
     for &depth in &[3usize, 6, 10, 14] {
         let spec = SynthSpec::cal_housing(0.02);
         let (dmodel, ddata) = zoo::build_custom(&format!("cal_housing-d{depth}"), &spec, 20, depth);
@@ -398,31 +510,61 @@ fn main() {
         let dcfg = BackendConfig { threads, rows_hint: rows, ..Default::default() };
         let host = backend::build(&dmodel, BackendKind::Host, &dcfg).expect("host backend");
         let lin = backend::build(&dmodel, BackendKind::Linear, &dcfg).expect("linear backend");
-        // warm both so layout prep stays out of the throughput numbers
+        // the fastv2 table build is guarded: at depths where the 2^D
+        // tables exceed the (default) budget the build errs instead of
+        // allocating, and the sweep records the cut-off — the shape of
+        // the memory trade, not a failure
+        let fv2 = match backend::build(&dmodel, BackendKind::FastV2, &dcfg) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("  [fastv2 @ depth {depth}: {e}]");
+                None
+            }
+        };
+        // warm every kernel so layout prep stays out of the throughput numbers
         std::hint::black_box(host.contributions(x, rows).expect("host"));
         std::hint::black_box(lin.contributions(x, rows).expect("linear"));
+        if let Some(f) = &fv2 {
+            std::hint::black_box(f.contributions(x, rows).expect("fastv2"));
+        }
         let host_t = median3(|| {
             time_it(|| std::hint::black_box(host.contributions(x, rows).expect("host"))).1
         });
         let lin_t = median3(|| {
             time_it(|| std::hint::black_box(lin.contributions(x, rows).expect("linear"))).1
         });
+        let fv2_t = fv2.as_ref().map(|f| {
+            median3(|| {
+                time_it(|| std::hint::black_box(f.contributions(x, rows).expect("fastv2"))).1
+            })
+        });
         let host_rps = rows as f64 / host_t;
         let lin_rps = rows as f64 / lin_t;
+        let fv2_rps = fv2_t.map(|t| rows as f64 / t);
         dtable.row(vec![
             depth.to_string(),
             format!("{host_rps:.0}"),
             format!("{lin_rps:.0}"),
+            match fv2_rps {
+                Some(r) => format!("{r:.0}"),
+                None => "over budget".to_string(),
+            },
             format!("{:.2}x", lin_rps / host_rps.max(1e-12)),
+            match fv2_rps {
+                Some(r) => format!("{:.2}x", r / host_rps.max(1e-12)),
+                None => "—".to_string(),
+            },
         ]);
         depth_points.push(Json::obj(vec![
             ("depth", Json::from(depth)),
             ("rows", Json::from(rows)),
             ("host_rows_per_s", Json::from(host_rps)),
             ("linear_rows_per_s", Json::from(lin_rps)),
+            ("fastv2_rows_per_s", fv2_rps.map(Json::from).unwrap_or(Json::Null)),
+            ("fastv2_over_budget", Json::Bool(fv2_rps.is_none())),
         ]));
     }
-    println!("\ndepth sweep ({sweep_rows} rows max, host packed DP vs linear):");
+    println!("\ndepth sweep ({sweep_rows} rows max, host packed DP vs linear vs fastv2):");
     dtable.print();
 
     if let Some(path) = json_path {
@@ -437,6 +579,8 @@ fn main() {
                     ("accel_layout_s", Json::from(accel_prep_s)),
                     ("linear_build_s", Json::from(linear_build_s)),
                     ("linear_layout_s", Json::from(linear_prep_s)),
+                    ("fastv2_build_s", Json::from(fastv2_build_s)),
+                    ("fastv2_table_s", Json::from(fastv2_prep_s)),
                 ]),
             ),
             (
@@ -455,6 +599,14 @@ fn main() {
                     ("steady_s", Json::from(linear_steady_med_s)),
                 ]),
             ),
+            (
+                "first_vs_steady_fastv2",
+                Json::obj(vec![
+                    ("rows", Json::from(probe_rows)),
+                    ("first_batch_s", Json::from(fastv2_first_s)),
+                    ("steady_s", Json::from(fastv2_steady_med_s)),
+                ]),
+            ),
             ("steady", Json::Arr(steady_points)),
             (
                 "steady_rows_per_s",
@@ -462,6 +614,7 @@ fn main() {
                     ("cpu", Json::from(last_cpu_rps)),
                     ("accel", Json::from(last_accel_rps)),
                     ("linear", Json::from(last_linear_rps)),
+                    ("fastv2", Json::from(last_fastv2_rps)),
                 ]),
             ),
             (
@@ -480,6 +633,17 @@ fn main() {
                     (
                         "calibrated",
                         linear_calibrated.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+            (
+                "crossover_fastv2",
+                Json::obj(vec![
+                    ("prior", predicted_fastv2.map(Json::from).unwrap_or(Json::Null)),
+                    ("measured", fastv2_crossover.map(Json::from).unwrap_or(Json::Null)),
+                    (
+                        "calibrated",
+                        fastv2_calibrated.map(Json::from).unwrap_or(Json::Null),
                     ),
                 ]),
             ),

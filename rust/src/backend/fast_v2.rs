@@ -1,0 +1,125 @@
+//! The Fast TreeSHAP v2 [`ShapBackend`]: exact φ from precomputed
+//! per-leaf subset weight tables (`shap::fast_v2`), cached in the
+//! prepared model. φ-only — `supports_interactions` is `false`, so
+//! `build_auto` routes Φ requests past it to a capable backend;
+//! predictions are served by raw tree routing.
+//!
+//! Construction goes through the prepared-model cache and is **gated by
+//! the memory guardrail**: the tables cost O(leaves · 2^D) bytes, so the
+//! exact requirement (computed from the cached paths, before anything is
+//! allocated) is checked against the `--fastv2-max-mb` budget and the
+//! build errors instead of OOMing on deep ensembles. Within budget, the
+//! tables build once per model and are shared by every instance — row
+//! shards, grid replicas, executor rebuilds — with the *measured* time
+//! to obtain them reported as setup cost (≈0 on a warm rebuild).
+
+use std::sync::Arc;
+
+use crate::backend::{planner, prepared, BackendCaps, BackendKind, PreparedModel, ShapBackend};
+use crate::gbdt::Model;
+use crate::shap::fast_v2::{self, FastV2Model};
+use crate::util::error::Result;
+use crate::util::time_it;
+
+pub struct FastV2Backend {
+    fm: Arc<FastV2Model>,
+    model: Arc<Model>,
+    prep: Arc<PreparedModel>,
+    threads: usize,
+    caps: BackendCaps,
+}
+
+impl FastV2Backend {
+    pub fn new(model: &Arc<Model>, threads: usize, max_table_mb: usize) -> Result<FastV2Backend> {
+        FastV2Backend::with_prepared(prepared::prepare(model), threads, max_table_mb)
+    }
+
+    /// Construct over an existing prepared-model cache entry (the path
+    /// every `backend::build` takes; `new` is the one-model shorthand).
+    /// Errs — before any table is allocated — when the exact table bytes
+    /// exceed `max_table_mb`.
+    pub fn with_prepared(
+        prep: Arc<PreparedModel>,
+        threads: usize,
+        max_table_mb: usize,
+    ) -> Result<FastV2Backend> {
+        let need = prep.fastv2_table_bytes();
+        let budget = max_table_mb as f64 * 1024.0 * 1024.0;
+        if need > budget {
+            return Err(crate::anyhow!(
+                "backend 'fastv2' needs {:.0} MiB of subset weight tables, over the \
+                 {max_table_mb} MiB budget — raise --fastv2-max-mb or use a shallower \
+                 model (table size grows as leaves × 2^depth)",
+                need / (1024.0 * 1024.0)
+            ));
+        }
+        let shape = prep.shape();
+        let (fm, setup_s) = time_it(|| prep.fastv2());
+        let est = planner::estimate(BackendKind::FastV2, &shape);
+        Ok(FastV2Backend {
+            fm,
+            model: Arc::clone(prep.model()),
+            prep,
+            threads,
+            caps: BackendCaps {
+                supports_interactions: false,
+                setup_cost_s: setup_s,
+                batch_overhead_s: est.batch_overhead_s,
+                rows_per_s: est.rows_per_s,
+            },
+        })
+    }
+}
+
+impl ShapBackend for FastV2Backend {
+    fn name(&self) -> &'static str {
+        BackendKind::FastV2.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.fm.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.fm.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        Ok(fast_v2::shap_values(&self.fm, x, rows, self.threads))
+    }
+
+    fn interactions(&self, _x: &[f32], _rows: usize) -> Result<Vec<f32>> {
+        Err(crate::anyhow!(
+            "backend 'fastv2' computes φ only; request interactions via --backend auto \
+             so a Φ-capable backend serves them"
+        ))
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let m = self.model.num_features;
+        let g = self.model.num_groups;
+        let mut out = Vec::with_capacity(rows * g);
+        for r in 0..rows {
+            out.extend(self.model.predict_row_raw(&x[r * m..(r + 1) * m]));
+        }
+        Ok(out)
+    }
+
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prep)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "fastv2[weight-tables, {:.1} MiB over {} paths, d ≤ {}, {} threads]",
+            self.fm.table_bytes() as f64 / (1024.0 * 1024.0),
+            self.fm.num_paths(),
+            self.fm.max_unique_features(),
+            self.threads
+        )
+    }
+}

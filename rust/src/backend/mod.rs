@@ -12,6 +12,7 @@
 //! additional [`BackendKind`]s with their own [`BackendCaps`].
 
 pub mod calibrate;
+pub mod fast_v2;
 pub mod grid;
 pub mod host;
 pub mod linear;
@@ -31,6 +32,7 @@ use crate::shap::Packing;
 use crate::util::error::Result;
 
 pub use calibrate::Observations;
+pub use fast_v2::FastV2Backend;
 pub use grid::GridBackend;
 pub use host::HostPackedBackend;
 pub use linear::LinearBackend;
@@ -152,6 +154,13 @@ pub enum BackendKind {
     /// Φ-capable backend; an explicit `--backend linear` interactions
     /// call errs with that guidance.
     Linear,
+    /// Fast TreeSHAP v2 (`shap::fast_v2`): exact φ in O(leaves · depth)
+    /// per row from precomputed O(leaves · 2^D) subset weight tables.
+    /// φ **only**, like [`BackendKind::Linear`]. Construction is gated
+    /// by the memory guardrail (`BackendConfig::fastv2_max_mb`): the
+    /// planner never plans it over budget and an explicit build errs
+    /// instead of OOMing.
+    FastV2,
     /// AOT HLO artifacts over the warp-packed layout (PJRT)
     XlaWarp,
     /// AOT HLO artifacts over the padded-path layout (PJRT)
@@ -159,10 +168,11 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 5] = [
+    pub const ALL: [BackendKind; 6] = [
         BackendKind::Recursive,
         BackendKind::Host,
         BackendKind::Linear,
+        BackendKind::FastV2,
         BackendKind::XlaWarp,
         BackendKind::XlaPadded,
     ];
@@ -172,6 +182,7 @@ impl BackendKind {
             BackendKind::Recursive => "cpu",
             BackendKind::Host => "host",
             BackendKind::Linear => "linear",
+            BackendKind::FastV2 => "fastv2",
             BackendKind::XlaWarp => "xla",
             BackendKind::XlaPadded => "xla-padded",
         }
@@ -185,6 +196,7 @@ impl BackendKind {
             "cpu" | "recursive" => BackendKind::Recursive,
             "host" => BackendKind::Host,
             "linear" => BackendKind::Linear,
+            "fastv2" | "fast-v2" | "fast_v2" => BackendKind::FastV2,
             "xla" | "warp" | "xla-warp" => BackendKind::XlaWarp,
             "xla-padded" | "padded" => BackendKind::XlaPadded,
             _ => return None,
@@ -199,7 +211,10 @@ impl BackendKind {
     /// Is this kind present in the current binary?
     pub fn compiled_in(&self) -> bool {
         match self {
-            BackendKind::Recursive | BackendKind::Host | BackendKind::Linear => true,
+            BackendKind::Recursive
+            | BackendKind::Host
+            | BackendKind::Linear
+            | BackendKind::FastV2 => true,
             BackendKind::XlaWarp | BackendKind::XlaPadded => cfg!(feature = "xla"),
         }
     }
@@ -223,7 +238,15 @@ pub struct BackendConfig {
     pub devices: usize,
     /// shard axis override; `None` lets the planner pick per batch size
     pub shard_axis: Option<ShardAxis>,
+    /// memory budget for [`BackendKind::FastV2`]'s subset weight tables,
+    /// MiB (`--fastv2-max-mb`). The planner excludes `FastV2` from plans
+    /// whose shape-estimated table exceeds this, and an explicit build
+    /// errs on the exact size instead of OOMing.
+    pub fastv2_max_mb: usize,
 }
+
+/// Default [`BackendConfig::fastv2_max_mb`]: tables up to 512 MiB.
+pub const DEFAULT_FASTV2_MAX_MB: usize = 512;
 
 impl Default for BackendConfig {
     fn default() -> Self {
@@ -236,6 +259,7 @@ impl Default for BackendConfig {
             with_predict: false,
             devices: 1,
             shard_axis: None,
+            fastv2_max_mb: DEFAULT_FASTV2_MAX_MB,
         }
     }
 }
@@ -278,7 +302,9 @@ pub fn build(
 ) -> Result<Box<dyn ShapBackend>> {
     let prep = prepared::prepare(model);
     if cfg.devices > 1 {
-        let planner = Planner::for_prepared(&prep).with_devices(cfg.devices);
+        let planner = Planner::for_prepared(&prep)
+            .with_devices(cfg.devices)
+            .with_fastv2_budget_mb(cfg.fastv2_max_mb);
         let rows = cfg.rows_hint.max(1);
         // an explicit axis pins the layout at the full device count; auto
         // mode takes the best layout's axis, then sizes it to the devices
@@ -299,6 +325,11 @@ pub fn build(
             Ok(Box::new(HostPackedBackend::with_prepared(prep, cfg.packing, cfg.threads)))
         }
         BackendKind::Linear => Ok(Box::new(LinearBackend::with_prepared(prep, cfg.threads))),
+        BackendKind::FastV2 => Ok(Box::new(FastV2Backend::with_prepared(
+            prep,
+            cfg.threads,
+            cfg.fastv2_max_mb,
+        )?)),
         #[cfg(feature = "xla")]
         BackendKind::XlaWarp => Ok(Box::new(XlaWarpBackend::with_prepared(&prep, cfg)?)),
         #[cfg(feature = "xla")]
@@ -335,7 +366,9 @@ pub fn build_auto(
     cfg: &BackendConfig,
 ) -> Result<(Plan, Box<dyn ShapBackend>)> {
     let prep = prepared::prepare(model);
-    let planner = Planner::for_prepared(&prep).with_devices(cfg.devices.max(1));
+    let planner = Planner::for_prepared(&prep)
+        .with_devices(cfg.devices.max(1))
+        .with_fastv2_budget_mb(cfg.fastv2_max_mb);
     let rows = cfg.rows_hint.clamp(1, 1 << 24);
     // an explicit axis pins the layout for every candidate, and the
     // ranking prices that pinned layout (not each kind's best)
@@ -380,8 +413,11 @@ mod tests {
         assert_eq!(BackendKind::parse("recursive"), Some(BackendKind::Recursive));
         assert_eq!(BackendKind::parse("padded"), Some(BackendKind::XlaPadded));
         assert_eq!(BackendKind::parse("Linear"), Some(BackendKind::Linear));
+        assert_eq!(BackendKind::parse("fast-v2"), Some(BackendKind::FastV2));
+        assert_eq!(BackendKind::parse("FastV2"), Some(BackendKind::FastV2));
         assert_eq!(BackendKind::parse("nope"), None);
         assert!(BackendKind::name_list().contains("linear"));
+        assert!(BackendKind::name_list().contains("fastv2"));
     }
 
     #[test]
@@ -393,6 +429,7 @@ mod tests {
         assert!(kinds.contains(&BackendKind::Recursive));
         assert!(kinds.contains(&BackendKind::Host));
         assert!(kinds.contains(&BackendKind::Linear));
+        assert!(kinds.contains(&BackendKind::FastV2));
         for (_, b) in &avail {
             assert_eq!(b.num_features(), model.num_features);
             assert_eq!(b.num_groups(), model.num_groups);

@@ -66,6 +66,19 @@ impl ModelShape {
     }
 }
 
+/// Shape-estimated bytes of [`BackendKind::FastV2`]'s subset weight
+/// tables: `leaves × 2^D × 8` with `D = max_path_len − 1` unique
+/// features on the deepest merged path. A deliberate upper bound on the
+/// exact per-path sum (`shap::fast_v2::table_bytes_for_paths`): the
+/// planner guards with the shape alone so planning never touches path
+/// data, and conservative refusal is the safe direction for a memory
+/// guardrail. `f64` so deep ensembles report a huge number instead of
+/// overflowing.
+pub fn fastv2_table_bytes(s: &ModelShape) -> f64 {
+    let d = s.max_path_len.saturating_sub(1) as i32;
+    s.leaves.max(1) as f64 * (2f64).powi(d) * 8.0
+}
+
 /// The two-term latency model for one backend, plus its one-time setup.
 #[derive(Clone, Copy, Debug)]
 pub struct CostEstimate {
@@ -102,6 +115,16 @@ pub fn estimate(kind: BackendKind, s: &ModelShape) -> CostEstimate {
             setup_s: l * 4e-7,
             batch_overhead_s: 1e-5,
             rows_per_s: 1.0 / (l * w * 35e-9),
+        },
+        // Fast TreeSHAP v2: per-row cost loses a whole depth factor
+        // (O(l·a), the smallest CPU constant) but setup pays the
+        // O(l·2^D) table build — the planner only amortizes that over
+        // expected batches, and the byte guardrail excludes the kind
+        // outright when the table would blow the memory budget
+        BackendKind::FastV2 => CostEstimate {
+            setup_s: fastv2_table_bytes(s) / 8.0 * 4e-9,
+            batch_overhead_s: 1e-5,
+            rows_per_s: 1.0 / (l * a * 8e-9),
         },
         // warp-packed accelerator: compile+upload setup, launch overhead
         // per batch, vectorised per-row marginal (linear in path length)
@@ -174,6 +197,10 @@ pub struct Planner {
     /// (the default, `INFINITY`, prices prep at zero — pure steady
     /// state); a one-shot caller sets 1 and pays it in full
     expected_batches: f64,
+    /// memory budget for `FastV2`'s weight tables, bytes: plans for that
+    /// kind are refused when [`fastv2_table_bytes`] exceeds this, so a
+    /// deep ensemble never OOMs building tables the planner picked
+    fastv2_budget_bytes: f64,
 }
 
 impl Planner {
@@ -211,6 +238,7 @@ impl Planner {
             candidates,
             devices: 1,
             expected_batches: f64::INFINITY,
+            fastv2_budget_bytes: crate::backend::DEFAULT_FASTV2_MAX_MB as f64 * 1024.0 * 1024.0,
         }
     }
 
@@ -230,8 +258,23 @@ impl Planner {
         self
     }
 
+    /// Set the `FastV2` weight-table memory budget (`--fastv2-max-mb`).
+    pub fn with_fastv2_budget_mb(mut self, mb: usize) -> Planner {
+        self.fastv2_budget_bytes = mb as f64 * 1024.0 * 1024.0;
+        self
+    }
+
     pub fn devices(&self) -> usize {
         self.devices
+    }
+
+    /// The memory guardrail: does `FastV2`'s shape-estimated table fit
+    /// the configured budget? `false` removes the kind from
+    /// [`Planner::plan_for`], [`Planner::plan_pinned`] and every ranking
+    /// built on them — the planner *refuses* rather than deprioritizes,
+    /// because a cost model cannot price an OOM.
+    pub fn fastv2_fits(&self) -> bool {
+        fastv2_table_bytes(&self.shape) <= self.fastv2_budget_bytes
     }
 
     /// Estimated latency to explain `rows` rows in one unsharded batch.
@@ -314,6 +357,9 @@ impl Planner {
     /// factorization. Ties prefer fewer shards, then the row axis (the
     /// paper's scheme), then trees, then grids.
     pub fn plan_for(&self, kind: BackendKind, rows: usize) -> Option<Plan> {
+        if kind == BackendKind::FastV2 && !self.fastv2_fits() {
+            return None;
+        }
         let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
         let trees = self.shape.trees.max(1);
         let mut best: Option<Plan> = None;
@@ -355,6 +401,9 @@ impl Planner {
         axis: ShardAxis,
         shards: usize,
     ) -> Option<Plan> {
+        if kind == BackendKind::FastV2 && !self.fastv2_fits() {
+            return None;
+        }
         let c = self.candidates.iter().find(|(k, _)| *k == kind)?.1;
         let shards = shards.max(1);
         match axis {
@@ -862,6 +911,87 @@ mod tests {
     }
 
     #[test]
+    fn fastv2_guardrail_excludes_deep_models() {
+        // depth-14 ensemble: 16384 leaves × 2^14 subsets × 8 B ≈ 2 GiB
+        // of tables — far over the default 512 MiB budget, so the
+        // planner must refuse FastV2 on every planning surface
+        let deep = ModelShape {
+            features: 20,
+            groups: 1,
+            trees: 64,
+            leaves: 16384,
+            max_depth: 14,
+            avg_path_len: 12.0,
+            max_path_len: 15,
+        };
+        assert!(fastv2_table_bytes(&deep) > 512.0 * 1024.0 * 1024.0);
+        let p = Planner::from_shape(deep);
+        assert!(!p.fastv2_fits());
+        assert!(p.plan_for(BackendKind::FastV2, 1 << 20).is_none());
+        assert!(p.plan_pinned(BackendKind::FastV2, 1 << 20, ShardAxis::Rows, 4).is_none());
+        assert!(p.ranked(1 << 20).iter().all(|pl| pl.kind != BackendKind::FastV2));
+        // a raised budget re-admits the kind (the refusal is the budget,
+        // not the shape)
+        let roomy = Planner::from_shape(deep).with_fastv2_budget_mb(4096);
+        assert!(roomy.fastv2_fits());
+        assert!(roomy.plan_for(BackendKind::FastV2, 1 << 20).is_some());
+        // other kinds are untouched by the guardrail
+        assert!(p.plan_for(BackendKind::Host, 1 << 20).is_some());
+    }
+
+    #[test]
+    fn fastv2_wins_shallow_high_volume_within_budget() {
+        // shallow ensemble: 320 leaves × 2^5 × 8 B ≈ 80 KiB of tables —
+        // comfortably within budget. With prep amortized over a long
+        // horizon the depth-factor win makes FastV2 the CPU pick; with a
+        // 1-batch horizon the table build must be paid in full and a
+        // no-setup backend wins
+        let shallow = ModelShape {
+            features: 8,
+            groups: 1,
+            trees: 40,
+            leaves: 320,
+            max_depth: 5,
+            avg_path_len: 5.0,
+            max_path_len: 6,
+        };
+        let p = Planner::from_shape(shallow).with_expected_batches(100_000);
+        assert!(p.fastv2_fits());
+        let plan = p.plan_for(BackendKind::FastV2, 4096).expect("within budget");
+        assert!(plan.est_latency_s.is_finite());
+        let cpu_kinds = [BackendKind::Recursive, BackendKind::Host, BackendKind::Linear];
+        for other in cpu_kinds {
+            assert!(
+                plan.est_latency_s < p.plan_for(other, 4096).unwrap().est_latency_s,
+                "fastv2 must beat {other:?} at 4096 rows on a shallow model"
+            );
+        }
+        assert_eq!(p.choose(4096).kind, BackendKind::FastV2);
+        // one-shot horizon on a *deeper* (still in-budget) shape: ~134 MB
+        // of tables (≈67 ms of build at the prior's constant) must be
+        // paid in full against a ~16 µs single-row recursive pass, so a
+        // no-setup backend wins. (On the shallow shape above the table is
+        // ~80 KiB and fastv2 wins even one-shot — the guard horizon only
+        // bites once 2^D work dominates.)
+        let deeper = ModelShape {
+            features: 16,
+            groups: 1,
+            trees: 32,
+            leaves: 4096,
+            max_depth: 12,
+            avg_path_len: 10.0,
+            max_path_len: 13,
+        };
+        let once = Planner::from_shape(deeper).with_expected_batches(1);
+        assert!(once.fastv2_fits(), "134 MB of tables fit the 512 MiB default budget");
+        assert_ne!(once.choose(1).kind, BackendKind::FastV2);
+        // …and the same shape flips back to fastv2 once the horizon
+        // amortizes the build away
+        let served = Planner::from_shape(deeper).with_expected_batches(1_000_000);
+        assert_eq!(served.choose(4096).kind, BackendKind::FastV2);
+    }
+
+    #[test]
     fn for_model_prefers_cheap_backends_on_tiny_batches() {
         let d = SynthSpec::cal_housing(0.004).generate();
         let model = train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() });
@@ -869,7 +999,10 @@ mod tests {
         assert!(p.shape.leaves > 0 && p.shape.avg_path_len >= 1.0);
         let one = p.choose(1);
         assert!(
-            matches!(one.kind, BackendKind::Recursive | BackendKind::Host),
+            matches!(
+                one.kind,
+                BackendKind::Recursive | BackendKind::Host | BackendKind::FastV2
+            ),
             "1-row batch should stay on a CPU backend, got {:?}",
             one.kind
         );

@@ -43,6 +43,7 @@ use std::sync::{Arc, Mutex, Weak};
 
 use crate::backend::planner::ModelShape;
 use crate::gbdt::Model;
+use crate::shap::fast_v2::{self, FastV2Model};
 use crate::shap::linear::{self, LinearModel};
 use crate::shap::{
     expected_values_from_paths, model_paths, pack_model_from_paths, pad_model_from_paths,
@@ -65,7 +66,10 @@ pub struct PrepStats {
     /// Linear TreeShap summary-table builds and reuses
     pub linear_builds: u64,
     pub linear_hits: u64,
-    /// total seconds spent building packed/padded/linear layouts
+    /// Fast TreeSHAP v2 weight-table builds and reuses
+    pub fastv2_builds: u64,
+    pub fastv2_hits: u64,
+    /// total seconds spent building packed/padded/linear/fastv2 layouts
     pub layout_s: f64,
 }
 
@@ -84,6 +88,8 @@ impl PrepStats {
         self.padded_hits += other.padded_hits;
         self.linear_builds += other.linear_builds;
         self.linear_hits += other.linear_hits;
+        self.fastv2_builds += other.fastv2_builds;
+        self.fastv2_hits += other.fastv2_hits;
         self.layout_s += other.layout_s;
     }
 }
@@ -113,6 +119,8 @@ pub struct PreparedModel {
     padded: Mutex<BTreeMap<usize, Arc<PaddedModel>>>,
     /// lazily built Linear TreeShap summary tables (one per model)
     linear: Mutex<Option<Arc<LinearModel>>>,
+    /// lazily built Fast TreeSHAP v2 subset weight tables (one per model)
+    fastv2: Mutex<Option<Arc<FastV2Model>>>,
     stats: Mutex<PrepStats>,
 }
 
@@ -145,6 +153,7 @@ impl PreparedModel {
             packed: Mutex::new(BTreeMap::new()),
             padded: Mutex::new(BTreeMap::new()),
             linear: Mutex::new(None),
+            fastv2: Mutex::new(None),
             stats: Mutex::new(PrepStats { paths_s, ..PrepStats::default() }),
         }
     }
@@ -246,6 +255,43 @@ impl PreparedModel {
         lm
     }
 
+    /// The Fast TreeSHAP v2 subset weight tables (`shap::fast_v2`),
+    /// built from the cached merged paths on first request and shared
+    /// afterwards — one per model, reused by every row shard, grid
+    /// replica and executor rebuild. Callers enforce the memory budget
+    /// *before* requesting (via [`PreparedModel::fastv2_table_bytes`]);
+    /// this method only builds.
+    pub fn fastv2(&self) -> Arc<FastV2Model> {
+        let mut slot = self.fastv2.lock().unwrap();
+        if let Some(fm) = slot.as_ref() {
+            self.stats.lock().unwrap().fastv2_hits += 1;
+            return Arc::clone(fm);
+        }
+        let (fm, dt) = time_it(|| {
+            Arc::new(fast_v2::precompute_from_paths(
+                self.model.num_features,
+                self.model.num_groups,
+                &self.paths,
+                &self.expected,
+            ))
+        });
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.fastv2_builds += 1;
+            s.layout_s += dt;
+        }
+        *slot = Some(Arc::clone(&fm));
+        fm
+    }
+
+    /// Exact bytes the Fast TreeSHAP v2 tables occupy (or would occupy),
+    /// computed from the cached paths without building anything — the
+    /// backend-side memory guardrail compares this against
+    /// `--fastv2-max-mb` before triggering the build.
+    pub fn fastv2_table_bytes(&self) -> f64 {
+        fast_v2::table_bytes_for_paths(&self.paths)
+    }
+
     /// This entry's build/reuse counters.
     pub fn stats(&self) -> PrepStats {
         *self.stats.lock().unwrap()
@@ -332,6 +378,8 @@ pub fn registry_snapshot() -> crate::util::Json {
         ("padded_hits", Json::from(s.padded_hits as usize)),
         ("linear_builds", Json::from(s.linear_builds as usize)),
         ("linear_hits", Json::from(s.linear_hits as usize)),
+        ("fastv2_builds", Json::from(s.fastv2_builds as usize)),
+        ("fastv2_hits", Json::from(s.fastv2_hits as usize)),
         ("prep_s", Json::from(s.total_s())),
     ])
 }
@@ -389,6 +437,14 @@ mod tests {
         let s = prep.stats();
         assert_eq!(s.linear_builds, 1);
         assert!(s.linear_hits >= 1);
+        // fastv2 weight tables build once per model
+        let f1 = prep.fastv2();
+        let f2 = prep.fastv2();
+        assert!(Arc::ptr_eq(&f1, &f2), "fastv2 tables must be shared");
+        let s = prep.stats();
+        assert_eq!(s.fastv2_builds, 1);
+        assert!(s.fastv2_hits >= 1);
+        assert_eq!(prep.fastv2_table_bytes(), f1.table_bytes() as f64);
     }
 
     #[test]

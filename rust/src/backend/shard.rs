@@ -67,6 +67,16 @@ impl ShardAxis {
             _ => None,
         }
     }
+
+    /// Every parseable axis name, `|`-joined for CLI error messages —
+    /// the counterpart of `BackendKind::name_list`. Includes `grid`
+    /// (parseable and executable) even though [`ShardAxis::ALL`]
+    /// deliberately excludes it from 1-D sweeps.
+    pub fn name_list() -> String {
+        [ShardAxis::Rows, ShardAxis::Trees, ShardAxis::Grid]
+            .map(|a| a.name())
+            .join("|")
+    }
 }
 
 /// A rows × trees device grid: `tree_shards` disjoint ensemble slices,

@@ -330,7 +330,9 @@ impl ShapService {
                 // and — when a calibration file survives from a previous
                 // run — starts from measured constants, not priors
                 let prep = backend::prepare(&ctx.model);
-                let mut planner = Planner::for_prepared(&prep).with_devices(ctx.devices);
+                let mut planner = Planner::for_prepared(&prep)
+                    .with_devices(ctx.devices)
+                    .with_fastv2_budget_mb(ctx.bcfg.fastv2_max_mb);
                 if ctx.every > 0 {
                     planner = planner.with_expected_batches(ctx.every);
                 }

@@ -6,7 +6,7 @@
 //! gputreeshap pack     --model model.gtsm
 //! gputreeshap backends --model model.gtsm --devices 4 --calibrated
 //! gputreeshap explain  --model model.gtsm --dataset cal_housing --rows 256 \
-//!                      --backend auto|cpu|host|linear|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
+//!                      --backend auto|cpu|host|linear|fastv2|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
 //! gputreeshap shap     …  (alias of explain)
 //! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto --devices 2
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
@@ -72,6 +72,8 @@ fn main() {
 const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo|bench-compare> [options]
 multi-device: --devices N shards execution; --shard-axis auto|rows|trees|grid picks the split
   (grid = tree slices × row replicas, for topologies where one axis saturates)
+memory: --fastv2-max-mb M caps the fastv2 backend's precomputed weight tables (default 512);
+  over budget the planner skips fastv2 and an explicit --backend fastv2 errors instead of OOMing
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
   and persists learned constants next to the model (--calibration <path|none>)
 perf CI: bench-compare --baseline a.json --current b.json [--tolerance 0.2] gates throughput
@@ -115,7 +117,7 @@ fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
         "auto" => Ok(None),
         s => ShardAxis::parse(s)
             .map(Some)
-            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|rows|trees|grid)")),
+            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|{})", ShardAxis::name_list())),
     }
 }
 
@@ -131,6 +133,8 @@ fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
         with_predict: false,
         devices: args.get_usize("devices", 1)?.max(1),
         shard_axis: shard_axis(args)?,
+        fastv2_max_mb: args
+            .get_usize("fastv2-max-mb", gputreeshap::backend::DEFAULT_FASTV2_MAX_MB)?,
     })
 }
 
@@ -267,7 +271,10 @@ fn print_crossovers(planner: &Planner, label: &str) {
 fn cmd_backends(args: &Args) -> Result<()> {
     let model = Arc::new(load_model(args)?);
     let devices = args.get_usize("devices", 1)?.max(1);
-    let planner = Planner::for_model(&model).with_devices(devices);
+    let fastv2_mb = args.get_usize("fastv2-max-mb", gputreeshap::backend::DEFAULT_FASTV2_MAX_MB)?;
+    let planner = Planner::for_model(&model)
+        .with_devices(devices)
+        .with_fastv2_budget_mb(fastv2_mb);
     println!("{}\n", model.summary());
     let mut table =
         gputreeshap::bench::Table::new(&["backend", "compiled", "setup(s)", "overhead(s)", "rows/s"]);

@@ -1,0 +1,471 @@
+//! Fast TreeSHAP v2 (Yang, arXiv 2109.09847) in this repo's merged-path
+//! formulation: precompute one weight row per leaf × feature-subset slot
+//! so the per-row kernel drops a whole depth factor — O(d) per leaf
+//! instead of the recursive/packed DP's O(d²) unwind — at the price of
+//! O(leaves · 2^D) row-independent table memory.
+//!
+//! ## The subset-table view
+//!
+//! For a leaf whose merged path (duplicates merged as in
+//! [`crate::shap::path`]) carries `d` unique features with activation
+//! indicators `o_g ∈ {0,1}` and cover ratios `z_g`, the recursive
+//! algorithm's per-leaf contribution to feature `f` is
+//!
+//! ```text
+//! Δφ_f = (o_f − z_f) · v · Ψ_{d−1}( Π_{g∈S∖f} (o_g·y + z_g) )
+//! ```
+//!
+//! with `Ψ_{d−1}(Σ_k c_k y^k) = Σ_k c_k · k!(d−1−k)!/d!` summing the
+//! Shapley weights. Splitting the product over the row's active set `A`
+//! (`o_g = 1`) and inactive set `I` (`o_g = 0`) factors out everything
+//! row-dependent as scalars:
+//!
+//! ```text
+//! Π_{g∈S∖f}(o_g·y + z_g) = (Π_{g∈I∖f} z_g) · Π_{g∈A∖f}(y + z_g)
+//! ```
+//!
+//! The polynomial part depends on the row only through *which subset*
+//! `A∖f` (or `A`) it is — so precompute, per leaf, per subset `B` of its
+//! path elements, the scalar
+//!
+//! ```text
+//! S[B] = Ψ_{d−1}( Π_{g∈B}(y + z_g) )
+//! ```
+//!
+//! (2^d entries per leaf; only `|B| ≤ d−1` is ever read, matching
+//! `Ψ_{d−1}`'s degree). Per row, per leaf, everything left is O(d):
+//! one interval check per element gives the active bitmask `A` and
+//! `zprod = Π_{g∈I} z_g`, then
+//!
+//! ```text
+//! f ∈ A:  Δφ_f = (1 − z_f) · v · zprod · S[A∖{f}]
+//! f ∈ I:  Δφ_f = −z_f · v · (zprod / z_f) · S[A]  =  −v · zprod · S[A]
+//! ```
+//!
+//! — the inactive term's `z_f` cancels, so no per-feature division and
+//! one shared scalar for every inactive feature of the leaf.
+//!
+//! Activation/NaN semantics mirror `shap::treeshap` exactly (the parity
+//! oracle): an element is active iff `lower ≤ x < upper`, which is false
+//! for NaN — the same convention the packed host kernel checks.
+//!
+//! The tables are the memory trade the planner guards: exact bytes are
+//! `Σ_leaves 2^d · 8` ([`table_bytes_for_paths`]), estimated from shape
+//! alone as `leaves · 2^D · 8` by `backend::planner::fastv2_table_bytes`.
+
+use crate::gbdt::Model;
+use crate::parallel;
+use crate::shap::path::{expected_values, model_paths, Path};
+
+/// Hard ceiling on unique features per path: beyond this the table for a
+/// *single* leaf would exceed 2^57 bytes, so no budget can admit it and
+/// the shift arithmetic below would overflow. The planner's byte
+/// guardrail rejects such models long before this assert can fire.
+const MAX_UNIQUE: usize = 48;
+
+/// The precomputed Fast TreeSHAP v2 state of one model: flattened
+/// per-path element arrays plus the concatenated subset weight tables.
+pub struct FastV2Model {
+    /// per merged element (root element excluded), path-concatenated
+    feat: Vec<u32>,
+    lower: Vec<f32>,
+    upper: Vec<f32>,
+    zfrac: Vec<f64>,
+    /// element range of path `p`: `elem_start[p]..elem_start[p+1]`
+    elem_start: Vec<usize>,
+    /// table range of path `p`: `table_start[p]..table_start[p+1]`
+    /// (2^d entries, indexed by the active bitmask over the elements)
+    table_start: Vec<usize>,
+    group: Vec<u32>,
+    /// leaf value of path `p`
+    v: Vec<f64>,
+    /// concatenated S tables (see module docs)
+    table: Vec<f64>,
+    pub num_features: usize,
+    pub num_groups: usize,
+    /// φ base values per group (E[f] incl. base_score)
+    expected: Vec<f64>,
+    /// largest unique-feature count over the live paths
+    max_unique: usize,
+}
+
+impl FastV2Model {
+    pub fn expected_values(&self) -> &[f64] {
+        &self.expected
+    }
+
+    /// Paths carrying a table (stumps and dead leaves are dropped).
+    pub fn num_paths(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Largest unique-feature count `d` over the stored paths.
+    pub fn max_unique_features(&self) -> usize {
+        self.max_unique
+    }
+
+    /// Bytes held by the subset weight tables.
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// Whether a path contributes φ terms at all: stump paths (root only)
+/// only shift the expected value, and exactly-zero leaves contribute ±0
+/// to every feature (the prepared-model dead-leaf bound) — both are
+/// skipped by the build and the kernel, value-identically.
+fn is_live(p: &Path) -> bool {
+    p.len() > 1 && p.leaf_value() != 0.0
+}
+
+/// Exact table bytes [`precompute_from_paths`] would allocate for these
+/// paths: `Σ 2^d × 8` over live paths. `f64` so deep ensembles report a
+/// (huge) size instead of overflowing — the guardrail compares, never
+/// allocates.
+pub fn table_bytes_for_paths(paths: &[(usize, Path)]) -> f64 {
+    paths
+        .iter()
+        .filter(|(_, p)| is_live(p))
+        .map(|(_, p)| (p.len() - 1) as i32)
+        .map(|d| 8.0 * (2f64).powi(d))
+        .sum()
+}
+
+/// The Shapley weight row for a path of `d` unique features:
+/// `w[k] = k!(d−1−k)!/d!` for `k = 0..d`, via the overflow-free ratio
+/// recurrence `w[k+1]/w[k] = (k+1)/(d−1−k)`.
+fn shapley_weights(d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    let mut w = 1.0 / d as f64;
+    out.push(w);
+    for k in 0..d - 1 {
+        w *= (k + 1) as f64 / (d - 1 - k) as f64;
+        out.push(w);
+    }
+}
+
+/// DFS subset enumeration filling one leaf's S table. The current
+/// subset's polynomial coefficients live in `scratch[..=deg]`; the
+/// include-branch writes its child's coefficients just past them, so the
+/// whole recursion runs in one `(d+1)(d+2)/2` scratch buffer with no
+/// per-subset allocation. Each of the 2^d masks is visited exactly once.
+fn enumerate_subsets(
+    z: &[f64],
+    w: &[f64],
+    i: usize,
+    mask: usize,
+    scratch: &mut [f64],
+    deg: usize,
+    table: &mut [f64],
+) {
+    let d = z.len();
+    if i == d {
+        // the full set (degree d) is never read — Ψ_{d−1} caps at d−1
+        if mask + 1 != 1 << d {
+            table[mask] = scratch[..=deg].iter().zip(w).map(|(c, wk)| c * wk).sum();
+        }
+        return;
+    }
+    // exclude element i: same coefficients, descendants write deeper
+    enumerate_subsets(z, w, i + 1, mask, scratch, deg, table);
+    // include element i: multiply the polynomial by (y + z_i)
+    let (cur, rest) = scratch.split_at_mut(deg + 1);
+    rest[..deg + 2].fill(0.0);
+    for (k, c) in cur.iter().enumerate() {
+        rest[k] += c * z[i];
+        rest[k + 1] += c;
+    }
+    enumerate_subsets(z, w, i + 1, mask | (1 << i), rest, deg + 1, table);
+}
+
+/// Build the Fast TreeSHAP v2 tables from already-extracted merged paths
+/// with caller-supplied φ base values — the prepared-model cache's entry
+/// point, so cached and uncached builds agree bit-for-bit.
+pub fn precompute_from_paths(
+    num_features: usize,
+    num_groups: usize,
+    paths: &[(usize, Path)],
+    expected: &[f64],
+) -> FastV2Model {
+    let live: Vec<(usize, &Path)> =
+        paths.iter().filter(|(_, p)| is_live(p)).map(|(g, p)| (*g, p)).collect();
+    let max_unique = live.iter().map(|(_, p)| p.len() - 1).max().unwrap_or(0);
+    assert!(
+        max_unique <= MAX_UNIQUE,
+        "fast_v2: a path with {max_unique} unique features needs a 2^{max_unique}-entry \
+         table; the planner byte guardrail must exclude such models"
+    );
+    let mut fm = FastV2Model {
+        feat: Vec::new(),
+        lower: Vec::new(),
+        upper: Vec::new(),
+        zfrac: Vec::new(),
+        elem_start: vec![0],
+        table_start: vec![0],
+        group: Vec::new(),
+        v: Vec::new(),
+        table: Vec::new(),
+        num_features,
+        num_groups,
+        expected: expected.to_vec(),
+        max_unique,
+    };
+    let total_table: usize = live.iter().map(|(_, p)| 1usize << (p.len() - 1)).sum();
+    fm.table = vec![0.0f64; total_table];
+    let mut weights = Vec::with_capacity(max_unique);
+    let mut scratch = vec![0.0f64; (max_unique + 1) * (max_unique + 2) / 2];
+    let mut z = Vec::with_capacity(max_unique);
+    let mut offset = 0usize;
+    for (g, p) in live {
+        let d = p.len() - 1;
+        z.clear();
+        for e in &p.elements[1..] {
+            fm.feat.push(e.feature as u32);
+            fm.lower.push(e.lower);
+            fm.upper.push(e.upper);
+            fm.zfrac.push(f64::from(e.zero_fraction));
+            z.push(f64::from(e.zero_fraction));
+        }
+        fm.elem_start.push(fm.feat.len());
+        fm.group.push(g as u32);
+        fm.v.push(f64::from(p.leaf_value()));
+        shapley_weights(d, &mut weights);
+        scratch[0] = 1.0; // the empty subset's polynomial is 1
+        let table = &mut fm.table[offset..offset + (1 << d)];
+        enumerate_subsets(&z, &weights, 0, 0, &mut scratch, 0, table);
+        offset += 1 << d;
+        fm.table_start.push(offset);
+    }
+    fm
+}
+
+/// As [`precompute_from_paths`], extracting paths and base values from
+/// the model (standalone entry point for tests and one-off callers).
+pub fn precompute_model(model: &Model) -> FastV2Model {
+    let paths = model_paths(model);
+    precompute_from_paths(model.num_features, model.num_groups, &paths, &expected_values(model))
+}
+
+/// φ contributions of one path for one row, added into `phis[0..=M]`
+/// (slot M untouched — base value is the caller's job).
+#[inline]
+fn path_row(fm: &FastV2Model, p: usize, x: &[f32], phis: &mut [f64]) {
+    let es = fm.elem_start[p];
+    let ee = fm.elem_start[p + 1];
+    let mut mask = 0usize;
+    let mut zprod = 1.0f64;
+    for (j, e) in (es..ee).enumerate() {
+        let xv = x[fm.feat[e] as usize];
+        if xv >= fm.lower[e] && xv < fm.upper[e] {
+            mask |= 1 << j;
+        } else {
+            zprod *= fm.zfrac[e];
+        }
+    }
+    let table = &fm.table[fm.table_start[p]..fm.table_start[p + 1]];
+    let vz = fm.v[p] * zprod;
+    // one shared term for every inactive feature (the z_f cancels);
+    // table[full-mask] is 0.0 but then no inactive element reads it
+    let inactive = -vz * table[mask];
+    for (j, e) in (es..ee).enumerate() {
+        let f = fm.feat[e] as usize;
+        if mask & (1 << j) != 0 {
+            phis[f] += (1.0 - fm.zfrac[e]) * vz * table[mask ^ (1 << j)];
+        } else {
+            phis[f] += inactive;
+        }
+    }
+}
+
+/// SHAP values for a batch through the weight-table kernel: output
+/// `[rows × groups × (M+1)]` row-major, base value E[f] in slot M —
+/// the same layout as `treeshap::shap_values`.
+pub fn shap_values(fm: &FastV2Model, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+    let m = fm.num_features;
+    let groups = fm.num_groups;
+    let stride = groups * (m + 1);
+    let mut out = vec![0.0f32; rows * stride];
+    parallel::parallel_for_rows(threads, &mut out, stride, 8, |range, chunk| {
+        let mut phis = vec![0.0f64; stride];
+        for (k, r) in range.enumerate() {
+            phis.fill(0.0);
+            let xr = &x[r * m..(r + 1) * m];
+            for p in 0..fm.num_paths() {
+                let g = fm.group[p] as usize;
+                path_row(fm, p, xr, &mut phis[g * (m + 1)..(g + 1) * (m + 1)]);
+            }
+            for g in 0..groups {
+                phis[g * (m + 1) + m] += fm.expected[g];
+            }
+            let dst = &mut chunk[k * stride..(k + 1) * stride];
+            for (d, s) in dst.iter_mut().zip(&phis) {
+                *d = *s as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+    use crate::shap::treeshap;
+
+    #[test]
+    fn subset_tables_match_the_factorial_formula() {
+        // hand-evaluate S[B] = Σ_k c_k(B)·k!(d−1−k)!/d! for a 3-feature
+        // path and check every table entry the DFS produced
+        let z = [0.3f64, 0.6, 0.8];
+        let d = z.len();
+        let fact = |k: usize| (1..=k).map(|v| v as f64).product::<f64>();
+        let mut weights = Vec::new();
+        shapley_weights(d, &mut weights);
+        for (k, w) in weights.iter().enumerate() {
+            let want = fact(k) * fact(d - 1 - k) / fact(d);
+            assert!((w - want).abs() < 1e-15, "w[{k}]: {w} vs {want}");
+        }
+        let mut table = vec![0.0f64; 1 << d];
+        let mut scratch = vec![0.0f64; (d + 1) * (d + 2) / 2];
+        scratch[0] = 1.0;
+        enumerate_subsets(&z, &weights, 0, 0, &mut scratch, 0, &mut table);
+        for mask in 0..(1usize << d) - 1 {
+            // expand Π_{g∈B}(y + z_g) coefficient by coefficient
+            let mut coeffs = vec![1.0f64];
+            for (i, &zi) in z.iter().enumerate() {
+                if mask & (1 << i) != 0 {
+                    let mut next = vec![0.0; coeffs.len() + 1];
+                    for (k, c) in coeffs.iter().enumerate() {
+                        next[k] += c * zi;
+                        next[k + 1] += c;
+                    }
+                    coeffs = next;
+                }
+            }
+            let want: f64 =
+                coeffs.iter().enumerate().map(|(k, c)| c * weights[k]).sum();
+            assert!(
+                (table[mask] - want).abs() < 1e-14,
+                "mask {mask:#b}: {} vs {want}",
+                table[mask]
+            );
+        }
+        assert_eq!(table[(1 << d) - 1], 0.0, "full-set slot stays unwritten");
+    }
+
+    fn assert_matches_recursive(model: &Model, x: &[f32], rows: usize, what: &str) {
+        let m = model.num_features;
+        let a = treeshap::shap_values(model, x, rows, 1);
+        let fm = precompute_model(model);
+        let b = shap_values(&fm, x, rows, 1);
+        assert_eq!(a.len(), b.len());
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (p - q).abs() <= 1e-6 + 1e-5 * p.abs().max(q.abs()),
+                "{what}: idx {i} ({} per row-group): {p} vs {q}",
+                m + 1
+            );
+        }
+    }
+
+    #[test]
+    fn matches_recursive_on_trained_model() {
+        let d = SynthSpec::cal_housing(0.01).generate();
+        let model = train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() });
+        let rows = 48.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "cal");
+    }
+
+    #[test]
+    fn matches_recursive_on_multiclass() {
+        let d = SynthSpec::covtype(0.001).generate();
+        let model = train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() });
+        let rows = 16.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "multi");
+    }
+
+    #[test]
+    fn nan_rows_follow_the_oracle_convention() {
+        let d = SynthSpec::adult(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 6.min(d.rows);
+        let mut x = d.features[..rows * m].to_vec();
+        for r in 0..rows {
+            x[r * m + (r % m)] = f32::NAN;
+        }
+        assert_matches_recursive(&model, &x, rows, "nan");
+    }
+
+    #[test]
+    fn repeated_feature_tree_parity_and_local_accuracy() {
+        let model = crate::bench::zoo::repeated_feature_model();
+        let probes: &[[f32; 2]] = &[
+            [-2.0, 0.0],
+            [-0.5, 0.0],
+            [-0.5, 2.0],
+            [0.5, 1.5],
+            [3.0, -1.0],
+            [f32::NAN, 0.5],
+        ];
+        let mut x = Vec::new();
+        for p in probes {
+            x.extend_from_slice(p);
+        }
+        let rows = probes.len();
+        assert_matches_recursive(&model, &x, rows, "repeated-feature");
+        // local accuracy Σφ = f(x) on the non-NaN rows
+        let fm = precompute_model(&model);
+        let phis = shap_values(&fm, &x, rows, 1);
+        let m = model.num_features;
+        for (r, p) in probes.iter().enumerate().take(rows - 1) {
+            let pred = f64::from(model.predict_row_raw(p)[0]);
+            let total: f64 = phis[r * (m + 1)..(r + 1) * (m + 1)]
+                .iter()
+                .map(|&v| f64::from(v))
+                .sum();
+            assert!((total - pred).abs() < 1e-5, "row {r}: Σφ {total} vs f(x) {pred}");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let model = train(&d, &TrainParams { rounds: 4, max_depth: 4, ..Default::default() });
+        let m = model.num_features;
+        let rows = 16.min(d.rows);
+        let fm = precompute_model(&model);
+        let a = shap_values(&fm, &d.features[..rows * m], rows, 1);
+        let b = shap_values(&fm, &d.features[..rows * m], rows, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stump_trees_only_shift_the_base_value() {
+        let mut model = {
+            let d = SynthSpec::cal_housing(0.005).generate();
+            train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() })
+        };
+        model.trees.push(crate::gbdt::Tree::leaf(2.5, 10.0));
+        model.tree_group.push(0);
+        let d = SynthSpec::cal_housing(0.005).generate();
+        let rows = 4.min(d.rows);
+        assert_matches_recursive(&model, &d.features[..rows * model.num_features], rows, "stump");
+    }
+
+    #[test]
+    fn table_bytes_accounting_is_exact() {
+        let d = SynthSpec::cal_housing(0.006).generate();
+        let model = train(&d, &TrainParams { rounds: 3, max_depth: 4, ..Default::default() });
+        let paths = model_paths(&model);
+        let fm = precompute_model(&model);
+        assert_eq!(table_bytes_for_paths(&paths), fm.table_bytes() as f64);
+        assert!(fm.table_bytes() > 0);
+        assert!(fm.max_unique_features() >= 1);
+        // the estimate counts live paths only: stumps and dead leaves
+        // carry no table
+        let stump = (0usize, Path::default());
+        assert_eq!(table_bytes_for_paths(&[stump]), 0.0);
+    }
+}

@@ -25,8 +25,24 @@ fn one_fraction(g: &PackedGroup, i: usize, x: &[f32]) -> f64 {
     }
 }
 
+/// Fill `of[k] = one_fraction(start + k)` for one (row, path). The DP
+/// (`path_weights`), the unwind (`unwound_sum`) and the outer φ/Φ loops
+/// all consume the same activations — ~O(len) interval checks per DP
+/// step before, exactly `len` per (row, path) now. Value-identical:
+/// `one_fraction` yields exact 0.0/1.0, and buffering changes no
+/// arithmetic, only where the indicator is evaluated.
+#[inline]
+fn activations(g: &PackedGroup, start: usize, len: usize, x: &[f32], of: &mut [f64; LANES]) {
+    for k in 0..len {
+        of[k] = one_fraction(g, start + k, x);
+    }
+}
+
 /// EXTEND over one path (lanes [start, start+len)), weights out.
-fn path_weights(g: &PackedGroup, start: usize, len: usize, x: &[f32], w: &mut [f64], skip: usize) {
+/// `of[k]` is the precomputed activation of in-path offset `k`
+/// (see [`activations`]) — computed once per (row, path) by the caller
+/// instead of re-deriving it inside every DP step.
+fn path_weights(g: &PackedGroup, start: usize, len: usize, of: &[f64], w: &mut [f64], skip: usize) {
     let eff_len = if skip < len { len - 1 } else { len };
     let map = |q: usize| if skip < len && q >= skip { q + 1 } else { q };
     for wi in w.iter_mut().take(eff_len) {
@@ -37,7 +53,7 @@ fn path_weights(g: &PackedGroup, start: usize, len: usize, x: &[f32], w: &mut [f
     for d in 1..eff_len {
         let ed = start + map(d);
         let zd = g.zfrac[ed] as f64;
-        let od = one_fraction(g, ed, x);
+        let od = of[map(d)];
         prev[..eff_len].copy_from_slice(&w[..eff_len]);
         for p in 0..eff_len {
             let lw = if p > 0 { prev[p - 1] } else { 0.0 };
@@ -47,12 +63,13 @@ fn path_weights(g: &PackedGroup, start: usize, len: usize, x: &[f32], w: &mut [f
     }
 }
 
-/// UNWOUNDSUM for the element at remapped position `i`.
+/// UNWOUNDSUM for the element at remapped position `i`. `of` as in
+/// [`path_weights`]: the row's precomputed per-offset activations.
 fn unwound_sum(
     g: &PackedGroup,
     start: usize,
     len: usize,
-    x: &[f32],
+    of: &[f64],
     w: &[f64],
     i: usize,
     skip: usize,
@@ -61,7 +78,7 @@ fn unwound_sum(
     let map = |q: usize| if skip < len && q >= skip { q + 1 } else { q };
     let l = eff_len - 1;
     let e = start + map(i);
-    let o = one_fraction(g, e, x);
+    let o = of[map(i)];
     let z = g.zfrac[e] as f64;
     let mut nxt = w[l];
     let mut total = 0.0;
@@ -83,6 +100,7 @@ fn unwound_sum(
 /// `phis[0..=M]` (slot M untouched — base value is the caller's job).
 pub fn shap_row(g: &PackedGroup, x: &[f32], phis: &mut [f64]) {
     let mut w = [0.0f64; LANES];
+    let mut of = [0.0f64; LANES];
     for b in 0..g.num_bins {
         let mut lane = 0usize;
         while lane < LANES {
@@ -100,12 +118,12 @@ pub fn shap_row(g: &PackedGroup, x: &[f32], phis: &mut [f64]) {
                 lane += len;
                 continue;
             }
-            path_weights(g, start, len, x, &mut w, usize::MAX);
+            activations(g, start, len, x, &mut of);
+            path_weights(g, start, len, &of, &mut w, usize::MAX);
             for k in 1..len {
                 let e = start + k;
-                let s = unwound_sum(g, start, len, x, &w, k, usize::MAX);
-                let o = one_fraction(g, e, x);
-                phis[g.fidx[e] as usize] += s * (o - g.zfrac[e] as f64) * v;
+                let s = unwound_sum(g, start, len, &of, &w, k, usize::MAX);
+                phis[g.fidx[e] as usize] += s * (of[k] - g.zfrac[e] as f64) * v;
             }
             lane += len;
         }
@@ -117,6 +135,7 @@ pub fn shap_row(g: &PackedGroup, x: &[f32], phis: &mut [f64]) {
 /// on-path positions; one DP serves the present and absent cases.
 pub fn interactions_row(g: &PackedGroup, x: &[f32], m: usize, mat: &mut [f64]) {
     let mut w = [0.0f64; LANES];
+    let mut of = [0.0f64; LANES];
     for b in 0..g.num_bins {
         let mut lane = 0usize;
         while lane < LANES {
@@ -133,19 +152,19 @@ pub fn interactions_row(g: &PackedGroup, x: &[f32], m: usize, mat: &mut [f64]) {
                 lane += len;
                 continue;
             }
+            activations(g, start, len, x, &mut of);
             for k in 1..len {
                 let ek = start + k;
-                let ok = one_fraction(g, ek, x);
+                let ok = of[k];
                 let zk = g.zfrac[ek] as f64;
                 let fk = g.fidx[ek] as usize;
-                path_weights(g, start, len, x, &mut w, k);
+                path_weights(g, start, len, &of, &mut w, k);
                 for q in 1..len - 1 {
                     // remapped position q corresponds to original q + (q>=k)
                     let orig = if q >= k { q + 1 } else { q };
                     let e = start + orig;
-                    let s = unwound_sum(g, start, len, x, &w, q, k);
-                    let o = one_fraction(g, e, x);
-                    let contrib = s * (o - g.zfrac[e] as f64) * v;
+                    let s = unwound_sum(g, start, len, &of, &w, q, k);
+                    let contrib = s * (of[orig] - g.zfrac[e] as f64) * v;
                     let fi = g.fidx[e] as usize;
                     mat[fi * (m + 1) + fk] += 0.5 * contrib * (ok - zk);
                 }

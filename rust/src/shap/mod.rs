@@ -13,6 +13,7 @@
 //! are the algorithm substrate it is built from.
 
 mod binpack;
+pub mod fast_v2;
 pub mod host_kernel;
 pub mod interactions;
 pub mod linear;

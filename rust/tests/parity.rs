@@ -194,6 +194,158 @@ fn linear_backend_is_phi_only() {
 }
 
 #[test]
+fn fastv2_backend_matches_recursive_oracle() {
+    let d = SynthSpec::cal_housing(0.01).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 8, max_depth: 5, ..Default::default() }));
+    let rows = 100;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let fastv2 = contributions(&model, BackendKind::FastV2, x, rows);
+    close(&baseline, &fastv2, 1e-6, "recursive vs fastv2 weight tables");
+}
+
+#[test]
+fn multiclass_fastv2_parity() {
+    let d = SynthSpec::covtype(0.001).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 4, ..Default::default() }));
+    let rows = 40;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let fastv2 = contributions(&model, BackendKind::FastV2, x, rows);
+    close(&baseline, &fastv2, 1e-6, "multiclass recursive vs fastv2");
+}
+
+#[test]
+fn deep_model_fastv2_parity() {
+    // depth 12: long merged paths stress the 2^d subset enumeration and
+    // the per-path Shapley weight rows (d up to 12 here, so the tables
+    // stay well under the default budget while exercising deep masks)
+    let d = SynthSpec::covtype(0.002).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 1, max_depth: 12, ..Default::default() }));
+    let rows = 16;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let fastv2 = contributions(&model, BackendKind::FastV2, x, rows);
+    close(&baseline, &fastv2, 1e-6, "deep recursive vs fastv2");
+}
+
+#[test]
+fn fastv2_phi_matches_oracle_across_the_zoo() {
+    // the acceptance sweep, mirroring the linear one: every zoo dataset
+    // shape (Small grid), the medium/large regimes on the cheap
+    // datasets, NaN probes, and the hand-built repeated-feature model —
+    // φ within 1e-6 of the recursive oracle plus local accuracy per row
+    use gputreeshap::bench::zoo;
+    use gputreeshap::gbdt::ZooSize;
+    let mut cases: Vec<(String, Arc<Model>, Vec<f32>, usize, usize)> = Vec::new();
+    for e in zoo::zoo_entries() {
+        let cheap = e.spec.name == "cal_housing" || e.spec.name == "adult";
+        let keep = e.size == ZooSize::Small
+            || (cheap && e.size == ZooSize::Medium)
+            || (e.spec.name == "cal_housing" && e.size == ZooSize::Large);
+        if !keep {
+            continue;
+        }
+        let (model, data) = zoo::build(&e);
+        let rows = 16.min(data.rows);
+        let mut x = data.features[..rows * model.num_features].to_vec();
+        // poison one feature in the first half of the rows with NaN:
+        // missing values must follow the oracle's activation convention
+        // (NaN matches no split interval, so the feature is inactive)
+        let m = model.num_features;
+        let nan_rows = rows / 2;
+        for r in 0..nan_rows {
+            x[r * m + (r % m)] = f32::NAN;
+        }
+        cases.push((e.name, Arc::new(model), x, rows, nan_rows));
+    }
+    {
+        let model = Arc::new(zoo::repeated_feature_model());
+        let x = vec![-2.0, 0.0, -0.5, 0.0, -0.5, 2.0, 0.5, 1.5, 3.0, -1.0];
+        cases.push(("repeated-feature".to_string(), model, x, 5, 0));
+    }
+    for (name, model, x, rows, nan_rows) in &cases {
+        let m = model.num_features;
+        let g = model.num_groups;
+        let baseline = contributions(model, BackendKind::Recursive, x, *rows);
+        let fastv2 = contributions(model, BackendKind::FastV2, x, *rows);
+        close(&baseline, &fastv2, 1e-6, &format!("{name}: recursive vs fastv2"));
+        // local accuracy: Σφ + base == f(x) per row and group — only on
+        // NaN-free rows (a missing feature is marginalized out, so Σφ
+        // intentionally differs from routing the raw row)
+        for r in *nan_rows..*rows {
+            let preds = model.predict_row_raw(&x[r * m..(r + 1) * m]);
+            for k in 0..g {
+                let o = r * g * (m + 1) + k * (m + 1);
+                let s: f64 = fastv2[o..o + m + 1].iter().map(|&v| f64::from(v)).sum();
+                assert!(
+                    (s - f64::from(preds[k])).abs() < 2e-3,
+                    "{name} row {r} group {k}: Σφ {s} vs f(x) {}",
+                    preds[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fastv2_backend_is_phi_only() {
+    let d = SynthSpec::cal_housing(0.004).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 3, ..Default::default() }));
+    let rows = 4;
+    let b = backend::build(&model, BackendKind::FastV2, &cfg(rows)).unwrap();
+    assert!(!b.caps().supports_interactions, "fastv2 is φ-only");
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let err = b.interactions(x, rows).unwrap_err();
+    assert!(err.to_string().contains("auto"), "error should point at --backend auto: {err:#}");
+    // predictions ARE served (raw tree routing)
+    let preds = b.predictions(x, rows).unwrap();
+    for r in 0..rows {
+        let want = model.predict_row_raw(&x[r * m..(r + 1) * m])[0];
+        assert_eq!(preds[r], want);
+    }
+    // and auto with interactions demanded never lands on a φ-only backend
+    let (_, auto) = backend::build_auto(&model, &cfg(rows)).unwrap();
+    assert!(auto.caps().supports_interactions);
+    auto.interactions(x, rows).unwrap();
+}
+
+#[test]
+fn fastv2_guardrail_refuses_construction_over_budget() {
+    // a depth-14 ensemble: merged paths up to 14 unique features, so the
+    // subset tables are the largest this repo can build. With the budget
+    // forced below the table size the build must REFUSE — before any
+    // allocation — and say which knob raises the cap.
+    let d = SynthSpec::cal_housing(0.01).generate();
+    let model =
+        Arc::new(train(&d, &TrainParams { rounds: 2, max_depth: 14, ..Default::default() }));
+    let mut c = cfg(4);
+    c.fastv2_max_mb = 0;
+    let err = backend::build(&model, BackendKind::FastV2, &c).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("fastv2-max-mb") && msg.contains("budget"),
+        "refusal must name the budget knob: {msg}"
+    );
+    // the same model constructs fine under the default budget, and
+    // matches the oracle — the guardrail is the budget, not the depth
+    let rows = 4;
+    let m = model.num_features;
+    let x = &d.features[..rows * m];
+    let baseline = contributions(&model, BackendKind::Recursive, x, rows);
+    let fastv2 = contributions(&model, BackendKind::FastV2, x, rows);
+    close(&baseline, &fastv2, 1e-6, "depth-14 recursive vs fastv2");
+}
+
+#[test]
 fn packing_algorithm_is_invisible_to_results() {
     let d = SynthSpec::adult(0.004).generate();
     let model =

@@ -153,6 +153,75 @@ fn row_shards_share_one_prepared_entry() {
 }
 
 #[test]
+fn fastv2_row_shards_share_one_weight_table_build() {
+    // the expensive fastv2 artifact is the per-leaf subset weight table;
+    // row shards all hold the full model, so one solo backend plus three
+    // shards must trigger exactly ONE table build and three cache hits
+    let entry = zoo::zoo_entries().into_iter().find(|e| e.size == ZooSize::Small).unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+    let solo = backend::build(&model, BackendKind::FastV2, &cfg()).unwrap();
+    let want = solo.contributions(&x, rows).unwrap();
+    let sharded =
+        ShardedBackend::build(&model, BackendKind::FastV2, &cfg(), 3, ShardAxis::Rows).unwrap();
+    let entry_ptr = solo.prepared().unwrap();
+    assert!(Arc::ptr_eq(entry_ptr, sharded.prepared().unwrap()));
+    let stats = entry_ptr.stats();
+    assert_eq!(
+        stats.fastv2_builds, 1,
+        "three shards + one solo backend must build the weight tables exactly once"
+    );
+    assert!(
+        stats.fastv2_hits >= 3,
+        "the three shards must hit the shared tables, got {} hits",
+        stats.fastv2_hits
+    );
+    // row sharding only splits the batch — identical math, identical φ
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), want);
+}
+
+#[test]
+fn fastv2_quarantine_hot_add_cycle_hits_the_table_cache() {
+    // row-axis elastic cycle: quarantine drops an instance, hot-add
+    // rebuilds the full width from the SAME model Arc — the registry
+    // entry survives, so the rebuilt shards must reuse the cached weight
+    // tables (builds stay pinned at 1) and reproduce φ bit-for-bit
+    let entry = zoo::zoo_entries().into_iter().find(|e| e.size == ZooSize::Small).unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let rows = 8.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let model = Arc::new(model);
+    let mut sharded =
+        ShardedBackend::build(&model, BackendKind::FastV2, &cfg(), 3, ShardAxis::Rows).unwrap();
+    let out0 = sharded.contributions(&x, rows).unwrap();
+    let prep = Arc::clone(sharded.prepared().unwrap());
+    let builds_before = prep.stats().fastv2_builds;
+    let hits_before = prep.stats().fastv2_hits;
+
+    sharded.quarantine(&[1]).unwrap();
+    assert_eq!(sharded.shards(), 2);
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), out0);
+
+    sharded.hot_add(3).unwrap();
+    assert_eq!(sharded.shards(), 3);
+    assert_eq!(sharded.contributions(&x, rows).unwrap(), out0);
+
+    let stats = prep.stats();
+    assert_eq!(
+        stats.fastv2_builds, builds_before,
+        "the elastic cycle must never rebuild the weight tables"
+    );
+    assert!(
+        stats.fastv2_hits > hits_before,
+        "hot-added shards must hit the cached tables"
+    );
+}
+
+#[test]
 fn grid_holds_one_prepared_entry_per_tree_slice() {
     // cache-aware nested sharding: an r×t grid must prepare exactly t
     // sub-ensembles — all r row replicas of a slice are built from ONE
