@@ -24,16 +24,25 @@
 //! `bench-compare` gates as current-median vs baseline-min — the
 //! ROADMAP's "perf baseline variance bands".
 //!
+//! A second section sweeps **interaction-value** throughput in the
+//! wide-model (`M ≫ D`) regime at M ∈ {96, 256} — past the XLA padded
+//! bucket cap — comparing the feature-tile axis against row shards and
+//! the single-shard host kernel (`steady_rows_per_s.tiles` in the JSON
+//! report). Φ cost scales with the conditioned-feature count, so this
+//! is the regime the fourth shard axis exists for.
+//!
 //! Args (after `--`): `--rows N` (default 512), `--devices N` max shard
 //! count (default 4), `--backend cpu|host|…` (default host),
-//! `--size small|med|large` (default med), `--json PATH` merges a
+//! `--size small|med|large` (default med), `--shard-axis tiles|rows`
+//! restricts the interactions sweep to one sharded axis (default both;
+//! the φ section always sweeps every axis), `--json PATH` merges a
 //! machine-readable summary under the `fig5` key at PATH.
 
 use std::sync::Arc;
 
 use gputreeshap::backend::{
-    BackendConfig, BackendKind, GridBackend, Planner, ShapBackend, ShardAxis, ShardGrid,
-    ShardedBackend,
+    self, BackendConfig, BackendKind, GridBackend, Planner, ShapBackend, ShardAxis,
+    ShardGrid, ShardedBackend, TilesBackend,
 };
 use gputreeshap::bench::{band_json, dump_record, write_json_report, zoo, Table};
 use gputreeshap::cli::Args;
@@ -211,7 +220,146 @@ fn main() {
         "\n(paper: near-linear row-axis scaling to 8 GPUs; flat here = shared cores, see EXPERIMENTS.md)"
     );
 
+    // ── interactions throughput: the wide-model (M ≫ D) Φ regime ──────
+    // The feature-tile axis splits the conditioned-feature loop, so its
+    // win grows with M while row shards only split the batch. Small-size
+    // ensembles keep this tractable in CI; rows are capped per width
+    // because the output matrix is (M+1)² per row × group.
+    let inter_axis = match args.get_or("shard-axis", "both") {
+        "tiles" | "tile" => Some(ShardAxis::FeatureTiles),
+        "rows" => Some(ShardAxis::Rows),
+        "both" => None,
+        other => panic!("unknown --shard-axis '{other}' (tiles|rows)"),
+    };
+    println!(
+        "\nfig5 interactions: feature tiles vs row shards, {} device(s), M ∈ {{96, 256}}",
+        max_devices
+    );
+    let mut inter_table =
+        Table::new(&["M", "axis", "devices", "build(s)", "time(s)", "rows/s", "vs host-1"]);
+    let mut inter_configs: Vec<Json> = Vec::new();
+    let (mut tiles96_rps, mut host96_rps, mut rows96_rps) = (None, None, None);
+    let (rounds, depth) = ZooSize::Small.rounds_depth();
+    for &(cols, row_cap) in &[(96usize, 24usize), (256, 8)] {
+        let spec = zoo::fashion_wide(cols, 0.005);
+        let (wmodel, wdata) =
+            zoo::build_custom(&format!("fig5_inter_m{cols}-small"), &spec, rounds, depth);
+        let wm = wmodel.num_features;
+        let irows = row_cap.min(rows_req).min(wdata.rows).max(1);
+        let wx = &wdata.features[..irows * wm];
+        let wmodel = Arc::new(wmodel);
+        let cfg = BackendConfig {
+            rows_hint: irows,
+            with_interactions: true,
+            ..Default::default()
+        };
+
+        let mut measure_inter = |axis_name: &str,
+                                 devices: usize,
+                                 build_s: f64,
+                                 b: &dyn ShapBackend,
+                                 host1: Option<f64>|
+         -> f64 {
+            let mut times = Vec::with_capacity(RUNS);
+            for _ in 0..RUNS {
+                let t = std::time::Instant::now();
+                b.interactions(wx, irows).expect("interactions");
+                times.push(t.elapsed().as_secs_f64());
+            }
+            times.sort_by(f64::total_cmp);
+            let median_t = times[times.len() / 2];
+            let rps_samples: Vec<f64> = times.iter().map(|t| irows as f64 / t).collect();
+            let median_rps = irows as f64 / median_t;
+            let speedup = host1.map(|h| median_rps / h);
+            inter_table.row(vec![
+                format!("m={cols}"),
+                axis_name.into(),
+                devices.to_string(),
+                format!("{build_s:.3}"),
+                format!("{median_t:.3}"),
+                format!("{median_rps:.1}"),
+                speedup.map_or("—".into(), |s| format!("{s:.2}x")),
+            ]);
+            inter_configs.push(Json::obj(vec![
+                ("m", Json::from(cols)),
+                ("axis", Json::from(axis_name)),
+                ("devices", Json::from(devices)),
+                ("rows", Json::from(irows)),
+                ("build_s", Json::from(build_s)),
+                ("time_s", Json::from(median_t)),
+                ("rows_per_s", band_json(&rps_samples)),
+                ("speedup_vs_host1", speedup.map(Json::from).unwrap_or(Json::Null)),
+            ]));
+            dump_record(
+                "fig5-interactions",
+                vec![
+                    ("m", Json::from(cols)),
+                    ("axis", Json::from(axis_name)),
+                    ("devices", Json::from(devices)),
+                    ("rows_per_s", Json::from(median_rps)),
+                ],
+            );
+            median_rps
+        };
+
+        // the single-shard host kernel anchors every ratio at this width
+        let (host1, build_s) = time_it(|| {
+            backend::build(&wmodel, BackendKind::Host, &cfg).expect("host backend")
+        });
+        let host1_rps = measure_inter("host-1", 1, build_s, host1.as_ref(), None);
+        if cols == 96 {
+            host96_rps = Some(host1_rps);
+        }
+        if inter_axis != Some(ShardAxis::Rows) {
+            let (tiled, build_s) = time_it(|| {
+                TilesBackend::build(&wmodel, BackendKind::Host, &cfg, max_devices)
+                    .expect("tiles backend")
+            });
+            let rps = measure_inter(
+                ShardAxis::FeatureTiles.name(),
+                tiled.shard_count(),
+                build_s,
+                &tiled,
+                Some(host1_rps),
+            );
+            if cols == 96 {
+                tiles96_rps = Some(rps);
+            }
+        }
+        if inter_axis != Some(ShardAxis::FeatureTiles) && max_devices > 1 {
+            let (rsharded, build_s) = time_it(|| {
+                ShardedBackend::build(&wmodel, BackendKind::Host, &cfg, max_devices, ShardAxis::Rows)
+                    .expect("row-sharded backend")
+            });
+            let rps = measure_inter(
+                ShardAxis::Rows.name(),
+                rsharded.shards(),
+                build_s,
+                &rsharded,
+                Some(host1_rps),
+            );
+            if cols == 96 {
+                rows96_rps = Some(rps);
+            }
+        }
+    }
+    inter_table.print();
+
     if let Some(path) = json_path {
+        let mut steady = Vec::new();
+        if let Some(v) = tiles96_rps {
+            steady.push(("tiles", Json::from(v)));
+        }
+        if let Some(v) = host96_rps {
+            steady.push(("host_single", Json::from(v)));
+        }
+        if let Some(v) = rows96_rps {
+            steady.push(("rows_axis", Json::from(v)));
+        }
+        let tiles_speedup = match (tiles96_rps, host96_rps) {
+            (Some(t), Some(h)) if h > 0.0 => Json::from(t / h),
+            _ => Json::Null,
+        };
         let report = Json::obj(vec![
             ("model", Json::from(entry.name.as_str())),
             ("backend", Json::from(kind.name())),
@@ -219,6 +367,12 @@ fn main() {
             ("runs", Json::from(RUNS)),
             ("configs", Json::Arr(configs)),
             ("best_rows_per_s", Json::from(best_rps)),
+            ("interactions", Json::Arr(inter_configs)),
+            // steady-state interactions throughput at M=96 (rows/s):
+            // tiles vs the single-shard host kernel is the acceptance
+            // ratio for the feature-tile axis
+            ("steady_rows_per_s", Json::obj(steady)),
+            ("tiles_speedup_m96", tiles_speedup),
         ]);
         write_json_report(&path, "fig5", report).expect("write --json report");
         println!("json report merged into {}", path.display());

@@ -92,6 +92,20 @@ impl ShapBackend for HostPackedBackend {
         Ok(host_kernel::interaction_values(&self.pm, x, rows, self.threads))
     }
 
+    fn interactions_block(
+        &self,
+        x: &[f32],
+        rows: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        Ok(host_kernel::interaction_block(&self.pm, x, rows, self.threads, lo, hi))
+    }
+
+    fn contributions_f64(&self, x: &[f32], rows: usize) -> Result<Vec<f64>> {
+        Ok(host_kernel::phis_f64(&self.pm, x, rows, self.threads))
+    }
+
     fn prepared(&self) -> Option<&Arc<PreparedModel>> {
         Some(&self.prep)
     }

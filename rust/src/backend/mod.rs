@@ -21,6 +21,7 @@ pub mod prepared;
 pub mod recursive;
 pub mod shard;
 pub mod sharded;
+pub mod tiles;
 #[cfg(feature = "xla")]
 pub mod xla;
 
@@ -41,6 +42,7 @@ pub use prepared::{prepare, PrepStats, PreparedModel};
 pub use recursive::RecursiveBackend;
 pub use shard::{ShardAxis, ShardGrid};
 pub use sharded::ShardedBackend;
+pub use tiles::TilesBackend;
 #[cfg(feature = "xla")]
 pub use xla::{XlaPaddedBackend, XlaWarpBackend};
 
@@ -79,6 +81,37 @@ pub trait ShapBackend: Send + Sync {
     fn num_groups(&self) -> usize;
     fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>>;
     fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>>;
+    /// One off-diagonal column-block of the interaction matrix, in f64:
+    /// for conditioned features `lo..hi`, returns
+    /// `[rows × groups × M × (hi−lo)]` cells `Φ[i][j]` for `j ∈ lo..hi`.
+    /// Optional — only backends a [`tiles::TilesBackend`] can drive
+    /// implement it; the coordinator assembles blocks and fills the
+    /// diagonal/base slots from [`ShapBackend::contributions_f64`].
+    /// Implementations declare their block layout via the tile executor
+    /// (full columns vs owner-symmetric upper triangle), not here.
+    fn interactions_block(
+        &self,
+        _x: &[f32],
+        _rows: usize,
+        _lo: usize,
+        _hi: usize,
+    ) -> Result<Vec<f64>> {
+        Err(crate::anyhow!(
+            "backend '{}' does not serve interaction column-blocks",
+            self.name()
+        ))
+    }
+    /// Unconditioned φ in f64, `[rows × groups × M]` (no base slot),
+    /// accumulated in the oracle's per-tree order — the diagonal/base
+    /// input for tile assembly (Eq. 6 needs full-precision φ to stay
+    /// bit-compatible with the unsharded kernel). Optional, like
+    /// [`ShapBackend::interactions_block`].
+    fn contributions_f64(&self, _x: &[f32], _rows: usize) -> Result<Vec<f64>> {
+        Err(crate::anyhow!(
+            "backend '{}' does not serve f64 contributions",
+            self.name()
+        ))
+    }
     /// Raw predictions; optional (not every backend carries leaf routing).
     fn predictions(&self, _x: &[f32], _rows: usize) -> Result<Vec<f32>> {
         Err(crate::anyhow!("backend '{}' does not serve predictions", self.name()))
@@ -266,7 +299,9 @@ impl Default for BackendConfig {
 
 /// Build the backend realizing one concrete [`Plan`] — the routing
 /// shared by [`build`], [`build_auto`] and the serving executor's
-/// rebuilds: grids go to [`GridBackend`], multi-shard simple axes to
+/// rebuilds: grids go to [`GridBackend`], feature-tile plans to
+/// [`TilesBackend`] (interactions) or degrade to rows (φ/predict has no
+/// feature axis to split), multi-shard simple axes to
 /// [`ShardedBackend`], single-shard plans to the plain construction.
 pub fn build_for_plan(
     model: &Arc<Model>,
@@ -275,6 +310,21 @@ pub fn build_for_plan(
 ) -> Result<Box<dyn ShapBackend>> {
     if let (ShardAxis::Grid, Some(grid)) = (plan.axis, plan.grid) {
         return Ok(Box::new(GridBackend::build(model, plan.kind, cfg, grid)?));
+    }
+    if plan.axis == ShardAxis::FeatureTiles && plan.shards > 1 {
+        // tiles split the conditioned-feature loop, which only exists
+        // for Φ; a φ/predict-only request on a tile plan falls back to
+        // the rows axis (same device count, exact either way)
+        if cfg.with_interactions {
+            return Ok(Box::new(TilesBackend::build(model, plan.kind, cfg, plan.shards)?));
+        }
+        return Ok(Box::new(ShardedBackend::build(
+            model,
+            plan.kind,
+            cfg,
+            plan.shards,
+            ShardAxis::Rows,
+        )?));
     }
     if plan.shards > 1 {
         return Ok(Box::new(ShardedBackend::build(
@@ -468,6 +518,31 @@ mod tests {
                 assert!((a - b).abs() < 1e-5, "{axis:?}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn tiles_axis_routes_by_pipeline() {
+        let model = tiny_model();
+        let cfg = BackendConfig {
+            threads: 1,
+            devices: 3,
+            shard_axis: Some(ShardAxis::FeatureTiles),
+            rows_hint: 4,
+            with_interactions: true,
+            ..Default::default()
+        };
+        // Φ pipeline on a tile plan → the tile executor
+        let b = build(&model, BackendKind::Host, &cfg).unwrap();
+        assert!(b.describe().starts_with("tiles["), "{}", b.describe());
+        assert_eq!(b.name(), "host", "tiling keeps the inner kind's name");
+        let d = SynthSpec::cal_housing(0.004).generate();
+        let m = model.num_features;
+        let inter = b.interactions(&d.features[..2 * m], 2).unwrap();
+        assert_eq!(inter.len(), 2 * model.num_groups * (m + 1) * (m + 1));
+        // φ-only pipeline on the same plan degrades to row shards
+        let phi_cfg = BackendConfig { with_interactions: false, ..cfg };
+        let b = build(&model, BackendKind::Host, &phi_cfg).unwrap();
+        assert!(b.describe().starts_with("sharded["), "{}", b.describe());
     }
 
     #[test]

@@ -409,6 +409,35 @@ impl Planner {
         match axis {
             ShardAxis::Rows => Some(self.layout_plan(kind, &c, rows, shards, 1)),
             ShardAxis::Trees => Some(self.layout_plan(kind, &c, rows, 1, shards)),
+            ShardAxis::FeatureTiles => {
+                // tiles split Φ's conditioned-feature loop: per-row work
+                // divides by the effective tile count (clamped to the
+                // feature count — one feature cannot split further), and
+                // the coordinator pays one assembly pass over the
+                // (M+1)² output matrix. Priced on the same per-row line
+                // as the other axes so cross-axis rankings compare.
+                // Never auto-picked ([`Planner::plan_for`] sweeps only
+                // rows/trees/grid): the axis only helps interaction
+                // workloads, which the batch-size argument can't see.
+                let t = shards.clamp(1, self.shape.features.max(1));
+                let t_eff = t as f64;
+                let m = self.shape.features as f64;
+                let assemble = if t > 1 {
+                    rows as f64 * (m + 1.0) * (m + 1.0) * 2e-9
+                } else {
+                    0.0
+                };
+                Some(Plan {
+                    kind,
+                    shards: t,
+                    axis: ShardAxis::FeatureTiles,
+                    grid: None,
+                    est_latency_s: c.batch_overhead_s
+                        + (rows as f64 / t_eff) / c.rows_per_s
+                        + assemble
+                        + c.setup_s / self.expected_batches,
+                })
+            }
             ShardAxis::Grid => {
                 let trees = self.shape.trees.max(1);
                 let pick = |require_2d: bool| -> Option<Plan> {
@@ -823,6 +852,32 @@ mod tests {
             "2 rows/shard ⇒ 2 dispatches: {}",
             few.est_latency_s
         );
+    }
+
+    #[test]
+    fn pinned_tiles_clamp_and_stay_opt_in() {
+        let p = synthetic_planner().with_devices(4);
+        let pinned =
+            p.plan_pinned(BackendKind::Recursive, 64, ShardAxis::FeatureTiles, 4).unwrap();
+        assert_eq!(pinned.axis, ShardAxis::FeatureTiles);
+        assert_eq!(pinned.shards, 4);
+        assert!(pinned.grid.is_none());
+        assert!(pinned.est_latency_s.is_finite());
+        // splitting the conditioned loop must price below unsharded
+        assert!(
+            pinned.est_latency_s < p.batch_cost(BackendKind::Recursive, 64).unwrap(),
+            "{pinned:?}"
+        );
+        // tile count clamps to the feature count (shape has 8 features)
+        let over =
+            p.plan_pinned(BackendKind::Recursive, 64, ShardAxis::FeatureTiles, 100).unwrap();
+        assert_eq!(over.shards, 8);
+        // the axis is opt-in: the auto sweep never lands on it
+        let auto = p.plan_for(BackendKind::Recursive, 64).unwrap();
+        assert_ne!(auto.axis, ShardAxis::FeatureTiles);
+        // and the build-anyway fallback keeps the pinned tiles axis
+        let fb = Plan::fallback(BackendKind::Recursive, 4, Some(ShardAxis::FeatureTiles));
+        assert_eq!((fb.axis, fb.shards), (ShardAxis::FeatureTiles, 4));
     }
 
     #[test]

@@ -69,6 +69,9 @@ pub struct PrepStats {
     /// Fast TreeSHAP v2 weight-table builds and reuses
     pub fastv2_builds: u64,
     pub fastv2_hits: u64,
+    /// per-tree feature-presence index builds and reuses (tile sharding)
+    pub tilefeat_builds: u64,
+    pub tilefeat_hits: u64,
     /// total seconds spent building packed/padded/linear/fastv2 layouts
     pub layout_s: f64,
 }
@@ -90,6 +93,8 @@ impl PrepStats {
         self.linear_hits += other.linear_hits;
         self.fastv2_builds += other.fastv2_builds;
         self.fastv2_hits += other.fastv2_hits;
+        self.tilefeat_builds += other.tilefeat_builds;
+        self.tilefeat_hits += other.tilefeat_hits;
         self.layout_s += other.layout_s;
     }
 }
@@ -121,7 +126,23 @@ pub struct PreparedModel {
     linear: Mutex<Option<Arc<LinearModel>>>,
     /// lazily built Fast TreeSHAP v2 subset weight tables (one per model)
     fastv2: Mutex<Option<Arc<FastV2Model>>>,
+    /// lazily built per-tree feature-presence index (one per model)
+    tilefeat: Mutex<Option<Arc<TileFeatures>>>,
     stats: Mutex<PrepStats>,
+}
+
+/// Per-tree feature-presence index for feature-tile sharding: which
+/// features each tree splits on (sorted, deduplicated) and, per
+/// feature, how many trees reference it. The conditioned-pass cost of a
+/// feature is proportional to its tree count, so the tile splitter
+/// balances tiles by summed counts, and each tile shard skips trees
+/// whose list has no entry inside its range — the M ≫ D sparsity win.
+#[derive(Debug)]
+pub struct TileFeatures {
+    /// sorted unique split features per tree (model order)
+    pub per_tree: Vec<Vec<i32>>,
+    /// number of trees splitting on each feature, length `num_features`
+    pub tree_counts: Vec<u32>,
 }
 
 impl std::fmt::Debug for PreparedModel {
@@ -154,6 +175,7 @@ impl PreparedModel {
             padded: Mutex::new(BTreeMap::new()),
             linear: Mutex::new(None),
             fastv2: Mutex::new(None),
+            tilefeat: Mutex::new(None),
             stats: Mutex::new(PrepStats { paths_s, ..PrepStats::default() }),
         }
     }
@@ -284,6 +306,37 @@ impl PreparedModel {
         fm
     }
 
+    /// The per-tree feature-presence index ([`TileFeatures`]), built on
+    /// first request and shared afterwards — one per model, reused by
+    /// the interactions kernel (which previously re-sorted/deduped the
+    /// lists every call), the tile splitter, and every tile shard.
+    pub fn tile_features(&self) -> Arc<TileFeatures> {
+        let mut slot = self.tilefeat.lock().unwrap();
+        if let Some(tf) = slot.as_ref() {
+            self.stats.lock().unwrap().tilefeat_hits += 1;
+            return Arc::clone(tf);
+        }
+        let (tf, dt) = time_it(|| {
+            let per_tree = crate::shap::interactions::model_tree_features(self.model.as_ref());
+            let mut tree_counts = vec![0u32; self.model.num_features];
+            for feats in &per_tree {
+                for &f in feats {
+                    if (f as usize) < tree_counts.len() {
+                        tree_counts[f as usize] += 1;
+                    }
+                }
+            }
+            Arc::new(TileFeatures { per_tree, tree_counts })
+        });
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.tilefeat_builds += 1;
+            s.layout_s += dt;
+        }
+        *slot = Some(Arc::clone(&tf));
+        tf
+    }
+
     /// Exact bytes the Fast TreeSHAP v2 tables occupy (or would occupy),
     /// computed from the cached paths without building anything — the
     /// backend-side memory guardrail compares this against
@@ -380,6 +433,8 @@ pub fn registry_snapshot() -> crate::util::Json {
         ("linear_hits", Json::from(s.linear_hits as usize)),
         ("fastv2_builds", Json::from(s.fastv2_builds as usize)),
         ("fastv2_hits", Json::from(s.fastv2_hits as usize)),
+        ("tilefeat_builds", Json::from(s.tilefeat_builds as usize)),
+        ("tilefeat_hits", Json::from(s.tilefeat_hits as usize)),
         ("prep_s", Json::from(s.total_s())),
     ])
 }
@@ -445,6 +500,18 @@ mod tests {
         assert_eq!(s.fastv2_builds, 1);
         assert!(s.fastv2_hits >= 1);
         assert_eq!(prep.fastv2_table_bytes(), f1.table_bytes() as f64);
+        // per-tree feature index builds once per model
+        let t1 = prep.tile_features();
+        let t2 = prep.tile_features();
+        assert!(Arc::ptr_eq(&t1, &t2), "tile-feature index must be shared");
+        let s = prep.stats();
+        assert_eq!(s.tilefeat_builds, 1);
+        assert!(s.tilefeat_hits >= 1);
+        assert_eq!(t1.per_tree.len(), prep.model().trees.len());
+        assert_eq!(t1.tree_counts.len(), prep.model().num_features);
+        // the lists match the kernel's own derivation
+        let fresh = crate::shap::interactions::model_tree_features(prep.model());
+        assert_eq!(t1.per_tree, fresh);
     }
 
     #[test]

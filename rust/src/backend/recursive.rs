@@ -67,7 +67,40 @@ impl ShapBackend for RecursiveBackend {
     }
 
     fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
-        Ok(interactions::interaction_values(&self.model, x, rows, self.threads))
+        // route the per-tree feature lists and expected values through
+        // the prepared cache instead of re-deriving them per call
+        let feats = self.prep.tile_features();
+        Ok(interactions::interaction_values_with(
+            &self.model,
+            x,
+            rows,
+            self.threads,
+            &feats.per_tree,
+            self.prep.expected_values(),
+        ))
+    }
+
+    fn interactions_block(
+        &self,
+        x: &[f32],
+        rows: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let feats = self.prep.tile_features();
+        Ok(interactions::interaction_block(
+            &self.model,
+            x,
+            rows,
+            self.threads,
+            lo,
+            hi,
+            &feats.per_tree,
+        ))
+    }
+
+    fn contributions_f64(&self, x: &[f32], rows: usize) -> Result<Vec<f64>> {
+        Ok(interactions::phis_f64(&self.model, x, rows, self.threads))
     }
 
     fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {

@@ -16,6 +16,16 @@
 //!   topologies neither simple axis can fill: with 8 devices over a
 //!   4-tree model the tree axis caps at 4 and a 4-row batch starves the
 //!   row axis, but a 2×4 grid uses all 8.
+//! - [`ShardAxis::FeatureTiles`] — interactions only: partition the
+//!   conditioned-feature set `{0..M}` into contiguous tiles, one per
+//!   device. Each shard runs the full model over the full batch but
+//!   performs the two conditioned passes only for its tile's features,
+//!   producing a column-block of the `(M+1)²` matrix; the coordinator
+//!   assembles blocks and fills diagonals/base from one unconditioned φ
+//!   pass. The only axis whose per-device work shrinks with `M`, so the
+//!   wide-model (`M ≫ D`) Φ regime scales past the padded engine's
+//!   feature cap. Executed by [`super::tiles::TilesBackend`], never by
+//!   `ShardedBackend`.
 //!
 //! This module holds the pure planning math — axis parsing, row
 //! chunking, leaf-balanced tree splitting, grid factorizations, and the
@@ -42,6 +52,10 @@ pub enum ShardAxis {
     /// both: tree slices × row replicas (see [`ShardGrid`]); executed by
     /// [`super::grid::GridBackend`], never by `ShardedBackend`
     Grid,
+    /// split the conditioned-feature set across devices (interactions
+    /// only); executed by [`super::tiles::TilesBackend`], never by
+    /// `ShardedBackend`
+    FeatureTiles,
 }
 
 impl ShardAxis {
@@ -56,6 +70,7 @@ impl ShardAxis {
             ShardAxis::Rows => "rows",
             ShardAxis::Trees => "trees",
             ShardAxis::Grid => "grid",
+            ShardAxis::FeatureTiles => "tiles",
         }
     }
 
@@ -64,16 +79,17 @@ impl ShardAxis {
             "rows" | "row" => Some(ShardAxis::Rows),
             "trees" | "tree" => Some(ShardAxis::Trees),
             "grid" => Some(ShardAxis::Grid),
+            "tiles" | "tile" => Some(ShardAxis::FeatureTiles),
             _ => None,
         }
     }
 
     /// Every parseable axis name, `|`-joined for CLI error messages —
-    /// the counterpart of `BackendKind::name_list`. Includes `grid`
-    /// (parseable and executable) even though [`ShardAxis::ALL`]
-    /// deliberately excludes it from 1-D sweeps.
+    /// the counterpart of `BackendKind::name_list`. Includes `grid` and
+    /// `tiles` (parseable and executable) even though [`ShardAxis::ALL`]
+    /// deliberately excludes them from 1-D sweeps.
     pub fn name_list() -> String {
-        [ShardAxis::Rows, ShardAxis::Trees, ShardAxis::Grid]
+        [ShardAxis::Rows, ShardAxis::Trees, ShardAxis::Grid, ShardAxis::FeatureTiles]
             .map(|a| a.name())
             .join("|")
     }
@@ -230,6 +246,46 @@ pub fn split_trees(model: &Model, shards: usize) -> Vec<Model> {
         .collect()
 }
 
+/// Split the conditioned-feature set `{0..weights.len()}` into at most
+/// `tiles` contiguous `(lo, hi)` half-open ranges, balanced by the
+/// per-feature weights (for Φ tiling: `weights[f]` = number of trees
+/// that test feature `f`, so a tile's weight tracks the conditioned
+/// passes it actually runs after tree skipping). Every returned tile is
+/// non-empty, ranges are contiguous and tile `0..m` exactly; `tiles` is
+/// clamped to the feature count. Zero-weight features (tested by no
+/// tree) still get a slot — their conditioned passes are near-free but
+/// their matrix columns must exist.
+pub fn split_feature_tiles(weights: &[u32], tiles: usize) -> Vec<(usize, usize)> {
+    let m = weights.len();
+    if m == 0 {
+        return vec![(0, 0)];
+    }
+    let tiles = tiles.clamp(1, m);
+    let total: u64 = weights.iter().map(|&w| w as u64).sum();
+
+    // boundary b_s = first feature of tile s; advance each boundary
+    // until the cumulative weight reaches its proportional target,
+    // keeping ≥1 feature on both sides of every cut (mirrors
+    // `split_trees`, which balances by leaves the same way)
+    let mut bounds = Vec::with_capacity(tiles + 1);
+    bounds.push(0usize);
+    let mut idx = 0usize;
+    let mut cum = 0u64;
+    for s in 1..tiles {
+        let target = total * s as u64 / tiles as u64;
+        let min_idx = bounds[s - 1] + 1;
+        let max_idx = m - (tiles - s);
+        while idx < max_idx && (cum < target || idx < min_idx) {
+            cum += weights[idx] as u64;
+            idx += 1;
+        }
+        bounds.push(idx);
+    }
+    bounds.push(m);
+
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
 /// The summed tree-shard outputs carry `base_score` once per shard;
 /// subtract the surplus `(shards − 1) · base_score` at the base-value
 /// positions of the given task layout (slot `M` for contributions,
@@ -309,8 +365,43 @@ mod tests {
         assert_eq!(ShardAxis::parse("grid"), Some(ShardAxis::Grid));
         assert_eq!(ShardAxis::parse(ShardAxis::Grid.name()), Some(ShardAxis::Grid));
         assert_eq!(ShardAxis::parse("nope"), None);
-        // Grid is deliberately not in the 1-D sweep set
+        assert_eq!(ShardAxis::parse("tiles"), Some(ShardAxis::FeatureTiles));
+        assert_eq!(ShardAxis::parse("tile"), Some(ShardAxis::FeatureTiles));
+        assert_eq!(ShardAxis::FeatureTiles.name(), "tiles");
+        assert!(ShardAxis::name_list().contains("tiles"));
+        // Grid and FeatureTiles are deliberately not in the 1-D sweep
+        // set: each has its own executor and its own plan shape
         assert!(!ShardAxis::ALL.contains(&ShardAxis::Grid));
+        assert!(!ShardAxis::ALL.contains(&ShardAxis::FeatureTiles));
+    }
+
+    #[test]
+    fn feature_tiles_cover_and_balance() {
+        // uniform weights → near-equal widths, exact coverage
+        for (m, tiles) in [(8usize, 3usize), (96, 4), (7, 7), (5, 1), (3, 10)] {
+            let w = vec![1u32; m];
+            let ts = split_feature_tiles(&w, tiles);
+            assert_eq!(ts.len(), tiles.min(m));
+            let mut next = 0usize;
+            for &(lo, hi) in &ts {
+                assert_eq!(lo, next, "contiguous");
+                assert!(hi > lo, "non-empty");
+                next = hi;
+            }
+            assert_eq!(next, m, "tiles the whole feature set");
+        }
+        // skewed weights: the heavy feature's tile stays narrow, so the
+        // summed weight per tile is balanced rather than the width
+        let mut w = vec![1u32; 12];
+        w[0] = 30; // feature 0 appears in 30 trees, the rest in 1
+        let ts = split_feature_tiles(&w, 3);
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0], (0, 1), "heavy feature isolated in its own tile");
+        // zero-weight features still receive slots
+        let ts = split_feature_tiles(&[0, 0, 0, 0], 2);
+        assert_eq!(ts.iter().map(|t| t.1 - t.0).sum::<usize>(), 4);
+        // degenerate: no features
+        assert_eq!(split_feature_tiles(&[], 4), vec![(0, 0)]);
     }
 
     #[test]

@@ -95,6 +95,11 @@ impl ShardedBackend {
                     "grid topologies are executed by GridBackend, not ShardedBackend"
                 ))
             }
+            ShardAxis::FeatureTiles => {
+                return Err(crate::anyhow!(
+                    "feature-tile topologies are executed by TilesBackend, not ShardedBackend"
+                ))
+            }
         };
         if let ShardAxis::Rows = axis {
             // row shards execute rows/(shards·CHUNKS_PER_SHARD)-row
@@ -118,7 +123,7 @@ impl ShardedBackend {
         let sub_models: Vec<Arc<Model>> = match axis {
             ShardAxis::Rows => (0..shards).map(|_| Arc::clone(model)).collect(),
             ShardAxis::Trees => split_trees(model, shards).into_iter().map(Arc::new).collect(),
-            ShardAxis::Grid => unreachable!("rejected above"),
+            ShardAxis::Grid | ShardAxis::FeatureTiles => unreachable!("rejected above"),
         };
         // build the inner instances concurrently, one per thread — setup
         // (packing, device client + executable compilation) is the
@@ -144,8 +149,8 @@ impl ShardedBackend {
     ) -> ShardedBackend {
         assert!(!inner.is_empty(), "sharded backend needs ≥1 shard");
         assert!(
-            !matches!(axis, ShardAxis::Grid),
-            "grid topologies are executed by GridBackend, not ShardedBackend"
+            !matches!(axis, ShardAxis::Grid | ShardAxis::FeatureTiles),
+            "composite topologies are executed by GridBackend/TilesBackend, not ShardedBackend"
         );
         ShardedBackend {
             kind_name: inner[0].name(),
@@ -249,7 +254,9 @@ impl ShardedBackend {
                 self.observer = observer;
                 Ok(targets.len())
             }
-            ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
+            ShardAxis::Grid | ShardAxis::FeatureTiles => {
+                unreachable!("ShardedBackend never carries a composite axis")
+            },
         }
     }
 
@@ -498,7 +505,9 @@ impl ShardedBackend {
                 self.run_rows(x, rows, task.stride(self.num_groups, self.num_features), f)
             }
             ShardAxis::Trees => self.run_trees(x, rows, task, f),
-            ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
+            ShardAxis::Grid | ShardAxis::FeatureTiles => {
+                unreachable!("ShardedBackend never carries a composite axis")
+            },
         }
     }
 }
@@ -537,7 +546,9 @@ fn caps_over(inner: &[Box<dyn ShapBackend>], axis: ShardAxis) -> BackendCaps {
             .iter()
             .map(|b| b.caps().rows_per_s)
             .fold(f64::INFINITY, f64::min),
-        ShardAxis::Grid => unreachable!("ShardedBackend never carries the grid axis"),
+        ShardAxis::Grid | ShardAxis::FeatureTiles => {
+            unreachable!("ShardedBackend never carries a composite axis")
+        }
     };
     BackendCaps {
         supports_interactions,

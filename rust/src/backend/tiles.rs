@@ -1,0 +1,588 @@
+//! The feature-tile [`ShapBackend`]: interaction values sharded along
+//! the conditioned-feature axis — the fourth shard axis, for the
+//! wide-model (`M ≫ D`) Φ regime the ROADMAP's "lift the interaction
+//! cap" item targets.
+//!
+//! Layout: every unit holds the FULL model (one shared `Arc`, so the
+//! prepared-model registry carries exactly one entry for the whole
+//! topology) and the conditioned-feature set `{0..M}` is cut into
+//! contiguous tiles by [`shard::split_feature_tiles`], balanced by how
+//! many trees actually test each feature — [`PreparedModel::
+//! tile_features`]'s cached index. A batch fans every unit out over the
+//! full rows with its own `(lo, hi)` range; each unit answers with a
+//! f64 column-block of the `(M+1)²` matrix containing only the cells
+//! its conditioned passes price ([`ShapBackend::interactions_block`]),
+//! skipping trees that split on none of its features. The coordinator
+//! places the blocks, computes the Eq. 6 diagonal from one f64 φ pass
+//! ([`ShapBackend::contributions_f64`]) and drops the base value at
+//! `[M, M]` from the prepared expected values.
+//!
+//! Two block layouts, declared by the inner kind:
+//! - **recursive** units emit full off-diagonal columns whose f64 cell
+//!   sums run over trees in model order — the assembled matrix is
+//!   **bit-identical** to the unsharded recursive oracle (pinned by
+//!   `interactions::blocks_assemble_to_full_matrix_bitwise`).
+//! - every other kind maps to **host** units, whose packed kernel
+//!   prices each unordered pair once (owner-symmetric upper triangle,
+//!   one DP + O(len) unwinds per conditioned position instead of a
+//!   fresh O(len²) DP each); the assembler mirrors the triangle, so the
+//!   output is exactly symmetric and agrees with the legacy kernel to
+//!   float round-off (≤ 1e-6 — the Φ acceptance tolerance).
+//!
+//! **Elastic**: tile ranges are assigned at call time from the live
+//! unit count, so quarantine just drops the dead units — the next batch
+//! re-splits the feature range across the survivors with no rebuild
+//! (every unit already holds the full model). Per-shard history
+//! describes tiles that shifted, so survivors are NOT remapped. Hot-add
+//! builds fresh full-model units against the live prepared entry.
+//!
+//! φ and predictions have no conditioned-feature loop to split; they
+//! are served by the first unit directly (callers that only want φ on a
+//! tile plan never reach here — `build_for_plan` degrades them to the
+//! rows axis).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::backend::shard::split_feature_tiles;
+use crate::backend::sharded::{aggregate, build_concurrently};
+use crate::backend::{
+    self, BackendCaps, BackendConfig, BackendKind, PreparedModel, ShapBackend, ShardObserver,
+};
+use crate::gbdt::Model;
+use crate::util::error::{Error, Result};
+
+/// How a unit's `interactions_block` output maps into the matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockLayout {
+    /// full off-diagonal columns `(i, j)` for every `i` and `j` in the
+    /// tile — the recursive kernel; assembly is bit-identical to the
+    /// unsharded oracle
+    Column,
+    /// only `i < j` cells are populated (the packed host kernel prices
+    /// each unordered pair once); the assembler mirrors them, so tile
+    /// `(lo, hi)` owns every pair whose larger feature is in the tile
+    OwnerSymmetric,
+}
+
+/// Everything needed to build replacement units (hot-add after
+/// quarantine) — present when built through [`TilesBackend::build`].
+struct Recipe {
+    model: Arc<Model>,
+    kind: BackendKind,
+    cfg: BackendConfig,
+}
+
+pub struct TilesBackend {
+    /// full-model units, one prospective tile each; all share one
+    /// `Arc<Model>` and therefore one prepared-model registry entry
+    units: Vec<Box<dyn ShapBackend>>,
+    prep: Arc<PreparedModel>,
+    layout: BlockLayout,
+    /// the tile count the plan asked for — quarantine shrinks the live
+    /// set, hot-add grows it back toward this
+    planned: usize,
+    kind_name: &'static str,
+    num_features: usize,
+    num_groups: usize,
+    caps: BackendCaps,
+    observer: Option<ShardObserver>,
+    rebuild: Option<Recipe>,
+    /// unit indices that failed in the most recent execution
+    last_failed: Mutex<Vec<usize>>,
+    /// the `(lo, hi)` ranges of the most recent execution, in unit
+    /// order (metrics/describe; re-derived per batch from the live set)
+    last_ranges: Mutex<Vec<(usize, usize)>>,
+    /// units removed by quarantine since construction
+    quarantined: usize,
+}
+
+impl TilesBackend {
+    /// Build `tiles` full-model units of `kind` over `model`. The tile
+    /// count clamps to the feature count (one feature cannot split).
+    /// Kinds without a ranged block kernel execute on host units — the
+    /// packed kernel serves any model the kind could have — keeping the
+    /// reported name on the inner kind for metrics continuity.
+    pub fn build(
+        model: &Arc<Model>,
+        kind: BackendKind,
+        cfg: &BackendConfig,
+        tiles: usize,
+    ) -> Result<TilesBackend> {
+        let tiles = tiles.clamp(1, model.num_features.max(1));
+        // recursive keeps its own units (column blocks, bit-compatible);
+        // every other kind executes on host units (owner-symmetric
+        // blocks) — `from_units` infers the layout from the unit kind
+        let unit_kind = match kind {
+            BackendKind::Recursive => BackendKind::Recursive,
+            _ => BackendKind::Host,
+        };
+        let mut inner_cfg = cfg.clone();
+        inner_cfg.devices = 1; // inner builds must not re-shard
+        inner_cfg.shard_axis = None;
+        // warm the single shared entry so the concurrent unit builds
+        // below all hit (the model preps/packs once, not once per tile)
+        let prep = backend::prepare(model);
+        let sub_models: Vec<Arc<Model>> = (0..tiles).map(|_| Arc::clone(model)).collect();
+        let units = build_concurrently(&sub_models, unit_kind, &inner_cfg)?;
+        let mut built = TilesBackend::from_units(units, prep);
+        built.rebuild = Some(Recipe { model: Arc::clone(model), kind: unit_kind, cfg: inner_cfg });
+        Ok(built)
+    }
+
+    /// Wrap pre-built full-model units (tests, embedders). Every unit
+    /// must hold the same model as `prep` and serve
+    /// [`ShapBackend::interactions_block`]. The layout is inferred from
+    /// the unit kind (recursive → columns, anything else →
+    /// owner-symmetric). Carries no rebuild recipe, so hot-add is
+    /// unavailable; quarantine still works (survivors re-split).
+    pub fn from_units(units: Vec<Box<dyn ShapBackend>>, prep: Arc<PreparedModel>) -> TilesBackend {
+        assert!(!units.is_empty(), "tiles backend needs ≥1 unit");
+        let layout = if units[0].name() == BackendKind::Recursive.name() {
+            BlockLayout::Column
+        } else {
+            BlockLayout::OwnerSymmetric
+        };
+        TilesBackend {
+            kind_name: units[0].name(),
+            num_features: units[0].num_features(),
+            num_groups: units[0].num_groups(),
+            caps: tile_caps(&units),
+            observer: None,
+            rebuild: None,
+            last_failed: Mutex::new(Vec::new()),
+            last_ranges: Mutex::new(Vec::new()),
+            quarantined: 0,
+            planned: units.len(),
+            layout,
+            prep,
+            units,
+        }
+    }
+
+    /// The planned tile count (hot-add's recovery target).
+    pub fn planned_tiles(&self) -> usize {
+        self.planned
+    }
+
+    /// Units removed by quarantine since construction.
+    pub fn quarantined_units(&self) -> usize {
+        self.quarantined
+    }
+
+    /// The `(lo, hi)` feature ranges of the most recent execution, in
+    /// unit order — empty before the first interactions batch.
+    pub fn tile_ranges(&self) -> Vec<(usize, usize)> {
+        self.last_ranges.lock().unwrap().clone()
+    }
+
+    /// Drop failed units; the next batch re-splits the feature range
+    /// across the survivors (no rebuild — every unit holds the full
+    /// model). At least one unit must survive.
+    pub fn quarantine_units(&mut self, failed: &[usize]) -> Result<usize> {
+        let n = self.units.len();
+        let mut targets: Vec<usize> = failed.iter().copied().filter(|&s| s < n).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        if targets.is_empty() {
+            return Ok(0);
+        }
+        if targets.len() >= n {
+            return Err(crate::anyhow!(
+                "cannot quarantine all {n} tile unit(s): no survivors to serve from"
+            ));
+        }
+        let mut idx = 0usize;
+        self.units.retain(|_| {
+            let dead = targets.contains(&idx);
+            idx += 1;
+            !dead
+        });
+        self.quarantined += targets.len();
+        self.last_failed.lock().unwrap().clear();
+        self.last_ranges.lock().unwrap().clear();
+        self.caps = tile_caps(&self.units);
+        Ok(targets.len())
+    }
+
+    /// Grow back toward `target` units (recovery after quarantine).
+    /// New units are full-model replicas built against the live
+    /// prepared entry, so they pack nothing. Needs the rebuild recipe.
+    pub fn grow_to(&mut self, target: usize) -> Result<usize> {
+        let before = self.units.len();
+        let target = target.min(self.planned);
+        if target <= before {
+            return Ok(0);
+        }
+        let recipe = self.rebuild.as_ref().ok_or_else(|| {
+            crate::anyhow!("tile hot-add needs a rebuild recipe (self-built backend)")
+        })?;
+        for _ in before..target {
+            let b = backend::build(&recipe.model, recipe.kind, &recipe.cfg)
+                .map_err(|e| e.context("tile unit hot-add"))?;
+            self.units.push(b);
+        }
+        self.caps = tile_caps(&self.units);
+        Ok(self.units.len() - before)
+    }
+
+    fn observe(&self, unit: usize, rows: usize, started: Instant) {
+        if let Some(obs) = &self.observer {
+            (obs.as_ref())(unit, rows, started.elapsed());
+        }
+    }
+
+    /// Fan one interactions batch out: each live unit computes the f64
+    /// column-block for its tile; the coordinator assembles, fills the
+    /// Eq. 6 diagonal from a f64 φ pass and the base cell from the
+    /// prepared expected values. Same failure semantics as the other
+    /// executors: any unit failure aborts the batch with an aggregated
+    /// error and attributed [`ShapBackend::failed_shards`].
+    fn run_interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.last_failed.lock().unwrap().clear();
+        let n = self.units.len();
+        if n == 1 {
+            // one tile = the full conditioned loop: the unit's own full
+            // kernel is the same work with zero assembly
+            self.last_ranges.lock().unwrap().clear();
+            let t0 = Instant::now();
+            let out = self.units[0].interactions(x, rows).map_err(|e| {
+                self.last_failed.lock().unwrap().push(0);
+                e
+            })?;
+            self.observe(0, rows, t0);
+            return Ok(out);
+        }
+        let m = self.num_features;
+        let tf = self.prep.tile_features();
+        let ranges = split_feature_tiles(&tf.tree_counts, n);
+        *self.last_ranges.lock().unwrap() = ranges.clone();
+        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+        let blocks = Mutex::new(vec![None::<Vec<f64>>; ranges.len()]);
+        std::thread::scope(|scope| {
+            // fewer tiles than units (m < n after clamping upstream, or
+            // post-quarantine shapes): trailing units idle this batch
+            for (ui, &(lo, hi)) in ranges.iter().enumerate() {
+                let (errs, blocks) = (&errs, &blocks);
+                let b: &dyn ShapBackend = self.units[ui].as_ref();
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    match b.interactions_block(x, rows, lo, hi) {
+                        Ok(vals)
+                            if vals.len() == rows * self.num_groups * m * (hi - lo) =>
+                        {
+                            self.observe(ui, rows, t0);
+                            blocks.lock().unwrap()[ui] = Some(vals);
+                        }
+                        Ok(vals) => {
+                            errs.lock().unwrap().push(crate::anyhow!(
+                                "tile {ui} [{lo}, {hi}): expected {} block floats, got {}",
+                                rows * self.num_groups * m * (hi - lo),
+                                vals.len()
+                            ));
+                            self.last_failed.lock().unwrap().push(ui);
+                        }
+                        Err(e) => {
+                            errs.lock()
+                                .unwrap()
+                                .push(e.context(format!("tile {ui} [{lo}, {hi})")));
+                            self.last_failed.lock().unwrap().push(ui);
+                        }
+                    }
+                });
+            }
+        });
+        let errs = errs.into_inner().unwrap();
+        if !errs.is_empty() {
+            return Err(aggregate(errs));
+        }
+        let blocks: Vec<Vec<f64>> = blocks
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|b| b.expect("no error ⇒ every tile produced a block"))
+            .collect();
+        // the diagonal needs full-precision φ (Eq. 6 subtracts the f64
+        // row sums); served by the first unit — any unit would do, they
+        // hold the same model
+        let phis = self.units[0].contributions_f64(x, rows).map_err(|e| {
+            self.last_failed.lock().unwrap().push(0);
+            e
+        })?;
+        Ok(self.assemble(&blocks, &ranges, &phis, rows))
+    }
+
+    /// Place the tile blocks into `[rows × groups × (M+1)²]` matrices,
+    /// fill diagonals (Eq. 6) and the base cell. Off-diagonal cells are
+    /// copied in ascending-`j` order per row `i` — with `Column` blocks
+    /// this reproduces the unsharded kernel's f64 values bit-for-bit;
+    /// `OwnerSymmetric` blocks are mirrored across the diagonal.
+    fn assemble(
+        &self,
+        blocks: &[Vec<f64>],
+        ranges: &[(usize, usize)],
+        phis: &[f64],
+        rows: usize,
+    ) -> Vec<f32> {
+        let m = self.num_features;
+        let groups = self.num_groups;
+        let msq = (m + 1) * (m + 1);
+        let stride = groups * msq;
+        let ev = self.prep.expected_values();
+        let mut out = vec![0.0f32; rows * stride];
+        let mut mat = vec![0.0f64; msq];
+        for r in 0..rows {
+            for g in 0..groups {
+                mat.iter_mut().for_each(|v| *v = 0.0);
+                for (bi, &(lo, hi)) in ranges.iter().enumerate() {
+                    let width = hi - lo;
+                    let gb = &blocks[bi]
+                        [(r * groups + g) * m * width..(r * groups + g + 1) * m * width];
+                    match self.layout {
+                        BlockLayout::Column => {
+                            for i in 0..m {
+                                mat[i * (m + 1) + lo..i * (m + 1) + hi]
+                                    .copy_from_slice(&gb[i * width..(i + 1) * width]);
+                            }
+                        }
+                        BlockLayout::OwnerSymmetric => {
+                            for j in lo..hi {
+                                for i in 0..j {
+                                    let v = gb[i * width + (j - lo)];
+                                    mat[i * (m + 1) + j] = v;
+                                    mat[j * (m + 1) + i] = v;
+                                }
+                            }
+                        }
+                    }
+                }
+                for i in 0..m {
+                    let row_sum: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| mat[i * (m + 1) + j])
+                        .sum();
+                    mat[i * (m + 1) + i] = phis[(r * groups + g) * m + i] - row_sum;
+                }
+                mat[m * (m + 1) + m] = ev[g];
+                let dst = &mut out[r * stride + g * msq..r * stride + (g + 1) * msq];
+                for (d, s) in dst.iter_mut().zip(&mat) {
+                    *d = *s as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Aggregate capability/cost metadata over the units. Every unit is the
+/// same full-model backend, so setup/overhead take the max; the
+/// reported φ throughput is a single unit's (φ is served unsplit — the
+/// tile win is in the Φ path, which caps has no slot for).
+fn tile_caps(units: &[Box<dyn ShapBackend>]) -> BackendCaps {
+    BackendCaps {
+        supports_interactions: units.iter().all(|b| b.caps().supports_interactions),
+        setup_cost_s: units.iter().map(|b| b.caps().setup_cost_s).fold(0.0, f64::max),
+        batch_overhead_s: units
+            .iter()
+            .map(|b| b.caps().batch_overhead_s)
+            .fold(0.0, f64::max),
+        rows_per_s: units.iter().map(|b| b.caps().rows_per_s).fold(0.0, f64::max),
+    }
+}
+
+impl ShapBackend for TilesBackend {
+    fn name(&self) -> &'static str {
+        self.kind_name
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.caps
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        // no conditioned loop to tile: one full-model unit serves φ
+        self.units[0].contributions(x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.run_interactions(x, rows)
+    }
+
+    fn predictions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.units[0].predictions(x, rows)
+    }
+
+    fn set_shard_observer(&mut self, obs: ShardObserver) {
+        self.observer = Some(obs);
+    }
+
+    fn shard_count(&self) -> usize {
+        self.units.len()
+    }
+
+    fn failed_shards(&self) -> Vec<usize> {
+        let mut v = self.last_failed.lock().unwrap().clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    fn quarantine(&mut self, failed: &[usize]) -> Result<usize> {
+        self.quarantine_units(failed)
+    }
+
+    fn quarantine_remaps_survivors(&self) -> bool {
+        // survivors keep their devices, but the feature range re-splits
+        // underneath them — old per-shard history describes tiles that
+        // no longer exist, so callers must reset it
+        false
+    }
+
+    fn hot_add(&mut self, target: usize) -> Result<usize> {
+        self.grow_to(target)
+    }
+
+    fn prepared(&self) -> Option<&Arc<PreparedModel>> {
+        Some(&self.prep)
+    }
+
+    fn describe(&self) -> String {
+        let ranges = self.last_ranges.lock().unwrap();
+        let tiles = if ranges.is_empty() {
+            format!("{}×features", self.units.len())
+        } else {
+            let spans: Vec<String> =
+                ranges.iter().map(|(lo, hi)| format!("[{lo},{hi})")).collect();
+            format!("{}×features {}", ranges.len(), spans.join("/"))
+        };
+        let quarantined = if self.quarantined > 0 {
+            format!(", {} quarantined", self.quarantined)
+        } else {
+            String::new()
+        };
+        format!("tiles[{tiles}, {}{quarantined}]", self.units[0].describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::RecursiveBackend;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn setup() -> (Arc<Model>, Vec<f32>, usize) {
+        let d = SynthSpec::cal_housing(0.006).generate();
+        let model = Arc::new(train(
+            &d,
+            &TrainParams { rounds: 5, max_depth: 4, ..Default::default() },
+        ));
+        let rows = 7;
+        let x = d.features[..rows * model.num_features].to_vec();
+        (model, x, rows)
+    }
+
+    #[test]
+    fn tiled_interactions_match_oracle_bitwise_on_recursive_units() {
+        let (model, x, rows) = setup();
+        let oracle = RecursiveBackend::new(Arc::clone(&model), 1).interactions(&x, rows).unwrap();
+        for tiles in [2usize, 3, 5] {
+            let cfg = BackendConfig { threads: 1, ..Default::default() };
+            let b = TilesBackend::build(&model, BackendKind::Recursive, &cfg, tiles).unwrap();
+            let got = b.interactions(&x, rows).unwrap();
+            assert_eq!(got.len(), oracle.len());
+            for (i, (a, o)) in got.iter().zip(&oracle).enumerate() {
+                assert!(*a == *o, "{tiles} tiles: cell {i}: {a} vs {o} (must be bitwise)");
+            }
+            assert_eq!(b.shard_count(), tiles.min(model.num_features));
+            assert!(b.describe().starts_with("tiles["), "{}", b.describe());
+        }
+    }
+
+    #[test]
+    fn host_units_match_oracle_to_tolerance_and_stay_symmetric() {
+        let (model, x, rows) = setup();
+        let m = model.num_features;
+        let oracle = RecursiveBackend::new(Arc::clone(&model), 1).interactions(&x, rows).unwrap();
+        let cfg = BackendConfig { threads: 1, ..Default::default() };
+        let b = TilesBackend::build(&model, BackendKind::Host, &cfg, 3).unwrap();
+        let got = b.interactions(&x, rows).unwrap();
+        let msq = (m + 1) * (m + 1);
+        for (i, (a, o)) in got.iter().zip(&oracle).enumerate() {
+            assert!((a - o).abs() < 1e-6, "cell {i}: {a} vs {o}");
+        }
+        for r in 0..rows {
+            for i in 0..=m {
+                for j in 0..=m {
+                    let a = got[r * msq + i * (m + 1) + j];
+                    let t = got[r * msq + j * (m + 1) + i];
+                    assert_eq!(a, t, "owner-symmetric assembly must be exactly symmetric");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_resplits_over_survivors() {
+        let (model, x, rows) = setup();
+        let cfg = BackendConfig { threads: 1, ..Default::default() };
+        let mut b = TilesBackend::build(&model, BackendKind::Recursive, &cfg, 4).unwrap();
+        let before = b.interactions(&x, rows).unwrap();
+        let ranges4 = b.tile_ranges();
+        assert_eq!(ranges4.len(), 4.min(model.num_features));
+        assert_eq!(b.quarantine_units(&[1, 3]).unwrap(), 2);
+        assert_eq!(b.shard_count(), 2);
+        assert!(!b.quarantine_remaps_survivors(), "tiles shift under survivors");
+        let after = b.interactions(&x, rows).unwrap();
+        assert_eq!(b.tile_ranges().len(), 2, "survivors re-split the feature range");
+        for (a, o) in after.iter().zip(&before) {
+            assert!(*a == *o, "values must survive re-splitting bitwise: {a} vs {o}");
+        }
+        // no survivors is refused
+        let err = b.quarantine_units(&[0, 1]).unwrap_err();
+        assert!(err.to_string().contains("no survivors"), "{err}");
+        // hot-add grows back toward the plan and serving still works
+        assert_eq!(b.hot_add(4).unwrap(), 2);
+        assert_eq!(b.shard_count(), 4);
+        let grown = b.interactions(&x, rows).unwrap();
+        assert_eq!(grown.len(), before.len());
+    }
+
+    #[test]
+    fn single_tile_and_overwide_requests_degrade_cleanly() {
+        let (model, x, rows) = setup();
+        let m = model.num_features;
+        let cfg = BackendConfig { threads: 1, ..Default::default() };
+        let oracle = RecursiveBackend::new(Arc::clone(&model), 1).interactions(&x, rows).unwrap();
+        // 1 tile: delegates to the unit's full kernel
+        let one = TilesBackend::build(&model, BackendKind::Recursive, &cfg, 1).unwrap();
+        assert_eq!(one.shard_count(), 1);
+        let got = one.interactions(&x, rows).unwrap();
+        for (a, o) in got.iter().zip(&oracle) {
+            assert!(*a == *o);
+        }
+        assert!(one.tile_ranges().is_empty(), "single tile never splits");
+        // more tiles than features: clamps to M (1-feature tiles)
+        let wide = TilesBackend::build(&model, BackendKind::Recursive, &cfg, m + 5).unwrap();
+        assert_eq!(wide.shard_count(), m);
+        let got = wide.interactions(&x, rows).unwrap();
+        for (a, o) in got.iter().zip(&oracle) {
+            assert!(*a == *o, "1-feature tiles: {a} vs {o}");
+        }
+        let ranges = wide.tile_ranges();
+        assert_eq!(ranges.len(), m);
+        assert!(ranges.iter().all(|(lo, hi)| hi - lo == 1));
+        // φ and predictions pass through a single unit untiled
+        let phis = wide.contributions(&x, rows).unwrap();
+        let direct = RecursiveBackend::new(Arc::clone(&model), 1).contributions(&x, rows).unwrap();
+        assert_eq!(phis, direct);
+    }
+}

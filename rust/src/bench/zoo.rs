@@ -117,6 +117,18 @@ pub fn fashion96(scale: f64) -> SynthSpec {
     s
 }
 
+/// Arbitrary-width fashion_mnist stand-in for the wide-model (`M ≫ D`)
+/// interaction sweeps — the feature-tile shard axis is priced by how
+/// many conditioned columns each device owns, so its benches vary `M`
+/// while holding the ensemble fixed. `fashion96` is `fashion_wide(96)`
+/// with the historical cache name kept stable.
+pub fn fashion_wide(cols: usize, scale: f64) -> SynthSpec {
+    let mut s = SynthSpec::fashion_mnist(scale);
+    s.name = "fashion_mnist_wide";
+    s.cols = cols;
+    s
+}
+
 fn zoo_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/zoo")
 }

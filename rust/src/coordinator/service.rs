@@ -655,8 +655,9 @@ impl ProbeBackoff {
 /// in the measurement, once in the planner's layout cost). Remap:
 /// unsharded batches calibrate directly; row-axis shard chunks are
 /// per-instance executions of the full model, so they pool under the
-/// backend's name; tree-axis and grid samples measure sub-ensemble
-/// slices, which fit no per-instance line and are dropped.
+/// backend's name; tree-axis, grid and feature-tile samples measure
+/// sub-ensemble or sub-matrix slices, which fit no per-instance line
+/// and are dropped.
 fn calibration_observations(
     obs: &crate::backend::Observations,
     plan: &Plan,
@@ -786,6 +787,12 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
     if let Some(g) = plan.grid {
         fields.push(("row_shards", Json::from(g.row_shards)));
         fields.push(("tree_shards", Json::from(g.tree_shards)));
+    }
+    if plan.axis == ShardAxis::FeatureTiles {
+        // planned vs live tile count diverge under quarantine; the live
+        // ranges themselves are in `describe`
+        fields.push(("tile_shards", Json::from(plan.shards)));
+        fields.push(("tile_units", Json::from(backend.shard_count())));
     }
     fields.extend(vec![
         ("describe", Json::from(backend.describe())),

@@ -6,7 +6,7 @@
 //! gputreeshap pack     --model model.gtsm
 //! gputreeshap backends --model model.gtsm --devices 4 --calibrated
 //! gputreeshap explain  --model model.gtsm --dataset cal_housing --rows 256 \
-//!                      --backend auto|cpu|host|linear|fastv2|xla|xla-padded --devices 4 --shard-axis auto|rows|trees
+//!                      --backend auto|cpu|host|linear|fastv2|xla|xla-padded --devices 4 --shard-axis auto|rows|trees|tiles
 //! gputreeshap shap     …  (alias of explain)
 //! gputreeshap interactions --model model.gtsm --dataset adult --rows 32 --backend auto --devices 2
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
@@ -18,9 +18,11 @@
 //! Every SHAP execution goes through the `backend::ShapBackend` trait;
 //! `--backend auto` lets the crossover-aware planner pick, and
 //! `--devices N` shards any backend across N device instances
-//! (`--shard-axis rows|trees|grid`; `auto` lets the planner choose —
-//! including rows×trees grids like 2×4 when 8 devices meet a 4-tree
-//! model and neither simple axis can use them all).
+//! (`--shard-axis rows|trees|grid|tiles`; `auto` lets the planner
+//! choose — including rows×trees grids like 2×4 when 8 devices meet a
+//! 4-tree model and neither simple axis can use them all; `tiles`
+//! splits the conditioned-feature set for interaction values on wide
+//! models and is opt-in only).
 //!
 //! The planner starts from a-priori cost constants and self-tunes:
 //! `backends --calibrated` micro-measures every constructible backend
@@ -70,8 +72,9 @@ fn main() {
 }
 
 const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo|bench-compare> [options]
-multi-device: --devices N shards execution; --shard-axis auto|rows|trees|grid picks the split
-  (grid = tree slices × row replicas, for topologies where one axis saturates)
+multi-device: --devices N shards execution; --shard-axis auto|rows|trees|grid|tiles picks the split
+  (grid = tree slices × row replicas, for topologies where one axis saturates;
+   tiles = conditioned-feature tiles, for interactions on wide models)
 memory: --fastv2-max-mb M caps the fastv2 backend's precomputed weight tables (default 512);
   over budget the planner skips fastv2 and an explicit --backend fastv2 errors instead of OOMing
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes

@@ -174,6 +174,150 @@ pub fn interactions_row(g: &PackedGroup, x: &[f32], m: usize, mat: &mut [f64]) {
     }
 }
 
+/// Remove one on-path element (activation `o`, zero-fraction `z`) from a
+/// full EXTEND weight vector of length `len`, writing the `len − 1`
+/// weights the DP would have produced had the element never been
+/// extended. EXTEND steps commute, so unwinding the element is exact
+/// regardless of its position; this replaces an O(len²) DP re-run per
+/// conditioned position with an O(len) unwind off one shared DP.
+fn unwind_weights(w: &[f64], len: usize, o: f64, z: f64, out: &mut [f64]) {
+    let lf = len as f64;
+    if o != 0.0 {
+        let mut next = 0.0f64;
+        for p in (1..len).rev() {
+            let v = (w[p] - z * next * (len - 1 - p) as f64 / lf) * lf / (o * p as f64);
+            out[p - 1] = v;
+            next = v;
+        }
+    } else {
+        for p in 0..len - 1 {
+            out[p] = w[p] * lf / (z * (len - 1 - p) as f64);
+        }
+    }
+}
+
+/// One feature tile of the off-diagonal interaction matrix, f64
+/// [M × (hi−lo)] per (row, group), in **owner-symmetric** layout: each
+/// unordered feature pair {a, b} (a < b) is computed exactly once, by
+/// the tile owning b = max(a, b), and stored at (row a, col b − lo).
+/// The coordinator reads cell (i, j) from the owner block's
+/// (min, max − lo) entry — valid because φ_ab = φ_ba holds per path.
+///
+/// Work per tile: one full DP per path (O(len²)), one O(len) unwind per
+/// in-tile conditioned position, one O(len) UNWOUNDSUM per surviving
+/// pair — summed over tiles each pair is priced once, where the legacy
+/// [`interactions_row`] pays a DP re-run per conditioned position and
+/// prices every ordered pair. The legacy kernel stays as-is: it is the
+/// Pallas parity oracle, and its accumulation order is pinned by tests.
+pub fn interactions_row_block(
+    g: &PackedGroup,
+    x: &[f32],
+    lo: usize,
+    hi: usize,
+    block: &mut [f64],
+) {
+    let width = hi - lo;
+    let mut w = [0.0f64; LANES];
+    let mut wk = [0.0f64; LANES];
+    let mut of = [0.0f64; LANES];
+    for b in 0..g.num_bins {
+        let mut lane = 0usize;
+        while lane < LANES {
+            let i0 = b * LANES + lane;
+            let len = g.plen[i0] as usize;
+            if len == 0 {
+                break;
+            }
+            let start = i0;
+            let v = g.v[start] as f64;
+            // dead-leaf skip: exactly-zero leaves contribute ±0 everywhere
+            if v == 0.0 || len < 3 {
+                lane += len;
+                continue;
+            }
+            activations(g, start, len, x, &mut of);
+            path_weights(g, start, len, &of, &mut w, usize::MAX);
+            for k in 1..len {
+                let ek = start + k;
+                let fk = g.fidx[ek] as usize;
+                if fk < lo || fk >= hi {
+                    continue;
+                }
+                let ok = of[k];
+                let zk = g.zfrac[ek] as f64;
+                unwind_weights(&w[..len], len, ok, zk, &mut wk);
+                for q in 1..len - 1 {
+                    // remapped position q corresponds to original q + (q>=k)
+                    let orig = if q >= k { q + 1 } else { q };
+                    let e = start + orig;
+                    let fq = g.fidx[e] as usize;
+                    // owner-symmetric: keep only pairs this tile owns
+                    // (fq < fk); fq == fk is a diagonal cell the
+                    // coordinator overwrites via Eq. 6 anyway
+                    if fq >= fk {
+                        continue;
+                    }
+                    let s = unwound_sum(g, start, len, &of, &wk, q, k);
+                    let contrib = s * (of[orig] - g.zfrac[e] as f64) * v;
+                    block[fq * width + (fk - lo)] += 0.5 * contrib * (ok - zk);
+                }
+            }
+            lane += len;
+        }
+    }
+}
+
+/// Batched owner-symmetric interaction tile (see
+/// [`interactions_row_block`]): f64 [rows × groups × M × (hi−lo)].
+pub fn interaction_block(
+    pm: &PackedModel,
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+    lo: usize,
+    hi: usize,
+) -> Vec<f64> {
+    let m = pm.num_features;
+    let groups = pm.num_groups;
+    let width = hi - lo;
+    let bstride = groups * m * width;
+    let mut out = vec![0.0f64; rows * bstride];
+    parallel::parallel_for_rows(threads, &mut out, bstride, 2, |range, chunk| {
+        for (k, r) in range.enumerate() {
+            let xr = &x[r * m..(r + 1) * m];
+            for (gi, g) in pm.groups.iter().enumerate() {
+                let gb = &mut chunk
+                    [k * bstride + gi * m * width..k * bstride + (gi + 1) * m * width];
+                interactions_row_block(g, xr, lo, hi, gb);
+            }
+        }
+    });
+    out
+}
+
+/// Unconditioned per-feature φ in f64: [rows × groups × M] — the
+/// coordinator's input to the Eq. 6 diagonal on assembled tiles. No
+/// base-value slot; the caller places E[f] at [M, M] itself.
+pub fn phis_f64(pm: &PackedModel, x: &[f32], rows: usize, threads: usize) -> Vec<f64> {
+    let m = pm.num_features;
+    let groups = pm.num_groups;
+    let stride = groups * m;
+    let mut out = vec![0.0f64; rows * stride];
+    parallel::parallel_for_rows(threads, &mut out, stride, 8, |range, chunk| {
+        let mut phis = vec![0.0f64; m + 1];
+        for (k, r) in range.enumerate() {
+            let xr = &x[r * m..(r + 1) * m];
+            for (gi, g) in pm.groups.iter().enumerate() {
+                phis.iter_mut().for_each(|p| *p = 0.0);
+                shap_row(g, xr, &mut phis);
+                chunk[k * stride + gi * m..k * stride + (gi + 1) * m]
+                    .copy_from_slice(&phis[..m]);
+            }
+        }
+    });
+    out
+}
+
 /// Batched SHAP values over all groups: [rows × groups × (M+1)],
 /// base values included (mirrors `treeshap::shap_values` output layout).
 pub fn shap_values(pm: &PackedModel, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
@@ -290,6 +434,97 @@ mod tests {
         let b = shap_values(&pm, &d.features[..rows * m], rows, 1);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 2e-4);
+        }
+    }
+
+    #[test]
+    fn unwind_matches_skip_dp() {
+        // unwinding element k off the full DP must reproduce the
+        // DP-with-skip weight vector (exact algebra, fp noise only)
+        let (_, pm, d) = setup(6);
+        let m = pm.num_features;
+        let xr = &d.features[..m];
+        let g = &pm.groups[0];
+        let mut of = [0.0f64; LANES];
+        let mut full = [0.0f64; LANES];
+        let mut skip = [0.0f64; LANES];
+        let mut unw = [0.0f64; LANES];
+        let mut checked = 0usize;
+        let mut lane = 0usize;
+        while lane < LANES {
+            let len = g.plen[lane] as usize;
+            if len == 0 {
+                break;
+            }
+            if len >= 3 && g.v[lane] != 0.0 {
+                activations(g, lane, len, xr, &mut of);
+                path_weights(g, lane, len, &of, &mut full, usize::MAX);
+                for k in 1..len {
+                    path_weights(g, lane, len, &of, &mut skip, k);
+                    unwind_weights(&full[..len], len, of[k], g.zfrac[lane + k] as f64, &mut unw);
+                    for p in 0..len - 1 {
+                        assert!(
+                            (skip[p] - unw[p]).abs() < 1e-9,
+                            "k={k} p={p}: {} vs {}",
+                            skip[p],
+                            unw[p]
+                        );
+                    }
+                    checked += 1;
+                }
+            }
+            lane += len;
+        }
+        assert!(checked > 0, "no paths exercised");
+    }
+
+    #[test]
+    fn owner_blocks_assemble_to_legacy_interactions() {
+        let (_, pm, d) = setup(6);
+        let m = pm.num_features;
+        let groups = pm.num_groups;
+        let rows = 6;
+        let x = &d.features[..rows * m];
+        let legacy = interaction_values(&pm, x, rows, 1);
+        let phis = phis_f64(&pm, x, rows, 1);
+        let cuts = [0usize, 3, 4, m];
+        let ms = (m + 1) * (m + 1);
+        let mut asm = vec![0.0f64; rows * groups * ms];
+        let blocks: Vec<(usize, usize, Vec<f64>)> = cuts
+            .windows(2)
+            .map(|w| (w[0], w[1], interaction_block(&pm, x, rows, 1, w[0], w[1])))
+            .collect();
+        let tile_of = |f: usize| blocks.iter().find(|(lo, hi, _)| f >= *lo && f < *hi).unwrap();
+        for r in 0..rows {
+            for g in 0..groups {
+                let base = (r * groups + g) * ms;
+                for i in 0..m {
+                    for j in 0..m {
+                        if i == j {
+                            continue;
+                        }
+                        let (a, b) = (i.min(j), i.max(j));
+                        let (lo, hi, blk) = tile_of(b);
+                        let w = hi - lo;
+                        asm[base + i * (m + 1) + j] =
+                            blk[(r * groups + g) * m * w + a * w + (b - lo)];
+                    }
+                }
+                for i in 0..m {
+                    let row_sum: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| asm[base + i * (m + 1) + j])
+                        .sum();
+                    asm[base + i * (m + 1) + i] = phis[(r * groups + g) * m + i] - row_sum;
+                }
+                asm[base + m * (m + 1) + m] = pm.expected_values[g];
+            }
+        }
+        for (i, (a, b)) in legacy.iter().zip(&asm).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 1e-6,
+                "owner-block assembly off at {i}: {a} vs {b}"
+            );
         }
     }
 

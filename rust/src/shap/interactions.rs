@@ -2,13 +2,22 @@
 //! paper's Table 7 compares against: for every feature j present in a
 //! tree, evaluate TreeShap twice (j fixed present / fixed absent);
 //! φ_ij = (φ_i|on − φ_i|off)/2, diagonal via Eq. 6, base value at [M, M].
+//!
+//! The conditioned-feature loop is embarrassingly parallel across j,
+//! which is what the feature-tile shard axis exploits: the ranged
+//! [`interaction_block`] kernel evaluates only the conditioned passes
+//! for j ∈ [lo, hi), producing one f64 column block of the (M+1)²
+//! matrix. Blocks accumulate per cell in the same per-tree order as the
+//! full kernel, so an assembled tiled matrix is bit-identical to the
+//! unsharded one.
 
 use crate::gbdt::{Model, Tree};
 use crate::parallel;
 use crate::shap::path::expected_values;
 use crate::shap::treeshap::{tree_shap_row, Condition, Scratch};
 
-fn tree_features(tree: &Tree) -> Vec<i32> {
+/// Sorted, deduplicated split features of one tree.
+pub fn tree_features(tree: &Tree) -> Vec<i32> {
     let mut feats: Vec<i32> = (0..tree.num_nodes())
         .filter(|&i| !tree.is_leaf(i))
         .map(|i| tree.feature[i])
@@ -18,6 +27,14 @@ fn tree_features(tree: &Tree) -> Vec<i32> {
     feats
 }
 
+/// Per-tree unique-feature lists for a whole model. This is the uncached
+/// path; backends go through `PreparedModel::tile_features()`, which
+/// computes these lists once per model and shares them across calls,
+/// shards, and the tile splitter.
+pub fn model_tree_features(model: &Model) -> Vec<Vec<i32>> {
+    model.trees.iter().map(tree_features).collect()
+}
+
 /// Interaction matrices for a batch: [rows × groups × (M+1)²] row-major.
 pub fn interaction_values(
     model: &Model,
@@ -25,20 +42,36 @@ pub fn interaction_values(
     rows: usize,
     threads: usize,
 ) -> Vec<f32> {
+    let feats = model_tree_features(model);
+    let ev = expected_values(model);
+    interaction_values_with(model, x, rows, threads, &feats, &ev)
+}
+
+/// [`interaction_values`] over precomputed per-tree feature lists and
+/// base values — the entry point backends use so the prepared-model
+/// cache pays for both exactly once per model.
+pub fn interaction_values_with(
+    model: &Model,
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+    feats: &[Vec<i32>],
+    ev: &[f64],
+) -> Vec<f32> {
     let m = model.num_features;
     let groups = model.num_groups;
-    let ev = expected_values(model);
     let mstride = (m + 1) * (m + 1);
     let stride = groups * mstride;
     let max_depth = model.max_depth();
-    // precompute per-tree feature lists once
-    let feats: Vec<Vec<i32>> = model.trees.iter().map(tree_features).collect();
 
     let mut out = vec![0.0f32; rows * stride];
     parallel::parallel_for_rows(threads, &mut out, stride, 2, |range, chunk| {
         let mut slab = Scratch::new(max_depth);
         let mut mat = vec![0.0f64; stride];
         let mut phis = vec![0.0f64; groups * (m + 1)];
+        // zeroed once; the conditioned passes only ever write entries in
+        // the tree's own feature list, which we re-zero after each use —
+        // O(|tree features|) instead of O(M) per conditioned pass
         let mut on = vec![0.0f64; m + 1];
         let mut off = vec![0.0f64; m + 1];
         for (k, r) in range.enumerate() {
@@ -54,13 +87,18 @@ pub fn interaction_values(
                     &mut slab,
                 );
                 for &j in &feats[ti] {
-                    on.iter_mut().for_each(|v| *v = 0.0);
-                    off.iter_mut().for_each(|v| *v = 0.0);
                     tree_shap_row(tree, xr, &mut on, Condition::On(j), &mut slab);
                     tree_shap_row(tree, xr, &mut off, Condition::Off(j), &mut slab);
                     let gm = &mut mat[g * mstride..(g + 1) * mstride];
-                    for i in 0..m {
+                    // a conditioned pass only touches the tree's own
+                    // features, so every other i contributes (0−0)/2
+                    for &i in &feats[ti] {
+                        let i = i as usize;
                         gm[i * (m + 1) + j as usize] += (on[i] - off[i]) / 2.0;
+                    }
+                    for &i in &feats[ti] {
+                        on[i as usize] = 0.0;
+                        off[i as usize] = 0.0;
                     }
                 }
             }
@@ -79,6 +117,104 @@ pub fn interaction_values(
             let dst = &mut chunk[k * stride..(k + 1) * stride];
             for (d, s) in dst.iter_mut().zip(&mat) {
                 *d = *s as f32;
+            }
+        }
+    });
+    out
+}
+
+/// Unconditioned per-feature φ in f64: [rows × groups × M], accumulated
+/// per tree in the same order as [`interaction_values_with`]'s φ pass —
+/// the coordinator's input to the Eq. 6 diagonal on assembled tiles.
+/// No base-value slot: the caller places E[f] at [M, M] itself.
+pub fn phis_f64(model: &Model, x: &[f32], rows: usize, threads: usize) -> Vec<f64> {
+    let m = model.num_features;
+    let groups = model.num_groups;
+    let stride = groups * (m + 1);
+    let max_depth = model.max_depth();
+    let mut out = vec![0.0f64; rows * groups * m];
+    parallel::parallel_for_rows(threads, &mut out, groups * m, 8, |range, chunk| {
+        let mut slab = Scratch::new(max_depth);
+        let mut phis = vec![0.0f64; stride];
+        for (k, r) in range.enumerate() {
+            phis.iter_mut().for_each(|v| *v = 0.0);
+            let xr = &x[r * m..(r + 1) * m];
+            for (tree, &g) in model.trees.iter().zip(&model.tree_group) {
+                tree_shap_row(
+                    tree,
+                    xr,
+                    &mut phis[g * (m + 1)..(g + 1) * (m + 1)],
+                    Condition::None,
+                    &mut slab,
+                );
+            }
+            for g in 0..groups {
+                let dst = &mut chunk[k * groups * m + g * m..k * groups * m + (g + 1) * m];
+                dst.copy_from_slice(&phis[g * (m + 1)..g * (m + 1) + m]);
+            }
+        }
+    });
+    out
+}
+
+/// One feature tile of the off-diagonal interaction matrix, exact:
+/// f64 [rows × groups × M × (hi−lo)] where entry (r, g, i, j−lo) is
+/// Σ_trees (φ_i|j on − φ_i|j off)/2 — the full column j of the matrix
+/// for every conditioned feature j ∈ [lo, hi). Cell sums run over trees
+/// in model order, so assembling tiles side by side reproduces the
+/// unsharded [`interaction_values`] f64 accumulations bit-for-bit.
+/// Trees with no split feature inside the tile are skipped entirely —
+/// the M ≫ D sparsity win that makes narrow tiles cheap on wide models.
+pub fn interaction_block(
+    model: &Model,
+    x: &[f32],
+    rows: usize,
+    threads: usize,
+    lo: usize,
+    hi: usize,
+    feats: &[Vec<i32>],
+) -> Vec<f64> {
+    let m = model.num_features;
+    let groups = model.num_groups;
+    let width = hi - lo;
+    let bstride = groups * m * width;
+    let max_depth = model.max_depth();
+    // per-tree sub-ranges of the sorted feature lists that fall in the tile
+    let spans: Vec<(usize, usize)> = feats
+        .iter()
+        .map(|f| {
+            let a = f.partition_point(|&j| (j as usize) < lo);
+            let b = f.partition_point(|&j| (j as usize) < hi);
+            (a, b)
+        })
+        .collect();
+    let mut out = vec![0.0f64; rows * bstride];
+    parallel::parallel_for_rows(threads, &mut out, bstride, 2, |range, chunk| {
+        let mut slab = Scratch::new(max_depth);
+        let mut on = vec![0.0f64; m + 1];
+        let mut off = vec![0.0f64; m + 1];
+        for (k, r) in range.enumerate() {
+            let xr = &x[r * m..(r + 1) * m];
+            let block = &mut chunk[k * bstride..(k + 1) * bstride];
+            for (ti, (tree, &g)) in model.trees.iter().zip(&model.tree_group).enumerate() {
+                let (a, b) = spans[ti];
+                if a == b {
+                    continue; // tree has no feature in this tile
+                }
+                for &j in &feats[ti][a..b] {
+                    tree_shap_row(tree, xr, &mut on, Condition::On(j), &mut slab);
+                    tree_shap_row(tree, xr, &mut off, Condition::Off(j), &mut slab);
+                    let gb = &mut block[g * m * width..(g + 1) * m * width];
+                    let col = j as usize - lo;
+                    for &i in &feats[ti] {
+                        let i = i as usize;
+                        gb[i * width + col] += (on[i] - off[i]) / 2.0;
+                    }
+                    for &i in &feats[ti] {
+                        on[i as usize] = 0.0;
+                        off[i as usize] = 0.0;
+                    }
+                }
             }
         }
     });
@@ -144,6 +280,60 @@ mod tests {
             let total: f64 = inter[r * ms..(r + 1) * ms].iter().map(|&v| v as f64).sum();
             let pred = model.predict_row_raw(d.row(r))[0] as f64;
             assert!((total - pred).abs() < 1e-3, "{total} vs {pred}");
+        }
+    }
+
+    #[test]
+    fn blocks_assemble_to_full_matrix_bitwise() {
+        // tiles of the off-diagonal columns + the f64 φ pass reproduce
+        // the full kernel exactly (same f64 sums in the same order)
+        let d = SynthSpec::adult(0.004).generate();
+        let model = train(&d, &TrainParams { rounds: 4, max_depth: 5, ..Default::default() });
+        let m = model.num_features;
+        let groups = model.num_groups;
+        let rows = 5;
+        let x = &d.features[..rows * m];
+        let full = interaction_values(&model, x, rows, 1);
+        let feats = model_tree_features(&model);
+        let ev = expected_values(&model);
+        let phis = phis_f64(&model, x, rows, 1);
+        let cuts = [0, 2, 3, m];
+        let ms = (m + 1) * (m + 1);
+        let mut asm = vec![0.0f64; rows * groups * ms];
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let width = hi - lo;
+            let block = interaction_block(&model, x, rows, 1, lo, hi, &feats);
+            for r in 0..rows {
+                for g in 0..groups {
+                    for i in 0..m {
+                        for j in lo..hi {
+                            asm[(r * groups + g) * ms + i * (m + 1) + j] =
+                                block[(r * groups + g) * m * width + i * width + (j - lo)];
+                        }
+                    }
+                }
+            }
+        }
+        for r in 0..rows {
+            for g in 0..groups {
+                let gm = &mut asm[(r * groups + g) * ms..(r * groups + g + 1) * ms];
+                for i in 0..m {
+                    let row_sum: f64 = (0..m)
+                        .filter(|&j| j != i)
+                        .map(|j| gm[i * (m + 1) + j])
+                        .sum();
+                    gm[i * (m + 1) + i] =
+                        phis[(r * groups + g) * m + i] - row_sum;
+                }
+                gm[m * (m + 1) + m] = ev[g];
+            }
+        }
+        for (i, (a, b)) in full.iter().zip(&asm).enumerate() {
+            assert!(
+                *a == *b as f32,
+                "tile assembly not bit-identical at {i}: {a} vs {b}"
+            );
         }
     }
 }

@@ -173,7 +173,10 @@ fn sharded_service_serves_correct_values_and_shard_metrics() {
                 let js = snap.get("shards").unwrap();
                 assert!(js.get("shard0").is_some() && js.get("shard1").is_some());
             }
-            gputreeshap::backend::ShardAxis::Grid => unreachable!("not in this sweep"),
+            gputreeshap::backend::ShardAxis::Grid
+            | gputreeshap::backend::ShardAxis::FeatureTiles => {
+                unreachable!("not in this sweep")
+            }
         }
         svc.shutdown();
     }

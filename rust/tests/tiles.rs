@@ -1,0 +1,344 @@
+//! Feature-tile sharded Φ end to end: tiled interaction values against
+//! the unsharded recursive oracle across the zoo (multiclass, NaN
+//! probes, the repeated-feature model), awkward tile shapes (M not
+//! divisible by the tile count, 1-feature tiles), assembled-matrix
+//! invariants (symmetry, Eq. 6 row sums, local accuracy), mid-stream
+//! tile death → quarantine → re-split recovery (directly and through
+//! the serving executor), and the build routing that sends a pinned
+//! `tiles` axis to the tile executor only when the pipeline is Φ.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gputreeshap::backend::{
+    self, BackendCaps, BackendConfig, BackendKind, RecursiveBackend, ShapBackend, ShardAxis,
+    TilesBackend,
+};
+use gputreeshap::bench::zoo;
+use gputreeshap::coordinator::{BackendFactory, ServiceConfig, ShapService};
+use gputreeshap::gbdt::{Model, ZooSize};
+use gputreeshap::util::error::Result;
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + 1e-3 * x.abs().max(y.abs()),
+            "{what}: idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+fn cfg(rows: usize) -> BackendConfig {
+    BackendConfig { threads: 1, rows_hint: rows, with_interactions: true, ..Default::default() }
+}
+
+/// Zoo sweep cases: every Small dataset shape except fashion_mnist
+/// (M=784 makes the (M+1)² oracle output enormous — table7 skips it for
+/// the same reason), with NaN probes on the first half of the rows,
+/// plus the hand-built repeated-feature model.
+fn zoo_cases() -> Vec<(String, Arc<Model>, Vec<f32>, usize, usize)> {
+    let mut cases: Vec<(String, Arc<Model>, Vec<f32>, usize, usize)> = Vec::new();
+    for e in zoo::zoo_entries() {
+        if e.size != ZooSize::Small || e.spec.name == "fashion_mnist" {
+            continue;
+        }
+        let (model, data) = zoo::build(&e);
+        let m = model.num_features;
+        let rows = 8.min(data.rows);
+        let mut x = data.features[..rows * m].to_vec();
+        // missing values must follow the oracle's activation convention
+        // (NaN matches no split interval) through the tiled path too
+        let nan_rows = rows / 2;
+        for r in 0..nan_rows {
+            x[r * m + (r % m)] = f32::NAN;
+        }
+        cases.push((e.name, Arc::new(model), x, rows, nan_rows));
+    }
+    let model = Arc::new(zoo::repeated_feature_model());
+    let x = vec![-2.0, 0.0, -0.5, 0.0, -0.5, 2.0, 0.5, 1.5, 3.0, -1.0];
+    cases.push(("repeated-feature".to_string(), model, x, 5, 0));
+    cases
+}
+
+#[test]
+fn tiled_interactions_match_oracle_across_the_zoo() {
+    for (name, model, x, rows, _) in &zoo_cases() {
+        let m = model.num_features;
+        let oracle =
+            RecursiveBackend::new(model.clone(), 1).interactions(x, *rows).unwrap();
+        // tile counts chosen so M is not divisible (covtype 54 / adult 14
+        // / cal_housing 8 against 3 and 4), plus 1-feature tiles via a
+        // count ≥ M on the narrow models (build clamps to M)
+        for tiles in [2usize, 3, 4, m] {
+            let tiled = TilesBackend::build(model, BackendKind::Recursive, &cfg(*rows), tiles)
+                .unwrap();
+            let got = tiled.interactions(x, *rows).unwrap();
+            assert_eq!(got.len(), oracle.len(), "{name}");
+            for (i, (a, o)) in got.iter().zip(&oracle).enumerate() {
+                assert!(
+                    (a.is_nan() && o.is_nan()) || *a == *o,
+                    "{name}, {tiles} tiles: cell {i}: {a} vs {o} (recursive units are bitwise)"
+                );
+            }
+            if tiles > 1 && m > 1 {
+                let ranges = tiled.tile_ranges();
+                assert_eq!(ranges[0].0, 0, "{name}: tiles must start at feature 0");
+                assert_eq!(ranges.last().unwrap().1, m, "{name}: tiles must end at M");
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "{name}: tiles must be contiguous");
+                }
+            }
+            // host units: the ranged DP kernel against the same oracle
+            let host = TilesBackend::build(model, BackendKind::Host, &cfg(*rows), tiles)
+                .unwrap()
+                .interactions(x, *rows)
+                .unwrap();
+            close(&host, &oracle, 1e-6, &format!("{name}, {tiles} host tiles vs oracle"));
+        }
+    }
+}
+
+#[test]
+fn assembled_matrices_keep_the_interaction_invariants() {
+    for (name, model, x, rows, nan_rows) in &zoo_cases() {
+        let m = model.num_features;
+        let g = model.num_groups;
+        let ms = (m + 1) * (m + 1);
+        let tiled = TilesBackend::build(model, BackendKind::Host, &cfg(*rows), 3).unwrap();
+        let mat = tiled.interactions(x, *rows).unwrap();
+        let phis = tiled.contributions(x, *rows).unwrap();
+        for r in 0..*rows {
+            for k in 0..g {
+                let base = r * g * ms + k * ms;
+                // exact symmetry: owner-symmetric blocks are mirrored
+                for i in 0..=m {
+                    for j in 0..i {
+                        assert_eq!(
+                            mat[base + i * (m + 1) + j],
+                            mat[base + j * (m + 1) + i],
+                            "{name} row {r} group {k}: Φ[{i}][{j}] ≠ Φ[{j}][{i}]"
+                        );
+                    }
+                }
+                // Eq. 6 row sums: Σ_j Φ[i][j] == φ_i
+                let pbase = r * g * (m + 1) + k * (m + 1);
+                for i in 0..m {
+                    let row_sum: f64 =
+                        (0..m).map(|j| f64::from(mat[base + i * (m + 1) + j])).sum();
+                    let phi = f64::from(phis[pbase + i]);
+                    assert!(
+                        (row_sum - phi).abs() < 1e-4 + 1e-3 * phi.abs(),
+                        "{name} row {r} group {k}: ΣΦ[{i}][·] {row_sum} vs φ {phi}"
+                    );
+                }
+                // local accuracy on NaN-free rows: the whole matrix
+                // (diagonal + base cell) sums to the raw prediction
+                if r >= *nan_rows {
+                    let total: f64 = mat[base..base + ms].iter().map(|&v| f64::from(v)).sum();
+                    let pred = f64::from(model.predict_row_raw(&x[r * m..(r + 1) * m])[k]);
+                    assert!(
+                        (total - pred).abs() < 2e-3,
+                        "{name} row {r} group {k}: ΣΦ {total} vs f(x) {pred}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Delegates until `dead` flips, then fails every ranged-block call —
+/// the mid-stream "tile device lost" stand-in. Full-kernel calls
+/// delegate untouched so the oracle side of the test stays live.
+struct FlakyTile {
+    inner: Box<dyn ShapBackend>,
+    dead: Arc<AtomicBool>,
+}
+
+impl ShapBackend for FlakyTile {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.inner.caps()
+    }
+
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.inner.num_groups()
+    }
+
+    fn contributions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.inner.contributions(x, rows)
+    }
+
+    fn interactions(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        self.inner.interactions(x, rows)
+    }
+
+    fn interactions_block(
+        &self,
+        x: &[f32],
+        rows: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(gputreeshap::anyhow!("device lost"));
+        }
+        self.inner.interactions_block(x, rows, lo, hi)
+    }
+
+    fn contributions_f64(&self, x: &[f32], rows: usize) -> Result<Vec<f64>> {
+        self.inner.contributions_f64(x, rows)
+    }
+}
+
+fn small_zoo_model() -> (Arc<Model>, gputreeshap::data::Dataset) {
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Small)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    (Arc::new(model), data)
+}
+
+#[test]
+fn mid_stream_tile_death_quarantines_and_resplits() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 6.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).interactions(&x, rows).unwrap();
+
+    let dead = Arc::new(AtomicBool::new(false));
+    let mut units: Vec<Box<dyn ShapBackend>> = Vec::new();
+    for i in 0..4 {
+        let inner: Box<dyn ShapBackend> = Box::new(RecursiveBackend::new(model.clone(), 1));
+        units.push(if i == 2 {
+            Box::new(FlakyTile { inner, dead: dead.clone() })
+        } else {
+            inner
+        });
+    }
+    let mut tiled = TilesBackend::from_units(units, backend::prepare(&model));
+
+    // healthy: 4 tiles, bitwise vs the oracle
+    assert_eq!(tiled.interactions(&x, rows).unwrap(), oracle);
+    assert_eq!(tiled.tile_ranges().len(), 4);
+    assert!(tiled.failed_shards().is_empty());
+
+    // kill unit 2 mid-stream: the batch fails naming the tile, the
+    // failure is attributed, and nothing partial escapes
+    dead.store(true, Ordering::Relaxed);
+    let err = tiled.interactions(&x, rows).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("tile 2"), "failed tile must be named: {msg}");
+    assert!(msg.contains("device lost"), "cause must be preserved: {msg}");
+    assert_eq!(tiled.failed_shards(), vec![2]);
+
+    // quarantine → survivors re-split the feature range and the next
+    // batch is served complete and still bitwise-correct
+    assert_eq!(tiled.quarantine(&[2]).unwrap(), 1);
+    assert_eq!(tiled.shard_count(), 3);
+    assert_eq!(tiled.interactions(&x, rows).unwrap(), oracle);
+    assert_eq!(tiled.tile_ranges().len(), 3, "survivors re-split the feature range");
+
+    // from_units topologies carry no rebuild recipe: hot-add must refuse
+    let err = tiled.hot_add(4).unwrap_err();
+    assert!(format!("{err:#}").contains("rebuild recipe"), "{err:#}");
+}
+
+#[test]
+fn service_survives_a_tile_death_and_keeps_serving_interactions() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 4.min(data.rows);
+    let x = data.features[..rows * m].to_vec();
+    let oracle = RecursiveBackend::new(model.clone(), 1).interactions(&x, rows).unwrap();
+
+    let dead = Arc::new(AtomicBool::new(false));
+    let factory: Arc<BackendFactory> = {
+        let model = model.clone();
+        let dead = dead.clone();
+        Arc::new(move || {
+            let mut units: Vec<Box<dyn ShapBackend>> = Vec::new();
+            for i in 0..3 {
+                let inner: Box<dyn ShapBackend> =
+                    Box::new(RecursiveBackend::new(model.clone(), 1));
+                units.push(if i == 1 {
+                    Box::new(FlakyTile { inner, dead: dead.clone() })
+                } else {
+                    inner
+                });
+            }
+            Ok(Box::new(TilesBackend::from_units(units, backend::prepare(&model)))
+                as Box<dyn ShapBackend>)
+        })
+    };
+    let svc = ShapService::start_with_factory(
+        factory,
+        ServiceConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(svc.explain_interactions(x.clone(), rows).unwrap(), oracle);
+
+    // kill the middle tile: requests may fail until the executor
+    // quarantines it, then the survivors re-split and serving resumes —
+    // every successful response is the complete, correct matrix
+    dead.store(true, Ordering::Relaxed);
+    let mut saw_error = false;
+    let mut recovered = false;
+    for _ in 0..100 {
+        match svc.explain_interactions(x.clone(), rows) {
+            Err(_) => saw_error = true,
+            Ok(v) => {
+                assert_eq!(v, oracle, "a served response must be complete and correct");
+                if saw_error {
+                    recovered = true;
+                    break;
+                }
+            }
+        }
+    }
+    assert!(saw_error, "the dead tile must surface at least one request error");
+    assert!(recovered, "the service must keep serving after the tile quarantine");
+    assert!(svc.metrics.quarantines.load(Ordering::Relaxed) >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn pinned_tiles_axis_builds_the_tile_executor_for_interaction_pipelines() {
+    let (model, data) = small_zoo_model();
+    let m = model.num_features;
+    let rows = 4.min(data.rows);
+    let x = &data.features[..rows * m];
+    let mut c = cfg(rows);
+    c.devices = 4;
+    c.shard_axis = Some(ShardAxis::FeatureTiles);
+    // explicit kind
+    let b = backend::build(&model, BackendKind::Host, &c).unwrap();
+    assert!(b.describe().starts_with("tiles["), "{}", b.describe());
+    let oracle = RecursiveBackend::new(model.clone(), 1).interactions(x, rows).unwrap();
+    close(&b.interactions(x, rows).unwrap(), &oracle, 1e-6, "pinned tiles build");
+    // planner-driven: the pinned axis carries through ranked candidates
+    let (plan, b) = backend::build_auto(&model, &c).unwrap();
+    assert_eq!(plan.axis, ShardAxis::FeatureTiles);
+    assert!(plan.shards > 1);
+    assert!(b.describe().starts_with("tiles["), "{}", b.describe());
+    // a φ-only pipeline on the same topology degrades to row shards
+    let mut phi = c.clone();
+    phi.with_interactions = false;
+    let b = backend::build(&model, BackendKind::Host, &phi).unwrap();
+    assert!(b.describe().starts_with("sharded["), "{}", b.describe());
+}
