@@ -221,24 +221,27 @@ impl BackendKind {
         }
     }
 
+    /// The alias table behind [`BackendKind::parse`]/[`BackendKind::name_list`]:
+    /// first alias of each row is the canonical [`BackendKind::name`].
+    const NAMES: &'static [crate::util::NameRow<BackendKind>] = &[
+        (BackendKind::Recursive, &["cpu", "recursive"]),
+        (BackendKind::Host, &["host"]),
+        (BackendKind::Linear, &["linear"]),
+        (BackendKind::FastV2, &["fastv2", "fast-v2", "fast_v2"]),
+        (BackendKind::XlaWarp, &["xla", "warp", "xla-warp"]),
+        (BackendKind::XlaPadded, &["xla-padded", "padded"]),
+    ];
+
     /// Parse a backend name (case-insensitive; accepts the aliases the
     /// CLI documents). `None` for unknown names — callers list the
     /// valid set via [`BackendKind::name_list`] in their errors.
     pub fn parse(s: &str) -> Option<BackendKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "cpu" | "recursive" => BackendKind::Recursive,
-            "host" => BackendKind::Host,
-            "linear" => BackendKind::Linear,
-            "fastv2" | "fast-v2" | "fast_v2" => BackendKind::FastV2,
-            "xla" | "warp" | "xla-warp" => BackendKind::XlaWarp,
-            "xla-padded" | "padded" => BackendKind::XlaPadded,
-            _ => return None,
-        })
+        crate::util::parse_named(Self::NAMES, s)
     }
 
     /// The registered backend names, `|`-joined for CLI error messages.
     pub fn name_list() -> String {
-        BackendKind::ALL.map(|k| k.name()).join("|")
+        crate::util::name_list(Self::NAMES)
     }
 
     /// Is this kind present in the current binary?
@@ -294,6 +297,77 @@ impl Default for BackendConfig {
             shard_axis: None,
             fastv2_max_mb: DEFAULT_FASTV2_MAX_MB,
         }
+    }
+}
+
+/// A process-wide device budget shared by every co-resident serving
+/// executor: each model registry entry leases its `devices` slots here
+/// before building its (sharded) backend, so loading many models cannot
+/// oversubscribe the physical topology. Leases release on drop (model
+/// unload / alias-retire park), making slots available to the next
+/// `load`/`deploy`. An unbounded pool (the default) keeps single-model
+/// and test setups zero-config.
+#[derive(Debug)]
+pub struct DevicePool {
+    total: usize,
+    used: std::sync::Mutex<usize>,
+}
+
+impl DevicePool {
+    /// A pool with `total` leasable device slots.
+    pub fn new(total: usize) -> Arc<DevicePool> {
+        Arc::new(DevicePool { total: total.max(1), used: std::sync::Mutex::new(0) })
+    }
+
+    /// No budget: every lease succeeds (single-model / test setups).
+    pub fn unbounded() -> Arc<DevicePool> {
+        DevicePool::new(usize::MAX)
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Slots currently leased out.
+    pub fn in_use(&self) -> usize {
+        *self.used.lock().unwrap()
+    }
+
+    /// Lease `n` device slots, failing fast when the pool cannot cover
+    /// them — the admission-control half of multi-model serving.
+    pub fn lease(self: &Arc<DevicePool>, n: usize) -> Result<DeviceLease> {
+        let n = n.max(1);
+        let mut used = self.used.lock().unwrap();
+        if used.saturating_add(n) > self.total {
+            return Err(crate::anyhow!(
+                "device pool exhausted: {} of {} slot(s) in use, {} requested \
+                 (unload a model or lower --devices)",
+                *used,
+                self.total,
+                n
+            ));
+        }
+        *used += n;
+        Ok(DeviceLease { pool: self.clone(), n })
+    }
+}
+
+/// An active lease of `n` device slots; returns them on drop.
+#[derive(Debug)]
+pub struct DeviceLease {
+    pool: Arc<DevicePool>,
+    n: usize,
+}
+
+impl DeviceLease {
+    pub fn devices(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for DeviceLease {
+    fn drop(&mut self) {
+        *self.pool.used.lock().unwrap() -= self.n;
     }
 }
 

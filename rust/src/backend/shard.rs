@@ -74,24 +74,28 @@ impl ShardAxis {
         }
     }
 
+    /// The alias table behind [`ShardAxis::parse`]/[`ShardAxis::name_list`]
+    /// (same idiom as `BackendKind::NAMES`): first alias of each row is
+    /// the canonical [`ShardAxis::name`]. Includes `grid` and `tiles`
+    /// (parseable and executable) even though [`ShardAxis::ALL`]
+    /// deliberately excludes them from 1-D sweeps.
+    const NAMES: &'static [crate::util::NameRow<ShardAxis>] = &[
+        (ShardAxis::Rows, &["rows", "row"]),
+        (ShardAxis::Trees, &["trees", "tree"]),
+        (ShardAxis::Grid, &["grid"]),
+        (ShardAxis::FeatureTiles, &["tiles", "tile"]),
+    ];
+
+    /// Parse an axis name (case-insensitive). `None` for unknown names —
+    /// callers list the valid set via [`ShardAxis::name_list`].
     pub fn parse(s: &str) -> Option<ShardAxis> {
-        match s {
-            "rows" | "row" => Some(ShardAxis::Rows),
-            "trees" | "tree" => Some(ShardAxis::Trees),
-            "grid" => Some(ShardAxis::Grid),
-            "tiles" | "tile" => Some(ShardAxis::FeatureTiles),
-            _ => None,
-        }
+        crate::util::parse_named(Self::NAMES, s)
     }
 
     /// Every parseable axis name, `|`-joined for CLI error messages —
-    /// the counterpart of `BackendKind::name_list`. Includes `grid` and
-    /// `tiles` (parseable and executable) even though [`ShardAxis::ALL`]
-    /// deliberately excludes them from 1-D sweeps.
+    /// the counterpart of `BackendKind::name_list`.
     pub fn name_list() -> String {
-        [ShardAxis::Rows, ShardAxis::Trees, ShardAxis::Grid, ShardAxis::FeatureTiles]
-            .map(|a| a.name())
-            .join("|")
+        crate::util::name_list(Self::NAMES)
     }
 }
 

@@ -1,6 +1,11 @@
 //! Tiny CLI argument parser substrate (no `clap` offline).
 //!
 //! Syntax: `command [subcommand] [--key value | --key=value | --flag] [positional…]`
+//!
+//! [`opts`] holds the shared option-resolution layer (datasets, models,
+//! backend/service config) every subcommand goes through.
+
+pub mod opts;
 
 use std::collections::BTreeMap;
 

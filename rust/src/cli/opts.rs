@@ -1,0 +1,248 @@
+//! Shared CLI option resolution: every subcommand (and the `client`
+//! front end) resolves datasets, models, shard topology, backend and
+//! service config through these helpers, so a flag like `--shard-axis`
+//! or `--fastv2-max-mb` means exactly one thing everywhere and unknown
+//! values fail with the same `name_list()`-backed error text.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::backend::{self, BackendConfig, BackendKind, ShapBackend, ShardAxis};
+use crate::cli::Args;
+use crate::coordinator::ServiceConfig;
+use crate::data::csv::{load_csv, CsvOptions};
+use crate::data::{Dataset, SynthSpec};
+use crate::gbdt::Model;
+use crate::runtime::default_artifacts_dir;
+use crate::shap::Packing;
+use crate::util::error::{Error, Result};
+use crate::{anyhow, bail};
+
+/// Resolve `--dataset` (+ `--scale`, `--csv`, `--classes`).
+pub fn load_dataset(args: &Args) -> Result<Dataset> {
+    let scale = args.get_f64("scale", 0.01)?;
+    match args.get_str("dataset", "cal_housing")? {
+        "covtype" => Ok(SynthSpec::covtype(scale).generate()),
+        "cal_housing" => Ok(SynthSpec::cal_housing(scale).generate()),
+        "fashion_mnist" => Ok(SynthSpec::fashion_mnist(scale).generate()),
+        "adult" => Ok(SynthSpec::adult(scale).generate()),
+        "csv" => {
+            let path = args.get("csv").ok_or_else(|| anyhow!("--csv <path> required"))?;
+            let opts = CsvOptions {
+                num_classes: args.get_usize("classes", 0)?,
+                ..Default::default()
+            };
+            load_csv(Path::new(path), &opts)
+        }
+        other => bail!("unknown dataset '{other}'"),
+    }
+}
+
+/// Load a model artifact by path: `.json` routes through the XGBoost
+/// importer (the paper's integration target), everything else through
+/// the native format.
+pub fn load_model_path(path: &Path) -> Result<Model> {
+    if path.extension().is_some_and(|e| e == "json") {
+        crate::gbdt::xgb_import::load_xgboost_json(path)
+    } else {
+        crate::gbdt::io::load(path)
+    }
+}
+
+/// Resolve `--model <path>` into a loaded model.
+pub fn load_model(args: &Args) -> Result<Model> {
+    let path = args.get("model").ok_or_else(|| anyhow!("--model <path> required"))?;
+    load_model_path(Path::new(path))
+}
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+/// Resolve `--shard-axis` (`auto` → `None`, letting the planner pick).
+pub fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
+    match args.get_str("shard-axis", "auto")? {
+        "auto" => Ok(None),
+        s => ShardAxis::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|{})", ShardAxis::name_list())),
+    }
+}
+
+/// Assemble the backend config every explain-path command shares.
+pub fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
+    let packing = args.get_str("packing", "bfd")?;
+    Ok(BackendConfig {
+        threads: args.get_usize("threads", crate::parallel::default_threads())?,
+        packing: Packing::parse(packing)
+            .ok_or_else(|| anyhow!("unknown packing '{packing}' (none|nf|ffd|bfd)"))?,
+        artifacts_dir: artifacts_dir(args),
+        rows_hint,
+        with_interactions: false,
+        with_predict: false,
+        devices: args.get_usize("devices", 1)?.max(1),
+        shard_axis: shard_axis(args)?,
+        fastv2_max_mb: args.get_usize("fastv2-max-mb", backend::DEFAULT_FASTV2_MAX_MB)?,
+    })
+}
+
+/// The error for an unrecognized `--backend` value: names every valid
+/// kind (parse is case-insensitive, so any casing of these works).
+pub fn unknown_backend(s: &str) -> Error {
+    anyhow!("unknown backend '{s}' (auto|{})", BackendKind::name_list())
+}
+
+/// Resolve `--backend` (`auto` → `None`, pinning otherwise) without
+/// building anything — the registry/serve path wants the kind, not an
+/// instance.
+pub fn backend_kind(args: &Args, default: &str) -> Result<Option<BackendKind>> {
+    match args.get_str("backend", default)? {
+        "auto" => Ok(None),
+        s => BackendKind::parse(s).map(Some).ok_or_else(|| unknown_backend(s)),
+    }
+}
+
+/// Resolve `--backend` (with a per-command default) into a built
+/// backend plus a printable label.
+pub fn build_backend(
+    model: &Arc<Model>,
+    args: &Args,
+    cfg: &BackendConfig,
+    default: &str,
+) -> Result<(String, Box<dyn ShapBackend>)> {
+    match args.get_str("backend", default)? {
+        "auto" => {
+            let (plan, b) = backend::build_auto(model, cfg)?;
+            let layout = if let Some(g) = plan.grid {
+                format!(", {g}-grid")
+            } else if plan.shards > 1 {
+                format!(", {}×{}-sharded", plan.shards, plan.axis.name())
+            } else {
+                String::new()
+            };
+            Ok((
+                format!(
+                    "auto→{}{} (planner est {:.1} ms)",
+                    plan.kind.name(),
+                    layout,
+                    plan.est_latency_s * 1e3
+                ),
+                b,
+            ))
+        }
+        s => {
+            let kind = BackendKind::parse(s).ok_or_else(|| unknown_backend(s))?;
+            Ok((kind.name().to_string(), backend::build(model, kind, cfg)?))
+        }
+    }
+}
+
+/// Resolve `--calibration`: calibrated cost constants persist next to
+/// the model artifact by default (`<model>.calib.json`), so a restarted
+/// service plans from measurements immediately; `none` disables, an
+/// explicit path overrides.
+pub fn calibration_path(args: &Args) -> Result<Option<PathBuf>> {
+    Ok(match args.get_str("calibration", "")? {
+        "none" => None,
+        "" => args.get("model").map(|mp| PathBuf::from(format!("{mp}.calib.json"))),
+        explicit => Some(PathBuf::from(explicit)),
+    })
+}
+
+/// Assemble the service config the serve paths share (`--devices`,
+/// `--shard-axis`, `--max-batch`, `--max-wait-ms`,
+/// `--recalibrate-every`, `--calibration`).
+pub fn service_config(args: &Args) -> Result<ServiceConfig> {
+    Ok(ServiceConfig {
+        devices: args.get_usize("devices", 1)?,
+        shard_axis: shard_axis(args)?,
+        max_batch_rows: args.get_usize("max-batch", 256)?,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
+        // measure→calibrate→plan cadence in executed batches (0 = static)
+        recalibrate_every: args.get_usize("recalibrate-every", 64)?,
+        calibration_path: calibration_path(args)?,
+        ..Default::default()
+    })
+}
+
+/// Parse a `name=path[,name=path…]` model manifest (`serve --models`).
+pub fn parse_model_manifest(spec: &str) -> Result<Vec<(String, PathBuf)>> {
+    spec.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|pair| {
+            let (name, path) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad --models entry '{pair}' (want name=path)"))?;
+            Ok((name.to_string(), PathBuf::from(path)))
+        })
+        .collect()
+}
+
+/// The registry name for a model loaded via `--model <path>`: an
+/// explicit `--name` wins, else the artifact's file stem.
+pub fn model_name(args: &Args, path: &Path) -> Result<String> {
+    if let Some(name) = args.get("name") {
+        return Ok(name.to_string());
+    }
+    path.file_stem()
+        .and_then(|s| s.to_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("cannot derive a model name from '{}'; pass --name", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn calibration_modes() {
+        let a = parse("serve --model m.gtsm");
+        assert_eq!(
+            calibration_path(&a).unwrap(),
+            Some(PathBuf::from("m.gtsm.calib.json"))
+        );
+        let a = parse("serve --model m.gtsm --calibration none");
+        assert_eq!(calibration_path(&a).unwrap(), None);
+        let a = parse("serve --model m.gtsm --calibration /tmp/c.json");
+        assert_eq!(calibration_path(&a).unwrap(), Some(PathBuf::from("/tmp/c.json")));
+        // no --model and no explicit path: nowhere to persist
+        assert_eq!(calibration_path(&parse("serve")).unwrap(), None);
+    }
+
+    #[test]
+    fn model_manifest() {
+        let got = parse_model_manifest("m1=a/b.gtsm,m2=c.json").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("m1".to_string(), PathBuf::from("a/b.gtsm")),
+                ("m2".to_string(), PathBuf::from("c.json")),
+            ]
+        );
+        assert!(parse_model_manifest("nopath").is_err());
+        assert_eq!(parse_model_manifest("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn names_default_to_file_stem() {
+        let a = parse("serve --model artifacts/houses.gtsm");
+        assert_eq!(model_name(&a, Path::new("artifacts/houses.gtsm")).unwrap(), "houses");
+        let a = parse("serve --model artifacts/houses.gtsm --name prod");
+        assert_eq!(model_name(&a, Path::new("artifacts/houses.gtsm")).unwrap(), "prod");
+    }
+
+    #[test]
+    fn backend_kind_auto_vs_pinned() {
+        assert_eq!(backend_kind(&parse("serve"), "auto").unwrap(), None);
+        assert_eq!(
+            backend_kind(&parse("serve --backend cpu"), "auto").unwrap(),
+            Some(BackendKind::Recursive)
+        );
+        assert!(backend_kind(&parse("serve --backend nope"), "auto").is_err());
+    }
+}

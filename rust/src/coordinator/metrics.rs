@@ -121,6 +121,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
+    /// requests whose response (ok or error) has been delivered; with
+    /// `requests` and `rejected` this derives the in-flight gauge the
+    /// registry's drain paths assert on
+    pub completed: AtomicU64,
     /// device shards quarantined by the executor after batch failures
     pub quarantines: AtomicU64,
     /// executor backend rebuilds triggered by recalibrated plans
@@ -158,6 +162,21 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request's response left the executor (ok or error).
+    pub fn record_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accepted requests whose response has not been delivered yet.
+    /// Zero after a graceful drain — the registry's alias-swap and
+    /// unload paths pin this.
+    pub fn in_flight(&self) -> u64 {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let done = self.completed.load(Ordering::Relaxed)
+            + self.rejected.load(Ordering::Relaxed);
+        requests.saturating_sub(done)
     }
 
     pub fn record_quarantine(&self, shards: usize) {
@@ -328,6 +347,7 @@ impl Metrics {
             ("batches", Json::from(self.batches.load(Ordering::Relaxed) as usize)),
             ("rejected", Json::from(self.rejected.load(Ordering::Relaxed) as usize)),
             ("errors", Json::from(self.errors.load(Ordering::Relaxed) as usize)),
+            ("in_flight", Json::from(self.in_flight() as usize)),
             ("quarantines", Json::from(self.quarantines.load(Ordering::Relaxed) as usize)),
             ("replans", Json::from(self.replans.load(Ordering::Relaxed) as usize)),
             ("latency_p50_s", Json::from(lat.p50)),

@@ -5,11 +5,18 @@
 //! host packed DP, XLA warp/padded) can serve, and with `devices > 1`
 //! each batch fans out across every device shard of one
 //! `ShardedBackend` (per-shard rows/p50/p99 land in `Metrics`).
+//!
+//! On top of the single-model service sits the [`registry`]: named,
+//! hot-swappable serving targets (`load`/`unload`/`alias`/`deploy`)
+//! sharing one device pool and the process-wide prepared-model cache —
+//! the routing layer the network ingress speaks to.
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod service;
 
 pub use batcher::Batcher;
 pub use metrics::{BackendCounters, Metrics};
-pub use service::{BackendFactory, ServiceConfig, ShapService, Task};
+pub use registry::{DeployOutcome, ModelEntry, ModelRegistry, RegistryConfig};
+pub use service::{BackendFactory, Request, Response, ServiceConfig, ShapService, Task};

@@ -1,0 +1,643 @@
+//! The multi-model serving registry: named, versioned, hot-swappable
+//! serving targets in one process (the `pgml.train` → `pgml.deploy` →
+//! `pgml.predict` idiom, scaled to this coordinator).
+//!
+//! Each loaded model gets its own [`ShapService`] executor — its own
+//! batcher, adaptive planner and metrics namespace — while all entries
+//! share the process-wide prepared-model cache (`backend::prepare` is
+//! keyed by `Arc<Model>` identity) and lease their device slots from
+//! one [`DevicePool`], so co-resident models cannot oversubscribe the
+//! topology. Calibration state persists per registry entry
+//! (`<name>.calib.json` next to the model artifact, or under an
+//! explicit calibration directory keyed by entry name), so a model
+//! unloaded and reloaded — or parked by an alias swap and redeployed —
+//! plans from its own measurements.
+//!
+//! **Hot deploy**: [`ModelRegistry::deploy`] atomically repoints an
+//! alias at another loaded model. Requests resolve alias → entry per
+//! submission, and in-flight requests hold the old entry's service
+//! `Arc`, so a swap loses nothing: work admitted before the swap
+//! completes on the old executor, work after it lands on the new one.
+//! With `retire_old`, the abandoned target is *parked* after the swap —
+//! its executor drains gracefully ([`ShapService::drain`], `&self`) and
+//! its device lease returns to the pool, but the model `Arc` (and with
+//! it the prepared-model cache entry) and calibration file stay warm,
+//! so redeploying it later restarts in cache-hit time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::anyhow;
+use crate::backend::{BackendConfig, BackendKind, DeviceLease, DevicePool};
+use crate::coordinator::service::{Request, Response, ServiceConfig, ShapService};
+use crate::gbdt::Model;
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// How the registry builds each entry's executor: the service/backend
+/// templates are cloned per model (the per-model calibration path is
+/// derived, not taken from the template).
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// per-entry service template; `calibration_path` in it is ignored
+    /// (derived per entry — see [`RegistryConfig::calibration_dir`])
+    pub service: ServiceConfig,
+    /// per-entry backend template
+    pub backend: BackendConfig,
+    /// `Some` pins every entry's backend kind; `None` lets each entry's
+    /// planner choose (and keep choosing, on the recalibrate cadence)
+    pub kind: Option<BackendKind>,
+    /// when set, entry calibration persists to
+    /// `<calibration_dir>/<name>.calib.json` (keyed by registry entry
+    /// name); otherwise file-loaded models use `<model path>.calib.json`
+    /// and in-memory models skip persistence
+    pub calibration_dir: Option<PathBuf>,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            // serve every task the wire protocol can ask for
+            backend: BackendConfig {
+                with_interactions: true,
+                with_predict: true,
+                ..Default::default()
+            },
+            service: ServiceConfig::default(),
+            kind: None,
+            calibration_dir: None,
+        }
+    }
+}
+
+/// One running executor plus the device slots it holds; dropping it
+/// (park/unload, after the drain) returns the slots to the pool.
+struct Running {
+    service: Arc<ShapService>,
+    kind_label: String,
+    _lease: DeviceLease,
+}
+
+/// One registered model: the shared `Arc<Model>` (which pins its
+/// prepared-cache entry while loaded or parked), its provenance, and
+/// its executor slot (`None` = parked).
+pub struct ModelEntry {
+    name: String,
+    model: Arc<Model>,
+    source: Option<PathBuf>,
+    calibration_path: Option<PathBuf>,
+    runtime: RwLock<Option<Running>>,
+    /// serializes park/restart transitions so concurrent deploys cannot
+    /// double-build or double-drain one entry
+    transition: Mutex<()>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    /// The entry's executor, or an error naming the parked state.
+    pub fn service(&self) -> Result<Arc<ShapService>> {
+        match self.runtime.read().unwrap().as_ref() {
+            Some(r) => Ok(r.service.clone()),
+            None => Err(anyhow!(
+                "model '{}' is parked (retired by an alias swap); deploy it to restart",
+                self.name
+            )),
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.runtime.read().unwrap().is_some()
+    }
+
+    fn kind_label(&self) -> Option<String> {
+        self.runtime.read().unwrap().as_ref().map(|r| r.kind_label.clone())
+    }
+}
+
+struct State {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+    /// alias → model name (single level: aliases never chain)
+    aliases: BTreeMap<String, String>,
+}
+
+/// Named, hot-swappable serving targets behind one handle — the thing
+/// the network ingress routes requests into.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    pool: Arc<DevicePool>,
+    state: RwLock<State>,
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: RegistryConfig, pool: Arc<DevicePool>) -> ModelRegistry {
+        ModelRegistry {
+            cfg,
+            pool,
+            state: RwLock::new(State { models: BTreeMap::new(), aliases: BTreeMap::new() }),
+        }
+    }
+
+    /// A registry with default templates and no device budget.
+    pub fn unbounded(cfg: RegistryConfig) -> ModelRegistry {
+        ModelRegistry::new(cfg, DevicePool::unbounded())
+    }
+
+    pub fn pool(&self) -> &Arc<DevicePool> {
+        &self.pool
+    }
+
+    /// Where this entry's calibration persists: the explicit
+    /// calibration dir keyed by entry name wins, else next to the model
+    /// artifact (`<path>.calib.json`), else nowhere (in-memory model).
+    fn calibration_path(&self, name: &str, source: Option<&Path>) -> Option<PathBuf> {
+        if let Some(dir) = &self.cfg.calibration_dir {
+            return Some(dir.join(format!("{name}.calib.json")));
+        }
+        source.map(|p| PathBuf::from(format!("{}.calib.json", p.display())))
+    }
+
+    /// Build one executor for `entry`-shaped serving: lease devices,
+    /// start the (pinned or planner-driven) service with the entry's
+    /// own calibration file.
+    fn start_service(
+        &self,
+        model: &Arc<Model>,
+        calibration_path: Option<PathBuf>,
+    ) -> Result<Running> {
+        let lease = self.pool.lease(self.cfg.service.devices.max(1))?;
+        let scfg = ServiceConfig { calibration_path, ..self.cfg.service.clone() };
+        let bcfg = self.cfg.backend.clone();
+        let (kind_label, service) = match self.cfg.kind {
+            Some(kind) => (
+                kind.name().to_string(),
+                ShapService::start(model.clone(), kind, bcfg, scfg)?,
+            ),
+            None => {
+                let (kind, svc) = ShapService::start_planned(model.clone(), bcfg, scfg)?;
+                (format!("auto→{}", kind.name()), svc)
+            }
+        };
+        Ok(Running { service: Arc::new(service), kind_label, _lease: lease })
+    }
+
+    /// Register `model` under `name` and start serving it. Fails when
+    /// the name is taken (by a model or an alias) or the device pool
+    /// cannot cover another `devices`-slot executor.
+    pub fn load(&self, name: &str, model: Arc<Model>, source: Option<PathBuf>) -> Result<()> {
+        validate_name(name)?;
+        {
+            let state = self.state.read().unwrap();
+            state.check_name_free(name)?;
+        }
+        let calibration_path = self.calibration_path(name, source.as_deref());
+        // build outside the state lock: model prep can be slow and must
+        // not stall serving reads of other entries
+        let running = self.start_service(&model, calibration_path.clone())?;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            model,
+            source,
+            calibration_path,
+            runtime: RwLock::new(Some(running)),
+            transition: Mutex::new(()),
+        });
+        let mut state = self.state.write().unwrap();
+        // re-check under the write lock: a concurrent load may have won
+        state.check_name_free(name)?;
+        state.models.insert(name.to_string(), entry);
+        Ok(())
+    }
+
+    /// Load a model artifact from disk (`.gtsm`, or XGBoost
+    /// `model.json`) and register it under `name`.
+    pub fn load_path(&self, name: &str, path: &Path) -> Result<()> {
+        let model = if path.extension().is_some_and(|e| e == "json") {
+            crate::gbdt::xgb_import::load_xgboost_json(path)?
+        } else {
+            crate::gbdt::io::load(path)?
+        };
+        self.load(name, Arc::new(model), Some(path.to_path_buf()))
+    }
+
+    /// Remove `name` from the registry (cascading away any aliases that
+    /// point at it), then gracefully drain its executor: in-flight
+    /// requests complete, threads join, the device lease returns, and —
+    /// once the entry drops — the prepared-model cache entry with it.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        let entry = {
+            let mut state = self.state.write().unwrap();
+            let entry = state
+                .models
+                .remove(name)
+                .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+            state.aliases.retain(|_, target| target != name);
+            entry
+        };
+        // drain outside the state lock: new resolutions already miss
+        // the entry, and in-flight holders finish against their own
+        // Arc. The transition lock fences a concurrent deploy's
+        // restart-if-parked from racing this teardown.
+        let _t = entry.transition.lock().unwrap();
+        let running = entry.runtime.write().unwrap().take();
+        if let Some(r) = running {
+            r.service.drain();
+        }
+        Ok(())
+    }
+
+    /// Atomically repoint `alias` at loaded model `model` (creating the
+    /// alias if new) — the hot-deploy primitive. In-flight requests on
+    /// the old target keep their executor; new resolutions see the new
+    /// target immediately. A parked target restarts (warm: its model
+    /// kept its prepared-cache entry and calibration file). With
+    /// `retire_old`, the previous target is parked after the swap —
+    /// drained via [`ShapService::drain`] and its device slots released
+    /// — unless it is still referenced by another alias.
+    pub fn deploy(&self, alias: &str, model: &str, retire_old: bool) -> Result<DeployOutcome> {
+        validate_name(alias)?;
+        let target = {
+            let state = self.state.read().unwrap();
+            if state.models.contains_key(alias) {
+                return Err(anyhow!(
+                    "'{alias}' is a loaded model name, not an alias; unload it first"
+                ));
+            }
+            if state.aliases.contains_key(model) {
+                return Err(anyhow!(
+                    "deploy target '{model}' is itself an alias; aliases never chain \
+                     (point '{alias}' at the underlying model instead)"
+                ));
+            }
+            state
+                .models
+                .get(model)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown model '{model}'"))?
+        };
+        // restart a parked target before the swap, so the alias never
+        // points at an entry that cannot serve
+        self.ensure_running(&target)?;
+        let previous = {
+            let mut state = self.state.write().unwrap();
+            state.aliases.insert(alias.to_string(), model.to_string())
+        };
+        let mut retired = None;
+        if retire_old {
+            if let Some(prev) = previous.as_deref() {
+                if prev != model && self.park_if_unreferenced(prev) {
+                    retired = Some(prev.to_string());
+                }
+            }
+        }
+        Ok(DeployOutcome { previous, retired })
+    }
+
+    /// Restart a parked entry's executor in place (no-op when running).
+    fn ensure_running(&self, entry: &Arc<ModelEntry>) -> Result<()> {
+        let _t = entry.transition.lock().unwrap();
+        if entry.is_running() {
+            return Ok(());
+        }
+        // a concurrent unload may have removed the entry between the
+        // caller's resolve and this lock; restarting it now would leak
+        // an executor nothing can ever drain
+        let still_registered = self
+            .state
+            .read()
+            .unwrap()
+            .models
+            .get(&entry.name)
+            .is_some_and(|e| Arc::ptr_eq(e, entry));
+        if !still_registered {
+            return Err(anyhow!("model '{}' was unloaded", entry.name));
+        }
+        let running = self.start_service(&entry.model, entry.calibration_path.clone())?;
+        *entry.runtime.write().unwrap() = Some(running);
+        Ok(())
+    }
+
+    /// Park `name`'s executor if no alias references it: drain
+    /// gracefully and release the device lease, keeping the entry (and
+    /// its prepared-cache pin) registered. Returns whether it parked.
+    fn park_if_unreferenced(&self, name: &str) -> bool {
+        let entry = {
+            let state = self.state.read().unwrap();
+            if state.aliases.values().any(|t| t == name) {
+                return false;
+            }
+            match state.models.get(name) {
+                Some(e) => e.clone(),
+                None => return false,
+            }
+        };
+        let _t = entry.transition.lock().unwrap();
+        let running = entry.runtime.write().unwrap().take();
+        match running {
+            Some(r) => {
+                r.service.drain();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resolve a model name or alias to its entry (aliases are a single
+    /// hop by construction).
+    pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let state = self.state.read().unwrap();
+        let target = state.aliases.get(name).map(|s| s.as_str()).unwrap_or(name);
+        state.models.get(target).cloned().ok_or_else(|| {
+            let known: Vec<&str> = state
+                .models
+                .keys()
+                .map(|s| s.as_str())
+                .chain(state.aliases.keys().map(|s| s.as_str()))
+                .collect();
+            anyhow!("unknown model or alias '{name}' (serving: {})", known.join(", "))
+        })
+    }
+
+    /// Submit one request routed by model name/alias. Retries the
+    /// resolve+submit once when the resolved executor stopped
+    /// underneath the request (alias swap + retire racing the submit),
+    /// so a hot deploy drops nothing.
+    pub fn submit(&self, name: &str, req: Request) -> Result<std::sync::mpsc::Receiver<Response>> {
+        let mut last_err = None;
+        for _ in 0..3 {
+            let entry = self.resolve(name)?;
+            match entry.service() {
+                Ok(svc) => match svc.submit(req.clone()) {
+                    Ok(rx) => return Ok(rx),
+                    Err(e) if format!("{e:#}").contains("service stopped") => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                },
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("model '{name}' unavailable")))
+    }
+
+    /// Blocking submit: route, wait for the [`Response`], re-routing
+    /// once when the executor drained between admission and delivery
+    /// (deploy retire racing the queue) — the zero-drop half the
+    /// `submit` retry doesn't cover.
+    pub fn run_response(&self, name: &str, req: Request) -> Result<Response> {
+        for _ in 0..2 {
+            let rx = self.submit(name, req.clone())?;
+            match rx.recv() {
+                Ok(resp) => return Ok(resp),
+                Err(_) => continue,
+            }
+        }
+        Err(anyhow!("service dropped response for model '{name}'"))
+    }
+
+    /// Blocking convenience over [`ModelRegistry::run_response`]: wait
+    /// and unwrap the response values.
+    pub fn run(&self, name: &str, req: Request) -> Result<Vec<f32>> {
+        self.run_response(name, req)?.into_values()
+    }
+
+    /// Model/alias names currently routable.
+    pub fn names(&self) -> Vec<String> {
+        let state = self.state.read().unwrap();
+        state.models.keys().chain(state.aliases.keys()).cloned().collect()
+    }
+
+    /// The registry roster: per-model state (running|parked, kind,
+    /// devices, aliases, source) without the metric payloads.
+    pub fn list(&self) -> Json {
+        let state = self.state.read().unwrap();
+        let models = state
+            .models
+            .iter()
+            .map(|(name, e)| {
+                let aliases: Vec<Json> = state
+                    .aliases
+                    .iter()
+                    .filter(|(_, t)| *t == name)
+                    .map(|(a, _)| Json::from(a.as_str()))
+                    .collect();
+                let mut fields = vec![
+                    ("state", Json::from(if e.is_running() { "running" } else { "parked" })),
+                    ("trees", Json::from(e.model.trees.len())),
+                    ("features", Json::from(e.model.num_features)),
+                    ("groups", Json::from(e.model.num_groups)),
+                    ("aliases", Json::Arr(aliases)),
+                ];
+                if let Some(k) = e.kind_label() {
+                    fields.push(("backend", Json::from(k)));
+                }
+                if let Some(src) = &e.source {
+                    fields.push(("source", Json::from(src.display().to_string())));
+                }
+                (name.clone(), Json::obj(fields))
+            })
+            .collect::<BTreeMap<String, Json>>();
+        let aliases = state
+            .aliases
+            .iter()
+            .map(|(a, t)| (a.clone(), Json::from(t.as_str())))
+            .collect::<BTreeMap<String, Json>>();
+        Json::obj(vec![
+            ("models", Json::Obj(models)),
+            ("aliases", Json::Obj(aliases)),
+            (
+                "device_pool",
+                Json::obj(vec![
+                    (
+                        "total",
+                        if self.pool.total() == usize::MAX {
+                            Json::Str("unbounded".into())
+                        } else {
+                            Json::from(self.pool.total())
+                        },
+                    ),
+                    ("in_use", Json::from(self.pool.in_use())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Full stats: the roster plus each running model's metrics
+    /// snapshot under its own namespace, and the process-wide
+    /// prepared-model cache counters. `model` narrows to one entry.
+    pub fn stats(&self, model: Option<&str>) -> Result<Json> {
+        let entries: Vec<Arc<ModelEntry>> = match model {
+            Some(name) => vec![self.resolve(name)?],
+            None => self.state.read().unwrap().models.values().cloned().collect(),
+        };
+        let per_model = entries
+            .iter()
+            .map(|e| {
+                let metrics = match e.runtime.read().unwrap().as_ref() {
+                    Some(r) => r.service.metrics.snapshot(),
+                    None => Json::from("parked"),
+                };
+                (e.name.clone(), metrics)
+            })
+            .collect::<BTreeMap<String, Json>>();
+        Ok(Json::obj(vec![
+            ("registry", self.list()),
+            ("models", Json::Obj(per_model)),
+            ("prepared", crate::backend::prepared::registry_snapshot()),
+        ]))
+    }
+
+    /// Drain every running executor (process shutdown): models stay
+    /// listed but stop serving; per-entry calibration persists as part
+    /// of each executor's drain.
+    pub fn drain_all(&self) {
+        let entries: Vec<Arc<ModelEntry>> =
+            self.state.read().unwrap().models.values().cloned().collect();
+        for e in entries {
+            let _t = e.transition.lock().unwrap();
+            let running = e.runtime.write().unwrap().take();
+            if let Some(r) = running {
+                r.service.drain();
+            }
+        }
+    }
+}
+
+/// What a [`ModelRegistry::deploy`] did: the alias's previous target
+/// (None when newly created) and the target it parked, if any.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeployOutcome {
+    pub previous: Option<String>,
+    pub retired: Option<String>,
+}
+
+impl State {
+    fn check_name_free(&self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            return Err(anyhow!("model '{name}' is already loaded (unload it first)"));
+        }
+        if self.aliases.contains_key(name) {
+            return Err(anyhow!("'{name}' is already an alias (deploy it elsewhere first)"));
+        }
+        Ok(())
+    }
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 128 {
+        return Err(anyhow!("model names must be 1–128 characters"));
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')) {
+        return Err(anyhow!(
+            "invalid model name '{name}': use ASCII letters, digits, '_', '-', '.'"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::gbdt::{train, TrainParams};
+
+    fn tiny_model(rounds: usize) -> Arc<Model> {
+        let d = SynthSpec::cal_housing(0.004).generate();
+        Arc::new(train(&d, &TrainParams { rounds, max_depth: 3, ..Default::default() }))
+    }
+
+    fn quick_cfg() -> RegistryConfig {
+        RegistryConfig {
+            kind: Some(BackendKind::Recursive),
+            backend: BackendConfig {
+                threads: 1,
+                with_interactions: true,
+                with_predict: true,
+                ..Default::default()
+            },
+            service: ServiceConfig {
+                max_batch_rows: 32,
+                max_wait: std::time::Duration::from_millis(1),
+                recalibrate_every: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn names_validate_and_collide() {
+        let reg = ModelRegistry::unbounded(quick_cfg());
+        assert!(reg.load("bad name", tiny_model(1), None).is_err());
+        assert!(reg.load("", tiny_model(1), None).is_err());
+        reg.load("m1", tiny_model(1), None).unwrap();
+        let err = reg.load("m1", tiny_model(1), None).unwrap_err();
+        assert!(format!("{err:#}").contains("already loaded"));
+        reg.deploy("best", "m1", false).unwrap();
+        let err = reg.load("best", tiny_model(1), None).unwrap_err();
+        assert!(format!("{err:#}").contains("alias"));
+        // an alias cannot shadow a model, nor chain onto another alias
+        assert!(reg.deploy("m1", "m1", false).is_err());
+        assert!(reg.deploy("best2", "best", false).is_err());
+        reg.drain_all();
+    }
+
+    #[test]
+    fn device_pool_gates_admission() {
+        let pool = DevicePool::new(3);
+        let cfg = RegistryConfig {
+            service: ServiceConfig { devices: 2, ..quick_cfg().service },
+            ..quick_cfg()
+        };
+        let reg = ModelRegistry::new(cfg, pool.clone());
+        reg.load("m1", tiny_model(1), None).unwrap();
+        assert_eq!(pool.in_use(), 2);
+        let err = reg.load("m2", tiny_model(1), None).unwrap_err();
+        assert!(format!("{err:#}").contains("device pool exhausted"), "{err:#}");
+        // unload returns the slots, after which the load succeeds
+        reg.unload("m1").unwrap();
+        assert_eq!(pool.in_use(), 0);
+        reg.load("m2", tiny_model(1), None).unwrap();
+        assert_eq!(pool.in_use(), 2);
+        reg.drain_all();
+        assert_eq!(pool.in_use(), 0, "drain_all releases every lease");
+    }
+
+    #[test]
+    fn deploy_retire_parks_and_redeploy_restarts() {
+        let reg = ModelRegistry::unbounded(quick_cfg());
+        reg.load("m1", tiny_model(1), None).unwrap();
+        reg.load("m2", tiny_model(2), None).unwrap();
+        let out = reg.deploy("best", "m1", true).unwrap();
+        assert_eq!(out, DeployOutcome { previous: None, retired: None });
+        // swap to m2 retires m1 (nothing else references it)
+        let out = reg.deploy("best", "m2", true).unwrap();
+        assert_eq!(out.previous.as_deref(), Some("m1"));
+        assert_eq!(out.retired.as_deref(), Some("m1"));
+        let m1 = reg.resolve("m1").unwrap();
+        assert!(!m1.is_running(), "retired target parks");
+        let err = reg.run("m1", Request::contributions(vec![0.0; 8], 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("parked"), "{err:#}");
+        // redeploying the parked model restarts it in place
+        reg.deploy("best", "m1", true).unwrap();
+        assert!(reg.resolve("m1").unwrap().is_running());
+        assert!(!reg.resolve("m2").unwrap().is_running(), "m2 retired in turn");
+        // a second alias protects the target from retirement
+        reg.deploy("canary", "m1", false).unwrap();
+        reg.deploy("best", "m1", true).unwrap();
+        let out = reg.deploy("canary", "m1", true).unwrap();
+        assert_eq!(out.retired, None, "self-swap retires nothing");
+        reg.drain_all();
+    }
+}

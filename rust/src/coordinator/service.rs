@@ -64,15 +64,53 @@ use crate::util::Json;
 pub enum Task {
     Contributions,
     Interactions,
+    Predictions,
 }
 
 impl Task {
-    const ALL: [Task; 2] = [Task::Contributions, Task::Interactions];
+    pub const ALL: [Task; 3] = [Task::Contributions, Task::Interactions, Task::Predictions];
+
+    /// The alias table behind [`Task::parse`]/[`Task::name_list`] (same
+    /// idiom as `BackendKind::NAMES`): first alias of each row is the
+    /// canonical [`Task::name`], and the wire protocol's command verbs
+    /// are aliases here so one parse serves CLI and ingress.
+    const NAMES: &'static [crate::util::NameRow<Task>] = &[
+        (Task::Contributions, &["explain", "contributions", "shap", "phi"]),
+        (Task::Interactions, &["interactions", "phi2"]),
+        (Task::Predictions, &["predict", "predictions"]),
+    ];
 
     fn index(self) -> usize {
         match self {
             Task::Contributions => 0,
             Task::Interactions => 1,
+            Task::Predictions => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        Self::NAMES[self.index()].1[0]
+    }
+
+    /// Parse a task/command name (case-insensitive); `None` for unknown
+    /// names — callers list the valid set via [`Task::name_list`].
+    pub fn parse(s: &str) -> Option<Task> {
+        crate::util::parse_named(Self::NAMES, s)
+    }
+
+    /// The canonical task names, `|`-joined for error messages.
+    pub fn name_list() -> String {
+        crate::util::name_list(Self::NAMES)
+    }
+
+    /// Output values per input row for a model with `m` features and
+    /// `groups` output groups — everything batch slicing needs, so the
+    /// executor and clients never carry parallel per-task stride logic.
+    pub fn stride(&self, m: usize, groups: usize) -> usize {
+        match self {
+            Task::Contributions => groups * (m + 1),
+            Task::Interactions => groups * (m + 1) * (m + 1),
+            Task::Predictions => groups,
         }
     }
 }
@@ -117,23 +155,71 @@ impl Default for ServiceConfig {
     }
 }
 
-/// One explain request: feature rows in, φ (or Φ) rows out.
-struct Request {
-    x: Vec<f32>,
-    rows: usize,
-    task: Task,
-    resp: Sender<Result<Vec<f32>>>,
+/// One service request — the single typed unit every entry point
+/// (in-process API, wire protocol, CLI client, tests) speaks: feature
+/// rows in, `task`-shaped value rows out.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub task: Task,
+    /// row-major `rows × num_features` feature matrix
+    pub x: Vec<f32>,
+    pub rows: usize,
+}
+
+impl Request {
+    pub fn new(task: Task, x: Vec<f32>, rows: usize) -> Request {
+        Request { task, x, rows }
+    }
+
+    pub fn contributions(x: Vec<f32>, rows: usize) -> Request {
+        Request::new(Task::Contributions, x, rows)
+    }
+
+    pub fn interactions(x: Vec<f32>, rows: usize) -> Request {
+        Request::new(Task::Interactions, x, rows)
+    }
+
+    pub fn predictions(x: Vec<f32>, rows: usize) -> Request {
+        Request::new(Task::Predictions, x, rows)
+    }
+}
+
+/// What comes back for one [`Request`]: the task echoed, the per-row
+/// output stride (`Task::stride` of the serving model), and the values
+/// or the per-request error. The wire protocol serializes this struct
+/// verbatim.
+#[derive(Debug)]
+pub struct Response {
+    pub task: Task,
+    pub rows: usize,
+    /// output values per row ([`Task::stride`]); 0 on error
+    pub cols: usize,
+    pub values: Result<Vec<f32>>,
+}
+
+impl Response {
+    /// Unwrap into the flat value vector, surfacing the request error.
+    pub fn into_values(self) -> Result<Vec<f32>> {
+        self.values
+    }
+}
+
+/// A queued request: the caller's [`Request`] plus the response channel
+/// and admission timestamp the executor needs.
+struct Queued {
+    req: Request,
+    resp: Sender<Response>,
     submitted: Instant,
 }
 
 struct Batch {
     task: Task,
-    requests: Vec<Request>,
+    requests: Vec<Queued>,
     rows: usize,
 }
 
 enum Ingress {
-    Req(Request),
+    Req(Queued),
     Shutdown,
 }
 
@@ -156,11 +242,13 @@ struct AdaptiveCtx {
     calibration_path: Option<std::path::PathBuf>,
 }
 
-/// Handle to a running SHAP service.
+/// Handle to a running SHAP service. Thread handles live behind a
+/// mutex so graceful shutdown ([`ShapService::drain`]) works through
+/// `&self` — registry-held (`Arc`-shared) services drain in place.
 pub struct ShapService {
     ingress: SyncSender<Ingress>,
-    batcher_handle: Option<JoinHandle<()>>,
-    worker_handles: Vec<JoinHandle<()>>,
+    batcher_handle: Mutex<Option<JoinHandle<()>>>,
+    worker_handles: Mutex<Vec<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -240,8 +328,8 @@ impl ShapService {
             spawn_batcher(ingress_rx, job_tx, cfg.max_batch_rows, cfg.max_wait, metrics.clone());
         Ok(ShapService {
             ingress: ingress_tx,
-            batcher_handle: Some(batcher_handle),
-            worker_handles,
+            batcher_handle: Mutex::new(Some(batcher_handle)),
+            worker_handles: Mutex::new(worker_handles),
             metrics,
         })
     }
@@ -413,25 +501,23 @@ impl ShapService {
             plan,
             ShapService {
                 ingress: ingress_tx,
-                batcher_handle: Some(batcher_handle),
-                worker_handles,
+                batcher_handle: Mutex::new(Some(batcher_handle)),
+                worker_handles: Mutex::new(worker_handles),
                 metrics,
             },
         ))
     }
 
-    /// Submit rows for a task; returns the response channel.
-    /// Fails fast with `Rejected` when the ingress queue is full.
-    pub fn submit_task(
-        &self,
-        task: Task,
-        x: Vec<f32>,
-        rows: usize,
-    ) -> Result<Receiver<Result<Vec<f32>>>> {
+    /// THE entry point: submit one typed [`Request`]; returns the
+    /// response channel. Every other submit/explain name is a one-line
+    /// wrapper over this, and the wire protocol carries this exact
+    /// struct. Fails fast with `Rejected` when the ingress queue is
+    /// full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.metrics.record_request(rows);
-        let req = Request { x, rows, task, resp: tx, submitted: Instant::now() };
-        match self.ingress.try_send(Ingress::Req(req)) {
+        self.metrics.record_request(req.rows);
+        let queued = Queued { req, resp: tx, submitted: Instant::now() };
+        match self.ingress.try_send(Ingress::Req(queued)) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
@@ -441,43 +527,58 @@ impl ShapService {
         }
     }
 
-    /// Submit a contributions request.
-    pub fn submit(&self, x: Vec<f32>, rows: usize) -> Result<Receiver<Result<Vec<f32>>>> {
-        self.submit_task(Task::Contributions, x, rows)
+    /// Blocking convenience over [`ShapService::submit`]: wait for the
+    /// response and unwrap its values.
+    pub fn run(&self, req: Request) -> Result<Vec<f32>> {
+        self.submit(req)?
+            .recv()
+            .map_err(|_| anyhow!("service dropped response"))?
+            .into_values()
     }
 
-    /// Submit an interactions request.
-    pub fn submit_interactions(
-        &self,
-        x: Vec<f32>,
-        rows: usize,
-    ) -> Result<Receiver<Result<Vec<f32>>>> {
-        self.submit_task(Task::Interactions, x, rows)
+    /// Submit rows for a task (wrapper over [`ShapService::submit`]).
+    pub fn submit_task(&self, task: Task, x: Vec<f32>, rows: usize) -> Result<Receiver<Response>> {
+        self.submit(Request::new(task, x, rows))
     }
 
-    /// Blocking convenience: submit contributions and wait.
+    /// Submit an interactions request (wrapper).
+    pub fn submit_interactions(&self, x: Vec<f32>, rows: usize) -> Result<Receiver<Response>> {
+        self.submit(Request::interactions(x, rows))
+    }
+
+    /// Blocking convenience: submit contributions and wait (wrapper).
     pub fn explain(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
-        self.submit(x, rows)?
-            .recv()
-            .map_err(|_| anyhow!("service dropped response"))?
+        self.run(Request::contributions(x, rows))
     }
 
-    /// Blocking convenience: submit interactions and wait.
+    /// Blocking convenience: submit interactions and wait (wrapper).
     pub fn explain_interactions(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
-        self.submit_interactions(x, rows)?
-            .recv()
-            .map_err(|_| anyhow!("service dropped response"))?
+        self.run(Request::interactions(x, rows))
     }
 
-    /// Graceful shutdown: drain queues, join threads.
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown through `&self`: enqueue the shutdown marker,
+    /// let the batcher drain every request admitted before it, then
+    /// join the threads. Safe to call from multiple holders of an
+    /// `Arc<ShapService>` (the first caller joins; later calls no-op),
+    /// which is what makes registry-held services — unload, alias
+    /// retire on deploy — drainable without consuming the handle.
+    /// Requests submitted after the drain see "service stopped".
+    pub fn drain(&self) {
         let _ = self.ingress.send(Ingress::Shutdown);
-        if let Some(h) = self.batcher_handle.take() {
+        if let Some(h) = self.batcher_handle.lock().unwrap().take() {
             let _ = h.join();
         }
-        for h in self.worker_handles.drain(..) {
+        let handles: Vec<JoinHandle<()>> =
+            self.worker_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
+    }
+
+    /// Graceful shutdown, consuming flavor (wrapper over
+    /// [`ShapService::drain`] for callers that own the service).
+    pub fn shutdown(self) {
+        self.drain();
     }
 }
 
@@ -834,8 +935,11 @@ fn run_batcher(
     max_wait: Duration,
     metrics: Arc<Metrics>,
 ) {
-    let mut batchers: [Batcher<Request>; 2] =
-        [Batcher::new(max_rows, max_wait), Batcher::new(max_rows, max_wait)];
+    let mut batchers: [Batcher<Queued>; 3] = [
+        Batcher::new(max_rows, max_wait),
+        Batcher::new(max_rows, max_wait),
+        Batcher::new(max_rows, max_wait),
+    ];
     loop {
         let timeout = if batchers.iter().all(|b| b.is_empty()) {
             Duration::from_millis(50)
@@ -843,9 +947,9 @@ fn run_batcher(
             max_wait
         };
         match ingress.recv_timeout(timeout) {
-            Ok(Ingress::Req(req)) => {
-                let (rows, i) = (req.rows, req.task.index());
-                batchers[i].push(rows, req);
+            Ok(Ingress::Req(q)) => {
+                let (rows, i) = (q.req.rows, q.req.task.index());
+                batchers[i].push(rows, q);
             }
             Ok(Ingress::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {}
@@ -866,7 +970,7 @@ fn run_batcher(
 }
 
 fn dispatch(
-    batcher: &mut Batcher<Request>,
+    batcher: &mut Batcher<Queued>,
     task: Task,
     job_tx: &SyncSender<Batch>,
     metrics: &Metrics,
@@ -876,6 +980,7 @@ fn dispatch(
         return;
     }
     let rows: usize = pending.iter().map(|p| p.rows).sum();
+    debug_assert!(pending.iter().all(|p| p.rows == p.payload.req.rows));
     metrics.record_batch(rows);
     let batch =
         Batch { task, requests: pending.into_iter().map(|p| p.payload).collect(), rows };
@@ -890,35 +995,45 @@ fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) -> 
     let groups = backend.num_groups();
     // concatenate request rows into one backend batch
     let mut x = Vec::with_capacity(batch.rows * m);
-    for r in &batch.requests {
-        x.extend_from_slice(&r.x);
+    for q in &batch.requests {
+        x.extend_from_slice(&q.req.x);
     }
     let t0 = Instant::now();
     let result = match batch.task {
         Task::Contributions => backend.contributions(&x, batch.rows),
         Task::Interactions => backend.interactions(&x, batch.rows),
+        Task::Predictions => backend.predictions(&x, batch.rows),
     };
-    let stride = match batch.task {
-        Task::Contributions => groups * (m + 1),
-        Task::Interactions => groups * (m + 1) * (m + 1),
-    };
+    let stride = batch.task.stride(m, groups);
     match result {
         Ok(all) => {
             metrics.record_backend_batch(backend.name(), batch.rows, t0.elapsed());
             let mut offset = 0;
-            for req in batch.requests {
-                let vals = all[offset * stride..(offset + req.rows) * stride].to_vec();
-                offset += req.rows;
-                metrics.record_latency(req.submitted.elapsed());
-                let _ = req.resp.send(Ok(vals));
+            for q in batch.requests {
+                let vals = all[offset * stride..(offset + q.req.rows) * stride].to_vec();
+                offset += q.req.rows;
+                metrics.record_latency(q.submitted.elapsed());
+                metrics.record_completed();
+                let _ = q.resp.send(Response {
+                    task: batch.task,
+                    rows: q.req.rows,
+                    cols: stride,
+                    values: Ok(vals),
+                });
             }
             true
         }
         Err(e) => {
             metrics.record_error();
             let msg = format!("{e:#}");
-            for req in batch.requests {
-                let _ = req.resp.send(Err(anyhow!("{msg}")));
+            for q in batch.requests {
+                metrics.record_completed();
+                let _ = q.resp.send(Response {
+                    task: batch.task,
+                    rows: q.req.rows,
+                    cols: 0,
+                    values: Err(anyhow!("{msg}")),
+                });
             }
             false
         }

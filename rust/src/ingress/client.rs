@@ -1,0 +1,128 @@
+//! Blocking client for the wire protocol: one TCP connection, one
+//! request/response exchange at a time. The typed helpers mirror the
+//! registry API one-to-one and return the same [`Response`] struct the
+//! in-process service yields, so a caller can swap between in-process
+//! and over-the-wire explanation without touching its result handling.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::anyhow;
+use crate::coordinator::{Request, Response, Task};
+use crate::ingress::frame::{read_frame, write_frame};
+use crate::ingress::wire::{self, Command};
+use crate::util::error::Result;
+use crate::util::Json;
+
+pub struct Client {
+    conn: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let conn = TcpStream::connect(&addr).map_err(|e| anyhow!("connect {addr:?}: {e}"))?;
+        let _ = conn.set_nodelay(true);
+        Ok(Client { conn })
+    }
+
+    /// One raw exchange: send a command, read the reply frame.
+    pub fn call(&mut self, cmd: &Command) -> Result<Json> {
+        write_frame(&mut self.conn, &cmd.encode())?;
+        read_frame(&mut self.conn)?
+            .ok_or_else(|| anyhow!("server closed the connection mid-exchange"))
+    }
+
+    /// Submit one typed [`Request`] routed to `model` and decode the
+    /// service [`Response`] out of the reply.
+    pub fn submit(&mut self, model: &str, req: Request) -> Result<Response> {
+        let reply =
+            self.call(&Command::Submit { model: model.to_string(), req })?;
+        wire::decode_response(&reply)
+    }
+
+    /// Contribution φ for `rows` feature rows, routed to `model`.
+    pub fn explain(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        self.submit(model, Request::contributions(x, rows))?.into_values()
+    }
+
+    /// Interaction Φ, routed to `model`.
+    pub fn explain_interactions(
+        &mut self,
+        model: &str,
+        x: Vec<f32>,
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        self.submit(model, Request::interactions(x, rows))?.into_values()
+    }
+
+    /// Raw margin predictions, routed to `model`.
+    pub fn predict(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        self.submit(model, Request::predictions(x, rows))?.into_values()
+    }
+
+    /// Generic task submit by name (`Task::parse` verbs).
+    pub fn run_task(
+        &mut self,
+        model: &str,
+        task: Task,
+        x: Vec<f32>,
+        rows: usize,
+    ) -> Result<Response> {
+        self.submit(model, Request::new(task, x, rows))
+    }
+
+    /// Load a model artifact server-side and register it as `name`.
+    pub fn load(&mut self, name: &str, path: &str) -> Result<Json> {
+        let reply = self
+            .call(&Command::Load { name: name.to_string(), path: path.to_string() })?;
+        wire::check_ok(&reply)?;
+        Ok(reply)
+    }
+
+    pub fn unload(&mut self, name: &str) -> Result<Json> {
+        let reply = self.call(&Command::Unload { name: name.to_string() })?;
+        wire::check_ok(&reply)?;
+        Ok(reply)
+    }
+
+    /// Hot-deploy: atomically point `alias` at `model`.
+    pub fn deploy(&mut self, alias: &str, model: &str, retire_old: bool) -> Result<Json> {
+        let reply = self.call(&Command::Deploy {
+            alias: alias.to_string(),
+            model: model.to_string(),
+            retire_old,
+        })?;
+        wire::check_ok(&reply)?;
+        Ok(reply)
+    }
+
+    pub fn list(&mut self) -> Result<Json> {
+        let reply = self.call(&Command::List)?;
+        wire::check_ok(&reply)?;
+        Ok(reply.get("registry")?.clone())
+    }
+
+    /// Server stats (all models, or one).
+    pub fn stats(&mut self, model: Option<&str>) -> Result<Json> {
+        let reply = self.call(&Command::Stats { model: model.map(str::to_string) })?;
+        wire::check_ok(&reply)?;
+        Ok(reply.get("stats")?.clone())
+    }
+
+    /// Liveness check; returns the names currently routable.
+    pub fn ping(&mut self) -> Result<Vec<String>> {
+        let reply = self.call(&Command::Ping)?;
+        wire::check_ok(&reply)?;
+        reply
+            .get("serving")?
+            .as_arr()?
+            .iter()
+            .map(|j| Ok(j.as_str()?.to_string()))
+            .collect()
+    }
+
+    /// Ask the server to stop accepting and drain.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let reply = self.call(&Command::Shutdown)?;
+        wire::check_ok(&reply)
+    }
+}

@@ -1,0 +1,136 @@
+//! Length-prefixed JSON framing: every message on the wire is a 4-byte
+//! big-endian `u32` payload length followed by that many bytes of UTF-8
+//! JSON (compact, single line). Symmetric in both directions — requests
+//! and responses use the same codec — and self-delimiting, so one
+//! connection carries any number of request/response exchanges.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::anyhow;
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Upper bound on one frame's payload (64 MiB): a malformed or hostile
+/// length prefix must not become an allocation. 64 MiB fits ~2M f32
+/// values serialized, far past any sane explain batch.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Write one frame: length prefix + compact JSON payload.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    let payload = msg.to_string_compact();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME as usize {
+        return Err(anyhow!(
+            "frame too large: {} bytes (max {})",
+            bytes.len(),
+            MAX_FRAME
+        ));
+    }
+    let len = (bytes.len() as u32).to_be_bytes();
+    w.write_all(&len).map_err(|e| anyhow!("write frame header: {e}"))?;
+    w.write_all(bytes).map_err(|e| anyhow!("write frame payload: {e}"))?;
+    w.flush().map_err(|e| anyhow!("flush frame: {e}"))?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection
+/// cleanly at a frame boundary; a close mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut header = [0u8; 4];
+    match read_exact_or_eof(r, &mut header)? {
+        ReadOutcome::Eof => return Ok(None),
+        ReadOutcome::Full => {}
+    }
+    let len = u32::from_be_bytes(header);
+    if len > MAX_FRAME {
+        return Err(anyhow!("frame too large: {len} bytes (max {MAX_FRAME})"));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("read frame payload: {e}"))?;
+    let text = std::str::from_utf8(&payload).map_err(|e| anyhow!("frame not UTF-8: {e}"))?;
+    Ok(Some(Json::parse(text)?))
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+}
+
+/// `read_exact`, except a clean EOF before the first byte is
+/// distinguished from a mid-buffer close.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(ReadOutcome::Eof),
+            Ok(0) => {
+                return Err(anyhow!(
+                    "connection closed mid-frame ({filled} of {} header bytes)",
+                    buf.len()
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow!("read frame: {e}")),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_and_eof() {
+        let msg = Json::obj(vec![
+            ("cmd", Json::from("explain")),
+            ("x", Json::Arr(vec![Json::from(1.5f64), Json::from(-0.25f64)])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        write_frame(&mut buf, &Json::Null).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(msg));
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Json::Null));
+        // clean EOF at a frame boundary is None, not an error
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn f32_values_survive_the_wire_bitwise() {
+        // f32 → f64 is exact and f64 Display prints shortest
+        // round-trip, so every finite f32 crosses the wire bit-exactly
+        // — the property the routed-parity acceptance test leans on
+        let values: Vec<f32> = vec![0.1, -3.5e-8, 1.0, f32::MIN_POSITIVE, 123456.78];
+        let msg = Json::Arr(values.iter().map(|v| Json::from(*v as f64)).collect());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut &buf[..]).unwrap().unwrap();
+        let decoded: Vec<f32> =
+            back.as_arr().unwrap().iter().map(|j| j.as_f64().unwrap() as f32).collect();
+        for (a, b) in values.iter().zip(&decoded) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        // a hostile header must not become a 4 GiB allocation
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"));
+    }
+
+    #[test]
+    fn mid_frame_close_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::from("hello")).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut &buf[..]).is_err());
+        // close inside the header is also an error
+        assert!(read_frame(&mut &buf[..2]).is_err());
+    }
+}

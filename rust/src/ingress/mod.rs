@@ -1,0 +1,30 @@
+//! Network ingress: SHAP-as-a-service over TCP, std-only.
+//!
+//! Layers, bottom up:
+//!
+//! - [`frame`] — length-prefixed JSON framing (4-byte big-endian
+//!   length + compact UTF-8 JSON), symmetric both directions.
+//! - [`wire`] — the command protocol inside each frame. Submit verbs
+//!   are [`Task`](crate::coordinator::Task) aliases and a submit reply
+//!   is the service's [`Response`](crate::coordinator::Response)
+//!   serialized verbatim, so the wire, the CLI and the in-process API
+//!   share one vocabulary.
+//! - [`server`] — thread-per-connection accept loop with a connection
+//!   cap, routing into a shared
+//!   [`ModelRegistry`](crate::coordinator::ModelRegistry); per-request
+//!   backpressure comes from each model's bounded ingress queue.
+//! - [`client`] — blocking typed client mirroring the registry API.
+//!
+//! f32 values ride the wire as JSON numbers printed by f64 `Display`
+//! (shortest round-trip); f32 → f64 is exact, so explanations arrive
+//! bit-identical to an in-process backend call.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::Client;
+pub use frame::{read_frame, write_frame, MAX_FRAME};
+pub use server::{IngressServer, ServerConfig, ServerHandle};
+pub use wire::Command;

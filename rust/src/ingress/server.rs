@@ -1,0 +1,231 @@
+//! The TCP front end: a thread-per-connection accept loop serving the
+//! wire protocol over length-prefixed JSON frames, routing every
+//! request into a shared [`ModelRegistry`].
+//!
+//! Admission control is two-layer, matching the service's own design:
+//! a connection cap here (over-cap connects get one error frame and a
+//! close — the client sees *why*, not a hang), and per-request
+//! backpressure below (each model's bounded ingress queue rejects with
+//! "queue full" when the executor falls behind). Neither layer ever
+//! queues unboundedly on behalf of a slow client: a connection thread
+//! runs one request at a time, so a client gets exactly as much
+//! pipelining as it asks for.
+//!
+//! Shutdown (`{"cmd":"shutdown"}` or [`ServerHandle::stop`]) flips the
+//! stop flag and self-connects to unblock the acceptor; the accept loop
+//! then waits a short grace for in-flight connections to finish their
+//! current exchange. Draining the registry's executors is the caller's
+//! job ([`ModelRegistry::drain_all`]) — the server owns sockets, not
+//! models.
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::anyhow;
+use crate::coordinator::ModelRegistry;
+use crate::ingress::frame::{read_frame, write_frame};
+use crate::ingress::wire::{self, Command};
+use crate::util::error::Result;
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// concurrent-connection cap; connects past it are refused with an
+    /// error frame (the request-level backpressure still applies under
+    /// the cap)
+    pub max_conns: usize,
+    /// how long shutdown waits for in-flight connections to finish
+    pub drain_grace: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_conns: 64, drain_grace: Duration::from_secs(5) }
+    }
+}
+
+/// A bound, not-yet-running ingress: `bind` then `run` (blocking), or
+/// hold a [`ServerHandle`] to stop it from another thread.
+pub struct IngressServer {
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+}
+
+/// Clonable remote control for a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Stop the server: flip the flag and wake the blocking acceptor.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // a throwaway connect unblocks `TcpListener::accept`
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl IngressServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks a free port —
+    /// read it back via [`IngressServer::local_addr`]).
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        registry: Arc<ModelRegistry>,
+        cfg: ServerConfig,
+    ) -> Result<IngressServer> {
+        let listener =
+            TcpListener::bind(&addr).map_err(|e| anyhow!("bind {addr:?}: {e}"))?;
+        Ok(IngressServer {
+            listener,
+            registry,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            active: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))
+    }
+
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle { addr: self.local_addr()?, stop: self.stop.clone() })
+    }
+
+    /// Serve until a `shutdown` command (or [`ServerHandle::stop`])
+    /// arrives, then wait up to `drain_grace` for in-flight connections
+    /// to finish. Connection threads are detached — each serves one
+    /// client serially and exits when the client closes.
+    pub fn run(&self) -> Result<()> {
+        let addr = self.local_addr()?;
+        loop {
+            let (conn, peer) = match self.listener.accept() {
+                Ok(c) => c,
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("ingress: accept failed: {e}");
+                    continue;
+                }
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                // the wake-up connect (or a straggler racing shutdown)
+                break;
+            }
+            // admission control: past the cap, say why and close
+            if self.active.fetch_add(1, Ordering::SeqCst) >= self.cfg.max_conns {
+                self.active.fetch_sub(1, Ordering::SeqCst);
+                let mut conn = conn;
+                let _ = write_frame(
+                    &mut conn,
+                    &wire::err_frame(&format!(
+                        "server at capacity ({} connections); retry later",
+                        self.cfg.max_conns
+                    )),
+                );
+                continue;
+            }
+            let registry = self.registry.clone();
+            let stop = self.stop.clone();
+            let active = self.active.clone();
+            let handle = ServerHandle { addr, stop: stop.clone() };
+            std::thread::spawn(move || {
+                let _guard = ActiveGuard(active);
+                let _ = conn.set_nodelay(true);
+                if let Err(e) = serve_conn(conn, &registry, &handle) {
+                    // per-connection failures are logged, never fatal
+                    eprintln!("ingress: connection {peer}: {e:#}");
+                }
+            });
+        }
+        // grace period: let connections mid-exchange finish
+        let deadline = Instant::now() + self.cfg.drain_grace;
+        while self.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    }
+}
+
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One connection: read a frame, execute, answer, repeat until the
+/// client closes. Malformed frames get an error frame back (the
+/// connection survives command-level errors; only transport errors end
+/// it).
+fn serve_conn(
+    mut conn: TcpStream,
+    registry: &ModelRegistry,
+    server: &ServerHandle,
+) -> Result<()> {
+    while let Some(msg) = read_frame(&mut conn)? {
+        let reply = match Command::parse(&msg) {
+            Ok(Command::Shutdown) => {
+                let _ = write_frame(&mut conn, &wire::ok_with(vec![("stopping", Json::Bool(true))]));
+                server.stop();
+                return Ok(());
+            }
+            Ok(cmd) => execute(registry, cmd),
+            Err(e) => wire::err_frame(&format!("{e:#}")),
+        };
+        write_frame(&mut conn, &reply)?;
+    }
+    Ok(())
+}
+
+/// Execute one non-shutdown command against the registry, folding every
+/// error into an error frame.
+fn execute(registry: &ModelRegistry, cmd: Command) -> Json {
+    let result: Result<Json> = match cmd {
+        Command::Submit { model, req } => registry
+            .run_response(&model, req)
+            .map(wire::encode_response),
+        Command::Load { name, path } => registry
+            .load_path(&name, std::path::Path::new(&path))
+            .map(|()| wire::ok_with(vec![("loaded", Json::from(name.as_str()))])),
+        Command::Unload { name } => registry
+            .unload(&name)
+            .map(|()| wire::ok_with(vec![("unloaded", Json::from(name.as_str()))])),
+        Command::Deploy { alias, model, retire_old } => {
+            registry.deploy(&alias, &model, retire_old).map(|outcome| {
+                wire::ok_with(vec![
+                    ("alias", Json::from(alias.as_str())),
+                    ("model", Json::from(model.as_str())),
+                    (
+                        "previous",
+                        outcome.previous.map(Json::Str).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "retired",
+                        outcome.retired.map(Json::Str).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+        }
+        Command::List => Ok(wire::ok_with(vec![("registry", registry.list())])),
+        Command::Stats { model } => registry
+            .stats(model.as_deref())
+            .map(|stats| wire::ok_with(vec![("stats", stats)])),
+        Command::Ping => Ok(wire::ok_with(vec![(
+            "serving",
+            Json::Arr(registry.names().into_iter().map(Json::Str).collect()),
+        )])),
+        // handled by the caller before execute
+        Command::Shutdown => Ok(wire::ok_with(vec![("stopping", Json::Bool(true))])),
+    };
+    result.unwrap_or_else(|e| wire::err_frame(&format!("{e:#}")))
+}

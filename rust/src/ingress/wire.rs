@@ -1,0 +1,280 @@
+//! The wire protocol: what goes inside each frame. One JSON object per
+//! frame; requests carry a `cmd` verb, responses carry `ok` plus either
+//! the payload or an `error` string.
+//!
+//! The explain verbs are exactly [`Task::parse`]'s alias table — the
+//! same parse serves the CLI, the in-process API and the wire — and a
+//! submit response is the service's [`Response`] struct serialized
+//! verbatim (`task`/`rows`/`cols`/`values`), so every consumer sees one
+//! shape.
+//!
+//! ```text
+//!   {"cmd":"explain","model":"best","rows":2,"x":[...]}      → submit
+//!   {"cmd":"load","name":"m2","path":"artifacts/m2.gtsm"}    → registry
+//!   {"cmd":"deploy","alias":"best","model":"m2"}             → hot swap
+//!   {"cmd":"list"} {"cmd":"stats"} {"cmd":"ping"}            → introspect
+//!   {"cmd":"shutdown"}                                       → stop server
+//! ```
+
+use crate::anyhow;
+use crate::coordinator::{Request, Response, Task};
+use crate::util::error::Result;
+use crate::util::Json;
+
+/// Registry/control verbs (everything that is not a [`Task`] alias).
+const CONTROL_VERBS: &[&str] =
+    &["load", "unload", "deploy", "list", "stats", "ping", "shutdown"];
+
+/// One decoded client command.
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// An explain/interactions/predict request routed to `model`.
+    Submit { model: String, req: Request },
+    Load { name: String, path: String },
+    Unload { name: String },
+    Deploy { alias: String, model: String, retire_old: bool },
+    List,
+    Stats { model: Option<String> },
+    Ping,
+    Shutdown,
+}
+
+impl Command {
+    /// Decode one request frame. Unknown verbs list the full valid set.
+    pub fn parse(msg: &Json) -> Result<Command> {
+        let verb = msg.get("cmd")?.as_str()?;
+        if let Some(task) = Task::parse(verb) {
+            let model = msg.get("model")?.as_str()?.to_string();
+            let rows = msg.get("rows")?.as_usize()?;
+            let x = decode_f32s(msg.get("x")?)?;
+            return Ok(Command::Submit { model, req: Request::new(task, x, rows) });
+        }
+        match verb.to_ascii_lowercase().as_str() {
+            "load" => Ok(Command::Load {
+                name: msg.get("name")?.as_str()?.to_string(),
+                path: msg.get("path")?.as_str()?.to_string(),
+            }),
+            "unload" => Ok(Command::Unload { name: msg.get("name")?.as_str()?.to_string() }),
+            "deploy" => Ok(Command::Deploy {
+                alias: msg.get("alias")?.as_str()?.to_string(),
+                model: msg.get("model")?.as_str()?.to_string(),
+                // hot swaps retire the abandoned target by default;
+                // pass false to keep it serving (e.g. under a canary)
+                retire_old: match msg.get("retire_old") {
+                    Ok(Json::Bool(b)) => *b,
+                    Ok(other) => return Err(anyhow!("retire_old must be a bool, got {other:?}")),
+                    Err(_) => true,
+                },
+            }),
+            "list" => Ok(Command::List),
+            "stats" => Ok(Command::Stats {
+                model: msg.get("model").ok().map(|j| j.as_str().map(str::to_string)).transpose()?,
+            }),
+            "ping" => Ok(Command::Ping),
+            "shutdown" => Ok(Command::Shutdown),
+            _ => Err(anyhow!(
+                "unknown command '{verb}' (one of: {}|{})",
+                Task::name_list(),
+                CONTROL_VERBS.join("|")
+            )),
+        }
+    }
+
+    /// Encode this command as a request frame (the client side of
+    /// [`Command::parse`]).
+    pub fn encode(&self) -> Json {
+        match self {
+            Command::Submit { model, req } => Json::obj(vec![
+                ("cmd", Json::from(req.task.name())),
+                ("model", Json::from(model.as_str())),
+                ("rows", Json::from(req.rows)),
+                ("x", encode_f32s(&req.x)),
+            ]),
+            Command::Load { name, path } => Json::obj(vec![
+                ("cmd", Json::from("load")),
+                ("name", Json::from(name.as_str())),
+                ("path", Json::from(path.as_str())),
+            ]),
+            Command::Unload { name } => Json::obj(vec![
+                ("cmd", Json::from("unload")),
+                ("name", Json::from(name.as_str())),
+            ]),
+            Command::Deploy { alias, model, retire_old } => Json::obj(vec![
+                ("cmd", Json::from("deploy")),
+                ("alias", Json::from(alias.as_str())),
+                ("model", Json::from(model.as_str())),
+                ("retire_old", Json::Bool(*retire_old)),
+            ]),
+            Command::List => Json::obj(vec![("cmd", Json::from("list"))]),
+            Command::Stats { model } => {
+                let mut fields = vec![("cmd", Json::from("stats"))];
+                if let Some(m) = model {
+                    fields.push(("model", Json::from(m.as_str())));
+                }
+                Json::obj(fields)
+            }
+            Command::Ping => Json::obj(vec![("cmd", Json::from("ping"))]),
+            Command::Shutdown => Json::obj(vec![("cmd", Json::from("shutdown"))]),
+        }
+    }
+}
+
+/// `{"ok":true, ...payload}` — success with extra fields.
+pub fn ok_with(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+/// `{"ok":false,"error":...}` — any failure, serialized uniformly.
+pub fn err_frame(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
+}
+
+/// Serialize a service [`Response`] as a success frame (or its
+/// per-request error as an error frame) — the `Response` struct
+/// verbatim: task, rows, cols, values.
+pub fn encode_response(resp: Response) -> Json {
+    let task = resp.task;
+    let rows = resp.rows;
+    let cols = resp.cols;
+    match resp.into_values() {
+        Ok(values) => ok_with(vec![
+            ("task", Json::from(task.name())),
+            ("rows", Json::from(rows)),
+            ("cols", Json::from(cols)),
+            ("values", encode_f32s(&values)),
+        ]),
+        Err(e) => err_frame(&format!("{e:#}")),
+    }
+}
+
+/// Decode a response frame back into the service [`Response`] shape;
+/// `{"ok":false}` frames surface as `Err`.
+pub fn decode_response(msg: &Json) -> Result<Response> {
+    check_ok(msg)?;
+    let task = Task::parse(msg.get("task")?.as_str()?)
+        .ok_or_else(|| anyhow!("bad task in response"))?;
+    Ok(Response {
+        task,
+        rows: msg.get("rows")?.as_usize()?,
+        cols: msg.get("cols")?.as_usize()?,
+        values: Ok(decode_f32s(msg.get("values")?)?),
+    })
+}
+
+/// Surface an `{"ok":false,"error":...}` frame as the error it carries.
+pub fn check_ok(msg: &Json) -> Result<()> {
+    match msg.get("ok") {
+        Ok(Json::Bool(true)) => Ok(()),
+        Ok(Json::Bool(false)) => {
+            let detail = msg
+                .get("error")
+                .ok()
+                .and_then(|j| j.as_str().ok())
+                .unwrap_or("unspecified server error");
+            Err(anyhow!("{detail}"))
+        }
+        _ => Err(anyhow!("malformed response frame: {msg:?}")),
+    }
+}
+
+/// f32s on the wire ride as JSON numbers; f32 → f64 is exact and the
+/// serializer prints shortest-round-trip, so this is lossless.
+pub fn encode_f32s(values: &[f32]) -> Json {
+    Json::Arr(values.iter().map(|v| Json::from(*v as f64)).collect())
+}
+
+pub fn decode_f32s(msg: &Json) -> Result<Vec<f32>> {
+    msg.as_arr()?.iter().map(|j| Ok(j.as_f64()? as f32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_verbs_share_task_aliases() {
+        for (verb, task) in [
+            ("explain", Task::Contributions),
+            ("SHAP", Task::Contributions),
+            ("interactions", Task::Interactions),
+            ("predict", Task::Predictions),
+        ] {
+            let msg = Json::obj(vec![
+                ("cmd", Json::from(verb)),
+                ("model", Json::from("m1")),
+                ("rows", Json::from(2usize)),
+                ("x", encode_f32s(&[1.0, 2.0, 3.0, 4.0])),
+            ]);
+            match Command::parse(&msg).unwrap() {
+                Command::Submit { model, req } => {
+                    assert_eq!(model, "m1");
+                    assert_eq!(req.task, task);
+                    assert_eq!(req.rows, 2);
+                    assert_eq!(req.x, vec![1.0, 2.0, 3.0, 4.0]);
+                }
+                other => panic!("expected Submit, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn commands_round_trip_through_encode_parse() {
+        let cmds = vec![
+            Command::Load { name: "m2".into(), path: "a/b.gtsm".into() },
+            Command::Unload { name: "m2".into() },
+            Command::Deploy { alias: "best".into(), model: "m2".into(), retire_old: false },
+            Command::List,
+            Command::Stats { model: Some("m1".into()) },
+            Command::Stats { model: None },
+            Command::Ping,
+            Command::Shutdown,
+        ];
+        for cmd in cmds {
+            let re = Command::parse(&cmd.encode()).unwrap();
+            assert_eq!(format!("{re:?}"), format!("{cmd:?}"));
+        }
+    }
+
+    #[test]
+    fn deploy_defaults_to_retire() {
+        let msg = Json::obj(vec![
+            ("cmd", Json::from("deploy")),
+            ("alias", Json::from("best")),
+            ("model", Json::from("m2")),
+        ]);
+        match Command::parse(&msg).unwrap() {
+            Command::Deploy { retire_old, .. } => assert!(retire_old),
+            other => panic!("expected Deploy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_verb_lists_the_valid_set() {
+        let msg = Json::obj(vec![("cmd", Json::from("frobnicate"))]);
+        let err = format!("{:#}", Command::parse(&msg).unwrap_err());
+        assert!(err.contains("explain"), "{err}");
+        assert!(err.contains("deploy"), "{err}");
+    }
+
+    #[test]
+    fn response_round_trip_preserves_values_bitwise() {
+        let resp = Response {
+            task: Task::Contributions,
+            rows: 1,
+            cols: 3,
+            values: Ok(vec![0.1f32, -2.5e-7, 42.0]),
+        };
+        let frame = encode_response(resp);
+        let back = decode_response(&frame).unwrap();
+        assert_eq!(back.rows, 1);
+        assert_eq!(back.cols, 3);
+        let vals = back.into_values().unwrap();
+        for (a, b) in [0.1f32, -2.5e-7, 42.0].iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let err = decode_response(&err_frame("boom")).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+    }
+}

@@ -9,7 +9,8 @@
 //! - **L3** (this crate): everything on the request path — GBDT model
 //!   substrate, path extraction + duplicate merging, bin packing, the
 //!   CPU TreeShap baseline, the PJRT runtime executing the artifacts,
-//!   and a batching/serving coordinator.
+//!   a batching/serving coordinator with a multi-model registry, and a
+//!   std-only TCP ingress speaking length-prefixed JSON frames.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured evaluation.
@@ -20,6 +21,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod gbdt;
+pub mod ingress;
 pub mod parallel;
 pub mod runtime;
 pub mod shap;

@@ -12,6 +12,9 @@
 //! gputreeshap predict  --model model.gtsm --dataset adult --rows 16
 //! gputreeshap serve    --model model.gtsm --dataset adult --devices 2 --shard-axis rows \
 //!                      --clients 4 --requests 32 --recalibrate-every 64
+//! gputreeshap serve    --listen 127.0.0.1:7878 --models m1=a.gtsm,m2=b.gtsm --pool-devices 4
+//! gputreeshap client explain --addr 127.0.0.1:7878 --name m1 --dataset cal_housing --rows 4
+//! gputreeshap client deploy  --addr 127.0.0.1:7878 --alias best --name m2
 //! gputreeshap zoo      --scale 0.02
 //! ```
 //!
@@ -33,15 +36,16 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Duration;
 
-use gputreeshap::backend::{self, BackendConfig, BackendKind, Planner, ShapBackend, ShardAxis};
+use gputreeshap::backend::{self, BackendKind, DevicePool, Planner};
+use gputreeshap::cli::opts::{
+    self, backend_config, build_backend, load_dataset, load_model, unknown_backend,
+};
 use gputreeshap::cli::Args;
-use gputreeshap::coordinator::{ServiceConfig, ShapService};
-use gputreeshap::data::csv::{load_csv, CsvOptions};
+use gputreeshap::coordinator::{ModelRegistry, RegistryConfig, ShapService, Task};
 use gputreeshap::data::{Dataset, SynthSpec};
-use gputreeshap::gbdt::{io as model_io, train, Model, TrainParams, ZooSize};
-use gputreeshap::runtime::default_artifacts_dir;
+use gputreeshap::gbdt::{io as model_io, train, TrainParams, ZooSize};
+use gputreeshap::ingress::{Client, IngressServer, ServerConfig};
 use gputreeshap::shap::{pack_model, Packing};
 use gputreeshap::util::error::Result;
 use gputreeshap::util::time_it;
@@ -58,6 +62,7 @@ fn main() {
         Some("interactions") => cmd_interactions(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("zoo") => cmd_zoo(&args),
         Some("bench-compare") => cmd_bench_compare(&args),
         _ => {
@@ -71,7 +76,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|zoo|bench-compare> [options]
+const USAGE: &str = "usage: gputreeshap <train|info|pack|backends|explain|shap|interactions|predict|serve|client|zoo|bench-compare> [options]
 multi-device: --devices N shards execution; --shard-axis auto|rows|trees|grid|tiles picks the split
   (grid = tree slices × row replicas, for topologies where one axis saturates;
    tiles = conditioned-feature tiles, for interactions on wide models)
@@ -79,107 +84,11 @@ memory: --fastv2-max-mb M caps the fastv2 backend's precomputed weight tables (d
   over budget the planner skips fastv2 and an explicit --backend fastv2 errors instead of OOMing
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
   and persists learned constants next to the model (--calibration <path|none>)
+serving: serve --listen <addr> exposes a multi-model TCP service (--models n=path,…; --pool-devices N
+  caps total device slots); client <explain|interactions|predict|load|unload|deploy|list|stats|ping|shutdown>
+  --addr <host:port> drives it (deploy: --alias a --name m hot-swaps; --keep-old skips retiring)
 perf CI: bench-compare --baseline a.json --current b.json [--tolerance 0.2] gates throughput
 see rust/src/main.rs header for examples";
-
-fn load_dataset(args: &Args) -> Result<Dataset> {
-    let scale = args.get_f64("scale", 0.01)?;
-    match args.get_str("dataset", "cal_housing")? {
-        "covtype" => Ok(SynthSpec::covtype(scale).generate()),
-        "cal_housing" => Ok(SynthSpec::cal_housing(scale).generate()),
-        "fashion_mnist" => Ok(SynthSpec::fashion_mnist(scale).generate()),
-        "adult" => Ok(SynthSpec::adult(scale).generate()),
-        "csv" => {
-            let path = args.get("csv").ok_or_else(|| anyhow!("--csv <path> required"))?;
-            let opts = CsvOptions {
-                num_classes: args.get_usize("classes", 0)?,
-                ..Default::default()
-            };
-            load_csv(Path::new(path), &opts)
-        }
-        other => bail!("unknown dataset '{other}'"),
-    }
-}
-
-fn load_model(args: &Args) -> Result<Model> {
-    let path = args.get("model").ok_or_else(|| anyhow!("--model <path> required"))?;
-    if path.ends_with(".json") {
-        // real XGBoost model.json (the paper's integration target)
-        gputreeshap::gbdt::xgb_import::load_xgboost_json(Path::new(path))
-    } else {
-        model_io::load(Path::new(path))
-    }
-}
-
-fn artifacts_dir(args: &Args) -> PathBuf {
-    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
-}
-
-fn shard_axis(args: &Args) -> Result<Option<ShardAxis>> {
-    match args.get_str("shard-axis", "auto")? {
-        "auto" => Ok(None),
-        s => ShardAxis::parse(s)
-            .map(Some)
-            .ok_or_else(|| anyhow!("unknown shard axis '{s}' (auto|{})", ShardAxis::name_list())),
-    }
-}
-
-fn backend_config(args: &Args, rows_hint: usize) -> Result<BackendConfig> {
-    let packing = args.get_str("packing", "bfd")?;
-    Ok(BackendConfig {
-        threads: args.get_usize("threads", gputreeshap::parallel::default_threads())?,
-        packing: Packing::parse(packing)
-            .ok_or_else(|| anyhow!("unknown packing '{packing}' (none|nf|ffd|bfd)"))?,
-        artifacts_dir: artifacts_dir(args),
-        rows_hint,
-        with_interactions: false,
-        with_predict: false,
-        devices: args.get_usize("devices", 1)?.max(1),
-        shard_axis: shard_axis(args)?,
-        fastv2_max_mb: args
-            .get_usize("fastv2-max-mb", gputreeshap::backend::DEFAULT_FASTV2_MAX_MB)?,
-    })
-}
-
-/// The error for an unrecognized `--backend` value: names every valid
-/// kind (parse is case-insensitive, so any casing of these works).
-fn unknown_backend(s: &str) -> gputreeshap::util::error::Error {
-    anyhow!("unknown backend '{s}' (auto|{})", BackendKind::name_list())
-}
-
-/// Resolve `--backend` (with a per-command default) into a built backend.
-fn build_backend(
-    model: &Arc<Model>,
-    args: &Args,
-    cfg: &BackendConfig,
-    default: &str,
-) -> Result<(String, Box<dyn ShapBackend>)> {
-    match args.get_str("backend", default)? {
-        "auto" => {
-            let (plan, b) = backend::build_auto(model, cfg)?;
-            let layout = if let Some(g) = plan.grid {
-                format!(", {g}-grid")
-            } else if plan.shards > 1 {
-                format!(", {}×{}-sharded", plan.shards, plan.axis.name())
-            } else {
-                String::new()
-            };
-            Ok((
-                format!(
-                    "auto→{}{} (planner est {:.1} ms)",
-                    plan.kind.name(),
-                    layout,
-                    plan.est_latency_s * 1e3
-                ),
-                b,
-            ))
-        }
-        s => {
-            let kind = BackendKind::parse(s).ok_or_else(|| unknown_backend(s))?;
-            Ok((kind.name().to_string(), backend::build(model, kind, cfg)?))
-        }
-    }
-}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let data = load_dataset(args)?;
@@ -451,6 +360,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // `--listen <addr>` switches from the loopback load demo to the
+    // network ingress + multi-model registry
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_listen(args, listen);
+    }
     let model = load_model(args)?;
     let data = load_dataset(args)?;
     let m = model.num_features;
@@ -458,36 +372,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 4)?;
     let requests = args.get_usize("requests", 32)?;
     let req_rows = args.get_usize("req-rows", 16)?;
-    let max_batch = args.get_usize("max-batch", 256)?;
 
-    // calibrated cost constants persist next to the model artifact by
-    // default (<model>.calib.json), so a restarted service plans from
-    // measurements immediately; `--calibration none` disables, an
-    // explicit path overrides
-    let calibration_path = match args.get_str("calibration", "")? {
-        "none" => None,
-        "" => args.get("model").map(|mp| PathBuf::from(format!("{mp}.calib.json"))),
-        explicit => Some(PathBuf::from(explicit)),
-    };
-    if let Some(p) = &calibration_path {
+    let cfg = opts::service_config(args)?;
+    if let Some(p) = &cfg.calibration_path {
         if p.exists() {
             println!("calibration: reloading measured constants from {}", p.display());
         } else {
             println!("calibration: will persist measured constants to {}", p.display());
         }
     }
-
-    let cfg = ServiceConfig {
-        devices,
-        shard_axis: shard_axis(args)?,
-        max_batch_rows: max_batch,
-        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5)? as u64),
-        // measure→calibrate→plan cadence in executed batches (0 = static)
-        recalibrate_every: args.get_usize("recalibrate-every", 64)?,
-        calibration_path,
-        ..Default::default()
-    };
-    let bcfg = backend_config(args, max_batch)?;
+    let bcfg = backend_config(args, cfg.max_batch_rows)?;
     let model = Arc::new(model);
     let (label, svc) = match args.get_str("backend", "auto")? {
         "auto" => {
@@ -534,6 +428,134 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let svc = Arc::try_unwrap(svc).ok().expect("clients done");
     println!("metrics: {}", svc.metrics.snapshot().to_string_pretty());
     svc.shutdown();
+    Ok(())
+}
+
+/// `serve --listen <addr>`: the network ingress — a TCP front end over
+/// a multi-model registry. Models come from `--model <path>`
+/// (`--name` optional, defaults to the file stem) and/or
+/// `--models name=path,…`; more can be loaded at runtime via
+/// `client load`. `--pool-devices N` caps total device slots across
+/// all models (0 = unbounded); each model's executor takes `--devices`
+/// slots. Runs until `client shutdown` arrives, then drains every
+/// executor gracefully.
+fn cmd_serve_listen(args: &Args, listen: &str) -> Result<()> {
+    let mut scfg = opts::service_config(args)?;
+    // per-model calibration is keyed by the registry (entry name under
+    // --calibration-dir, else <source>.calib.json); the single-model
+    // template path would smear one model's constants over all of them
+    scfg.calibration_path = None;
+    let mut bcfg = backend_config(args, scfg.max_batch_rows)?;
+    bcfg.with_interactions = true;
+    bcfg.with_predict = true;
+    let rcfg = RegistryConfig {
+        service: scfg,
+        backend: bcfg,
+        kind: opts::backend_kind(args, "auto")?,
+        calibration_dir: args.get("calibration-dir").map(PathBuf::from),
+    };
+    let pool = match args.get_usize("pool-devices", 0)? {
+        0 => DevicePool::unbounded(),
+        n => DevicePool::new(n),
+    };
+    let registry = Arc::new(ModelRegistry::new(rcfg, pool));
+
+    if let Some(mp) = args.get("model") {
+        let path = Path::new(mp);
+        let name = opts::model_name(args, path)?;
+        registry.load_path(&name, path)?;
+        println!("loaded '{name}' from {mp}");
+    }
+    if let Some(spec) = args.get("models") {
+        for (name, path) in opts::parse_model_manifest(spec)? {
+            registry.load_path(&name, &path)?;
+            println!("loaded '{name}' from {}", path.display());
+        }
+    }
+
+    let server = IngressServer::bind(
+        listen,
+        registry.clone(),
+        ServerConfig {
+            max_conns: args.get_usize("max-conns", 64)?,
+            ..Default::default()
+        },
+    )?;
+    println!("listening on {}", server.local_addr()?);
+    // under redirection stdout is block-buffered: flush so drivers
+    // (the CI smoke) can read the bound address while we serve
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    server.run()?;
+    println!("shutting down: draining executors…");
+    registry.drain_all();
+    println!("final stats: {}", registry.stats(None)?.to_string_pretty());
+    Ok(())
+}
+
+/// `client <verb> --addr <host:port> […]`: drive a `serve --listen`
+/// server over the wire. Explain verbs read `--dataset`/`--rows` rows
+/// and route them to `--name <model|alias>`; `deploy` hot-swaps
+/// `--alias` onto `--name` (retiring the old target unless
+/// `--keep-old`).
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr =
+        args.get("addr").ok_or_else(|| anyhow!("--addr <host:port> required"))?;
+    let verb = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        anyhow!(
+            "usage: client <{}|load|unload|deploy|list|stats|ping|shutdown> --addr <host:port>",
+            Task::name_list()
+        )
+    })?;
+    let mut client = Client::connect(addr)?;
+    if let Some(task) = Task::parse(verb) {
+        let name =
+            args.get("name").ok_or_else(|| anyhow!("--name <model|alias> required"))?;
+        let data = load_dataset(args)?;
+        let rows = args.get_usize("rows", 4)?.min(data.rows);
+        let x = data.features[..rows * data.cols].to_vec();
+        let resp = client.run_task(name, task, x, rows)?;
+        let (rows, cols) = (resp.rows, resp.cols);
+        let values = resp.into_values()?;
+        println!("ok: {} via '{name}' → {rows} rows × {cols} cols", task.name());
+        let peek = cols.min(8).min(values.len());
+        println!("row 0: {:?}…", &values[..peek]);
+        return Ok(());
+    }
+    match verb {
+        "load" => {
+            let name = args.get("name").ok_or_else(|| anyhow!("--name required"))?;
+            let path = args.get("path").ok_or_else(|| anyhow!("--path required"))?;
+            client.load(name, path)?;
+            println!("ok: loaded '{name}' from {path}");
+        }
+        "unload" => {
+            let name = args.get("name").ok_or_else(|| anyhow!("--name required"))?;
+            client.unload(name)?;
+            println!("ok: unloaded '{name}'");
+        }
+        "deploy" => {
+            let alias = args.get("alias").ok_or_else(|| anyhow!("--alias required"))?;
+            let name = args.get("name").ok_or_else(|| anyhow!("--name <model> required"))?;
+            let reply = client.deploy(alias, name, !args.has_flag("keep-old"))?;
+            let retired = match reply.get("retired") {
+                Ok(gputreeshap::util::Json::Str(s)) => format!(" (retired '{s}')"),
+                _ => String::new(),
+            };
+            println!("ok: deployed '{alias}' → '{name}'{retired}");
+        }
+        "list" => println!("{}", client.list()?.to_string_pretty()),
+        "stats" => println!("{}", client.stats(args.get("name"))?.to_string_pretty()),
+        "ping" => println!("ok: serving {:?}", client.ping()?),
+        "shutdown" => {
+            client.shutdown()?;
+            println!("ok: server stopping");
+        }
+        other => bail!(
+            "unknown client verb '{other}' ({}|load|unload|deploy|list|stats|ping|shutdown)",
+            Task::name_list()
+        ),
+    }
     Ok(())
 }
 

@@ -75,6 +75,16 @@ impl Json {
         out
     }
 
+    /// Single-line serialization (the wire format): no whitespace, same
+    /// number formatting as pretty — integers verbatim, non-integers via
+    /// f64 `Display` (shortest round-trip), so values survive a
+    /// serialize→parse cycle bit-exactly.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

@@ -3,10 +3,12 @@
 
 pub mod error;
 pub mod json;
+pub mod names;
 pub mod rng;
 pub mod timer;
 
 pub use error::{Context, Error, Result};
 pub use json::Json;
+pub use names::{name_list, parse_named, NameRow};
 pub use rng::Rng;
 pub use timer::{time_it, Stats};

@@ -1,0 +1,52 @@
+//! One parse idiom for every named-constant surface: case-insensitive
+//! alias lookup over a static table, with a canonical `|`-joined name
+//! list for error messages. `BackendKind::parse`, `ShardAxis::parse`
+//! and the coordinator's `Task`/wire-command parsing all route through
+//! here instead of hand-rolling the same match three ways.
+
+/// One row of a name table: the value and its accepted spellings. The
+/// first spelling is canonical (it is what [`name_list`] prints and
+/// what `name()` accessors should return).
+pub type NameRow<T> = (T, &'static [&'static str]);
+
+/// Case-insensitive lookup of `s` across every alias in `table`.
+pub fn parse_named<T: Copy>(table: &[NameRow<T>], s: &str) -> Option<T> {
+    let lower = s.to_ascii_lowercase();
+    table
+        .iter()
+        .find(|(_, aliases)| aliases.iter().any(|a| *a == lower))
+        .map(|(v, _)| *v)
+}
+
+/// The canonical names (first alias of each row), `|`-joined — the
+/// vocabulary every "unknown X" error lists.
+pub fn name_list<T: Copy>(table: &[NameRow<T>]) -> String {
+    table.iter().map(|(_, aliases)| aliases[0]).collect::<Vec<_>>().join("|")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Fruit {
+        Apple,
+        Pear,
+    }
+
+    const FRUITS: &[NameRow<Fruit>] =
+        &[(Fruit::Apple, &["apple", "malus"]), (Fruit::Pear, &["pear"])];
+
+    #[test]
+    fn parses_aliases_case_insensitively() {
+        assert_eq!(parse_named(FRUITS, "apple"), Some(Fruit::Apple));
+        assert_eq!(parse_named(FRUITS, "MALUS"), Some(Fruit::Apple));
+        assert_eq!(parse_named(FRUITS, "Pear"), Some(Fruit::Pear));
+        assert_eq!(parse_named(FRUITS, "plum"), None);
+    }
+
+    #[test]
+    fn name_list_is_canonical_first_aliases() {
+        assert_eq!(name_list(FRUITS), "apple|pear");
+    }
+}

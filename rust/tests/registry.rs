@@ -1,0 +1,257 @@
+//! Multi-model registry + network ingress lifecycle tests: requests
+//! routed by name must be bit-identical to direct backend calls, a hot
+//! alias swap under concurrent load must drop and mis-route nothing,
+//! unloading must reclaim the prepared-model cache entry, and the whole
+//! stack must hold over a real localhost TCP connection.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gputreeshap::backend::{
+    prepared, BackendConfig, BackendKind, RecursiveBackend, ShapBackend,
+};
+use gputreeshap::coordinator::{ModelRegistry, RegistryConfig, Request, ServiceConfig};
+use gputreeshap::data::{Dataset, SynthSpec};
+use gputreeshap::gbdt::{self, train, Model, TrainParams};
+use gputreeshap::ingress::{Client, IngressServer, ServerConfig};
+
+fn model_with(rounds: usize) -> (Arc<Model>, Dataset) {
+    let d = SynthSpec::cal_housing(0.01).generate();
+    let m = train(&d, &TrainParams { rounds, max_depth: 3, ..Default::default() });
+    (Arc::new(m), d)
+}
+
+/// Pinned-kind, single-thread config: the executor runs the same
+/// algorithm as the [`RecursiveBackend`] oracle, so routed results must
+/// match it bit for bit regardless of how requests were batched.
+fn quick_cfg() -> RegistryConfig {
+    RegistryConfig {
+        kind: Some(BackendKind::Recursive),
+        backend: BackendConfig {
+            threads: 1,
+            with_interactions: true,
+            with_predict: true,
+            ..Default::default()
+        },
+        service: ServiceConfig {
+            max_batch_rows: 32,
+            max_wait: Duration::from_millis(1),
+            recalibrate_every: 0,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn concurrent_clients_route_by_name_bit_identically() {
+    let (m1, d) = model_with(3);
+    let (m2, _) = model_with(6);
+    let reg = Arc::new(ModelRegistry::unbounded(quick_cfg()));
+    reg.load("m1", m1.clone(), None).unwrap();
+    reg.load("m2", m2.clone(), None).unwrap();
+
+    let o1 = RecursiveBackend::new(m1.clone(), 1);
+    let o2 = RecursiveBackend::new(m2.clone(), 1);
+    let cols = d.cols;
+    std::thread::scope(|scope| {
+        for c in 0..6usize {
+            let reg = reg.clone();
+            let d = &d;
+            let oracle = if c % 2 == 0 { &o1 } else { &o2 };
+            let name = if c % 2 == 0 { "m1" } else { "m2" };
+            scope.spawn(move || {
+                for q in 0..4usize {
+                    let rows = 1 + (c + q) % 4;
+                    let x = d.features[..rows * cols].to_vec();
+                    let got = reg.run(name, Request::contributions(x.clone(), rows)).unwrap();
+                    let want = oracle.contributions(&x, rows).unwrap();
+                    assert_eq!(bits(&got), bits(&want), "client {c} req {q} via '{name}'");
+                }
+            });
+        }
+    });
+    // interactions route through the same per-model executors
+    let x = d.features[..2 * cols].to_vec();
+    let got = reg.run("m2", Request::interactions(x.clone(), 2)).unwrap();
+    let want = o2.interactions(&x, 2).unwrap();
+    assert_eq!(bits(&got), bits(&want));
+    // everything admitted was delivered: per-model in-flight gauges
+    // drain to zero
+    for name in ["m1", "m2"] {
+        let svc = reg.resolve(name).unwrap().service().unwrap();
+        assert_eq!(svc.metrics.in_flight(), 0, "{name} drained");
+    }
+    reg.drain_all();
+}
+
+#[test]
+fn alias_swap_under_load_drops_and_misroutes_nothing() {
+    let (m1, d) = model_with(3);
+    let (m2, _) = model_with(6);
+    let reg = Arc::new(ModelRegistry::unbounded(quick_cfg()));
+    reg.load("m1", m1.clone(), None).unwrap();
+    reg.load("m2", m2.clone(), None).unwrap();
+    reg.deploy("live", "m1", true).unwrap();
+
+    // per-row-count oracle answers for both models; the two must differ
+    // so a mis-route is observable
+    let cols = d.cols;
+    let o1 = RecursiveBackend::new(m1.clone(), 1);
+    let o2 = RecursiveBackend::new(m2.clone(), 1);
+    let answers: Vec<(Vec<u32>, Vec<u32>)> = (1..=4usize)
+        .map(|rows| {
+            let x = &d.features[..rows * cols];
+            (
+                bits(&o1.contributions(x, rows).unwrap()),
+                bits(&o2.contributions(x, rows).unwrap()),
+            )
+        })
+        .collect();
+    assert_ne!(answers[0].0, answers[0].1, "models must be distinguishable");
+
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let reg = reg.clone();
+            let d = &d;
+            let answers = &answers;
+            scope.spawn(move || {
+                for q in 0..30usize {
+                    let rows = 1 + (c + q) % 4;
+                    let x = d.features[..rows * cols].to_vec();
+                    // zero-drop: every request admitted during the
+                    // swaps must come back...
+                    let got = bits(
+                        &reg.run("live", Request::contributions(x, rows)).unwrap(),
+                    );
+                    // ...and zero-misroute: from one of the two targets
+                    // the alias legitimately pointed at
+                    let (a, b) = &answers[rows - 1];
+                    assert!(got == *a || got == *b, "client {c} req {q}: foreign φ");
+                }
+            });
+        }
+        // flip the alias back and forth while the clients hammer it;
+        // retire_old parks the abandoned target each time
+        for flip in 0..6usize {
+            std::thread::sleep(Duration::from_millis(2));
+            let target = if flip % 2 == 0 { "m2" } else { "m1" };
+            reg.deploy("live", target, true).unwrap();
+        }
+    });
+    // final state: last flip targeted m1, so m2 is parked and m1 serves
+    assert!(reg.resolve("m1").unwrap().is_running());
+    assert!(!reg.resolve("m2").unwrap().is_running());
+    let svc = reg.resolve("live").unwrap().service().unwrap();
+    assert_eq!(svc.metrics.in_flight(), 0, "alias target drained");
+    reg.drain_all();
+}
+
+#[test]
+fn unload_reclaims_prepared_cache_entry() {
+    let dir = std::env::temp_dir().join(format!("gts_registry_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("disk.gtsm");
+    {
+        let (m, _) = model_with(2);
+        gbdt::io::save(&m, &path).unwrap();
+    }
+
+    let reg = ModelRegistry::unbounded(quick_cfg());
+    reg.load_path("disk", &path).unwrap();
+    // the registry holds the only external Arc<Model>; the prepared
+    // cache tracks it by identity
+    let weak = Arc::downgrade(reg.resolve("disk").unwrap().model());
+    assert!(weak.strong_count() >= 2, "entry + prepared cache both pin the model");
+    let x = vec![0.5f32; 8];
+    reg.run("disk", Request::contributions(x, 1)).unwrap();
+
+    // unload: executor drains and joins, entry drops. Only the cache's
+    // own PreparedModel may still hold the model...
+    reg.unload("disk").unwrap();
+    assert!(weak.strong_count() <= 1, "unload released every registry reference");
+    // ...and the next registry sweep prunes that entry, freeing the
+    // model for good
+    let _ = prepared::registry_len();
+    assert!(weak.upgrade().is_none(), "prepared cache entry reclaimed after unload");
+
+    // per-entry calibration landed next to the artifact, keyed by path
+    let calib = dir.join("disk.gtsm.calib.json");
+    assert!(calib.exists(), "calibration persists at {}", calib.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tcp_end_to_end_routes_deploys_and_shuts_down() {
+    let (m1, d) = model_with(3);
+    let (m2, _) = model_with(6);
+    let dir = std::env::temp_dir().join(format!("gts_ingress_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m3.gtsm");
+    gbdt::io::save(&model_with(2).0, &path).unwrap();
+
+    let reg = Arc::new(ModelRegistry::unbounded(quick_cfg()));
+    reg.load("m1", m1.clone(), None).unwrap();
+    reg.load("m2", m2.clone(), None).unwrap();
+    let server =
+        IngressServer::bind("127.0.0.1:0", reg.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let jh = std::thread::spawn(move || server.run().unwrap());
+
+    // two concurrent TCP clients, each routed to a different model,
+    // must get φ bit-identical to direct backend calls
+    let o1 = RecursiveBackend::new(m1.clone(), 1);
+    let o2 = RecursiveBackend::new(m2.clone(), 1);
+    let cols = d.cols;
+    std::thread::scope(|scope| {
+        for (name, oracle) in [("m1", &o1), ("m2", &o2)] {
+            let d = &d;
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for rows in 1..=3usize {
+                    let x = d.features[..rows * cols].to_vec();
+                    let got = client.explain(name, x.clone(), rows).unwrap();
+                    let want = oracle.contributions(&x, rows).unwrap();
+                    assert_eq!(bits(&got), bits(&want), "'{name}' over TCP");
+                }
+            });
+        }
+    });
+
+    let mut client = Client::connect(addr).unwrap();
+    // hot deploy over the wire: alias swaps route new requests at once
+    client.deploy("best", "m1", true).unwrap();
+    client.deploy("best", "m2", true).unwrap();
+    let x = d.features[..cols].to_vec();
+    let via_alias = client.explain("best", x.clone(), 1).unwrap();
+    assert_eq!(bits(&via_alias), bits(&o2.contributions(&x, 1).unwrap()));
+    // command-level errors answer in-band and keep the connection alive
+    let err = client.explain("nope", x.clone(), 1).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+    // load/unload a disk artifact through the wire protocol
+    client.load("m3", path.to_str().unwrap()).unwrap();
+    assert!(client.ping().unwrap().contains(&"m3".to_string()));
+    client.explain("m3", x.clone(), 1).unwrap();
+    client.unload("m3").unwrap();
+    // roster + stats reflect the deploy
+    let roster = client.list().unwrap();
+    let aliases = roster.get("aliases").unwrap();
+    assert_eq!(aliases.get("best").unwrap().as_str().unwrap(), "m2");
+    let stats = client.stats(None).unwrap();
+    assert!(stats.get("models").unwrap().get("m2").is_ok());
+
+    // shutdown stops the accept loop; the server thread exits cleanly
+    client.shutdown().unwrap();
+    jh.join().unwrap();
+    // the listener is gone; at most a raced handshake may still open a
+    // socket, but no new exchange must succeed
+    if let Ok(mut c) = Client::connect(addr) {
+        assert!(c.ping().is_err(), "server must not serve after shutdown");
+    }
+    reg.drain_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}

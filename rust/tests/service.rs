@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use gputreeshap::backend::{BackendConfig, BackendKind, RecursiveBackend, ShapBackend};
-use gputreeshap::coordinator::{ServiceConfig, ShapService};
+use gputreeshap::coordinator::{Request, ServiceConfig, ShapService};
 use gputreeshap::data::SynthSpec;
 use gputreeshap::gbdt::{train, Model, TrainParams};
 
@@ -255,7 +255,7 @@ fn backpressure_rejects_when_queue_full() {
     let mut rejected = 0;
     let mut rxs = Vec::new();
     for _ in 0..300 {
-        match svc.submit(x.clone(), 8) {
+        match svc.submit(Request::contributions(x.clone(), 8)) {
             Ok(rx) => {
                 accepted += 1;
                 rxs.push(rx);
@@ -266,7 +266,7 @@ fn backpressure_rejects_when_queue_full() {
     assert!(rejected > 0, "queue_cap=2 never rejected under a 300-req burst");
     assert!(accepted > 0);
     for rx in rxs {
-        let _ = rx.recv().unwrap().unwrap();
+        let _ = rx.recv().unwrap().into_values().unwrap();
     }
     assert_eq!(
         svc.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed),
@@ -292,9 +292,11 @@ fn shutdown_drains_pending_work() {
     )
     .unwrap();
     let x = d.features[..4 * m].to_vec();
-    let rx = svc.submit(x, 4).unwrap();
+    let rx = svc.submit(Request::contributions(x, 4)).unwrap();
     svc.shutdown(); // ...but shutdown must flush it
-    assert!(rx.recv().unwrap().is_ok());
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.rows, 4);
+    assert!(resp.into_values().is_ok());
 }
 
 #[test]
