@@ -1,0 +1,295 @@
+//! Mixed-load scheduling bench (fig-5 style): interactive tail latency
+//! while a bulk backfill saturates the executor.
+//!
+//! Two scenarios over the same model, backend and traffic shape:
+//!
+//! * **fifo** — the pre-scheduler baseline: every request rides the
+//!   batch class and the class targets are parked at 60 s, so batch
+//!   formation degenerates to the old `max_batch_rows`/`max_wait` FIFO
+//!   and the probe requests queue strictly behind the backfill.
+//! * **slo** — the probes are submitted at [`Class::Interactive`] with
+//!   a deadline; the batcher lets them lead batch formation and closes
+//!   their batches early against the interactive class target.
+//!
+//! Each scenario runs [`RUNS`] times: a flood thread keeps a fixed
+//! number of bulk contribution requests in flight while the main
+//! thread fires `--probes` single-row probes and times each round
+//! trip client-side (identical measurement in both scenarios). The
+//! report carries the median interactive p50/p99 across runs and a
+//! `{min, median}` bulk `rows_per_s` variance band per scenario — the
+//! bands are what `bench-compare` gates, so a scheduler change that
+//! buys tail latency by collapsing bulk throughput fails the perf job.
+//! The headline acceptance ratios (slo p99 vs fifo p99, slo bulk
+//! throughput vs fifo) are printed and written into the JSON report.
+//!
+//! Args (after `--`): `--rows N` bulk rows per backfill request
+//! (default 64), `--probes N` interactive probes per run (default 40),
+//! `--target-ms T` interactive class target (default 50),
+//! `--json PATH` merges the summary under the `mixed_load` key.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gputreeshap::backend::{BackendConfig, BackendKind};
+use gputreeshap::bench::{band_json, dump_record, write_json_report, zoo, Table};
+use gputreeshap::cli::Args;
+use gputreeshap::coordinator::{Class, Request, Response, ServiceConfig, ShapService};
+use gputreeshap::gbdt::{Model, ZooSize};
+use gputreeshap::util::Json;
+
+/// Timed repetitions per scenario (min/median variance band).
+const RUNS: usize = 3;
+
+/// Bulk requests kept in flight by the flood thread.
+const INFLIGHT: usize = 6;
+
+struct RunResult {
+    p50_s: f64,
+    p99_s: f64,
+    bulk_rows_per_s: f64,
+    interactive_batches: usize,
+    scheduler: Json,
+}
+
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn median(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    pctl(&s, 0.5)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_once(
+    model: &Arc<Model>,
+    slo: bool,
+    bulk_rows: usize,
+    probes: usize,
+    target_ms: u64,
+    x_bulk: &Arc<Vec<f32>>,
+    x_probe: &[f32],
+) -> RunResult {
+    let max_batch_rows = (bulk_rows * 4).max(32);
+    let class_targets = if slo {
+        [Duration::from_millis(target_ms), Duration::from_secs(2)]
+    } else {
+        // parked targets: batch formation falls back to the plain
+        // max_batch_rows/max_wait FIFO the scheduler replaced
+        [Duration::from_secs(60), Duration::from_secs(60)]
+    };
+    let scfg = ServiceConfig {
+        max_batch_rows,
+        max_wait: Duration::from_millis(20),
+        recalibrate_every: 8,
+        class_targets,
+        ..Default::default()
+    };
+    let bcfg = BackendConfig { rows_hint: max_batch_rows, ..Default::default() };
+    let svc = Arc::new(
+        ShapService::start(model.clone(), BackendKind::Host, bcfg, scfg)
+            .expect("service start"),
+    );
+
+    // warm the backend (prepared-model pack, first-batch setup) before
+    // the timed window
+    for _ in 0..2 {
+        svc.explain(x_probe.to_vec(), 1).expect("warmup probe");
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let done_rows = Arc::new(AtomicU64::new(0));
+    let flood = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        let done_rows = done_rows.clone();
+        let x_bulk = x_bulk.clone();
+        std::thread::spawn(move || {
+            let mut inflight: Vec<Receiver<Response>> = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                while inflight.len() < INFLIGHT {
+                    match svc.submit(Request::contributions(x_bulk.to_vec(), bulk_rows)) {
+                        Ok(rx) => inflight.push(rx),
+                        Err(_) => break, // backpressure: retry next turn
+                    }
+                }
+                if inflight.is_empty() {
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                }
+                if let Ok(resp) = inflight.remove(0).recv() {
+                    if resp.values.is_ok() {
+                        done_rows.fetch_add(bulk_rows as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+            // drain what is still in flight so the service can stop
+            for rx in inflight {
+                if let Ok(resp) = rx.recv() {
+                    if resp.values.is_ok() {
+                        done_rows.fetch_add(bulk_rows as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+        })
+    };
+
+    // let the backfill build a standing queue before probing
+    std::thread::sleep(Duration::from_millis(30));
+    let rows0 = done_rows.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let mut req = Request::contributions(x_probe.to_vec(), 1);
+        if slo {
+            req = req
+                .with_priority(Class::Interactive)
+                .with_deadline_ms(target_ms.saturating_mul(4).max(1));
+        }
+        let t = Instant::now();
+        svc.run(req).expect("probe");
+        latencies.push(t.elapsed().as_secs_f64());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let window_s = t0.elapsed().as_secs_f64();
+    let window_rows = done_rows.load(Ordering::Relaxed) - rows0;
+    stop.store(true, Ordering::Relaxed);
+    let _ = flood.join();
+
+    let scheduler = svc.metrics.scheduler_snapshot();
+    let interactive_batches = scheduler
+        .get(Class::Interactive.name())
+        .and_then(|c| c.get("batches"))
+        .and_then(|b| b.as_usize())
+        .unwrap_or(0);
+    svc.drain();
+
+    latencies.sort_by(f64::total_cmp);
+    RunResult {
+        p50_s: pctl(&latencies, 0.5),
+        p99_s: pctl(&latencies, 0.99),
+        bulk_rows_per_s: window_rows as f64 / window_s.max(1e-9),
+        interactive_batches,
+        scheduler,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let bulk_rows = args.get_usize("rows", 64).expect("--rows").max(1);
+    let probes = args.get_usize("probes", 40).expect("--probes").max(1);
+    let target_ms = args.get_usize("target-ms", 50).expect("--target-ms").max(1) as u64;
+    let json_path = args.get("json").map(std::path::PathBuf::from);
+
+    let entry = zoo::zoo_entries()
+        .into_iter()
+        .find(|e| e.spec.name == "cal_housing" && e.size == ZooSize::Small)
+        .unwrap();
+    let (model, data) = zoo::build(&entry);
+    let m = model.num_features;
+    let bulk_rows = bulk_rows.min(data.rows);
+    let x_bulk = Arc::new(data.features[..bulk_rows * m].to_vec());
+    let x_probe = data.features[..m].to_vec();
+    let model = Arc::new(model);
+    println!(
+        "mixed_load: {} — {}-row backfill × {} in flight, {} probes/run, \
+         interactive target {} ms, {} runs/scenario\n",
+        entry.name, bulk_rows, INFLIGHT, probes, target_ms, RUNS
+    );
+
+    let mut table = Table::new(&[
+        "scenario",
+        "probe p50(ms)",
+        "probe p99(ms)",
+        "bulk rows/s",
+        "interactive batches",
+    ]);
+    let mut report_fields: Vec<(&str, Json)> = vec![
+        ("model", Json::from(entry.name.as_str())),
+        ("bulk_rows", Json::from(bulk_rows)),
+        ("probes", Json::from(probes)),
+        ("target_ms", Json::from(target_ms as usize)),
+        ("runs", Json::from(RUNS)),
+    ];
+    let mut summary: Vec<(bool, f64, f64)> = Vec::new(); // (slo, p99, bulk_rps)
+    let mut slo_scheduler = Json::Null;
+
+    for &slo in &[false, true] {
+        let name = if slo { "slo" } else { "fifo" };
+        let mut p50s = Vec::with_capacity(RUNS);
+        let mut p99s = Vec::with_capacity(RUNS);
+        let mut bulk_rps = Vec::with_capacity(RUNS);
+        let mut batches = 0usize;
+        for _ in 0..RUNS {
+            let r = run_once(
+                &model, slo, bulk_rows, probes, target_ms, &x_bulk, &x_probe,
+            );
+            p50s.push(r.p50_s);
+            p99s.push(r.p99_s);
+            bulk_rps.push(r.bulk_rows_per_s);
+            batches = batches.max(r.interactive_batches);
+            if slo {
+                slo_scheduler = r.scheduler;
+            }
+        }
+        let (p50, p99) = (median(&p50s), median(&p99s));
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", p50 * 1e3),
+            format!("{:.2}", p99 * 1e3),
+            format!("{:.0}", median(&bulk_rps)),
+            batches.to_string(),
+        ]);
+        println!("{name} interactive_batches={batches}");
+        summary.push((slo, p99, median(&bulk_rps)));
+        report_fields.push((
+            if slo { "slo" } else { "fifo" },
+            Json::obj(vec![
+                ("interactive_p50_s", Json::from(p50)),
+                ("interactive_p99_s", Json::from(p99)),
+                ("bulk_rows_per_s", band_json(&bulk_rps)),
+                ("interactive_batches", Json::from(batches)),
+            ]),
+        ));
+        dump_record(
+            "mixed_load",
+            vec![
+                ("scenario", Json::from(name)),
+                ("interactive_p99_s", Json::from(p99)),
+                ("bulk_rows_per_s", Json::from(median(&bulk_rps))),
+                ("interactive_batches", Json::from(batches)),
+            ],
+        );
+    }
+
+    table.print();
+    println!("\nscheduler stats (last slo run): {}", slo_scheduler.to_string_pretty());
+
+    let fifo = summary.iter().find(|s| !s.0).unwrap();
+    let slo = summary.iter().find(|s| s.0).unwrap();
+    let p99_ratio = if fifo.1 > 0.0 { slo.1 / fifo.1 } else { 1.0 };
+    let bulk_ratio = if fifo.2 > 0.0 { slo.2 / fifo.2 } else { 1.0 };
+    println!(
+        "interactive p99: fifo {:.2} ms -> slo {:.2} ms ({:.2}x); \
+         bulk throughput slo/fifo = {:.2}",
+        fifo.1 * 1e3,
+        slo.1 * 1e3,
+        p99_ratio,
+        bulk_ratio
+    );
+    report_fields.push(("p99_ratio_slo_over_fifo", Json::from(p99_ratio)));
+    report_fields.push(("bulk_ratio_slo_over_fifo", Json::from(bulk_ratio)));
+
+    if let Some(path) = json_path {
+        write_json_report(&path, "mixed_load", Json::obj(report_fields))
+            .expect("write --json report");
+        println!("json report merged into {}", path.display());
+    }
+}

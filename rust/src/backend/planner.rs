@@ -579,11 +579,20 @@ impl Planner {
     /// `caps().setup_cost_s` — which the prepared-model cache drives
     /// toward zero on rebuilds) into the candidate's estimate.
     /// Construction time is observed exactly rather than inferred, so
-    /// the measurement replaces the estimate outright. Returns whether
-    /// the estimate moved.
+    /// the measurement replaces the estimate outright — and it anchors
+    /// the *prior's* `setup_s` too, like [`Planner::seed_calibration`]:
+    /// every later [`Planner::recalibrate`] blend restarts from the
+    /// stored prior, so without re-anchoring, the first thin-window
+    /// recalibration would snap the setup term back to the shipped
+    /// constant and forget the measurement (the FastV2 table-build
+    /// `prep_s` path hit exactly this). Returns whether the estimate
+    /// moved.
     pub fn observe_setup(&mut self, kind: BackendKind, setup_s: f64) -> bool {
         if !setup_s.is_finite() || setup_s < 0.0 {
             return false;
+        }
+        if let Some((_, p)) = self.priors.iter_mut().find(|(k, _)| *k == kind) {
+            p.setup_s = setup_s;
         }
         match self.candidates.iter_mut().find(|(k, _)| *k == kind) {
             Some((_, c)) => {
@@ -705,6 +714,30 @@ mod tests {
             p.batch_cost(BackendKind::XlaWarp, cross).unwrap()
                 <= p.batch_cost(BackendKind::Recursive, cross).unwrap() + 1e-9
         );
+    }
+
+    #[test]
+    fn observe_setup_anchors_the_prior() {
+        // regression (FastV2 prep_s): a measured setup cost must survive
+        // the next recalibration. `calibrate()` rebuilds each estimate
+        // with `setup_s: prior.setup_s`, so observing setup only on the
+        // candidate reverted to the shipped constant one recalibrate
+        // later.
+        let mut p = synthetic_planner();
+        assert!(p.observe_setup(BackendKind::XlaWarp, 0.02));
+        assert_eq!(p.cost(BackendKind::XlaWarp).unwrap().setup_s, 0.02);
+        assert_eq!(p.prior(BackendKind::XlaWarp).unwrap().setup_s, 0.02, "prior anchored");
+        // a steady-only recalibration keeps the measured setup term
+        let mut obs = Observations::new();
+        let line: Vec<(f64, f64)> =
+            (1..40).map(|i| (i as f64 * 10.0, 0.05 + i as f64 * 10.0 / 1e6)).collect();
+        obs.per_backend.insert(BackendKind::XlaWarp.name().to_string(), line);
+        p.recalibrate(&obs);
+        assert_eq!(p.cost(BackendKind::XlaWarp).unwrap().setup_s, 0.02);
+        // rejects junk, repeat observation reports "unmoved"
+        assert!(!p.observe_setup(BackendKind::XlaWarp, f64::NAN));
+        assert!(!p.observe_setup(BackendKind::XlaWarp, -1.0));
+        assert!(!p.observe_setup(BackendKind::XlaWarp, 0.02));
     }
 
     #[test]

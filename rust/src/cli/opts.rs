@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use crate::backend::{self, BackendConfig, BackendKind, ShapBackend, ShardAxis};
 use crate::cli::Args;
-use crate::coordinator::ServiceConfig;
+use crate::coordinator::{Class, ClassPolicy, ServiceConfig};
 use crate::data::csv::{load_csv, CsvOptions};
 use crate::data::{Dataset, SynthSpec};
 use crate::gbdt::Model;
@@ -150,9 +150,50 @@ pub fn calibration_path(args: &Args) -> Result<Option<PathBuf>> {
     })
 }
 
+/// Resolve `--class-target interactive=50,batch=2000` (milliseconds per
+/// class; unnamed classes keep their [`ClassPolicy::defaults`] targets).
+pub fn class_targets(args: &Args) -> Result<[Duration; Class::COUNT]> {
+    let defaults = ClassPolicy::defaults();
+    let mut targets = [defaults[0].target, defaults[1].target];
+    let Some(spec) = args.get("class-target") else {
+        return Ok(targets);
+    };
+    for pair in spec.split(',').filter(|s| !s.is_empty()) {
+        let (name, ms) = pair.split_once('=').ok_or_else(|| {
+            anyhow!("bad --class-target entry '{pair}' (want class=milliseconds)")
+        })?;
+        let class = Class::parse(name).ok_or_else(|| {
+            anyhow!("unknown class '{name}' in --class-target (one of: {})", Class::name_list())
+        })?;
+        let ms: u64 = ms
+            .parse()
+            .map_err(|_| anyhow!("bad --class-target milliseconds '{ms}' for '{name}'"))?;
+        targets[class.index()] = Duration::from_millis(ms);
+    }
+    Ok(targets)
+}
+
+/// Resolve `--priority` / `--deadline-ms` into the scheduling fields a
+/// client-side request carries.
+pub fn request_class(args: &Args) -> Result<(Class, Option<u64>)> {
+    let class = match args.get("priority") {
+        Some(s) => Class::parse(s).ok_or_else(|| {
+            anyhow!("unknown priority '{s}' (one of: {})", Class::name_list())
+        })?,
+        None => Class::default(),
+    };
+    let deadline = match args.get("deadline-ms") {
+        Some(s) => Some(
+            s.parse::<u64>().map_err(|_| anyhow!("bad --deadline-ms '{s}' (want integer)"))?,
+        ),
+        None => None,
+    };
+    Ok((class, deadline))
+}
+
 /// Assemble the service config the serve paths share (`--devices`,
 /// `--shard-axis`, `--max-batch`, `--max-wait-ms`,
-/// `--recalibrate-every`, `--calibration`).
+/// `--recalibrate-every`, `--calibration`, `--class-target`).
 pub fn service_config(args: &Args) -> Result<ServiceConfig> {
     Ok(ServiceConfig {
         devices: args.get_usize("devices", 1)?,
@@ -162,19 +203,43 @@ pub fn service_config(args: &Args) -> Result<ServiceConfig> {
         // measure→calibrate→plan cadence in executed batches (0 = static)
         recalibrate_every: args.get_usize("recalibrate-every", 64)?,
         calibration_path: calibration_path(args)?,
+        class_targets: class_targets(args)?,
         ..Default::default()
     })
 }
 
-/// Parse a `name=path[,name=path…]` model manifest (`serve --models`).
-pub fn parse_model_manifest(spec: &str) -> Result<Vec<(String, PathBuf)>> {
+/// Parse a `name=path[;weight=W][,…]` model manifest (`serve --models`):
+/// `weight` sets the entry's fairness share of the device pool under
+/// cross-model interactive pressure (default 1.0).
+pub fn parse_model_manifest(spec: &str) -> Result<Vec<(String, PathBuf, f64)>> {
     spec.split(',')
         .filter(|s| !s.is_empty())
-        .map(|pair| {
-            let (name, path) = pair
-                .split_once('=')
-                .ok_or_else(|| anyhow!("bad --models entry '{pair}' (want name=path)"))?;
-            Ok((name.to_string(), PathBuf::from(path)))
+        .map(|entry| {
+            let mut parts = entry.split(';');
+            let pair = parts.next().unwrap_or("");
+            let (name, path) = pair.split_once('=').ok_or_else(|| {
+                anyhow!("bad --models entry '{pair}' (want name=path[;weight=W])")
+            })?;
+            let mut weight = 1.0f64;
+            for opt in parts {
+                let (key, value) = opt.split_once('=').ok_or_else(|| {
+                    anyhow!("bad --models option '{opt}' for '{name}' (want weight=W)")
+                })?;
+                match key {
+                    "weight" => {
+                        weight = value.parse().map_err(|_| {
+                            anyhow!("bad --models weight '{value}' for '{name}'")
+                        })?;
+                        if !weight.is_finite() || weight <= 0.0 {
+                            bail!("--models weight for '{name}' must be positive, got {value}");
+                        }
+                    }
+                    other => bail!(
+                        "unknown --models option '{other}' for '{name}' (known: weight)"
+                    ),
+                }
+            }
+            Ok((name.to_string(), PathBuf::from(path), weight))
         })
         .collect()
 }
@@ -220,12 +285,58 @@ mod tests {
         assert_eq!(
             got,
             vec![
-                ("m1".to_string(), PathBuf::from("a/b.gtsm")),
-                ("m2".to_string(), PathBuf::from("c.json")),
+                ("m1".to_string(), PathBuf::from("a/b.gtsm"), 1.0),
+                ("m2".to_string(), PathBuf::from("c.json"), 1.0),
             ]
         );
         assert!(parse_model_manifest("nopath").is_err());
         assert_eq!(parse_model_manifest("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn model_manifest_weights() {
+        let got = parse_model_manifest("bulk=a.gtsm;weight=1,chat=b.gtsm;weight=4.5").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("bulk".to_string(), PathBuf::from("a.gtsm"), 1.0),
+                ("chat".to_string(), PathBuf::from("b.gtsm"), 4.5),
+            ]
+        );
+        let err = format!("{:#}", parse_model_manifest("m=a.gtsm;weight=-1").unwrap_err());
+        assert!(err.contains("positive"), "{err}");
+        let err = format!("{:#}", parse_model_manifest("m=a.gtsm;wieght=2").unwrap_err());
+        assert!(err.contains("unknown --models option 'wieght'"), "{err}");
+        assert!(err.contains("weight"), "error names the fix: {err}");
+    }
+
+    #[test]
+    fn class_targets_parse_and_default() {
+        let defaults = ClassPolicy::defaults();
+        let t = class_targets(&parse("serve")).unwrap();
+        assert_eq!(t[Class::Interactive.index()], defaults[Class::Interactive.index()].target);
+        assert_eq!(t[Class::Batch.index()], defaults[Class::Batch.index()].target);
+        // one named class overrides only itself
+        let t = class_targets(&parse("serve --class-target interactive=40")).unwrap();
+        assert_eq!(t[Class::Interactive.index()], Duration::from_millis(40));
+        assert_eq!(t[Class::Batch.index()], defaults[Class::Batch.index()].target);
+        let t = class_targets(&parse("serve --class-target interactive=40,batch=3000")).unwrap();
+        assert_eq!(t[Class::Batch.index()], Duration::from_millis(3000));
+        let err =
+            format!("{:#}", class_targets(&parse("serve --class-target vip=1")).unwrap_err());
+        assert!(err.contains("unknown class 'vip'"), "{err}");
+        assert!(class_targets(&parse("serve --class-target interactive=abc")).is_err());
+    }
+
+    #[test]
+    fn request_class_flags() {
+        assert_eq!(request_class(&parse("client")).unwrap(), (Class::Batch, None));
+        assert_eq!(
+            request_class(&parse("client --priority interactive --deadline-ms 40")).unwrap(),
+            (Class::Interactive, Some(40))
+        );
+        assert!(request_class(&parse("client --priority vip")).is_err());
+        assert!(request_class(&parse("client --deadline-ms soon")).is_err());
     }
 
     #[test]

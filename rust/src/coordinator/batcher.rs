@@ -1,9 +1,180 @@
-//! Dynamic batching policy: coalesce queued explain requests into device
-//! batches that fill the artifact's row bucket (throughput) without
-//! letting small requests wait longer than `max_wait` (latency) — the
-//! trade-off Fig 4 of the paper quantifies.
+//! Dynamic batching policy with SLO-aware priority classes: coalesce
+//! queued explain requests into device batches that fill the artifact's
+//! row bucket (throughput) without letting small requests wait longer
+//! than `max_wait` (latency) — the trade-off Fig 4 of the paper
+//! quantifies — and schedule across two priority [`Class`]es on top:
+//!
+//! - **interactive** requests lead batch formation and carry a tight
+//!   latency target; **batch** (bulk) work fills the remaining bucket
+//!   capacity behind them,
+//! - a weighted deficit counter per class accumulates the bulk class's
+//!   unserved row entitlement while interactive leads, so bulk work is
+//!   delayed boundedly, never starved,
+//! - the executor's calibrated [`CostLine`] lets `ready` *predict* a
+//!   batch's completion time, closing a batch early when the oldest
+//!   request could no longer meet its class target (or its own
+//!   `deadline`) by waiting for more coalescing,
+//! - strict FIFO order is preserved within each class (queues drain as
+//!   prefixes, never reordered),
+//! - cross-model fairness: a [`PoolShare`] caps how much of the bucket
+//!   bulk work may fill while another model on the same device pool has
+//!   interactive work queued ([`PoolPressure`]).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Priority class of a request: `Interactive` requests lead batch
+/// formation under a tight latency target; `Batch` (the default) is
+/// bulk work that fills remaining capacity behind them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Class {
+    Interactive,
+    #[default]
+    Batch,
+}
+
+impl Class {
+    pub const ALL: [Class; 2] = [Class::Interactive, Class::Batch];
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Batch => "batch",
+        }
+    }
+
+    /// Parse a class name (case-insensitive); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Class> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(Class::Interactive),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+
+    /// The valid class names, `|`-joined for error messages.
+    pub fn name_list() -> String {
+        Class::ALL.iter().map(|c| c.name()).collect::<Vec<_>>().join("|")
+    }
+}
+
+/// The calibrated `latency ≈ overhead + rows/throughput` line of the
+/// executor's current backend, published by the executor thread so the
+/// batcher can predict a batch's completion time at enqueue time
+/// instead of only measuring it retrospectively.
+#[derive(Clone, Copy, Debug)]
+pub struct CostLine {
+    pub batch_overhead_s: f64,
+    pub rows_per_s: f64,
+}
+
+impl CostLine {
+    /// Predicted execution latency of a `rows`-row batch, seconds.
+    pub fn predict_s(&self, rows: usize) -> f64 {
+        self.batch_overhead_s + rows as f64 / self.rows_per_s.max(1e-9)
+    }
+}
+
+/// Per-class scheduling policy: the latency target (SLO) responses are
+/// judged against and the deficit-round-robin weight (the class's share
+/// of bucket capacity under contention).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassPolicy {
+    pub target: Duration,
+    pub weight: f64,
+}
+
+impl ClassPolicy {
+    /// Default policies: interactive targets 50 ms at 4× the bulk
+    /// class's capacity share; bulk targets 1 s.
+    pub fn defaults() -> [ClassPolicy; Class::COUNT] {
+        [
+            ClassPolicy { target: Duration::from_millis(50), weight: 4.0 },
+            ClassPolicy { target: Duration::from_secs(1), weight: 1.0 },
+        ]
+    }
+}
+
+/// Cross-model fairness gauge shared by every service on one device
+/// pool: how many interactive requests are queued pool-wide and the
+/// total share weight of running services. Services forming bulk-led
+/// batches consult it through their [`PoolShare`].
+#[derive(Debug, Default)]
+pub struct PoolPressure {
+    /// interactive requests currently queued across all services
+    interactive: AtomicU64,
+    /// sum of running services' share weights, stored in thousandths so
+    /// an atomic suffices
+    weight_milli: AtomicU64,
+}
+
+impl PoolPressure {
+    pub fn new() -> Arc<PoolPressure> {
+        Arc::new(PoolPressure::default())
+    }
+
+    pub fn add_interactive(&self, n: u64) {
+        self.interactive.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub_interactive(&self, n: u64) {
+        let _ = self.interactive.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    pub fn queued_interactive(&self) -> u64 {
+        self.interactive.load(Ordering::Relaxed)
+    }
+
+    pub fn add_weight(&self, w: f64) {
+        self.weight_milli.fetch_add((w.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn remove_weight(&self, w: f64) {
+        let milli = (w.max(0.0) * 1e3) as u64;
+        let _ = self.weight_milli.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(milli))
+        });
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weight_milli.load(Ordering::Relaxed) as f64 / 1e3
+    }
+}
+
+/// One service's stake in the pool-wide fairness gauge: the shared
+/// [`PoolPressure`] plus this model's share weight.
+#[derive(Clone, Debug)]
+pub struct PoolShare {
+    pub pressure: Arc<PoolPressure>,
+    pub weight: f64,
+}
+
+impl PoolShare {
+    /// Rows of the bucket that bulk-class requests may fill right now:
+    /// the full bucket while the pool is otherwise idle, but only this
+    /// model's weighted share while *another* model has interactive
+    /// work queued (`own_interactive` subtracts this service's own
+    /// queue, so a model never yields to its own interactive traffic —
+    /// the in-batcher class scheduling already handles that).
+    pub fn batch_fill(&self, own_interactive: u64, max_rows: usize) -> usize {
+        if self.pressure.queued_interactive() <= own_interactive {
+            return max_rows;
+        }
+        let total = self.pressure.total_weight().max(self.weight);
+        (((max_rows as f64) * self.weight / total).ceil() as usize).clamp(1, max_rows)
+    }
+}
 
 /// A request's rows as admitted to the batcher.
 #[derive(Debug)]
@@ -11,71 +182,206 @@ pub struct PendingRequest<T> {
     pub rows: usize,
     pub payload: T,
     pub arrived: Instant,
+    pub class: Class,
+    /// absolute completion deadline, when the request carried one
+    pub deadline: Option<Instant>,
 }
 
-/// Accumulates requests; `take_batch` drains a prefix obeying the policy.
+/// Accumulates requests in per-class queues; `take_batch` drains class
+/// prefixes obeying the policy.
 pub struct Batcher<T> {
-    queue: std::collections::VecDeque<PendingRequest<T>>,
+    queues: [std::collections::VecDeque<PendingRequest<T>>; Class::COUNT],
     pub max_batch_rows: usize,
     pub max_wait: Duration,
-    queued_rows: usize,
+    policies: [ClassPolicy; Class::COUNT],
+    /// unserved row entitlement per class (deficit round-robin)
+    deficit: [f64; Class::COUNT],
+    queued_rows: [usize; Class::COUNT],
+    cost: Option<CostLine>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch_rows: usize, max_wait: Duration) -> Self {
         Batcher {
-            queue: Default::default(),
+            queues: Default::default(),
             max_batch_rows,
             max_wait,
-            queued_rows: 0,
+            policies: ClassPolicy::defaults(),
+            deficit: [0.0; Class::COUNT],
+            queued_rows: [0; Class::COUNT],
+            cost: None,
         }
     }
 
+    /// Replace the per-class targets/weights (builder style).
+    pub fn with_policies(mut self, policies: [ClassPolicy; Class::COUNT]) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    /// Publish the executor's current calibrated cost line (`None`
+    /// disables predictive early close; the `max_wait` bound remains).
+    pub fn set_cost_line(&mut self, cost: Option<CostLine>) {
+        self.cost = cost;
+    }
+
+    /// Admit a bulk-class request with no deadline (the default class).
     pub fn push(&mut self, rows: usize, payload: T) {
-        self.queued_rows += rows;
-        self.queue.push_back(PendingRequest { rows, payload, arrived: Instant::now() });
+        self.push_in(Class::Batch, rows, None, payload);
+    }
+
+    /// Admit a request under `class`, optionally with an absolute
+    /// completion deadline (tightens the class target for this request).
+    pub fn push_in(&mut self, class: Class, rows: usize, deadline: Option<Instant>, payload: T) {
+        self.queued_rows[class.index()] += rows;
+        self.queues[class.index()].push_back(PendingRequest {
+            rows,
+            payload,
+            arrived: Instant::now(),
+            class,
+            deadline,
+        });
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.queues.iter().all(|q| q.is_empty())
     }
 
     pub fn queued_rows(&self) -> usize {
-        self.queued_rows
+        self.queued_rows.iter().sum()
     }
 
-    /// Should we flush now? Either the bucket is full or the oldest
-    /// request has waited long enough.
+    /// Should we flush now? Yes when the bucket is full, when any class
+    /// head has waited `max_wait` (the hard cap), or — with a published
+    /// cost line — when a class head's *predicted* completion (wait so
+    /// far + calibrated execution cost of what is queued) would breach
+    /// its class target or its own deadline: waiting for more
+    /// coalescing could only make it later.
+    ///
+    /// Invariant: the timeout clocks from each *current* head's own
+    /// `arrived`. A later-arriving request that becomes head (e.g.
+    /// after an oversized head drained alone) waits out its own
+    /// `max_wait`; it never inherits the drained head's older
+    /// timestamp.
     pub fn ready(&self, now: Instant) -> bool {
-        if self.queue.is_empty() {
+        if self.is_empty() {
             return false;
         }
-        self.queued_rows >= self.max_batch_rows
-            || now.duration_since(self.queue[0].arrived) >= self.max_wait
+        if self.queued_rows() >= self.max_batch_rows {
+            return true;
+        }
+        let exec_s = self
+            .cost
+            .map(|c| c.predict_s(self.queued_rows().min(self.max_batch_rows)))
+            .filter(|s| s.is_finite() && *s >= 0.0)
+            .unwrap_or(0.0);
+        let exec = Duration::from_secs_f64(exec_s.min(3600.0));
+        for class in Class::ALL {
+            let Some(head) = self.queues[class.index()].front() else { continue };
+            let waited = now.saturating_duration_since(head.arrived);
+            if waited >= self.max_wait {
+                return true;
+            }
+            if waited + exec >= self.policies[class.index()].target {
+                return true;
+            }
+            if let Some(deadline) = head.deadline {
+                if now + exec >= deadline {
+                    return true;
+                }
+            }
+        }
+        false
     }
 
-    /// Drain requests up to `max_batch_rows` (always at least one).
-    ///
-    /// Fairness guarantee: requests leave in strict FIFO arrival order —
-    /// this drains a *prefix* of the queue, never skips around it. A
-    /// request at the head that is larger than `max_batch_rows` is
-    /// admitted alone rather than held (no starvation of oversized
-    /// requests), and later small requests can never overtake an
-    /// earlier large one, so per-request queueing delay is bounded by
-    /// the work admitted ahead of it plus `max_wait`.
+    /// Drain one batch up to `max_batch_rows` (always at least one
+    /// request).
     pub fn take_batch(&mut self) -> Vec<PendingRequest<T>> {
+        self.take_batch_capped(self.max_batch_rows)
+    }
+
+    /// Drain one batch; `batch_fill` additionally caps the rows
+    /// *bulk-class* requests may contribute (cross-model yielding via
+    /// [`PoolShare::batch_fill`]). The leading request is always
+    /// admitted whole regardless of caps, so capping never starves.
+    ///
+    /// Scheduling guarantees:
+    /// - strict FIFO within a class: each class queue drains as a
+    ///   *prefix*, later arrivals never overtake earlier ones in the
+    ///   same class;
+    /// - interactive leads, bulk fills the remaining bucket capacity;
+    /// - a weighted deficit counter accumulates the bulk class's
+    ///   unserved row entitlement (`weight`-proportional) while
+    ///   interactive leads; once a full bucket of entitlement is owed,
+    ///   the next batch is bulk-led — bounded bypass, no starvation;
+    /// - a head larger than the bucket is admitted alone rather than
+    ///   held (no starvation of oversized requests).
+    pub fn take_batch_capped(&mut self, batch_fill: usize) -> Vec<PendingRequest<T>> {
+        let active: Vec<Class> = Class::ALL
+            .into_iter()
+            .filter(|c| !self.queues[c.index()].is_empty())
+            .collect();
+        let order = if self.lead_class() == Class::Batch {
+            [Class::Batch, Class::Interactive]
+        } else {
+            [Class::Interactive, Class::Batch]
+        };
         let mut out = Vec::new();
-        let mut rows = 0;
-        while let Some(front) = self.queue.front() {
-            if !out.is_empty() && rows + front.rows > self.max_batch_rows {
-                break;
+        let mut rows = 0usize;
+        let mut taken = [0usize; Class::COUNT];
+        for class in order {
+            let i = class.index();
+            while let Some(front) = self.queues[i].front() {
+                if !out.is_empty() {
+                    if rows + front.rows > self.max_batch_rows {
+                        break;
+                    }
+                    if class == Class::Batch && taken[i] + front.rows > batch_fill {
+                        break;
+                    }
+                }
+                let req = self.queues[i].pop_front().unwrap();
+                rows += req.rows;
+                taken[i] += req.rows;
+                self.queued_rows[i] -= req.rows;
+                out.push(req);
             }
-            let req = self.queue.pop_front().unwrap();
-            rows += req.rows;
-            self.queued_rows -= req.rows;
-            out.push(req);
+        }
+        // deficit round-robin bookkeeping: with both classes queued,
+        // each class was entitled to its weight-share of this batch's
+        // rows; what it did not get accrues as deficit (clamped so old
+        // debt cannot buy unbounded bursts)
+        if active.len() > 1 {
+            let w_total: f64 = active.iter().map(|c| self.policies[c.index()].weight).sum();
+            for c in &active {
+                let i = c.index();
+                let entitle = rows as f64 * self.policies[i].weight / w_total.max(1e-9);
+                self.deficit[i] = (self.deficit[i] + entitle - taken[i] as f64)
+                    .clamp(0.0, 2.0 * self.max_batch_rows as f64);
+            }
+        } else if let Some(c) = active.first() {
+            // sole class gets full service: pay down its deficit
+            let i = c.index();
+            self.deficit[i] = (self.deficit[i] - taken[i] as f64).max(0.0);
         }
         out
+    }
+
+    /// Which class leads the next batch: interactive whenever it has
+    /// work, unless the bulk class is owed a full bucket of entitlement
+    /// (the anti-starvation bypass).
+    fn lead_class(&self) -> Class {
+        if self.queues[Class::Interactive.index()].is_empty() {
+            return Class::Batch;
+        }
+        if self.queues[Class::Batch.index()].is_empty() {
+            return Class::Interactive;
+        }
+        if self.deficit[Class::Batch.index()] >= self.max_batch_rows as f64 {
+            Class::Batch
+        } else {
+            Class::Interactive
+        }
     }
 }
 
@@ -142,7 +448,7 @@ mod tests {
         let max_wait = Duration::from_millis(50);
         let mut b: Batcher<u32> = Batcher::new(1000, max_wait);
         b.push(1, 9);
-        let arrived = b.queue[0].arrived;
+        let arrived = b.queues[Class::Batch.index()][0].arrived;
         assert!(!b.ready(arrived), "fresh request must not flush");
         assert!(
             !b.ready(arrived + max_wait - Duration::from_nanos(1)),
@@ -150,6 +456,35 @@ mod tests {
         );
         assert!(b.ready(arrived + max_wait), "exactly max_wait must flush (>=)");
         assert!(b.ready(arrived + max_wait + Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn drained_head_does_not_backdate_followers() {
+        // regression for the `ready` timeout invariant: the flush clock
+        // runs from the *current* head's own arrival. After an
+        // oversized head drains alone, the later-arriving small
+        // follower must wait out its own `max_wait` — it must not
+        // inherit the drained head's older timestamp and flush ahead of
+        // schedule.
+        let max_wait = Duration::from_millis(50);
+        let mut b: Batcher<u32> = Batcher::new(10, max_wait);
+        let t0 = Instant::now();
+        b.push(25, 1); // oversized head
+        b.push(2, 2); // small follower, arrives "now"
+        // age the head far past max_wait; the follower stays fresh
+        b.queues[Class::Batch.index()][0].arrived = t0 - Duration::from_millis(200);
+        assert!(b.ready(t0), "aged oversized head must flush");
+        let first = b.take_batch();
+        assert_eq!((first[0].rows, first[0].payload), (25, 1), "head drains alone");
+        // the follower is now head — its own arrival governs the clock
+        assert!(
+            !b.ready(t0 + Duration::from_millis(30)),
+            "follower must not inherit the drained head's age"
+        );
+        assert!(
+            b.ready(t0 + Duration::from_millis(200)),
+            "follower flushes once its own max_wait elapses"
+        );
     }
 
     #[test]
@@ -162,5 +497,105 @@ mod tests {
         assert_eq!(batch.len(), 10);
         assert!(b.is_empty());
         assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn interactive_leads_and_bulk_fills_capacity() {
+        let mut b: Batcher<u32> = Batcher::new(100, Duration::from_secs(1));
+        b.push_in(Class::Batch, 50, None, 1); // bulk arrived first
+        b.push_in(Class::Interactive, 30, None, 2);
+        b.push_in(Class::Interactive, 20, None, 3);
+        let batch = b.take_batch();
+        let payloads: Vec<u32> = batch.iter().map(|p| p.payload).collect();
+        // interactive pair leads (FIFO within its class), bulk fills
+        // the remaining 50 rows of the bucket
+        assert_eq!(payloads, vec![2, 3, 1]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn bulk_only_traffic_behaves_fifo() {
+        // with a single class queued, scheduling degenerates to the
+        // plain FIFO policy — the pre-class behavior
+        let mut b: Batcher<u32> = Batcher::new(25, Duration::from_secs(1));
+        for i in 0..5 {
+            b.push(10, i);
+        }
+        let payloads: Vec<u32> = b.take_batch().iter().map(|p| p.payload).collect();
+        assert_eq!(payloads, vec![0, 1]);
+        let payloads: Vec<u32> = b.take_batch().iter().map(|p| p.payload).collect();
+        assert_eq!(payloads, vec![2, 3]);
+    }
+
+    #[test]
+    fn deficit_counter_prevents_bulk_starvation() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_secs(10));
+        b.push_in(Class::Batch, 10, None, 999);
+        // interactive keeps the bucket saturated; with weights 4:1 the
+        // bulk class accrues 1/5 of each 10-row batch as entitlement
+        // and must be served within ~5 buckets
+        let mut bypassed = 0u32;
+        loop {
+            b.push_in(Class::Interactive, 10, None, bypassed);
+            let batch = b.take_batch();
+            assert_eq!(batch.len(), 1);
+            if batch[0].class == Class::Batch {
+                break;
+            }
+            bypassed += 1;
+            assert!(bypassed < 50, "bulk request starved");
+        }
+        assert!(bypassed <= 6, "bulk served after {bypassed} interactive batches");
+    }
+
+    #[test]
+    fn cost_line_closes_batches_early_for_interactive() {
+        // bucket far from full, max_wait far away — but the calibrated
+        // cost line predicts ~100ms of execution for what is queued,
+        // past the 50ms interactive target: the batch must close now
+        let mut b: Batcher<u32> = Batcher::new(1000, Duration::from_secs(10));
+        b.set_cost_line(Some(CostLine { batch_overhead_s: 0.0, rows_per_s: 1000.0 }));
+        b.push_in(Class::Batch, 100, None, 1);
+        assert!(!b.ready(Instant::now()), "bulk target (1s) tolerates 100ms");
+        b.push_in(Class::Interactive, 1, None, 2);
+        assert!(
+            b.ready(Instant::now()),
+            "interactive head cannot make its 50ms target by waiting longer"
+        );
+    }
+
+    #[test]
+    fn explicit_deadline_tightens_the_class_target() {
+        let mut b: Batcher<u32> = Batcher::new(1000, Duration::from_secs(10));
+        b.set_cost_line(Some(CostLine { batch_overhead_s: 0.0, rows_per_s: 1e6 }));
+        let now = Instant::now();
+        b.push_in(Class::Batch, 1, Some(now + Duration::from_millis(20)), 1);
+        assert!(!b.ready(now), "deadline 20ms out, exec ~1µs: keep coalescing");
+        assert!(
+            b.ready(now + Duration::from_millis(20)),
+            "predicted completion past the request deadline must flush"
+        );
+    }
+
+    #[test]
+    fn pool_share_caps_bulk_fill_under_interactive_pressure() {
+        let pressure = PoolPressure::new();
+        pressure.add_weight(1.0);
+        pressure.add_weight(3.0);
+        let bulk = PoolShare { pressure: pressure.clone(), weight: 1.0 };
+        // idle pool: bulk saturates the bucket
+        assert_eq!(bulk.batch_fill(0, 100), 100);
+        // another model has interactive queued: bulk yields to its share
+        pressure.add_interactive(2);
+        assert_eq!(bulk.batch_fill(0, 100), 25);
+        // a model's own interactive queue does not make it yield to itself
+        assert_eq!(bulk.batch_fill(2, 100), 100);
+        pressure.sub_interactive(2);
+        assert_eq!(bulk.batch_fill(0, 100), 100);
+        // weight accounting survives remove; sub below zero saturates
+        pressure.remove_weight(3.0);
+        assert!((pressure.total_weight() - 1.0).abs() < 1e-9);
+        pressure.sub_interactive(5);
+        assert_eq!(pressure.queued_interactive(), 0);
     }
 }

@@ -20,6 +20,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::backend::calibrate::Observations;
+use crate::coordinator::batcher::Class;
 use crate::util::{Json, Stats};
 
 /// Cap on every retained sample window: keeps p50/p99 (and calibration
@@ -114,6 +115,22 @@ impl BackendCounters {
     }
 }
 
+/// Per-priority-class scheduling tallies: request/batch counts plus a
+/// windowed latency ring so the scheduler stats can report per-class
+/// p50/p99 and SLO violations independently of the global window.
+#[derive(Clone, Debug, Default)]
+struct ClassCounters {
+    requests: u64,
+    rows: u64,
+    /// batches whose lead (head-of-batch) request was this class
+    batches: u64,
+    batch_rows: u64,
+    /// completed requests whose latency exceeded the effective SLO
+    /// (class target tightened by any explicit per-request deadline)
+    slo_violations: u64,
+    latencies: Ring<f64>,
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -135,6 +152,11 @@ pub struct Metrics {
     per_shard: Mutex<BTreeMap<usize, BackendCounters>>,
     /// the executor's current plan + calibration state, for `snapshot`
     plan_info: Mutex<Option<Json>>,
+    /// per-priority-class scheduling tallies, [`Class::index`]-ordered
+    per_class: Mutex<[ClassCounters; Class::COUNT]>,
+    /// per-class latency targets (seconds) the SLO-violation counter
+    /// judges against; ≤ 0 disables the class-target check
+    class_targets: Mutex<[f64; Class::COUNT]>,
 }
 
 impl Metrics {
@@ -191,6 +213,77 @@ impl Metrics {
     /// under `"planner"` in [`Metrics::snapshot`].
     pub fn set_plan_info(&self, info: Json) {
         *self.plan_info.lock().unwrap() = Some(info);
+    }
+
+    /// Install the per-class latency targets (seconds) used for SLO
+    /// accounting; call once at service start before traffic flows.
+    pub fn set_class_targets(&self, targets: [f64; Class::COUNT]) {
+        *self.class_targets.lock().unwrap() = targets;
+    }
+
+    /// One admitted request of the given class.
+    pub fn record_class_request(&self, class: Class, rows: usize) {
+        let mut per = self.per_class.lock().unwrap();
+        let c = &mut per[class.index()];
+        c.requests += 1;
+        c.rows += rows as u64;
+    }
+
+    /// One dispatched batch, attributed to the class of its lead
+    /// (head-of-batch) request — interactive-led batches may still carry
+    /// batch-class fill rows, which is the point of the scheduler.
+    pub fn record_class_batch(&self, lead: Class, rows: usize) {
+        let mut per = self.per_class.lock().unwrap();
+        let c = &mut per[lead.index()];
+        c.batches += 1;
+        c.batch_rows += rows as u64;
+    }
+
+    /// One completed request's end-to-end latency, judged against the
+    /// class target tightened by any explicit per-request deadline.
+    pub fn record_class_latency(&self, class: Class, d: Duration, deadline_ms: Option<u64>) {
+        let secs = d.as_secs_f64();
+        let target = self.class_targets.lock().unwrap()[class.index()];
+        let mut slo = if target > 0.0 { target } else { f64::INFINITY };
+        if let Some(ms) = deadline_ms {
+            slo = slo.min(ms as f64 / 1e3);
+        }
+        let mut per = self.per_class.lock().unwrap();
+        let c = &mut per[class.index()];
+        c.latencies.push(secs);
+        if secs > slo {
+            c.slo_violations += 1;
+        }
+    }
+
+    /// Per-class scheduling stats as JSON:
+    /// class name → {requests, rows, batches, batch_rows, target_s,
+    /// latency_p50_s, latency_p99_s, slo_violations}.
+    pub fn scheduler_snapshot(&self) -> Json {
+        let per = self.per_class.lock().unwrap().clone();
+        let targets = *self.class_targets.lock().unwrap();
+        Json::Obj(
+            Class::ALL
+                .iter()
+                .map(|&class| {
+                    let c = &per[class.index()];
+                    let lat = Stats::from_samples(c.latencies.as_slice());
+                    (
+                        class.name().to_string(),
+                        Json::obj(vec![
+                            ("requests", Json::from(c.requests as usize)),
+                            ("rows", Json::from(c.rows as usize)),
+                            ("batches", Json::from(c.batches as usize)),
+                            ("batch_rows", Json::from(c.batch_rows as usize)),
+                            ("target_s", Json::from(targets[class.index()])),
+                            ("latency_p50_s", Json::from(lat.p50)),
+                            ("latency_p99_s", Json::from(lat.p99)),
+                            ("slo_violations", Json::from(c.slo_violations as usize)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
     }
 
     /// One executed batch on the named backend.
@@ -356,6 +449,7 @@ impl Metrics {
             ("latency_mean_s", Json::from(lat.mean)),
             ("mean_batch_rows", Json::from(bat.mean)),
             ("planner", planner),
+            ("scheduler", self.scheduler_snapshot()),
             ("backends", self.backend_snapshot()),
             ("shards", self.shard_snapshot()),
         ])
@@ -526,6 +620,50 @@ mod tests {
         assert_eq!(counters[&0].rows, 20, "old 1 → 0");
         assert_eq!(counters[&1].rows, 30, "old 2 → 1");
         assert_eq!(counters[&2].rows, 50, "old 4 → 2");
+    }
+
+    #[test]
+    fn scheduler_snapshot_splits_classes_and_counts_violations() {
+        let m = Metrics::new();
+        m.set_class_targets([0.05, 1.0]);
+        m.record_class_request(Class::Interactive, 1);
+        m.record_class_request(Class::Batch, 100);
+        m.record_class_batch(Class::Interactive, 41);
+        m.record_class_batch(Class::Batch, 60);
+        // interactive: 10ms ok, 80ms breaches the 50ms target
+        m.record_class_latency(Class::Interactive, Duration::from_millis(10), None);
+        m.record_class_latency(Class::Interactive, Duration::from_millis(80), None);
+        // batch: 500ms within the 1s target, but an explicit 200ms
+        // deadline tightens the effective SLO
+        m.record_class_latency(Class::Batch, Duration::from_millis(500), Some(200));
+        let sched = m.scheduler_snapshot();
+        let it = sched.get("interactive").unwrap();
+        assert_eq!(it.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(it.get("batches").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(it.get("batch_rows").unwrap().as_usize().unwrap(), 41);
+        assert_eq!(it.get("slo_violations").unwrap().as_usize().unwrap(), 1);
+        assert!((it.get("target_s").unwrap().as_f64().unwrap() - 0.05).abs() < 1e-12);
+        let ba = sched.get("batch").unwrap();
+        assert_eq!(ba.get("rows").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(ba.get("slo_violations").unwrap().as_usize().unwrap(), 1);
+        // the full snapshot carries the block under "scheduler"
+        let snap = m.snapshot();
+        assert!(snap.get("scheduler").unwrap().get("interactive").is_ok());
+    }
+
+    #[test]
+    fn disabled_class_target_never_violates_without_deadline() {
+        let m = Metrics::new();
+        m.set_class_targets([0.0, 0.0]);
+        m.record_class_latency(Class::Batch, Duration::from_secs(10), None);
+        let sched = m.scheduler_snapshot();
+        let ba = sched.get("batch").unwrap();
+        assert_eq!(ba.get("slo_violations").unwrap().as_usize().unwrap(), 0);
+        // an explicit deadline still applies even with the target off
+        m.record_class_latency(Class::Batch, Duration::from_secs(10), Some(100));
+        let sched = m.scheduler_snapshot();
+        let ba = sched.get("batch").unwrap();
+        assert_eq!(ba.get("slo_violations").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod metrics;
 pub mod registry;
 pub mod service;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, Class, ClassPolicy, CostLine, PoolPressure, PoolShare};
 pub use metrics::{BackendCounters, Metrics};
 pub use registry::{DeployOutcome, ModelEntry, ModelRegistry, RegistryConfig};
 pub use service::{BackendFactory, Request, Response, ServiceConfig, ShapService, Task};

@@ -30,6 +30,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::anyhow;
 use crate::backend::{BackendConfig, BackendKind, DeviceLease, DevicePool};
+use crate::coordinator::batcher::{PoolPressure, PoolShare};
 use crate::coordinator::service::{Request, Response, ServiceConfig, ShapService};
 use crate::gbdt::Model;
 use crate::util::error::Result;
@@ -77,6 +78,31 @@ struct Running {
     service: Arc<ShapService>,
     kind_label: String,
     _lease: DeviceLease,
+    /// keeps this entry's fairness weight registered on the shared
+    /// pool-pressure gauge for as long as the executor runs
+    _share: ShareGuard,
+}
+
+/// RAII registration of one running entry's fairness weight on the
+/// registry-wide [`PoolPressure`] gauge: other models' batchers divide
+/// the bulk fill by the total registered weight, so a weight must leave
+/// the denominator the moment its executor parks or unloads.
+struct ShareGuard {
+    pressure: Arc<PoolPressure>,
+    weight: f64,
+}
+
+impl ShareGuard {
+    fn new(pressure: Arc<PoolPressure>, weight: f64) -> ShareGuard {
+        pressure.add_weight(weight);
+        ShareGuard { pressure, weight }
+    }
+}
+
+impl Drop for ShareGuard {
+    fn drop(&mut self) {
+        self.pressure.remove_weight(self.weight);
+    }
 }
 
 /// One registered model: the shared `Arc<Model>` (which pins its
@@ -87,6 +113,9 @@ pub struct ModelEntry {
     model: Arc<Model>,
     source: Option<PathBuf>,
     calibration_path: Option<PathBuf>,
+    /// fairness share of the device pool relative to the other running
+    /// entries' weights (see [`ModelRegistry::load_weighted`])
+    weight: f64,
     runtime: RwLock<Option<Running>>,
     /// serializes park/restart transitions so concurrent deploys cannot
     /// double-build or double-drain one entry
@@ -100,6 +129,11 @@ impl ModelEntry {
 
     pub fn model(&self) -> &Arc<Model> {
         &self.model
+    }
+
+    /// This entry's fairness weight on the shared device pool.
+    pub fn weight(&self) -> f64 {
+        self.weight
     }
 
     /// The entry's executor, or an error naming the parked state.
@@ -133,6 +167,10 @@ struct State {
 pub struct ModelRegistry {
     cfg: RegistryConfig,
     pool: Arc<DevicePool>,
+    /// cross-model interactive-pressure gauge shared by every entry's
+    /// batcher: a bulk-heavy model yields device-pool capacity while any
+    /// co-resident model has interactive work queued
+    pressure: Arc<PoolPressure>,
     state: RwLock<State>,
 }
 
@@ -141,6 +179,7 @@ impl ModelRegistry {
         ModelRegistry {
             cfg,
             pool,
+            pressure: PoolPressure::new(),
             state: RwLock::new(State { models: BTreeMap::new(), aliases: BTreeMap::new() }),
         }
     }
@@ -171,9 +210,15 @@ impl ModelRegistry {
         &self,
         model: &Arc<Model>,
         calibration_path: Option<PathBuf>,
+        weight: f64,
     ) -> Result<Running> {
         let lease = self.pool.lease(self.cfg.service.devices.max(1))?;
-        let scfg = ServiceConfig { calibration_path, ..self.cfg.service.clone() };
+        let share = ShareGuard::new(self.pressure.clone(), weight);
+        let scfg = ServiceConfig {
+            calibration_path,
+            share: Some(PoolShare { pressure: self.pressure.clone(), weight }),
+            ..self.cfg.service.clone()
+        };
         let bcfg = self.cfg.backend.clone();
         let (kind_label, service) = match self.cfg.kind {
             Some(kind) => (
@@ -185,14 +230,33 @@ impl ModelRegistry {
                 (format!("auto→{}", kind.name()), svc)
             }
         };
-        Ok(Running { service: Arc::new(service), kind_label, _lease: lease })
+        Ok(Running { service: Arc::new(service), kind_label, _lease: lease, _share: share })
     }
 
-    /// Register `model` under `name` and start serving it. Fails when
-    /// the name is taken (by a model or an alias) or the device pool
-    /// cannot cover another `devices`-slot executor.
+    /// Register `model` under `name` and start serving it with the
+    /// default fairness weight (1.0). Fails when the name is taken (by
+    /// a model or an alias) or the device pool cannot cover another
+    /// `devices`-slot executor.
     pub fn load(&self, name: &str, model: Arc<Model>, source: Option<PathBuf>) -> Result<()> {
+        self.load_weighted(name, model, source, 1.0)
+    }
+
+    /// [`ModelRegistry::load`] with an explicit fairness weight: while
+    /// another entry has interactive work queued, this entry's batch
+    /// fill is capped at `weight / Σ running weights` of the batch
+    /// bucket, so heavier models keep proportionally more capacity
+    /// under cross-model interactive pressure.
+    pub fn load_weighted(
+        &self,
+        name: &str,
+        model: Arc<Model>,
+        source: Option<PathBuf>,
+        weight: f64,
+    ) -> Result<()> {
         validate_name(name)?;
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(anyhow!("model weight must be a positive number, got {weight}"));
+        }
         {
             let state = self.state.read().unwrap();
             state.check_name_free(name)?;
@@ -200,12 +264,13 @@ impl ModelRegistry {
         let calibration_path = self.calibration_path(name, source.as_deref());
         // build outside the state lock: model prep can be slow and must
         // not stall serving reads of other entries
-        let running = self.start_service(&model, calibration_path.clone())?;
+        let running = self.start_service(&model, calibration_path.clone(), weight)?;
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             model,
             source,
             calibration_path,
+            weight,
             runtime: RwLock::new(Some(running)),
             transition: Mutex::new(()),
         });
@@ -219,12 +284,17 @@ impl ModelRegistry {
     /// Load a model artifact from disk (`.gtsm`, or XGBoost
     /// `model.json`) and register it under `name`.
     pub fn load_path(&self, name: &str, path: &Path) -> Result<()> {
+        self.load_path_weighted(name, path, 1.0)
+    }
+
+    /// [`ModelRegistry::load_path`] with an explicit fairness weight.
+    pub fn load_path_weighted(&self, name: &str, path: &Path, weight: f64) -> Result<()> {
         let model = if path.extension().is_some_and(|e| e == "json") {
             crate::gbdt::xgb_import::load_xgboost_json(path)?
         } else {
             crate::gbdt::io::load(path)?
         };
-        self.load(name, Arc::new(model), Some(path.to_path_buf()))
+        self.load_weighted(name, Arc::new(model), Some(path.to_path_buf()), weight)
     }
 
     /// Remove `name` from the registry (cascading away any aliases that
@@ -319,7 +389,8 @@ impl ModelRegistry {
         if !still_registered {
             return Err(anyhow!("model '{}' was unloaded", entry.name));
         }
-        let running = self.start_service(&entry.model, entry.calibration_path.clone())?;
+        let running =
+            self.start_service(&entry.model, entry.calibration_path.clone(), entry.weight)?;
         *entry.runtime.write().unwrap() = Some(running);
         Ok(())
     }
@@ -437,6 +508,7 @@ impl ModelRegistry {
                     ("trees", Json::from(e.model.trees.len())),
                     ("features", Json::from(e.model.num_features)),
                     ("groups", Json::from(e.model.num_groups)),
+                    ("weight", Json::from(e.weight)),
                     ("aliases", Json::Arr(aliases)),
                 ];
                 if let Some(k) = e.kind_label() {

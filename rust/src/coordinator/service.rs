@@ -53,7 +53,7 @@ use crate::anyhow;
 use crate::backend::{
     self, BackendConfig, BackendKind, CostEstimate, Plan, Planner, ShapBackend, ShardAxis,
 };
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, Class, ClassPolicy, CostLine, PoolShare};
 use crate::coordinator::metrics::Metrics;
 use crate::gbdt::Model;
 use crate::util::error::Result;
@@ -139,10 +139,23 @@ pub struct ServiceConfig {
     /// from measurements immediately, saved whenever recalibration
     /// moves an estimate and again at shutdown; `None` disables
     pub calibration_path: Option<std::path::PathBuf>,
+    /// per-class latency targets (SLOs), indexed by [`Class::index`]:
+    /// the batcher closes batches early when a head's predicted
+    /// completion would breach its class target, and responses landing
+    /// past it count as `slo_violations` in the metrics
+    pub class_targets: [Duration; Class::COUNT],
+    /// per-class deficit-round-robin weights ([`Class::index`]): the
+    /// bulk class's share of bucket capacity while interactive leads
+    pub class_weights: [f64; Class::COUNT],
+    /// cross-model fairness stake on a shared device pool (set by the
+    /// registry): bulk-led batches yield bucket capacity to this
+    /// weighted share while other models have interactive work queued
+    pub share: Option<PoolShare>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
+        let policies = ClassPolicy::defaults();
         ServiceConfig {
             devices: 1,
             shard_axis: None,
@@ -151,6 +164,9 @@ impl Default for ServiceConfig {
             queue_cap: 1024,
             recalibrate_every: 64,
             calibration_path: None,
+            class_targets: [policies[0].target, policies[1].target],
+            class_weights: [policies[0].weight, policies[1].weight],
+            share: None,
         }
     }
 }
@@ -164,11 +180,29 @@ pub struct Request {
     /// row-major `rows × num_features` feature matrix
     pub x: Vec<f32>,
     pub rows: usize,
+    /// scheduling class (default [`Class::Batch`]): interactive
+    /// requests lead batch formation under the tight class target
+    pub priority: Class,
+    /// optional per-request completion deadline, milliseconds from
+    /// submission — tightens the class target for this request only
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
     pub fn new(task: Task, x: Vec<f32>, rows: usize) -> Request {
-        Request { task, x, rows }
+        Request { task, x, rows, priority: Class::Batch, deadline_ms: None }
+    }
+
+    /// Builder: schedule this request under `class`.
+    pub fn with_priority(mut self, class: Class) -> Request {
+        self.priority = class;
+        self
+    }
+
+    /// Builder: attach a completion deadline (ms from submission).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
     }
 
     pub fn contributions(x: Vec<f32>, rows: usize) -> Request {
@@ -266,6 +300,7 @@ impl ShapService {
         cfg: ServiceConfig,
     ) -> Result<ShapService> {
         let metrics = Arc::new(Metrics::new());
+        metrics.set_class_targets(class_targets_secs(&cfg));
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
         let (job_tx, job_rx) = sync_channel::<Batch>(2);
 
@@ -324,8 +359,11 @@ impl ShapService {
             return Err(anyhow!("worker init failed: {e}"));
         }
 
+        // no planner on the factory path: the batcher schedules from
+        // targets and `max_wait` alone (cost line stays unpublished)
+        let cost_line: SharedCost = Arc::new(Mutex::new(None));
         let batcher_handle =
-            spawn_batcher(ingress_rx, job_tx, cfg.max_batch_rows, cfg.max_wait, metrics.clone());
+            spawn_batcher(ingress_rx, job_tx, batcher_cfg(&cfg), cost_line, metrics.clone());
         Ok(ShapService {
             ingress: ingress_tx,
             batcher_handle: Mutex::new(Some(batcher_handle)),
@@ -399,9 +437,14 @@ impl ShapService {
         };
 
         let metrics = Arc::new(Metrics::new());
+        metrics.set_class_targets(class_targets_secs(&cfg));
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_cap);
         let (job_tx, job_rx) = sync_channel::<Batch>(2);
 
+        // executor → batcher: the calibrated cost line of the current
+        // plan, re-published on every (re)calibration so deadline-aware
+        // batch formation predicts with live constants
+        let cost_line: SharedCost = Arc::new(Mutex::new(None));
         let ready = Arc::new(std::sync::Barrier::new(2));
         let init_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let chosen: Arc<Mutex<Option<Plan>>> = Arc::new(Mutex::new(None));
@@ -411,6 +454,7 @@ impl ShapService {
             let ready = ready.clone();
             let init_err = init_err.clone();
             let chosen = chosen.clone();
+            let cost_line = cost_line.clone();
             worker_handles.push(std::thread::spawn(move || {
                 // the planner shares the executor's prepared-model cache
                 // entry (shape statistics come from the cached paths),
@@ -453,6 +497,7 @@ impl ShapService {
                 };
                 install_shard_observer(backend.as_mut(), &metrics);
                 metrics.set_plan_info(plan_info(&planner, &plan, &*backend));
+                publish_cost_line(&cost_line, &planner, &plan);
                 let mut since = 0usize;
                 let mut backoff = ProbeBackoff::new();
                 while let Ok(batch) = job_rx.recv() {
@@ -472,6 +517,7 @@ impl ShapService {
                             &metrics,
                             &mut backoff,
                         );
+                        publish_cost_line(&cost_line, &planner, &plan);
                     }
                 }
                 // shutdown: persist whatever the service learned so the
@@ -496,7 +542,7 @@ impl ShapService {
         let plan = chosen.lock().unwrap().take().expect("executor published its plan");
 
         let batcher_handle =
-            spawn_batcher(ingress_rx, job_tx, cfg.max_batch_rows, cfg.max_wait, metrics.clone());
+            spawn_batcher(ingress_rx, job_tx, batcher_cfg(&cfg), cost_line, metrics.clone());
         Ok((
             plan,
             ShapService {
@@ -516,6 +562,7 @@ impl ShapService {
     pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.metrics.record_request(req.rows);
+        self.metrics.record_class_request(req.priority, req.rows);
         let queued = Queued { req, resp: tx, submitted: Instant::now() };
         match self.ingress.try_send(Ingress::Req(queued)) {
             Ok(()) => Ok(rx),
@@ -916,55 +963,130 @@ fn plan_info(planner: &Planner, plan: &Plan, backend: &dyn ShapBackend) -> Json 
     Json::obj(fields)
 }
 
+/// Executor → batcher handoff for the calibrated cost line.
+type SharedCost = Arc<Mutex<Option<CostLine>>>;
+
+/// Publish the current plan's calibrated cost line for the batcher's
+/// deadline-aware batch formation. The planner's line prices one
+/// backend *instance*; a sharded plan divides row work across `shards`
+/// of them, so the steady slope scales by the plan's parallel width
+/// (exact for the row axis, optimistic for others — an optimistic
+/// throughput predicts lower latency and only delays an early close,
+/// never the `max_wait` hard cap).
+fn publish_cost_line(shared: &SharedCost, planner: &Planner, plan: &Plan) {
+    let line = planner.cost(plan.kind).map(|c| CostLine {
+        batch_overhead_s: c.batch_overhead_s,
+        rows_per_s: c.rows_per_s * plan.shards.max(1) as f64,
+    });
+    *shared.lock().unwrap() = line;
+}
+
+/// Everything the batcher thread needs to form batches: flush policy,
+/// per-class scheduling and the optional cross-model pool share.
+struct BatcherCfg {
+    max_rows: usize,
+    max_wait: Duration,
+    policies: [ClassPolicy; Class::COUNT],
+    share: Option<PoolShare>,
+}
+
+fn batcher_cfg(cfg: &ServiceConfig) -> BatcherCfg {
+    BatcherCfg {
+        max_rows: cfg.max_batch_rows,
+        max_wait: cfg.max_wait,
+        policies: [
+            ClassPolicy { target: cfg.class_targets[0], weight: cfg.class_weights[0] },
+            ClassPolicy { target: cfg.class_targets[1], weight: cfg.class_weights[1] },
+        ],
+        share: cfg.share.clone(),
+    }
+}
+
+/// The per-class targets in seconds, [`Class::index`]-ordered, for the
+/// metrics' SLO-violation accounting.
+fn class_targets_secs(cfg: &ServiceConfig) -> [f64; Class::COUNT] {
+    [cfg.class_targets[0].as_secs_f64(), cfg.class_targets[1].as_secs_f64()]
+}
+
 fn spawn_batcher(
     ingress_rx: Receiver<Ingress>,
     job_tx: SyncSender<Batch>,
-    max_rows: usize,
-    max_wait: Duration,
+    cfg: BatcherCfg,
+    cost_line: SharedCost,
     metrics: Arc<Metrics>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
-        run_batcher(ingress_rx, job_tx, max_rows, max_wait, metrics);
+        run_batcher(ingress_rx, job_tx, cfg, cost_line, metrics);
     })
 }
 
 fn run_batcher(
     ingress: Receiver<Ingress>,
     job_tx: SyncSender<Batch>,
-    max_rows: usize,
-    max_wait: Duration,
+    cfg: BatcherCfg,
+    cost_line: SharedCost,
     metrics: Arc<Metrics>,
 ) {
-    let mut batchers: [Batcher<Queued>; 3] = [
-        Batcher::new(max_rows, max_wait),
-        Batcher::new(max_rows, max_wait),
-        Batcher::new(max_rows, max_wait),
-    ];
+    let mk = || Batcher::new(cfg.max_rows, cfg.max_wait).with_policies(cfg.policies);
+    let mut batchers: [Batcher<Queued>; 3] = [mk(), mk(), mk()];
+    // interactive requests this service currently holds queued —
+    // subtracted from the pool-wide gauge so a model never yields
+    // bucket capacity to its own interactive traffic
+    let mut own_interactive: u64 = 0;
     loop {
         let timeout = if batchers.iter().all(|b| b.is_empty()) {
             Duration::from_millis(50)
         } else {
-            max_wait
+            cfg.max_wait
         };
         match ingress.recv_timeout(timeout) {
             Ok(Ingress::Req(q)) => {
                 let (rows, i) = (q.req.rows, q.req.task.index());
-                batchers[i].push(rows, q);
+                let class = q.req.priority;
+                // the deadline clock starts at submission, not at
+                // batcher admission: ingress queueing counts against it
+                let deadline =
+                    q.req.deadline_ms.map(|ms| q.submitted + Duration::from_millis(ms));
+                if class == Class::Interactive {
+                    own_interactive += 1;
+                    if let Some(s) = &cfg.share {
+                        s.pressure.add_interactive(1);
+                    }
+                }
+                batchers[i].push_in(class, rows, deadline, q);
             }
             Ok(Ingress::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
+        let line = *cost_line.lock().unwrap();
+        for b in batchers.iter_mut() {
+            b.set_cost_line(line);
+        }
         for task in Task::ALL {
             while batchers[task.index()].ready(Instant::now()) {
-                dispatch(&mut batchers[task.index()], task, &job_tx, &metrics);
+                dispatch(
+                    &mut batchers[task.index()],
+                    task,
+                    &job_tx,
+                    &metrics,
+                    &cfg.share,
+                    &mut own_interactive,
+                );
             }
         }
     }
     // drain on shutdown
     for task in Task::ALL {
         while !batchers[task.index()].is_empty() {
-            dispatch(&mut batchers[task.index()], task, &job_tx, &metrics);
+            dispatch(
+                &mut batchers[task.index()],
+                task,
+                &job_tx,
+                &metrics,
+                &cfg.share,
+                &mut own_interactive,
+            );
         }
     }
 }
@@ -974,14 +1096,32 @@ fn dispatch(
     task: Task,
     job_tx: &SyncSender<Batch>,
     metrics: &Metrics,
+    share: &Option<PoolShare>,
+    own_interactive: &mut u64,
 ) {
-    let pending = batcher.take_batch();
+    // cross-model fairness: cap the bulk fill at this model's weighted
+    // share while another model on the pool has interactive queued
+    let fill = match share {
+        Some(s) => s.batch_fill(*own_interactive, batcher.max_batch_rows),
+        None => batcher.max_batch_rows,
+    };
+    let pending = batcher.take_batch_capped(fill);
     if pending.is_empty() {
         return;
     }
     let rows: usize = pending.iter().map(|p| p.rows).sum();
     debug_assert!(pending.iter().all(|p| p.rows == p.payload.req.rows));
+    let lead = pending[0].class;
+    let n_interactive =
+        pending.iter().filter(|p| p.class == Class::Interactive).count() as u64;
+    if n_interactive > 0 {
+        *own_interactive = own_interactive.saturating_sub(n_interactive);
+        if let Some(s) = share {
+            s.pressure.sub_interactive(n_interactive);
+        }
+    }
     metrics.record_batch(rows);
+    metrics.record_class_batch(lead, rows);
     let batch =
         Batch { task, requests: pending.into_iter().map(|p| p.payload).collect(), rows };
     // blocking send: workers apply backpressure to the batcher
@@ -1012,7 +1152,9 @@ fn process_batch(backend: &dyn ShapBackend, batch: Batch, metrics: &Metrics) -> 
             for q in batch.requests {
                 let vals = all[offset * stride..(offset + q.req.rows) * stride].to_vec();
                 offset += q.req.rows;
-                metrics.record_latency(q.submitted.elapsed());
+                let latency = q.submitted.elapsed();
+                metrics.record_latency(latency);
+                metrics.record_class_latency(q.req.priority, latency, q.req.deadline_ms);
                 metrics.record_completed();
                 let _ = q.resp.send(Response {
                     task: batch.task,

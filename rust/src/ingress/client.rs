@@ -7,7 +7,7 @@
 use std::net::{TcpStream, ToSocketAddrs};
 
 use crate::anyhow;
-use crate::coordinator::{Request, Response, Task};
+use crate::coordinator::{Class, Request, Response, Task};
 use crate::ingress::frame::{read_frame, write_frame};
 use crate::ingress::wire::{self, Command};
 use crate::util::error::Result;
@@ -42,6 +42,22 @@ impl Client {
     /// Contribution φ for `rows` feature rows, routed to `model`.
     pub fn explain(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
         self.submit(model, Request::contributions(x, rows))?.into_values()
+    }
+
+    /// [`Client::explain`] at interactive priority: the request jumps
+    /// the batch-class queue and the scheduler closes its batch against
+    /// the interactive latency target instead of `max_wait`.
+    pub fn explain_interactive(
+        &mut self,
+        model: &str,
+        x: Vec<f32>,
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        self.submit(
+            model,
+            Request::contributions(x, rows).with_priority(Class::Interactive),
+        )?
+        .into_values()
     }
 
     /// Interaction Φ, routed to `model`.

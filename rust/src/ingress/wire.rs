@@ -1,6 +1,6 @@
-//! The wire protocol: what goes inside each frame. One JSON object per
-//! frame; requests carry a `cmd` verb, responses carry `ok` plus either
-//! the payload or an `error` string.
+//! The wire protocol (v2): what goes inside each frame. One JSON object
+//! per frame; requests carry a `cmd` verb, responses carry `ok` plus
+//! either the payload or an `error` string.
 //!
 //! The explain verbs are exactly [`Task::parse`]'s alias table — the
 //! same parse serves the CLI, the in-process API and the wire — and a
@@ -9,15 +9,24 @@
 //! shape.
 //!
 //! ```text
-//!   {"cmd":"explain","model":"best","rows":2,"x":[...]}      → submit
+//!   {"cmd":"explain","model":"best","rows":2,"x":[...],
+//!    "priority":"interactive","deadline_ms":40}              → submit
 //!   {"cmd":"load","name":"m2","path":"artifacts/m2.gtsm"}    → registry
 //!   {"cmd":"deploy","alias":"best","model":"m2"}             → hot swap
 //!   {"cmd":"list"} {"cmd":"stats"} {"cmd":"ping"}            → introspect
 //!   {"cmd":"shutdown"}                                       → stop server
 //! ```
+//!
+//! v2 over v1: submit frames may carry the scheduling fields
+//! `priority` (`interactive`|`batch`, default `batch`) and
+//! `deadline_ms`, and every verb now REJECTS unknown fields with an
+//! in-band error naming the field — a v1 server silently dropped
+//! extras, so a typo'd `priorty` degraded to batch class without any
+//! signal. Default-class frames are byte-identical to v1, so v1 clients
+//! interoperate unchanged.
 
 use crate::anyhow;
-use crate::coordinator::{Request, Response, Task};
+use crate::coordinator::{Class, Request, Response, Task};
 use crate::util::error::Result;
 use crate::util::Json;
 
@@ -39,39 +48,101 @@ pub enum Command {
     Shutdown,
 }
 
+/// Reject fields the verb does not know, naming the first offender —
+/// a typo'd scheduling field must fail loudly, not silently degrade to
+/// the default class (wire v2; v1 dropped extras).
+fn reject_unknown_fields(msg: &Json, verb: &str, allowed: &[&str]) -> Result<()> {
+    let Json::Obj(map) = msg else {
+        return Err(anyhow!("request frame must be a JSON object, got {msg:?}"));
+    };
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(anyhow!(
+                "unknown field '{key}' for '{verb}' (known: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
 impl Command {
-    /// Decode one request frame. Unknown verbs list the full valid set.
+    /// Decode one request frame. Unknown verbs list the full valid set;
+    /// unknown fields on a known verb name the field.
     pub fn parse(msg: &Json) -> Result<Command> {
         let verb = msg.get("cmd")?.as_str()?;
         if let Some(task) = Task::parse(verb) {
+            reject_unknown_fields(
+                msg,
+                verb,
+                &["cmd", "model", "rows", "x", "priority", "deadline_ms"],
+            )?;
             let model = msg.get("model")?.as_str()?.to_string();
             let rows = msg.get("rows")?.as_usize()?;
             let x = decode_f32s(msg.get("x")?)?;
-            return Ok(Command::Submit { model, req: Request::new(task, x, rows) });
+            let mut req = Request::new(task, x, rows);
+            if let Ok(p) = msg.get("priority") {
+                let s = p.as_str()?;
+                let class = Class::parse(s).ok_or_else(|| {
+                    anyhow!("unknown priority '{s}' (one of: {})", Class::name_list())
+                })?;
+                req = req.with_priority(class);
+            }
+            if let Ok(d) = msg.get("deadline_ms") {
+                req = req.with_deadline_ms(d.as_usize()? as u64);
+            }
+            return Ok(Command::Submit { model, req });
         }
         match verb.to_ascii_lowercase().as_str() {
-            "load" => Ok(Command::Load {
-                name: msg.get("name")?.as_str()?.to_string(),
-                path: msg.get("path")?.as_str()?.to_string(),
-            }),
-            "unload" => Ok(Command::Unload { name: msg.get("name")?.as_str()?.to_string() }),
-            "deploy" => Ok(Command::Deploy {
-                alias: msg.get("alias")?.as_str()?.to_string(),
-                model: msg.get("model")?.as_str()?.to_string(),
-                // hot swaps retire the abandoned target by default;
-                // pass false to keep it serving (e.g. under a canary)
-                retire_old: match msg.get("retire_old") {
-                    Ok(Json::Bool(b)) => *b,
-                    Ok(other) => return Err(anyhow!("retire_old must be a bool, got {other:?}")),
-                    Err(_) => true,
-                },
-            }),
-            "list" => Ok(Command::List),
-            "stats" => Ok(Command::Stats {
-                model: msg.get("model").ok().map(|j| j.as_str().map(str::to_string)).transpose()?,
-            }),
-            "ping" => Ok(Command::Ping),
-            "shutdown" => Ok(Command::Shutdown),
+            "load" => {
+                reject_unknown_fields(msg, verb, &["cmd", "name", "path"])?;
+                Ok(Command::Load {
+                    name: msg.get("name")?.as_str()?.to_string(),
+                    path: msg.get("path")?.as_str()?.to_string(),
+                })
+            }
+            "unload" => {
+                reject_unknown_fields(msg, verb, &["cmd", "name"])?;
+                Ok(Command::Unload { name: msg.get("name")?.as_str()?.to_string() })
+            }
+            "deploy" => {
+                reject_unknown_fields(msg, verb, &["cmd", "alias", "model", "retire_old"])?;
+                Ok(Command::Deploy {
+                    alias: msg.get("alias")?.as_str()?.to_string(),
+                    model: msg.get("model")?.as_str()?.to_string(),
+                    // hot swaps retire the abandoned target by default;
+                    // pass false to keep it serving (e.g. under a canary)
+                    retire_old: match msg.get("retire_old") {
+                        Ok(Json::Bool(b)) => *b,
+                        Ok(other) => {
+                            return Err(anyhow!("retire_old must be a bool, got {other:?}"))
+                        }
+                        Err(_) => true,
+                    },
+                })
+            }
+            "list" => {
+                reject_unknown_fields(msg, verb, &["cmd"])?;
+                Ok(Command::List)
+            }
+            "stats" => {
+                reject_unknown_fields(msg, verb, &["cmd", "model"])?;
+                Ok(Command::Stats {
+                    model: msg
+                        .get("model")
+                        .ok()
+                        .map(|j| j.as_str().map(str::to_string))
+                        .transpose()?,
+                })
+            }
+            "ping" => {
+                reject_unknown_fields(msg, verb, &["cmd"])?;
+                Ok(Command::Ping)
+            }
+            "shutdown" => {
+                reject_unknown_fields(msg, verb, &["cmd"])?;
+                Ok(Command::Shutdown)
+            }
             _ => Err(anyhow!(
                 "unknown command '{verb}' (one of: {}|{})",
                 Task::name_list(),
@@ -84,12 +155,23 @@ impl Command {
     /// [`Command::parse`]).
     pub fn encode(&self) -> Json {
         match self {
-            Command::Submit { model, req } => Json::obj(vec![
-                ("cmd", Json::from(req.task.name())),
-                ("model", Json::from(model.as_str())),
-                ("rows", Json::from(req.rows)),
-                ("x", encode_f32s(&req.x)),
-            ]),
+            Command::Submit { model, req } => {
+                let mut fields = vec![
+                    ("cmd", Json::from(req.task.name())),
+                    ("model", Json::from(model.as_str())),
+                    ("rows", Json::from(req.rows)),
+                    ("x", encode_f32s(&req.x)),
+                ];
+                // scheduling fields ride only when non-default, so
+                // default-class frames stay byte-identical to wire v1
+                if req.priority != Class::default() {
+                    fields.push(("priority", Json::from(req.priority.name())));
+                }
+                if let Some(ms) = req.deadline_ms {
+                    fields.push(("deadline_ms", Json::from(ms as usize)));
+                }
+                Json::obj(fields)
+            }
             Command::Load { name, path } => Json::obj(vec![
                 ("cmd", Json::from("load")),
                 ("name", Json::from(name.as_str())),
@@ -256,6 +338,73 @@ mod tests {
         let err = format!("{:#}", Command::parse(&msg).unwrap_err());
         assert!(err.contains("explain"), "{err}");
         assert!(err.contains("deploy"), "{err}");
+    }
+
+    #[test]
+    fn priority_and_deadline_round_trip() {
+        let req = Request::new(Task::Contributions, vec![1.0, 2.0], 1)
+            .with_priority(Class::Interactive)
+            .with_deadline_ms(40);
+        let cmd = Command::Submit { model: "m1".into(), req };
+        let frame = cmd.encode();
+        assert!(frame.get("priority").is_ok(), "non-default class rides the frame");
+        match Command::parse(&frame).unwrap() {
+            Command::Submit { req, .. } => {
+                assert_eq!(req.priority, Class::Interactive);
+                assert_eq!(req.deadline_ms, Some(40));
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+        // default-class, no-deadline frames carry neither field —
+        // byte-identical to wire v1
+        let v1 = Command::Submit {
+            model: "m1".into(),
+            req: Request::new(Task::Contributions, vec![1.0, 2.0], 1),
+        }
+        .encode();
+        assert!(v1.get("priority").is_err());
+        assert!(v1.get("deadline_ms").is_err());
+        match Command::parse(&v1).unwrap() {
+            Command::Submit { req, .. } => {
+                assert_eq!(req.priority, Class::Batch);
+                assert_eq!(req.deadline_ms, None);
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_fields_fail_loudly_naming_the_field() {
+        // the motivating typo: 'priorty' must not silently degrade to
+        // the default class
+        let msg = Json::obj(vec![
+            ("cmd", Json::from("explain")),
+            ("model", Json::from("m1")),
+            ("rows", Json::from(1usize)),
+            ("x", encode_f32s(&[1.0])),
+            ("priorty", Json::from("interactive")),
+        ]);
+        let err = format!("{:#}", Command::parse(&msg).unwrap_err());
+        assert!(err.contains("unknown field 'priorty'"), "{err}");
+        assert!(err.contains("priority"), "known-field list names the fix: {err}");
+        // control verbs reject extras too
+        let msg = Json::obj(vec![("cmd", Json::from("ping")), ("extra", Json::from(1usize))]);
+        let err = format!("{:#}", Command::parse(&msg).unwrap_err());
+        assert!(err.contains("unknown field 'extra'"), "{err}");
+    }
+
+    #[test]
+    fn bad_priority_value_lists_the_classes() {
+        let msg = Json::obj(vec![
+            ("cmd", Json::from("explain")),
+            ("model", Json::from("m1")),
+            ("rows", Json::from(1usize)),
+            ("x", encode_f32s(&[1.0])),
+            ("priority", Json::from("urgent")),
+        ]);
+        let err = format!("{:#}", Command::parse(&msg).unwrap_err());
+        assert!(err.contains("unknown priority 'urgent'"), "{err}");
+        assert!(err.contains("interactive"), "{err}");
     }
 
     #[test]

@@ -42,7 +42,7 @@ use gputreeshap::cli::opts::{
     self, backend_config, build_backend, load_dataset, load_model, unknown_backend,
 };
 use gputreeshap::cli::Args;
-use gputreeshap::coordinator::{ModelRegistry, RegistryConfig, ShapService, Task};
+use gputreeshap::coordinator::{ModelRegistry, RegistryConfig, Request, ShapService, Task};
 use gputreeshap::data::{Dataset, SynthSpec};
 use gputreeshap::gbdt::{io as model_io, train, TrainParams, ZooSize};
 use gputreeshap::ingress::{Client, IngressServer, ServerConfig};
@@ -84,9 +84,13 @@ memory: --fastv2-max-mb M caps the fastv2 backend's precomputed weight tables (d
   over budget the planner skips fastv2 and an explicit --backend fastv2 errors instead of OOMing
 calibration: backends --calibrated measures real constants; serve --recalibrate-every N self-tunes
   and persists learned constants next to the model (--calibration <path|none>)
-serving: serve --listen <addr> exposes a multi-model TCP service (--models n=path,…; --pool-devices N
-  caps total device slots); client <explain|interactions|predict|load|unload|deploy|list|stats|ping|shutdown>
+serving: serve --listen <addr> exposes a multi-model TCP service (--models n=path[;weight=W],…;
+  --pool-devices N caps total device slots; weight = fairness share under cross-model pressure);
+  client <explain|interactions|predict|load|unload|deploy|list|stats|ping|shutdown>
   --addr <host:port> drives it (deploy: --alias a --name m hot-swaps; --keep-old skips retiring)
+scheduling: requests carry --priority interactive|batch (default batch) + optional --deadline-ms D;
+  serve --class-target interactive=50,batch=2000 sets per-class latency targets (ms) the batcher
+  closes batches against; per-class p50/p99 + slo_violations surface under \"scheduler\" in stats
 perf CI: bench-compare --baseline a.json --current b.json [--tolerance 0.2] gates throughput
 see rust/src/main.rs header for examples";
 
@@ -467,9 +471,13 @@ fn cmd_serve_listen(args: &Args, listen: &str) -> Result<()> {
         println!("loaded '{name}' from {mp}");
     }
     if let Some(spec) = args.get("models") {
-        for (name, path) in opts::parse_model_manifest(spec)? {
-            registry.load_path(&name, &path)?;
-            println!("loaded '{name}' from {}", path.display());
+        for (name, path, weight) in opts::parse_model_manifest(spec)? {
+            registry.load_path_weighted(&name, &path, weight)?;
+            if weight != 1.0 {
+                println!("loaded '{name}' from {} (weight {weight})", path.display());
+            } else {
+                println!("loaded '{name}' from {}", path.display());
+            }
         }
     }
 
@@ -514,7 +522,12 @@ fn cmd_client(args: &Args) -> Result<()> {
         let data = load_dataset(args)?;
         let rows = args.get_usize("rows", 4)?.min(data.rows);
         let x = data.features[..rows * data.cols].to_vec();
-        let resp = client.run_task(name, task, x, rows)?;
+        let (class, deadline) = opts::request_class(args)?;
+        let mut req = Request::new(task, x, rows).with_priority(class);
+        if let Some(ms) = deadline {
+            req = req.with_deadline_ms(ms);
+        }
+        let resp = client.submit(name, req)?;
         let (rows, cols) = (resp.rows, resp.cols);
         let values = resp.into_values()?;
         println!("ok: {} via '{name}' → {rows} rows × {cols} cols", task.name());

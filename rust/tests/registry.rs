@@ -4,13 +4,14 @@
 //! unloading must reclaim the prepared-model cache entry, and the whole
 //! stack must hold over a real localhost TCP connection.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use gputreeshap::backend::{
-    prepared, BackendConfig, BackendKind, RecursiveBackend, ShapBackend,
+    prepared, BackendConfig, BackendKind, DevicePool, RecursiveBackend, ShapBackend,
 };
-use gputreeshap::coordinator::{ModelRegistry, RegistryConfig, Request, ServiceConfig};
+use gputreeshap::coordinator::{Class, ModelRegistry, RegistryConfig, Request, ServiceConfig};
 use gputreeshap::data::{Dataset, SynthSpec};
 use gputreeshap::gbdt::{self, train, Model, TrainParams};
 use gputreeshap::ingress::{Client, IngressServer, ServerConfig};
@@ -148,6 +149,101 @@ fn alias_swap_under_load_drops_and_misroutes_nothing() {
     assert!(!reg.resolve("m2").unwrap().is_running());
     let svc = reg.resolve("live").unwrap().service().unwrap();
     assert_eq!(svc.metrics.in_flight(), 0, "alias target drained");
+    reg.drain_all();
+}
+
+/// Cross-model weighted fairness on a shared device pool: model B's
+/// interactive traffic must hold its class target while model A floods
+/// the pool with bulk work, with zero drops, zero mis-routes, and the
+/// backfill still making progress (capped, not starved).
+#[test]
+fn weighted_fairness_holds_interactive_slo_under_bulk_flood() {
+    let (bulk_m, d) = model_with(3);
+    let (chat_m, _) = model_with(5);
+    let target = Duration::from_millis(250);
+    let cfg = RegistryConfig {
+        service: ServiceConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(10),
+            recalibrate_every: 0,
+            class_targets: [target, Duration::from_secs(5)],
+            ..Default::default()
+        },
+        ..quick_cfg()
+    };
+    let reg = Arc::new(ModelRegistry::new(cfg, DevicePool::new(2)));
+    reg.load_weighted("bulk", bulk_m.clone(), None, 1.0).unwrap();
+    reg.load_weighted("chat", chat_m.clone(), None, 4.0).unwrap();
+
+    let oracle = RecursiveBackend::new(chat_m.clone(), 1);
+    let cols = d.cols;
+    let stop = Arc::new(AtomicBool::new(false));
+    let flood = {
+        let reg = reg.clone();
+        let stop = stop.clone();
+        let x = d.features[..16 * cols].to_vec();
+        std::thread::spawn(move || {
+            let mut done = 0usize;
+            let mut inflight = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                while inflight.len() < 4 {
+                    match reg.submit("bulk", Request::contributions(x.clone(), 16)) {
+                        Ok(rx) => inflight.push(rx),
+                        Err(_) => break,
+                    }
+                }
+                if inflight.is_empty() {
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                }
+                if let Ok(resp) = inflight.remove(0).recv() {
+                    assert!(resp.values.is_ok(), "bulk flood request failed");
+                    done += 1;
+                }
+            }
+            for rx in inflight {
+                if let Ok(resp) = rx.recv() {
+                    assert!(resp.values.is_ok(), "bulk drain request failed");
+                    done += 1;
+                }
+            }
+            done
+        })
+    };
+
+    let mut latencies = Vec::new();
+    for q in 0..30usize {
+        let rows = 1 + q % 2;
+        let x = d.features[..rows * cols].to_vec();
+        let req =
+            Request::contributions(x.clone(), rows).with_priority(Class::Interactive);
+        let t = Instant::now();
+        // zero-drop: every interactive request admitted under the flood
+        // must come back...
+        let got = reg.run("chat", req).unwrap();
+        latencies.push(t.elapsed());
+        // ...and zero-misroute: bit-identical to model B's own oracle
+        let want = oracle.contributions(&x, rows).unwrap();
+        assert_eq!(bits(&got), bits(&want), "probe {q}: foreign or corrupted φ");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let done = flood.join().unwrap();
+    assert!(done > 0, "weighted fairness must cap the backfill, not starve it");
+
+    latencies.sort();
+    let p99 = *latencies.last().unwrap();
+    assert!(p99 < target, "interactive p99 {p99:?} breached the {target:?} class target");
+    // everything admitted was delivered, and the probes were accounted
+    // under the interactive class
+    for name in ["bulk", "chat"] {
+        let svc = reg.resolve(name).unwrap().service().unwrap();
+        assert_eq!(svc.metrics.in_flight(), 0, "{name} drained");
+    }
+    let chat = reg.resolve("chat").unwrap().service().unwrap();
+    let sched = chat.metrics.scheduler_snapshot();
+    let interactive_reqs =
+        sched.get("interactive").unwrap().get("requests").unwrap().as_usize().unwrap();
+    assert_eq!(interactive_reqs, 30, "interactive probes accounted per class");
     reg.drain_all();
 }
 
